@@ -1,0 +1,89 @@
+//! Bandwidth probe: runs every strategy one synchronous round over the
+//! real threaded fabric (and optionally loopback TCP) and verifies the
+//! transport-counted bytes equal the analytic Table-1 prediction.
+//!
+//! Run: `cargo run --release --example bandwidth_probe [--tcp]`
+
+use dlion::bench_utils::Table;
+use dlion::cluster::{run_threaded, TrainConfig};
+use dlion::comm::{tcp, CommStats, ServerTransport, WorkerTransport};
+use dlion::optim::dist::{by_name, StrategyHyper, ALL_STRATEGIES};
+use dlion::tasks::quadratic::Quadratic;
+use dlion::tasks::GradTask;
+use std::sync::Arc;
+
+fn main() {
+    let d = 100_000;
+    let n = 4;
+    let steps = 5;
+    let hp = StrategyHyper::default();
+    let mut table = Table::new(
+        &format!("Measured vs analytic bandwidth (d={d}, n={n}, {steps} steps)"),
+        &["strategy", "uplink B/step", "analytic", "downlink B/step", "analytic"],
+    );
+    for name in ALL_STRATEGIES {
+        let strategy = by_name(name, &hp).unwrap();
+        let task: Arc<dyn GradTask + Send + Sync> = Arc::new(Quadratic::new(d, 5.0, 0.5, 1));
+        let cfg = TrainConfig {
+            steps,
+            batch_per_worker: 4,
+            base_lr: 1e-3,
+            eval_every: 0,
+            seed: 3,
+            ..Default::default()
+        };
+        let (_, stats) = run_threaded(task, strategy.as_ref(), n, &cfg);
+        let up_per_step = stats.uplink() as f64 / steps as f64;
+        let down_per_step = stats.downlink() as f64 / steps as f64;
+        let up_pred = strategy.uplink_bits_per_param(n) * d as f64 * n as f64 / 8.0;
+        let down_pred = strategy.downlink_bits_per_param(n) * d as f64 * n as f64 / 8.0;
+        table.row(vec![
+            name.to_string(),
+            format!("{up_per_step:.0}"),
+            format!("{up_pred:.0}"),
+            format!("{down_per_step:.0}"),
+            format!("{down_pred:.0}"),
+        ]);
+    }
+    table.print();
+
+    if std::env::args().any(|a| a == "--tcp") {
+        println!("TCP loopback round (d=10_000, n=3, d-lion-mavo):");
+        let stats = CommStats::new();
+        let (port, listener) = tcp::bind_loopback().unwrap();
+        let d = 10_000;
+        let n = 3;
+        let hp = StrategyHyper::default();
+        let strategy = by_name("d-lion-mavo", &hp).unwrap();
+        let handles: Vec<_> = (0..n)
+            .map(|id| {
+                let stats = stats.clone();
+                let mut logic = strategy.make_worker(id, d);
+                std::thread::spawn(move || {
+                    let mut w = tcp::TcpWorker::connect(port, id, stats).unwrap();
+                    let mut rng = dlion::util::Rng::new(id as u64);
+                    let mut grad = vec![0.0f32; d];
+                    rng.fill_normal(&mut grad, 1.0);
+                    let mut params = vec![0.0f32; d];
+                    let up = logic.encode(&grad, 1e-3, 0);
+                    w.send(up).unwrap();
+                    let down = w.recv().unwrap();
+                    logic.apply(&mut params, &down, 1e-3, 0);
+                    params
+                })
+            })
+            .collect();
+        let mut server_t = tcp::TcpServer::accept(&listener, n, stats.clone()).unwrap();
+        let mut server = strategy.make_server(n, d);
+        let uplinks = server_t.gather().unwrap();
+        let downlink = server.aggregate(&uplinks, 1e-3, 0);
+        server_t.broadcast(&downlink).unwrap();
+        let params: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(params.windows(2).all(|w| w[0] == w[1]), "replicas diverged over TCP");
+        println!(
+            "  ok: uplink {} B, downlink {} B, replicas identical",
+            stats.uplink(),
+            stats.downlink()
+        );
+    }
+}

@@ -1,0 +1,90 @@
+//! Section-4 theory, empirically: Phase I exponential constraint
+//! enforcement (Theorem 4.4) and Phase II KKT-score decay with the
+//! √N majority-vote advantage (Theorems 4.6 vs 4.8).
+//!
+//! Run: `cargo run --release --example constraint_dynamics`
+
+use dlion::cluster::{run_sequential, TrainConfig};
+use dlion::optim::dist::{by_name, StrategyHyper};
+use dlion::optim::lion::Lion;
+use dlion::optim::{LionParams, Optimizer};
+use dlion::tasks::quadratic::Quadratic;
+use dlion::tasks::GradTask;
+use dlion::theory;
+use dlion::util::Rng;
+
+fn phase1() {
+    println!("== Phase I (Thm 4.4): dist(x_t, F) <= (1-ελ)^t dist(x_0, F) ==\n");
+    let d = 64;
+    let lambda = 0.5f32;
+    let eps = 0.05f32;
+    let q = Quadratic::new(d, 5.0, 0.2, 1);
+    let mut lion = Lion::new(d, LionParams { beta1: 0.9, beta2: 0.99, weight_decay: lambda });
+    let mut x = vec![30.0f32; d];
+    let mut g = vec![0.0f32; d];
+    let mut rng = Rng::new(2);
+    println!("{:>5} {:>14} {:>14} {:>8}", "t", "dist(x,F)", "(1-ελ)^t·d0", "phase");
+    let d0 = theory::dist_to_feasible(&x, lambda);
+    let mut dists = Vec::new();
+    for t in 0..120 {
+        let dist = theory::dist_to_feasible(&x, lambda);
+        dists.push(dist);
+        if t % 10 == 0 {
+            let bound = (1.0 - (eps * lambda) as f64).powi(t as i32) * d0;
+            println!(
+                "{t:>5} {dist:>14.6} {bound:>14.6} {:>8}",
+                match theory::phase(&x, lambda) {
+                    theory::Phase::ConstraintEnforcing => "I",
+                    theory::Phase::Optimizing => "II",
+                }
+            );
+        }
+        q.minibatch_grad(&x, &mut rng, 8, &mut g);
+        lion.step(&mut x, &g, eps);
+    }
+    theory::check_phase1_contraction(&dists, (eps * lambda) as f64, 1.05)
+        .expect("Theorem 4.4 contraction");
+    println!("\ncontraction bound verified for all (s, t) pairs ✓\n");
+}
+
+fn phase2() {
+    println!("== Phase II (Thm 4.6/4.8): KKT score S̄ vs worker count N ==\n");
+    let d = 256;
+    let lambda = 0.1f32;
+    println!(
+        "{:>14} {:>10} {:>10} {:>10} {:>10}",
+        "strategy", "N=1", "N=4", "N=16", "N=64"
+    );
+    for name in ["d-lion-mavo", "d-lion-avg"] {
+        let hp = StrategyHyper { weight_decay: lambda, ..Default::default() };
+        let strategy = by_name(name, &hp).unwrap();
+        let mut row = format!("{name:>14}");
+        for n in [1usize, 4, 16, 64] {
+            // average the KKT score along the trajectory tail
+            let q = Quadratic::new(d, 5.0, 4.0, 7);
+            let cfg = TrainConfig {
+                steps: 400,
+                batch_per_worker: 1,
+                base_lr: 0.004,
+                min_lr_frac: 1.0, // constant lr: matches the theorem setting
+                eval_every: 0,
+                seed: 11,
+                ..Default::default()
+            };
+            let res = run_sequential(&q, strategy.as_ref(), n, &cfg);
+            let x = res.final_params.as_ref().unwrap();
+            let mut g = vec![0.0f32; d];
+            q.true_grad(x, &mut g);
+            let s = theory::kkt_score(&g, x, lambda) / d as f64;
+            row.push_str(&format!(" {s:>10.5}"));
+        }
+        println!("{row}");
+    }
+    println!("\nExpected shape: MaVo's score falls with N (Thm 4.6's 1/√N term);");
+    println!("Avg's floor does not improve with N (Thm 4.8's N-independent σ term).");
+}
+
+fn main() {
+    phase1();
+    phase2();
+}

@@ -1,0 +1,46 @@
+//! Quickstart: train a small classifier with Distributed Lion (MaVo) on
+//! 4 workers and compare its communication volume against Global AdamW.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dlion::cluster::{run_sequential, TrainConfig};
+use dlion::optim::dist::{by_name, StrategyHyper};
+use dlion::tasks::data::VisionData;
+use dlion::tasks::mlp::MlpVision;
+use dlion::tasks::GradTask;
+use std::sync::Arc;
+
+fn main() {
+    // 1. A task: synthetic 10-class vision problem, 2-layer MLP.
+    let data = Arc::new(VisionData::generate(4096, 1024, 1.6, 42));
+    let task = MlpVision::new(data, 64);
+    println!("task: {} ({} parameters)", task.name(), task.dim());
+
+    // 2. A training configuration (paper defaults: batch 32/worker,
+    //    cosine schedule, 3 seeds — one seed here for speed).
+    let cfg = TrainConfig {
+        steps: 600,
+        batch_per_worker: 32,
+        base_lr: 1e-3,
+        eval_every: 200,
+        seed: 42,
+        ..Default::default()
+    };
+    let hp = StrategyHyper { weight_decay: 0.005, ..Default::default() };
+    let nworkers = 4;
+
+    // 3. Train with two strategies and compare accuracy + bandwidth.
+    for name in ["d-lion-mavo", "g-adamw"] {
+        let strategy = by_name(name, &hp).expect("registered strategy");
+        let result = run_sequential(&task, strategy.as_ref(), nworkers, &cfg);
+        let eval = result.final_eval.as_ref().unwrap();
+        println!(
+            "{name:>12}: acc {:.3}  loss {:.3}  comm {:>12} bytes ({:.1} bits/param/iter)",
+            eval.accuracy.unwrap_or(f64::NAN),
+            eval.loss,
+            result.total_uplink() + result.total_downlink(),
+            result.bits_per_param_per_iter(task.dim()),
+        );
+    }
+    println!("\nD-Lion should match G-AdamW accuracy at ~30x less communication.");
+}

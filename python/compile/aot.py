@@ -1,0 +1,231 @@
+"""AOT pipeline: lower the L2 model + L1 kernels to HLO text artifacts.
+
+Usage (from python/):
+    python -m compile.aot --config tiny --out ../artifacts
+
+Emits into the output directory:
+    train_step.hlo.txt     fused fwd+bwd: (tokens, *params) -> (loss, *grads)
+    eval_step.hlo.txt      loss only
+    lion_update.hlo.txt    L1 Pallas fused Lion worker update over flat d
+    majority_vote.hlo.txt  L1 Pallas vote aggregation (N x d -> d)
+    apply_update.hlo.txt   x - lr*(delta + wd*x) elementwise
+    params_init.bin        flat f32 LE initial parameters
+    manifest.json          layout + artifact contract for the rust runtime
+
+Interchange is HLO *text*, not `.serialize()`: jax >= 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md and aot_recipe).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import lion_step, majority_vote
+
+MANIFEST_VERSION = 1
+# Workers per majority_vote artifact (server-side aggregation width).
+DEFAULT_VOTE_WORKERS = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg):
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    params = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in M.param_specs(cfg)
+    ]
+    return jax.jit(M.make_train_step(cfg)).lower(tok, *params)
+
+
+def lower_eval_step(cfg):
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    params = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in M.param_specs(cfg)
+    ]
+    return jax.jit(M.make_eval_step(cfg)).lower(tok, *params)
+
+
+def lower_lion_update(flat_dim, beta1, beta2):
+    spec = jax.ShapeDtypeStruct((flat_dim,), jnp.float32)
+
+    def fn(m, g):
+        return lion_step.lion_update(m, g, beta1=beta1, beta2=beta2)
+
+    return jax.jit(fn).lower(spec, spec)
+
+
+def lower_majority_vote(nworkers, flat_dim):
+    spec = jax.ShapeDtypeStruct((nworkers, flat_dim), jnp.int8)
+
+    def fn(deltas):
+        return (majority_vote.majority_vote(deltas),)
+
+    return jax.jit(fn).lower(spec)
+
+
+def lower_apply_update(flat_dim):
+    x = jax.ShapeDtypeStruct((flat_dim,), jnp.float32)
+    delta = jax.ShapeDtypeStruct((flat_dim,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(x, delta, lr, wd):
+        return (x - lr * (delta + wd * x),)
+
+    return jax.jit(fn).lower(x, delta, scalar, scalar)
+
+
+def tensor_json(name, shape, dtype="f32", offset=None):
+    d = {"name": name, "shape": list(int(s) for s in shape), "dtype": dtype}
+    if offset is not None:
+        d["offset"] = int(offset)
+    return d
+
+
+def build(cfg_name: str, out_dir: str, seed: int = 0, vote_workers: int = DEFAULT_VOTE_WORKERS,
+          force: bool = False) -> dict:
+    cfg = M.CONFIGS[cfg_name]
+    os.makedirs(out_dir, exist_ok=True)
+
+    # Input-hash for no-op rebuilds: config + source files.
+    srcs = []
+    here = os.path.dirname(__file__)
+    for root, _, files in os.walk(here):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                srcs.append(os.path.join(root, f))
+    h = hashlib.sha256()
+    h.update(repr(cfg).encode())
+    h.update(str(seed).encode())
+    h.update(str(vote_workers).encode())
+    for s in srcs:
+        with open(s, "rb") as fh:
+            h.update(fh.read())
+    input_hash = h.hexdigest()[:16]
+    stamp_path = os.path.join(out_dir, ".stamp")
+    if not force and os.path.exists(stamp_path):
+        with open(stamp_path) as fh:
+            if fh.read().strip() == input_hash:
+                print(f"artifacts up to date (hash {input_hash}); skipping")
+                with open(os.path.join(out_dir, "manifest.json")) as mf:
+                    return json.load(mf)
+
+    specs = M.param_specs(cfg)
+    flat_dim = 0
+    params_json = []
+    for name, shape in specs:
+        n = int(np.prod(shape))
+        params_json.append(tensor_json(name, shape, "f32", offset=flat_dim))
+        flat_dim += n
+    print(f"model {cfg.name}: {flat_dim:,} params, {len(specs)} tensors")
+
+    artifacts = {}
+
+    def emit(name, lowered, inputs, outputs):
+        fname = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {"file": fname, "inputs": inputs, "outputs": outputs}
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)")
+
+    tok_spec = tensor_json("tokens", (cfg.batch, cfg.seq_len + 1), "i32")
+    param_specs_json = [tensor_json(n, s) for n, s in specs]
+    grad_specs_json = [tensor_json("d_" + n, s) for n, s in specs]
+
+    emit(
+        "train_step",
+        lower_train_step(cfg),
+        [tok_spec] + param_specs_json,
+        [tensor_json("loss", ())] + grad_specs_json,
+    )
+    emit(
+        "eval_step",
+        lower_eval_step(cfg),
+        [tok_spec] + param_specs_json,
+        [tensor_json("loss", ())],
+    )
+    emit(
+        "lion_update",
+        lower_lion_update(flat_dim, beta1=0.9, beta2=0.99),
+        [tensor_json("m", (flat_dim,)), tensor_json("g", (flat_dim,))],
+        [tensor_json("delta", (flat_dim,), "i8"), tensor_json("m_new", (flat_dim,))],
+    )
+    emit(
+        "majority_vote",
+        lower_majority_vote(vote_workers, flat_dim),
+        [tensor_json("deltas", (vote_workers, flat_dim), "i8")],
+        [tensor_json("agg", (flat_dim,), "i8")],
+    )
+    emit(
+        "apply_update",
+        lower_apply_update(flat_dim),
+        [
+            tensor_json("x", (flat_dim,)),
+            tensor_json("delta", (flat_dim,)),
+            tensor_json("lr", ()),
+            tensor_json("wd", ()),
+        ],
+        [tensor_json("x_new", (flat_dim,))],
+    )
+
+    # Initial parameters (flat f32 LE).
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    flat = np.concatenate([np.asarray(p, dtype=np.float32).ravel() for p in params])
+    assert flat.size == flat_dim, (flat.size, flat_dim)
+    flat.astype("<f4").tofile(os.path.join(out_dir, "params_init.bin"))
+    print(f"  wrote params_init.bin ({flat.nbytes / 1e6:.1f} MB)")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "model": cfg.name,
+        "input_hash": input_hash,
+        "config": {
+            "vocab": cfg.vocab,
+            "dim": cfg.dim,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "vote_workers": vote_workers,
+        },
+        "flat_dim": flat_dim,
+        "params": params_json,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp_path, "w") as f:
+        f.write(input_hash)
+    print(f"  wrote manifest.json (hash {input_hash})")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny", choices=sorted(M.CONFIGS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--vote-workers", type=int, default=DEFAULT_VOTE_WORKERS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    build(args.config, args.out, seed=args.seed, vote_workers=args.vote_workers,
+          force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: majority-vote aggregation (paper eq. 5).
+
+Server-side: given the N workers' binary updates stacked as
+int8[N, d], compute sign(sum_i delta_i) per coordinate. Tiled along d:
+each grid step loads an (N, block) int8 tile (the whole worker column
+fits VMEM for N <= 64 with block = 32k: 2 MiB in, 32 KiB out), reduces
+along the worker axis in int32, and stores the int8 ternary result.
+
+interpret=True for the same CPU-PJRT reason as lion_step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 32768
+
+
+def _kernel(deltas_ref, out_ref):
+    votes = jnp.sum(deltas_ref[...].astype(jnp.int32), axis=0)
+    out_ref[...] = jnp.sign(votes).astype(jnp.int8)
+
+
+def majority_vote(deltas, block=DEFAULT_BLOCK, interpret=True):
+    """sign(sum over workers) of an int8[N, d] stack -> int8[d]."""
+    n, d = deltas.shape
+    block = min(block, max(d, 1))
+    pad = (-d) % block
+    if pad:
+        # zero-pad: padded coords produce sign(0)=0, sliced off below
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+    dp = d + pad
+    grid = dp // block
+    out = pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((n, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.int8),
+        interpret=interpret,
+    )(deltas)
+    return out[:d] if pad else out

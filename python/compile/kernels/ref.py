@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contracts: `lion_step.lion_update` and
+`majority_vote.majority_vote` must match these bit-for-bit (integer
+outputs) / to float tolerance (momentum) under pytest + hypothesis.
+
+Sign convention: the *binarized* sign ``bsign(x) = +1 if x >= 0 else -1``
+(zero maps to +1), matching the rust `optim::lion::bsign` so the 1-bit
+codec never sees a zero. ``jnp.sign`` is NOT used on the worker update path.
+"""
+
+import jax.numpy as jnp
+
+# Default Lion betas (Chen et al. 2023b; paper Algorithm 1).
+BETA1 = 0.9
+BETA2 = 0.99
+
+
+def bsign(x):
+    """Binarized sign: x >= 0 -> +1 else -1 (int8)."""
+    return jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+
+
+def lion_update_ref(m, g, beta1=BETA1, beta2=BETA2):
+    """Reference fused Lion worker update (paper eq. 4).
+
+    Returns (delta int8 in {-1,+1}, m_new f32):
+      delta = bsign(beta1 * m + (1 - beta1) * g)
+      m_new = beta2 * m + (1 - beta2) * g
+    """
+    m = m.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    delta = bsign(beta1 * m + (1.0 - beta1) * g)
+    m_new = beta2 * m + (1.0 - beta2) * g
+    return delta, m_new
+
+
+def majority_vote_ref(deltas):
+    """Reference server aggregation (paper eq. 5, Majority Vote).
+
+    deltas: int8[N, d] of worker sign updates in {-1, +1}.
+    Returns int8[d] = sign(sum_i deltas[i]) in {-1, 0, +1}
+    (0 only possible for even-N ties).
+    """
+    s = jnp.sum(deltas.astype(jnp.int32), axis=0)
+    return jnp.sign(s).astype(jnp.int8)
+
+
+def avg_vote_ref(deltas):
+    """Reference Averaging aggregation: (1/N) * sum_i deltas[i], f32[d]."""
+    n = deltas.shape[0]
+    return jnp.sum(deltas.astype(jnp.float32), axis=0) / n
+
+
+def apply_update_ref(x, delta, lr, wd):
+    """Worker-side apply (paper eq. 6): x - lr * (delta + wd * x)."""
+    return x - lr * (delta.astype(jnp.float32) + wd * x)

@@ -1,0 +1,182 @@
+"""L2: GPT2++-style byte-level transformer LM (fwd/bwd), build-time only.
+
+"GPT2++" per the paper's Section 5.2: the GPT-2 block with modern
+LLaMA-style training techniques — RMSNorm instead of LayerNorm and a
+gated (SwiGLU) MLP. Causal self-attention, learned positional
+embeddings, byte vocab (256).
+
+Parameters are an *ordered list* of (name, array); the order defines the
+flat-buffer layout shared with the rust coordinator (manifest.json).
+`train_step` returns (loss, *grads) in the same order — one fused
+forward+backward executable.
+
+The L1 Pallas kernel (`kernels.lion_step`) is exported alongside from
+aot.py; at train time the rust coordinator owns the optimizer loop, so
+the kernel is a separate artifact rather than being fused into
+train_step (the paper's workers also separate grad computation from the
+Lion update).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 256
+    dim: int = 64
+    layers: int = 2
+    heads: int = 2
+    seq_len: int = 64
+    batch: int = 4
+    # SwiGLU hidden multiple (LLaMA uses ~8/3 * dim rounded)
+    mlp_mult: float = 8 / 3
+
+    @property
+    def head_dim(self):
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def mlp_hidden(self):
+        h = int(self.dim * self.mlp_mult)
+        return ((h + 31) // 32) * 32  # round to 32
+
+
+# Registry of model sizes. `tiny` is the pytest/integration config;
+# `lm100m` is the EXPERIMENTS.md end-to-end driver target.
+CONFIGS = {
+    "tiny": ModelConfig("tiny", dim=64, layers=2, heads=2, seq_len=64, batch=4),
+    "small": ModelConfig("small", dim=256, layers=4, heads=4, seq_len=128, batch=8),
+    "lm10m": ModelConfig("lm10m", dim=320, layers=8, heads=8, seq_len=256, batch=8),
+    "lm25m": ModelConfig("lm25m", dim=512, layers=8, heads=8, seq_len=256, batch=8),
+    "lm100m": ModelConfig("lm100m", dim=768, layers=14, heads=12, seq_len=256, batch=8),
+}
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the flat layout contract."""
+    specs = [
+        ("embed", (cfg.vocab, cfg.dim)),
+        ("pos", (cfg.seq_len, cfg.dim)),
+    ]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1", (cfg.dim,)),
+            (p + "wq", (cfg.dim, cfg.dim)),
+            (p + "wk", (cfg.dim, cfg.dim)),
+            (p + "wv", (cfg.dim, cfg.dim)),
+            (p + "wo", (cfg.dim, cfg.dim)),
+            (p + "ln2", (cfg.dim,)),
+            (p + "w_gate", (cfg.dim, cfg.mlp_hidden)),
+            (p + "w_up", (cfg.dim, cfg.mlp_hidden)),
+            (p + "w_down", (cfg.mlp_hidden, cfg.dim)),
+        ]
+    specs += [
+        ("ln_f", (cfg.dim,)),
+        ("head", (cfg.dim, cfg.vocab)),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize parameters (GPT-2-style scaled normal; norms at 1)."""
+    params = []
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    for (name, shape), k in zip(specs, keys):
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            arr = jnp.ones(shape, jnp.float32)
+        elif name == "pos":
+            arr = 0.01 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.02 if name in ("embed",) else 1.0 / jnp.sqrt(fan_in)
+            # residual-branch down-scaling (GPT-2 trick)
+            if name.endswith(("wo", "w_down")):
+                scale = scale / jnp.sqrt(2.0 * cfg.layers)
+            arr = scale * jax.random.normal(k, shape, jnp.float32)
+        params.append(arr.astype(jnp.float32))
+    return params
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def attention(x, wq, wk, wv, wo, cfg: ModelConfig):
+    b, t, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+    q = (x @ wq).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def forward(params, tokens_in, cfg: ModelConfig):
+    """tokens_in: i32[b, t] -> logits f32[b, t, vocab]."""
+    it = iter(params)
+
+    def take():
+        return next(it)
+
+    embed, pos = take(), take()
+    x = embed[tokens_in] + pos[None, : tokens_in.shape[1]]
+    for _ in range(cfg.layers):
+        ln1, wq, wk, wv, wo = take(), take(), take(), take(), take()
+        ln2, w_gate, w_up, w_down = take(), take(), take(), take()
+        x = x + attention(rms_norm(x, ln1), wq, wk, wv, wo, cfg)
+        x = x + swiglu(rms_norm(x, ln2), w_gate, w_up, w_down)
+    ln_f, head = take(), take()
+    return rms_norm(x, ln_f) @ head
+
+
+def loss_fn(params, tokens, cfg: ModelConfig):
+    """Next-byte cross entropy. tokens: i32[b, t+1]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig):
+    """(tokens, *params) -> (loss, *grads): the fused fwd+bwd artifact."""
+
+    @functools.partial(jax.jit, static_argnums=())
+    def train_step(tokens, *params):
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(ps, tokens, cfg)
+        )(list(params))
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """(tokens, *params) -> (loss,): loss-only artifact."""
+
+    @functools.partial(jax.jit, static_argnums=())
+    def eval_step(tokens, *params):
+        return (loss_fn(list(params), tokens, cfg),)
+
+    return eval_step
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))

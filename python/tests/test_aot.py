@@ -1,0 +1,102 @@
+"""AOT pipeline: manifest consistency, HLO text validity, no-op rebuilds."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build("tiny", out, seed=0, vote_workers=4)
+    return out, manifest
+
+
+def test_manifest_layout_is_contiguous(built):
+    _, m = built
+    offset = 0
+    for p in m["params"]:
+        assert p["offset"] == offset
+        offset += int(np.prod(p["shape"]))
+    assert m["flat_dim"] == offset
+
+
+def test_manifest_matches_model_specs(built):
+    _, m = built
+    specs = M.param_specs(M.CONFIGS["tiny"])
+    assert len(m["params"]) == len(specs)
+    for p, (name, shape) in zip(m["params"], specs):
+        assert p["name"] == name
+        assert tuple(p["shape"]) == tuple(shape)
+
+
+def test_all_artifacts_exist_and_are_hlo_text(built):
+    out, m = built
+    assert set(m["artifacts"]) == {
+        "train_step",
+        "eval_step",
+        "lion_update",
+        "majority_vote",
+        "apply_update",
+    }
+    for name, a in m["artifacts"].items():
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_params_init_matches_flat_dim(built):
+    out, m = built
+    data = np.fromfile(os.path.join(out, "params_init.bin"), dtype="<f4")
+    assert data.size == m["flat_dim"]
+    assert np.isfinite(data).all()
+    # norm layers initialized to exactly 1.0 somewhere in the buffer
+    assert (data == 1.0).sum() >= M.CONFIGS["tiny"].dim
+
+
+def test_train_step_io_shapes(built):
+    _, m = built
+    ts = m["artifacts"]["train_step"]
+    cfg = M.CONFIGS["tiny"]
+    assert ts["inputs"][0]["shape"] == [cfg.batch, cfg.seq_len + 1]
+    assert ts["inputs"][0]["dtype"] == "i32"
+    assert len(ts["inputs"]) == 1 + len(m["params"])
+    assert len(ts["outputs"]) == 1 + len(m["params"])
+    assert ts["outputs"][0]["shape"] == []
+
+
+def test_lion_update_io(built):
+    _, m = built
+    lu = m["artifacts"]["lion_update"]
+    d = m["flat_dim"]
+    assert lu["inputs"][0]["shape"] == [d]
+    assert lu["outputs"][0]["dtype"] == "i8"
+    assert lu["outputs"][1]["shape"] == [d]
+
+
+def test_noop_rebuild_is_skipped(built, capsys):
+    out, m = built
+    m2 = aot.build("tiny", out, seed=0, vote_workers=4)
+    assert "up to date" in capsys.readouterr().out
+    assert m2["input_hash"] == m["input_hash"]
+
+
+def test_force_rebuild(built):
+    out, m = built
+    m2 = aot.build("tiny", out, seed=0, vote_workers=4, force=True)
+    assert m2["flat_dim"] == m["flat_dim"]
+
+
+def test_manifest_json_parses(built):
+    out, _ = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        j = json.load(f)
+    assert j["version"] == aot.MANIFEST_VERSION
+    assert j["model"] == "tiny"

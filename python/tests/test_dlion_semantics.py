@@ -1,0 +1,111 @@
+"""Python-side simulation of Algorithm 1 built ONLY from the L1 kernels +
+refs — cross-checks the paper's semantics independently of the rust
+implementation (which tests the same invariants in rust/src/optim/dist).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lion_step, majority_vote, ref
+
+settings.register_profile("repo2", max_examples=25, deadline=None)
+settings.load_profile("repo2")
+
+
+def lion_sequential(x0, grads_per_step, lr, wd, beta1=0.9, beta2=0.99):
+    """Single-node Lion (paper eq. 1), binarized sign."""
+    x, m = x0.copy(), np.zeros_like(x0)
+    for g in grads_per_step:
+        blend = beta1 * m + (1 - beta1) * g
+        delta = np.where(blend >= 0, 1.0, -1.0)
+        x = x - lr * (delta + wd * x)
+        m = beta2 * m + (1 - beta2) * g
+    return x
+
+
+def dlion_mavo(x0, grads_per_step_per_worker, lr, wd):
+    """Distributed Lion MaVo via the Pallas kernels (paper Algorithm 1)."""
+    nworkers = len(grads_per_step_per_worker[0])
+    d = x0.size
+    x = jnp.asarray(x0)
+    ms = [jnp.zeros(d, jnp.float32) for _ in range(nworkers)]
+    for grads in grads_per_step_per_worker:
+        deltas, new_ms = [], []
+        for m, g in zip(ms, grads):
+            delta, m_new = lion_step.lion_update(m, jnp.asarray(g), block=256)
+            deltas.append(delta)
+            new_ms.append(m_new)
+        ms = new_ms
+        agg = majority_vote.majority_vote(jnp.stack(deltas), block=256)
+        x = ref.apply_update_ref(x, agg, lr, wd)
+    return np.asarray(x)
+
+
+@given(
+    d=st.integers(min_value=4, max_value=200),
+    steps=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_n1_mavo_equals_sequential_lion(d, steps, seed):
+    # Invariant 3 (DESIGN.md), python side: one worker == plain Lion.
+    rng = np.random.default_rng(seed)
+    x0 = rng.standard_normal(d).astype(np.float32)
+    grads = [rng.standard_normal(d).astype(np.float32) for _ in range(steps)]
+    lr, wd = 0.01, 0.1
+    seq = lion_sequential(x0, grads, lr, wd)
+    dist = dlion_mavo(x0, [[g] for g in grads], lr, wd)
+    np.testing.assert_allclose(dist, seq, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    n=st.sampled_from([3, 5, 9]),
+    d=st.integers(min_value=4, max_value=100),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mavo_follows_majority_gradient_sign(n, d, seed):
+    # At step 0 (zero momentum) the aggregated update must be the majority
+    # of the workers' gradient signs.
+    rng = np.random.default_rng(seed)
+    grads = [rng.standard_normal(d).astype(np.float32) for _ in range(n)]
+    deltas = []
+    for g in grads:
+        delta, _ = lion_step.lion_update(jnp.zeros(d, jnp.float32), jnp.asarray(g), block=64)
+        deltas.append(delta)
+    agg = np.asarray(majority_vote.majority_vote(jnp.stack(deltas), block=64))
+    votes = sum(np.where(g >= 0, 1, -1) for g in grads)
+    np.testing.assert_array_equal(agg, np.sign(votes).astype(np.int8))
+
+
+def test_mavo_noise_suppression_improves_with_workers():
+    # The √N story behind Theorem 4.6: with a fixed true gradient plus
+    # worker noise, more workers make the majority vote agree more often
+    # with the true gradient's sign.
+    rng = np.random.default_rng(0)
+    d = 2000
+    true_g = rng.standard_normal(d).astype(np.float32)
+
+    def agreement(n):
+        grads = [true_g + 2.0 * rng.standard_normal(d).astype(np.float32) for _ in range(n)]
+        deltas = [
+            lion_step.lion_update(jnp.zeros(d, jnp.float32), jnp.asarray(g))[0]
+            for g in grads
+        ]
+        agg = np.asarray(majority_vote.majority_vote(jnp.stack(deltas)))
+        return float((agg == np.where(true_g >= 0, 1, -1)).mean())
+
+    a1, a9, a33 = agreement(1), agreement(9), agreement(33)
+    assert a9 > a1 + 0.05, (a1, a9)
+    assert a33 > a9, (a9, a33)
+
+
+def test_avg_downlink_values_are_low_precision():
+    # Averaging sends S/N where S is an integer in {-N..N}: exactly the
+    # log(N)-bit alphabet of Table 1.
+    rng = np.random.default_rng(1)
+    n, d = 8, 500
+    deltas = jnp.asarray(rng.choice([-1, 1], size=(n, d)).astype(np.int8))
+    avg = np.asarray(ref.avg_vote_ref(deltas))
+    alphabet = {(2 * k - n) / n for k in range(n + 1)}
+    assert set(np.unique(avg).tolist()) <= alphabet

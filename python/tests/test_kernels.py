@@ -1,0 +1,129 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the core correctness signal).
+
+hypothesis sweeps shapes, dtypes, block sizes, and value regimes;
+integer outputs must match bit-for-bit, momentum to float tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lion_step, majority_vote, ref
+
+settings.register_profile("repo", max_examples=40, deadline=None)
+settings.load_profile("repo")
+
+
+def rand_f32(rng, n, scale=1.0, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(n).astype(dtype) * scale)
+
+
+@given(
+    d=st.integers(min_value=1, max_value=5000),
+    block=st.sampled_from([64, 256, 1024, 65536]),
+    scale=st.sampled_from([1e-6, 1.0, 1e6]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lion_update_matches_ref(d, block, scale, seed):
+    rng = np.random.default_rng(seed)
+    m = rand_f32(rng, d, scale)
+    g = rand_f32(rng, d, scale)
+    delta, m_new = lion_step.lion_update(m, g, block=block)
+    delta_ref, m_new_ref = ref.lion_update_ref(m, g)
+    assert delta.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(delta), np.asarray(delta_ref))
+    # Kernel and ref may fuse multiply-adds in different order; when the
+    # blend cancels (|m_new| << |inputs|) the error is relative to the
+    # INPUT magnitude, so scale atol by the value scale.
+    np.testing.assert_allclose(
+        np.asarray(m_new), np.asarray(m_new_ref), rtol=1e-5, atol=1e-5 * scale
+    )
+
+
+@given(
+    d=st.integers(min_value=1, max_value=2000),
+    beta1=st.floats(min_value=0.0, max_value=1.0),
+    beta2=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lion_update_beta_sweep(d, beta1, beta2, seed):
+    rng = np.random.default_rng(seed)
+    m, g = rand_f32(rng, d), rand_f32(rng, d)
+    delta, m_new = lion_step.lion_update(m, g, beta1=beta1, beta2=beta2, block=256)
+    delta_ref, m_new_ref = ref.lion_update_ref(m, g, beta1=beta1, beta2=beta2)
+    np.testing.assert_array_equal(np.asarray(delta), np.asarray(delta_ref))
+    np.testing.assert_allclose(np.asarray(m_new), np.asarray(m_new_ref), rtol=1e-5, atol=1e-7)
+
+
+def test_lion_update_binarized_zero_convention():
+    # blend == 0 must produce +1 (the 1-bit codec has no zero symbol).
+    m = jnp.zeros(8, jnp.float32)
+    g = jnp.zeros(8, jnp.float32)
+    delta, _ = lion_step.lion_update(m, g, block=8)
+    assert (np.asarray(delta) == 1).all()
+
+
+def test_lion_update_is_strictly_binary():
+    rng = np.random.default_rng(7)
+    m, g = rand_f32(rng, 4096), rand_f32(rng, 4096)
+    delta, _ = lion_step.lion_update(m, g)
+    vals = set(np.unique(np.asarray(delta)).tolist())
+    assert vals <= {-1, 1}
+
+
+@given(
+    n=st.integers(min_value=1, max_value=33),
+    d=st.integers(min_value=1, max_value=3000),
+    block=st.sampled_from([32, 128, 32768]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_majority_vote_matches_ref(n, d, block, seed):
+    rng = np.random.default_rng(seed)
+    deltas = jnp.asarray(rng.choice([-1, 1], size=(n, d)).astype(np.int8))
+    out = majority_vote.majority_vote(deltas, block=block)
+    out_ref = ref.majority_vote_ref(deltas)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
+
+
+def test_majority_vote_odd_n_never_ties():
+    rng = np.random.default_rng(3)
+    deltas = jnp.asarray(rng.choice([-1, 1], size=(5, 1000)).astype(np.int8))
+    out = np.asarray(majority_vote.majority_vote(deltas))
+    assert (out != 0).all()
+
+
+def test_majority_vote_is_odd_function():
+    rng = np.random.default_rng(4)
+    deltas = jnp.asarray(rng.choice([-1, 1], size=(4, 500)).astype(np.int8))
+    a = np.asarray(majority_vote.majority_vote(deltas))
+    b = np.asarray(majority_vote.majority_vote(-deltas))
+    np.testing.assert_array_equal(a, -b)
+
+
+def test_majority_vote_unanimous():
+    ones = jnp.ones((7, 64), jnp.int8)
+    np.testing.assert_array_equal(np.asarray(majority_vote.majority_vote(ones)), 1)
+    np.testing.assert_array_equal(np.asarray(majority_vote.majority_vote(-ones)), -1)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_apply_update_ref_contract(seed):
+    # mirror of the rust-side apply: x - lr*(delta + wd*x)
+    rng = np.random.default_rng(seed)
+    x = rand_f32(rng, 100)
+    delta = jnp.asarray(rng.choice([-1, 1], size=100).astype(np.int8))
+    out = ref.apply_update_ref(x, delta, 0.1, 0.01)
+    expect = np.asarray(x) - 0.1 * (np.asarray(delta, np.float32) + 0.01 * np.asarray(x))
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+
+
+@pytest.mark.parametrize("d", [1, 5, 63, 64, 65, 100_000])
+def test_lion_update_edge_sizes(d):
+    rng = np.random.default_rng(d)
+    m, g = rand_f32(rng, d), rand_f32(rng, d)
+    delta, m_new = lion_step.lion_update(m, g)
+    delta_ref, m_new_ref = ref.lion_update_ref(m, g)
+    np.testing.assert_array_equal(np.asarray(delta), np.asarray(delta_ref))
+    # FMA ordering differs between the tiled kernel and the fused ref
+    np.testing.assert_allclose(np.asarray(m_new), np.asarray(m_new_ref), rtol=1e-5, atol=1e-6)

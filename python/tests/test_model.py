@@ -1,0 +1,130 @@
+"""L2 model correctness: shapes, loss sanity, gradient check, causality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(
+        rng.integers(0, CFG.vocab, size=(CFG.batch, CFG.seq_len + 1)), jnp.int32
+    )
+
+
+def test_param_specs_cover_all_layers():
+    specs = M.param_specs(CFG)
+    names = [n for n, _ in specs]
+    assert names[0] == "embed" and names[-1] == "head"
+    assert sum(1 for n in names if n.startswith("layer1.")) == 9
+    assert len(names) == 4 + 9 * CFG.layers
+
+
+def test_init_matches_specs(params):
+    for (name, shape), p in zip(M.param_specs(CFG), params):
+        assert p.shape == shape, name
+        assert p.dtype == jnp.float32
+
+
+def test_forward_shapes(params, tokens):
+    logits = M.forward(params, tokens[:, :-1], CFG)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    loss = M.loss_fn(params, tokens, CFG)
+    uniform = np.log(CFG.vocab)
+    assert abs(float(loss) - uniform) < 1.0, (float(loss), uniform)
+
+
+def test_causality(params, tokens):
+    # Changing a future token must not affect earlier logits.
+    inp = tokens[:, :-1]
+    logits_a = M.forward(params, inp, CFG)
+    perturbed = inp.at[:, -1].set((inp[:, -1] + 1) % CFG.vocab)
+    logits_b = M.forward(params, perturbed, CFG)
+    np.testing.assert_allclose(
+        np.asarray(logits_a[:, :-1]), np.asarray(logits_b[:, :-1]), rtol=1e-5, atol=1e-6
+    )
+    assert not np.allclose(np.asarray(logits_a[:, -1]), np.asarray(logits_b[:, -1]))
+
+
+def test_train_step_outputs(params, tokens):
+    step = M.make_train_step(CFG)
+    out = step(tokens, *params)
+    assert len(out) == 1 + len(params)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert bool(jnp.isfinite(g).all())
+
+
+def test_gradients_match_finite_difference(params, tokens):
+    step = M.make_train_step(CFG)
+    out = step(tokens, *params)
+    grads = out[1:]
+    # probe a few coordinates of the head matrix (last param)
+    idx = len(params) - 1
+    eps = 1e-3
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        i = rng.integers(0, params[idx].shape[0])
+        j = rng.integers(0, params[idx].shape[1])
+        pp = [p.copy() for p in params]
+        pp[idx] = pp[idx].at[i, j].add(eps)
+        lp = float(M.loss_fn(pp, tokens, CFG))
+        pp[idx] = pp[idx].at[i, j].add(-2 * eps)
+        lm = float(M.loss_fn(pp, tokens, CFG))
+        fd = (lp - lm) / (2 * eps)
+        an = float(grads[idx][i, j])
+        assert abs(fd - an) < 5e-2 * (1 + abs(fd)), (fd, an)
+
+
+def test_eval_step_matches_loss(params, tokens):
+    ev = M.make_eval_step(CFG)
+    (loss_e,) = ev(tokens, *params)
+    loss_d = M.loss_fn(params, tokens, CFG)
+    np.testing.assert_allclose(float(loss_e), float(loss_d), rtol=1e-6)
+
+
+def test_one_sgd_step_reduces_loss(params, tokens):
+    step = M.make_train_step(CFG)
+    out = step(tokens, *params)
+    loss0, grads = out[0], out[1:]
+    lr = 0.1
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    loss1 = M.loss_fn(new_params, tokens, CFG)
+    assert float(loss1) < float(loss0)
+
+
+def test_num_params_counts():
+    n = M.num_params(CFG)
+    assert n == 143_680  # pinned: the tiny config's manifest flat_dim
+
+
+@pytest.mark.parametrize("name", sorted(M.CONFIGS))
+def test_all_configs_are_consistent(name):
+    cfg = M.CONFIGS[name]
+    assert cfg.dim % cfg.heads == 0
+    assert M.num_params(cfg) > 0
+
+
+def test_config_scale_ladder():
+    # lm100m must actually be ~100M params (the EXPERIMENTS.md target).
+    n100 = M.num_params(M.CONFIGS["lm100m"])
+    assert 80e6 < n100 < 130e6, n100
+    n25 = M.num_params(M.CONFIGS["lm25m"])
+    assert 18e6 < n25 < 35e6, n25

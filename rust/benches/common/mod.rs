@@ -1,0 +1,70 @@
+//! Shared setup for the paper-table benches.
+#![allow(dead_code)] // each bench binary uses a different subset
+
+use dlion::cluster::TrainConfig;
+use dlion::optim::dist::StrategyHyper;
+use dlion::tasks::data::VisionData;
+use dlion::tasks::mlp::MlpVision;
+use std::sync::Arc;
+
+/// The Figure 2–4 substrate: synthetic-vision MLP (CIFAR-10 stand-in).
+pub fn vision_task(seed: u64) -> MlpVision {
+    let data = Arc::new(VisionData::generate(4096, 1024, 1.6, seed));
+    MlpVision::new(data, 64)
+}
+
+/// Per-method (lr, wd) from Table 2, scaled to this substrate (the
+/// paper's raw lr values are ViT-specific; ratios preserved).
+pub fn table2_hparams(method: &str) -> (f64, StrategyHyper) {
+    let mut hp = StrategyHyper::default();
+    let lr = match method {
+        "g-adamw" => {
+            hp.weight_decay = 0.0005;
+            1e-3
+        }
+        "g-lion" | "d-lion-avg" | "d-lion-mavo" => {
+            hp.weight_decay = 0.005;
+            5e-4
+        }
+        "d-signum-avg" | "d-signum-mavo" => {
+            hp.weight_decay = 0.005;
+            hp.signum_beta = 0.99;
+            5e-4
+        }
+        "dgc" | "graddrop" | "terngrad" => {
+            hp.weight_decay = 0.0005;
+            hp.keep_frac = 0.04;
+            5e-3
+        }
+        _ => 1e-3,
+    };
+    (lr, hp)
+}
+
+/// Bench-wide train config; `quick` (via `cargo bench -- --quick` or
+/// DLION_BENCH_QUICK=1) shrinks everything for CI.
+pub fn train_cfg(steps: usize, seed: u64) -> TrainConfig {
+    let quick = dlion::bench_utils::quick_mode();
+    TrainConfig {
+        steps: if quick { steps / 8 } else { steps },
+        batch_per_worker: 32,
+        base_lr: 0.0, // set per method
+        eval_every: 0,
+        seed,
+        ..Default::default()
+    }
+}
+
+pub fn seeds() -> Vec<u64> {
+    if dlion::bench_utils::quick_mode() {
+        vec![42]
+    } else {
+        vec![42, 52, 62] // the paper's seeds
+    }
+}
+
+pub fn out_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&p).ok();
+    p
+}

@@ -1,0 +1,74 @@
+//! Extension experiment: Byzantine-worker robustness.
+//!
+//! The paper inherits SignSGD-with-majority-vote's fault-tolerance story
+//! (Bernstein et al. 2018c, cited in footnote 4): a 1-bit vote bounds a
+//! corrupt worker's per-coordinate influence to one vote, while f32
+//! gradient averaging is unbounded. This bench trains the vision task
+//! with b ∈ {0, 1, 3} workers replaced by random-byte adversaries
+//! (k = 8 total) and reports final accuracy per strategy.
+//!
+//! Run: `cargo bench --bench ext_byzantine [-- --quick]`
+
+mod common;
+
+use dlion::bench_utils::Table;
+use dlion::optim::dist::faulty::{Fault, FaultyWorker};
+use dlion::optim::dist::{by_name, run_round, WorkerLogic};
+use dlion::tasks::GradTask;
+use dlion::util::math::cosine_lr;
+use dlion::util::Rng;
+
+const METHODS: &[&str] = &["g-lion", "d-lion-avg", "d-lion-mavo"];
+const K: usize = 8;
+
+fn main() {
+    let quick = dlion::bench_utils::quick_mode();
+    let steps = if quick { 120 } else { 800 };
+    let byz_counts = [0usize, 1, 3];
+    let mut header: Vec<String> = vec!["method".into()];
+    header.extend(byz_counts.iter().map(|b| format!("acc @ {b} byz")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("Extension — Byzantine robustness (k={K}, random-byte adversaries)"),
+        &header_refs,
+    );
+    for &method in METHODS {
+        let (lr, hp) = common::table2_hparams(method);
+        let strategy = by_name(method, &hp).unwrap();
+        let mut row = vec![method.to_string()];
+        for &nbyz in &byz_counts {
+            let task = common::vision_task(42);
+            let d = task.dim();
+            let mut root = Rng::new(42);
+            let params0 = task.init_params(&mut root);
+            let mut params = vec![params0; K];
+            let mut rngs: Vec<Rng> = (0..K).map(|i| root.fork(i as u64)).collect();
+            let mut workers: Vec<Box<dyn WorkerLogic>> =
+                (0..K).map(|i| strategy.make_worker(i, d)).collect();
+            for b in 0..nbyz {
+                let honest = std::mem::replace(&mut workers[b], strategy.make_worker(b, d));
+                workers[b] =
+                    Box::new(FaultyWorker::new(honest, Fault::RandomBytes, 100 + b as u64));
+            }
+            let mut server = strategy.make_server(K, d);
+            let mut grads = vec![vec![0.0f32; d]; K];
+            for step in 0..steps {
+                let lr_t = cosine_lr(step, steps, 0, lr, 0.0) as f32;
+                for ((g, p), r) in grads.iter_mut().zip(&params).zip(rngs.iter_mut()) {
+                    task.minibatch_grad(p, r, 32, g);
+                }
+                run_round(&mut workers, server.as_mut(), &mut params, &grads, lr_t, step);
+            }
+            // evaluate an honest replica (index nbyz is always honest)
+            let acc = task.evaluate(&params[nbyz.min(K - 1)]).accuracy.unwrap();
+            row.push(format!("{acc:.3}"));
+            eprintln!("byzantine: {method} b={nbyz} -> {acc:.3}");
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_csv(common::out_dir().join("ext_byzantine.csv")).unwrap();
+    println!("Expected shape (Bernstein 2018c, inherited by D-Lion): the vote");
+    println!("degrades gracefully with minority corruption; averaging-based");
+    println!("downlinks admit more damage per corrupt worker.");
+}

@@ -1,0 +1,74 @@
+//! Figure 2 reproduction: test accuracy over training for the seven
+//! Section-5.1 methods × k ∈ {4, 8, 16, 32} workers × 3 seeds on the
+//! synthetic-vision substrate. Emits per-run accuracy curves
+//! (results/fig2_curves.csv) and the final-accuracy matrix.
+//!
+//! Paper shape to check: D-Lion (MaVo) ≈ G-Lion; D-Lion (Avg) ≈ G-AdamW;
+//! all four clearly above TernGrad/GradDrop/DGC; accuracy drifts down
+//! slowly as k grows.
+//!
+//! Run: `cargo bench --bench fig2_cifar_sim [-- --quick]`
+
+mod common;
+
+use dlion::bench_utils::Table;
+use dlion::cluster::run_sequential;
+use dlion::optim::dist::by_name;
+use dlion::tasks::GradTask;
+use dlion::util::csv::CsvWriter;
+use dlion::util::math::mean;
+
+const METHODS: &[&str] = &[
+    "g-adamw", "g-lion", "d-lion-avg", "d-lion-mavo", "terngrad", "graddrop", "dgc",
+];
+
+fn main() {
+    let quick = dlion::bench_utils::quick_mode();
+    let workers: &[usize] = if quick { &[4] } else { &[4, 8, 16, 32] };
+    let seeds = common::seeds();
+    let mut curves = CsvWriter::create(
+        common::out_dir().join("fig2_curves.csv"),
+        &["method", "k", "seed", "step", "eval_acc"],
+    )
+    .unwrap();
+    let mut header: Vec<String> = vec!["method".into()];
+    header.extend(workers.iter().map(|k| format!("k={k}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Figure 2 — final test accuracy (mean over seeds)", &header_refs);
+    for &method in METHODS {
+        let (lr, hp) = common::table2_hparams(method);
+        let strategy = by_name(method, &hp).unwrap();
+        let mut row = vec![method.to_string()];
+        for &k in workers {
+            let mut finals = Vec::new();
+            for &seed in &seeds {
+                let task = common::vision_task(seed);
+                let mut cfg = common::train_cfg(800, seed);
+                cfg.base_lr = lr;
+                cfg.eval_every = cfg.steps / 8;
+                let res = run_sequential(&task, strategy.as_ref(), k, &cfg);
+                for r in &res.history {
+                    if let Some(e) = &r.eval {
+                        curves
+                            .row(&[
+                                method.to_string(),
+                                k.to_string(),
+                                seed.to_string(),
+                                r.step.to_string(),
+                                format!("{:.5}", e.accuracy.unwrap_or(f64::NAN)),
+                            ])
+                            .unwrap();
+                    }
+                }
+                finals.push(res.final_eval.unwrap().accuracy.unwrap());
+            }
+            row.push(format!("{:.3}", mean(&finals)));
+            eprintln!("fig2: {method} k={k} -> {:.3}", mean(&finals));
+        }
+        t.row(row);
+    }
+    curves.flush().unwrap();
+    t.print();
+    t.write_csv(common::out_dir().join("fig2_final_acc.csv")).unwrap();
+    let _ = &common::vision_task(42).dim();
+}

@@ -1,0 +1,50 @@
+//! Figure 3 reproduction: best test accuracy vs worker count k, for the
+//! global and Distributed-Lion methods. The paper's observation to
+//! check: performance degrades slowly with k (larger effective batch ⇒
+//! less stochasticity), and D-Lion (MaVo) tracks or slightly beats
+//! G-Lion at small scale.
+//!
+//! Run: `cargo bench --bench fig3_workers [-- --quick]`
+
+mod common;
+
+use dlion::bench_utils::Table;
+use dlion::cluster::run_sequential;
+use dlion::optim::dist::by_name;
+use dlion::util::math::{mean, std_dev};
+
+const METHODS: &[&str] = &["g-adamw", "g-lion", "d-lion-avg", "d-lion-mavo"];
+
+fn main() {
+    let quick = dlion::bench_utils::quick_mode();
+    let workers: &[usize] = if quick { &[4, 8] } else { &[4, 8, 16, 32] };
+    let seeds = common::seeds();
+    let mut header: Vec<String> = vec!["method".into()];
+    header.extend(workers.iter().map(|k| format!("k={k}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Figure 3 — best test accuracy vs worker count (mean ± std over seeds)",
+        &header_refs,
+    );
+    for &method in METHODS {
+        let (lr, hp) = common::table2_hparams(method);
+        let strategy = by_name(method, &hp).unwrap();
+        let mut row = vec![method.to_string()];
+        for &k in workers {
+            let mut bests = Vec::new();
+            for &seed in &seeds {
+                let task = common::vision_task(seed);
+                let mut cfg = common::train_cfg(800, seed);
+                cfg.base_lr = lr;
+                cfg.eval_every = cfg.steps / 8;
+                let res = run_sequential(&task, strategy.as_ref(), k, &cfg);
+                bests.push(res.best_accuracy().unwrap());
+            }
+            row.push(format!("{:.3}±{:.3}", mean(&bests), std_dev(&bests)));
+            eprintln!("fig3: {method} k={k} -> {:.3}", mean(&bests));
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_csv(common::out_dir().join("fig3_best_acc.csv")).unwrap();
+}

@@ -1,0 +1,100 @@
+//! Figure 4 reproduction: test *error* vs communication bits per
+//! iteration (per parameter, per worker, up+down) at k = 4 — including
+//! the D-SIGNUM (Avg/MaVo) ablations. Closer to the lower-left is
+//! better.
+//!
+//! Paper shape to check: D-Lion variants sit in the lower-left corner
+//! (≈2–4 bits, lowest error); the SIGNUM ablations sit at the same
+//! bandwidth but higher error; G-Lion/G-AdamW reach similar error only
+//! at 64 bits; TernGrad/GradDrop/DGC are dominated.
+//!
+//! Run: `cargo bench --bench fig4_tradeoff [-- --quick]`
+
+mod common;
+
+use dlion::bench_utils::Table;
+use dlion::cluster::run_sequential;
+use dlion::optim::dist::by_name;
+use dlion::tasks::GradTask;
+use dlion::util::math::mean;
+
+const METHODS: &[&str] = &[
+    "g-adamw",
+    "g-lion",
+    "d-lion-avg",
+    "d-lion-mavo",
+    "d-signum-avg",
+    "d-signum-mavo",
+    "terngrad",
+    "graddrop",
+    "dgc",
+];
+
+fn main() {
+    let k = 4;
+    let seeds = common::seeds();
+    let mut t = Table::new(
+        "Figure 4 — test error vs communication bits/iter (k=4)",
+        &["method", "bits/param/iter", "test error", "paper position"],
+    );
+    let expectation: &[(&str, &str)] = &[
+        ("d-lion-mavo", "lower-left (best)"),
+        ("d-lion-avg", "lower-left"),
+        ("d-signum-mavo", "same bits, worse error"),
+        ("d-signum-avg", "same bits, worse error"),
+        ("g-lion", "64 bits, low error"),
+        ("g-adamw", "64 bits, low error"),
+        ("terngrad", "dominated"),
+        ("graddrop", "dominated"),
+        ("dgc", "dominated"),
+    ];
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for &method in METHODS {
+        let (lr, hp) = common::table2_hparams(method);
+        let strategy = by_name(method, &hp).unwrap();
+        let mut errs = Vec::new();
+        let mut bits = 0.0;
+        for &seed in &seeds {
+            let task = common::vision_task(seed);
+            let mut cfg = common::train_cfg(800, seed);
+            cfg.base_lr = lr;
+            let res = run_sequential(&task, strategy.as_ref(), k, &cfg);
+            errs.push(1.0 - res.final_eval.unwrap().accuracy.unwrap());
+            bits = res.bits_per_param_per_iter(task.dim());
+        }
+        rows.push((method.to_string(), bits, mean(&errs)));
+        eprintln!("fig4: {method} bits={bits:.2} err={:.3}", mean(&errs));
+    }
+    for (method, bits, err) in &rows {
+        let note = expectation
+            .iter()
+            .find(|(m, _)| m == method)
+            .map(|(_, e)| *e)
+            .unwrap_or("—");
+        t.row(vec![
+            method.clone(),
+            format!("{bits:.2}"),
+            format!("{err:.3}"),
+            note.to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv(common::out_dir().join("fig4_tradeoff.csv")).unwrap();
+
+    // Pareto check: at least one D-Lion variant must not be dominated by
+    // any compression baseline (the paper's headline trade-off claim).
+    let dlion_best = rows
+        .iter()
+        .filter(|(m, _, _)| m.starts_with("d-lion"))
+        .map(|&(_, b, e)| (b, e))
+        .fold((f64::MAX, f64::MAX), |acc, x| (acc.0.min(x.0), acc.1.min(x.1)));
+    for (m, b, e) in &rows {
+        if ["terngrad", "graddrop", "dgc"].contains(&m.as_str()) {
+            assert!(
+                *e > dlion_best.1 || *b > dlion_best.0,
+                "{m} dominates D-Lion: bits {b} err {e} vs {dlion_best:?}"
+            );
+        }
+    }
+    println!("Pareto check: no compression baseline dominates D-Lion ✓");
+}

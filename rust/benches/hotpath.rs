@@ -1,0 +1,226 @@
+//! §Perf hot-path microbenches: every operation on the per-step critical
+//! path of the coordinator, at LM scale (d = 4M, "small"-model size ×
+//! headroom), plus the PJRT train_step/lion_update artifact latencies
+//! when artifacts exist. Feeds EXPERIMENTS.md §Perf before/after.
+//!
+//! Run: `cargo bench --bench hotpath [-- --quick]`
+
+mod common;
+
+use dlion::bench_utils::{bench_auto, black_box, fmt_secs, Table};
+use dlion::optim::dist::{by_name, StrategyHyper};
+use dlion::optim::lion::Lion;
+use dlion::optim::{LionParams, Optimizer};
+use dlion::util::Rng;
+
+fn strategy_round(d: usize, n: usize) {
+    let mut t = Table::new(
+        &format!("Full strategy round (encode+aggregate+apply), d={d}, n={n}"),
+        &["strategy", "median/round", "params GB/s", "× dense f32 copy"],
+    );
+    let hp = StrategyHyper::default();
+    let mut rng = Rng::new(5);
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect();
+    // baseline: one dense f32 memcpy of the params
+    let src = grads[0].clone();
+    let mut dst = vec![0.0f32; d];
+    let base = bench_auto(0.4, || {
+        dst.copy_from_slice(black_box(&src));
+        black_box(&dst);
+    });
+    for name in ["d-lion-mavo", "d-lion-avg", "d-signum-mavo", "terngrad", "dgc", "g-lion", "g-adamw"] {
+        let strat = by_name(name, &hp).unwrap();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];
+        let mut step = 0usize;
+        let timing = bench_auto(0.8, || {
+            let ups: Vec<_> = workers
+                .iter_mut()
+                .zip(&grads)
+                .map(|(w, g)| w.encode(black_box(g), 1e-3, step))
+                .collect();
+            let down = server.aggregate(&ups, 1e-3, step);
+            for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+                w.apply(p, &down, 1e-3, step);
+            }
+            step += 1;
+        });
+        t.row(vec![
+            name.to_string(),
+            fmt_secs(timing.median),
+            format!("{:.2}", (4.0 * d as f64 * n as f64) / timing.median / 1e9),
+            format!("{:.1}x", timing.median / base.median),
+        ]);
+    }
+    t.print();
+    t.write_csv(common::out_dir().join(format!("hotpath_round_d{d}_n{n}.csv"))).unwrap();
+}
+
+fn lion_kernels(d: usize) {
+    let mut t = Table::new(
+        &format!("Lion update micro-ops, d={d}"),
+        &["op", "median", "GB/s"],
+    );
+    let mut rng = Rng::new(6);
+    let mut g = vec![0.0f32; d];
+    rng.fill_normal(&mut g, 1.0);
+    let mut lion = Lion::new(d, LionParams::default());
+    let mut params = vec![0.1f32; d];
+    let timing = bench_auto(0.5, || {
+        lion.step(black_box(&mut params), black_box(&g), 1e-3);
+    });
+    t.row(vec![
+        "Lion::step (fused native)".into(),
+        fmt_secs(timing.median),
+        format!("{:.2}", 12.0 * d as f64 / timing.median / 1e9), // r:m,g,p w:m,p
+    ]);
+    let mut delta = vec![0.0f32; d];
+    let timing = bench_auto(0.5, || {
+        lion.peek_update(black_box(&g), black_box(&mut delta));
+    });
+    t.row(vec![
+        "Lion::peek_update".into(),
+        fmt_secs(timing.median),
+        format!("{:.2}", 8.0 * d as f64 / timing.median / 1e9),
+    ]);
+    let timing = bench_auto(0.5, || {
+        lion.advance_momentum(black_box(&g));
+    });
+    t.row(vec![
+        "Lion::advance_momentum".into(),
+        fmt_secs(timing.median),
+        format!("{:.2}", 8.0 * d as f64 / timing.median / 1e9),
+    ]);
+    t.print();
+    t.write_csv(common::out_dir().join("hotpath_lion_micro.csv")).unwrap();
+}
+
+fn pjrt_path() {
+    let artifacts = std::env::var("DLION_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("hotpath: no artifacts, skipping PJRT latencies");
+        return;
+    }
+    let rt = dlion::runtime::Runtime::load(&artifacts).unwrap();
+    let d = rt.manifest.flat_dim;
+    let ts = dlion::runtime::TrainStepExec::new(&rt).unwrap();
+    let lu = dlion::runtime::LionUpdateExec::new(&rt).unwrap();
+    let init = std::fs::read(std::path::Path::new(&artifacts).join("params_init.bin")).unwrap();
+    let params: Vec<f32> = init
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let tokens: Vec<i32> = (0..ts.batch * ts.seq_plus1).map(|i| (i % 251) as i32).collect();
+    let mut grad = vec![0.0f32; d];
+    let mut t = Table::new(
+        &format!("PJRT artifact latencies (model={}, d={d})", rt.manifest.model_name),
+        &["artifact", "median", "note"],
+    );
+    let timing = bench_auto(1.0, || {
+        black_box(ts.run(black_box(&params), black_box(&tokens), black_box(&mut grad)).unwrap());
+    });
+    t.row(vec![
+        "train_step (fwd+bwd)".into(),
+        fmt_secs(timing.median),
+        format!("{} tok/s", (ts.batch * (ts.seq_plus1 - 1)) as f64 / timing.median),
+    ]);
+    let m = vec![0.01f32; d];
+    let timing = bench_auto(1.0, || {
+        black_box(lu.run(black_box(&m), black_box(&grad)).unwrap());
+    });
+    t.row(vec![
+        "lion_update (Pallas artifact)".into(),
+        fmt_secs(timing.median),
+        format!("{:.2} GB/s", 8.0 * d as f64 / timing.median / 1e9),
+    ]);
+    t.print();
+    t.write_csv(common::out_dir().join("hotpath_pjrt.csv")).unwrap();
+}
+
+fn perf_ablation(d: usize) {
+    // §Perf before/after: naive implementations vs the optimized hot
+    // paths that replaced them (EXPERIMENTS.md §Perf iteration log).
+    use dlion::comm::{intavg, sign};
+    let mut t = Table::new(
+        &format!("§Perf ablation — before (naive) vs after (optimized), d={d}"),
+        &["op", "before", "after", "speedup"],
+    );
+    let mut rng = Rng::new(9);
+    let mut blend = vec![0.0f32; d];
+    rng.fill_normal(&mut blend, 1.0);
+    let packed = sign::pack_f32(&blend);
+
+    // 1. server vote accumulation: per-bit loop -> byte LUT
+    let mut votes = vec![0i32; d];
+    let before = bench_auto(0.5, || {
+        sign::accumulate_votes_naive(black_box(&packed), black_box(&mut votes));
+    });
+    let after = bench_auto(0.5, || {
+        sign::accumulate_votes(black_box(&packed), black_box(&mut votes));
+    });
+    t.row(vec![
+        "accumulate_votes (LUT)".into(),
+        fmt_secs(before.median),
+        fmt_secs(after.median),
+        format!("{:.2}x", before.median / after.median),
+    ]);
+
+    // 2. avg-downlink pack: per-bit writes -> u64 shift register
+    let sums: Vec<i32> = blend.iter().map(|&x| ((x * 2.0) as i32).clamp(-2, 2) * 2).collect();
+    let before = bench_auto(0.5, || {
+        black_box(intavg::pack_naive(black_box(&sums), 4));
+    });
+    let after = bench_auto(0.5, || {
+        black_box(intavg::pack(black_box(&sums), 4));
+    });
+    t.row(vec![
+        "intavg::pack (u64 register)".into(),
+        fmt_secs(before.median),
+        fmt_secs(after.median),
+        format!("{:.2}x", before.median / after.median),
+    ]);
+
+    // 3. D-Lion worker encode: 3-pass (blend store, pack, momentum) ->
+    //    single fused pass
+    let mut lion_a = Lion::new(d, LionParams::default());
+    let mut scratch = vec![0.0f32; d];
+    let mut g = vec![0.0f32; d];
+    rng.fill_normal(&mut g, 1.0);
+    let before = bench_auto(0.5, || {
+        // the pre-optimization worker path
+        let b1 = lion_a.hp.beta1;
+        for ((s, &m), &gg) in scratch.iter_mut().zip(&lion_a.momentum).zip(&g) {
+            *s = b1 * m + (1.0 - b1) * gg;
+        }
+        black_box(sign::pack_f32(&scratch));
+        lion_a.advance_momentum(black_box(&g));
+    });
+    let mut lion_b = Lion::new(d, LionParams::default());
+    let after = bench_auto(0.5, || {
+        black_box(lion_b.encode_fused(black_box(&g)));
+    });
+    t.row(vec![
+        "D-Lion worker encode (fused)".into(),
+        fmt_secs(before.median),
+        fmt_secs(after.median),
+        format!("{:.2}x", before.median / after.median),
+    ]);
+    t.print();
+    t.write_csv(common::out_dir().join("hotpath_perf_ablation.csv")).unwrap();
+}
+
+fn main() {
+    let quick = dlion::bench_utils::quick_mode();
+    let d = if quick { 1_000_000 } else { 4_000_000 };
+    strategy_round(d, 4);
+    lion_kernels(d);
+    perf_ablation(d);
+    pjrt_path();
+}

@@ -1,0 +1,151 @@
+//! Table 1 reproduction: minimum bandwidth per method, both analytic
+//! (bits/param formulas) and *measured* (actual encoded bytes through
+//! the codecs) across model sizes and worker counts — plus codec
+//! throughput (the L3 hot-path numbers for EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench table1_bandwidth [-- --quick]`
+
+mod common;
+
+use dlion::bench_utils::{bench_auto, black_box, fmt_secs, Table};
+use dlion::comm::{intavg, sign, tern};
+use dlion::optim::dist::{by_name, StrategyHyper, ALL_STRATEGIES};
+use dlion::util::Rng;
+
+fn analytic_table(n: usize) {
+    let hp = StrategyHyper::default();
+    let mut t = Table::new(
+        &format!("Table 1 — minimum bandwidth (bits/param), n={n} workers"),
+        &["Method", "Worker→Server", "Server→Worker", "paper says"],
+    );
+    let paper: &[(&str, &str)] = &[
+        ("g-lion", "32d / 32d"),
+        ("g-adamw", "32d / 32d"),
+        ("terngrad", "1.5d / log(2n+1)d"),
+        ("dgc", "(1−η)32d / 32d"),
+        ("d-lion-avg", "d / log(n)d"),
+        ("d-lion-mavo", "d / d"),
+    ];
+    for name in ALL_STRATEGIES {
+        let s = by_name(name, &hp).unwrap();
+        let note = paper
+            .iter()
+            .find(|(m, _)| m == name)
+            .map(|(_, p)| *p)
+            .unwrap_or("—");
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", s.uplink_bits_per_param(n)),
+            format!("{:.2}", s.downlink_bits_per_param(n)),
+            note.to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv(common::out_dir().join(format!("table1_analytic_n{n}.csv"))).unwrap();
+}
+
+fn measured_table() {
+    // Measured bytes through one full encode->aggregate round per method.
+    let mut t = Table::new(
+        "Table 1 — measured encoded bytes (one round, per worker)",
+        &["Method", "d", "n", "uplink B", "downlink B", "uplink bits/param"],
+    );
+    let quick = dlion::bench_utils::quick_mode();
+    let dims: &[usize] = if quick { &[100_000] } else { &[100_000, 1_000_000] };
+    let hp = StrategyHyper::default();
+    for &d in dims {
+        for &n in &[4usize, 32] {
+            for name in ["d-lion-mavo", "d-lion-avg", "terngrad", "dgc", "g-adamw"] {
+                let strat = by_name(name, &hp).unwrap();
+                let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+                let mut server = strat.make_server(n, d);
+                let mut rng = Rng::new(7);
+                let grads: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut g = vec![0.0f32; d];
+                        rng.fill_normal(&mut g, 1.0);
+                        g
+                    })
+                    .collect();
+                let ups: Vec<_> = workers
+                    .iter_mut()
+                    .zip(&grads)
+                    .map(|(w, g)| w.encode(g, 1e-3, 0))
+                    .collect();
+                let up_bytes = ups[0].len();
+                let down = server.aggregate(&ups, 1e-3, 0);
+                t.row(vec![
+                    name.to_string(),
+                    d.to_string(),
+                    n.to_string(),
+                    up_bytes.to_string(),
+                    down.len().to_string(),
+                    format!("{:.3}", up_bytes as f64 * 8.0 / d as f64),
+                ]);
+            }
+        }
+    }
+    t.print();
+    t.write_csv(common::out_dir().join("table1_measured.csv")).unwrap();
+}
+
+fn codec_throughput() {
+    // §Perf L3 numbers: GB/s through the hot-path codecs on this core.
+    let d = 4_000_000;
+    let mut rng = Rng::new(3);
+    let mut blend = vec![0.0f32; d];
+    rng.fill_normal(&mut blend, 1.0);
+    let mut t = Table::new(
+        "L3 hot-path codec throughput (1 core)",
+        &["op", "median", "GB/s (f32 in)"],
+    );
+    let timing = bench_auto(0.6, || {
+        black_box(sign::pack_f32(black_box(&blend)));
+    });
+    t.row(vec![
+        "sign::pack_f32 (worker uplink)".into(),
+        fmt_secs(timing.median),
+        format!("{:.2}", 4.0 * d as f64 / timing.median / 1e9),
+    ]);
+    let packed = sign::pack_f32(&blend);
+    let mut votes = vec![0i32; d];
+    let timing = bench_auto(0.6, || {
+        sign::accumulate_votes(black_box(&packed), black_box(&mut votes));
+    });
+    t.row(vec![
+        "sign::accumulate_votes (server)".into(),
+        fmt_secs(timing.median),
+        format!("{:.2}", 4.0 * d as f64 / timing.median / 1e9),
+    ]);
+    // valid vote sums for n=4 (parity: S+4 even)
+    let sums: Vec<i32> = blend.iter().map(|&x| ((x * 2.0) as i32).clamp(-2, 2) * 2).collect();
+    let timing = bench_auto(0.6, || {
+        black_box(intavg::pack(black_box(&sums), 4));
+    });
+    t.row(vec![
+        "intavg::pack n=4 (avg downlink)".into(),
+        fmt_secs(timing.median),
+        format!("{:.2}", 4.0 * d as f64 / timing.median / 1e9),
+    ]);
+    let trits: Vec<i8> = blend
+        .iter()
+        .map(|&x| if x > 0.5 { 1 } else if x < -0.5 { -1 } else { 0 })
+        .collect();
+    let timing = bench_auto(0.6, || {
+        black_box(tern::pack(black_box(&trits)));
+    });
+    t.row(vec![
+        "tern::pack (terngrad uplink)".into(),
+        fmt_secs(timing.median),
+        format!("{:.2}", d as f64 / timing.median / 1e9),
+    ]);
+    t.print();
+    t.write_csv(common::out_dir().join("table1_codec_throughput.csv")).unwrap();
+}
+
+fn main() {
+    analytic_table(4);
+    analytic_table(32);
+    measured_table();
+    codec_throughput();
+}

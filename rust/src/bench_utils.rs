@@ -1,0 +1,198 @@
+//! Hand-rolled bench harness (the offline crate set has no criterion).
+//!
+//! Provides warmup + timed iterations with median / p10 / p90 / MAD
+//! statistics, a markdown/CSV table emitter for the paper-table benches,
+//! and a `black_box` shim. All `cargo bench` targets use
+//! `harness = false` and drive this module.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Prevent the optimizer from eliding a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Timing statistics over bench iterations (seconds).
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub mean: f64,
+}
+
+impl Timing {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:>10} (p10 {}, p90 {}, n={})",
+            fmt_secs(self.median),
+            fmt_secs(self.p10),
+            fmt_secs(self.p90),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Auto-calibrating variant: picks an iteration count targeting
+/// `target_secs` total measurement time (min 5 iters).
+pub fn bench_auto<F: FnMut()>(target_secs: f64, mut f: F) -> Timing {
+    let t0 = Instant::now();
+    f(); // warmup + calibration probe
+    let probe = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / probe) as usize).clamp(5, 10_000);
+    bench(1, iters, f)
+}
+
+fn summarize(samples: &[f64]) -> Timing {
+    use crate::util::math::{mean, median, percentile};
+    Timing {
+        iters: samples.len(),
+        median: median(samples),
+        p10: percentile(samples, 10.0),
+        p90: percentile(samples, 90.0),
+        mean: mean(samples),
+    }
+}
+
+/// Markdown table emitter for paper-table reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Print as aligned markdown.
+    pub fn print(&self) {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n## {}\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                s.push_str(&format!(" {:<width$} |", cells[i], width = widths[i]));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!();
+    }
+
+    /// Also write as CSV next to stdout output.
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::create(
+            path,
+            &self.header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        )?;
+        for row in &self.rows {
+            w.row(row)?;
+        }
+        w.flush()
+    }
+}
+
+/// Parse `--quick` / env DLION_BENCH_QUICK for CI-speed benches.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("DLION_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let t = bench(2, 20, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.iters, 20);
+        assert!(t.median > 0.0);
+        assert!(t.p10 <= t.median && t.median <= t.p90);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_rejects_bad_width() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn table_panics_on_width_mismatch() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

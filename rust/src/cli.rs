@@ -1,0 +1,317 @@
+//! Hand-rolled CLI (no clap offline): `dlion <command> [flags] [k=v ...]`.
+//!
+//! Commands:
+//! * `train`      — run one experiment config (`--config path` + overrides)
+//! * `sweep`      — strategies × workers × seeds sweep, CSV out
+//! * `bandwidth`  — print the Table-1 bandwidth matrix
+//! * `strategies` — list registered strategies
+//! * `lm`         — train the AOT transformer (requires `make artifacts`)
+
+use crate::cluster::{run_sequential, run_threaded, TrainConfig};
+use crate::config::Experiment;
+use crate::error::{DlionError, Result};
+use crate::optim::dist::{by_name, StrategyHyper, ALL_STRATEGIES};
+use crate::tasks::GradTask;
+use std::sync::Arc;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: std::collections::BTreeMap<String, String>,
+    pub overrides: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token = command, `--k v` / `--k=v` flags,
+    /// bare `a.b=c` tokens become config overrides.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--") && !n.contains('=')) == Some(true)
+                {
+                    args.flags.insert(flag.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.flags.insert(flag.to_string(), "true".into());
+                }
+            } else if tok.contains('=') {
+                args.overrides.push(tok.clone());
+            } else {
+                return Err(DlionError::Config(format!("unexpected argument '{tok}'")));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1"))
+    }
+}
+
+pub const HELP: &str = "\
+dlion — Distributed Lion training coordinator
+
+USAGE: dlion <command> [--flags] [key=value overrides]
+
+COMMANDS:
+  train       run one experiment   (--config configs/fig2.toml, --threaded)
+  sweep       strategies × workers × seeds sweep, CSV to --out dir
+  bandwidth   print the Table-1 bandwidth matrix (--dim, --workers)
+  strategies  list registered distributed strategies
+  lm          train the AOT transformer (--artifacts artifacts/,
+              --strategy d-lion-mavo, --workers 4, --steps 200)
+  help        this text
+
+Overrides use dotted keys, e.g.: train.steps=500 hyper.weight_decay=0.01
+";
+
+/// Entry point used by main.rs (kept here so it is unit-testable).
+pub fn run(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "help" | "-h" | "--help" => {
+            println!("{HELP}");
+            Ok(0)
+        }
+        "strategies" => {
+            for s in ALL_STRATEGIES {
+                println!("{s}");
+            }
+            Ok(0)
+        }
+        "bandwidth" => cmd_bandwidth(&args),
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "lm" => cmd_lm(&args),
+        other => Err(DlionError::Config(format!("unknown command '{other}' (try help)"))),
+    }
+}
+
+fn load_experiment(args: &Args) -> Result<Experiment> {
+    let mut exp = match args.flag("config") {
+        Some(path) => Experiment::load(path)?,
+        None => Experiment::default(),
+    };
+    for ov in &args.overrides {
+        exp.apply_override(ov)?;
+    }
+    Ok(exp)
+}
+
+fn cmd_bandwidth(args: &Args) -> Result<i32> {
+    let dim: usize = args.flag("dim").and_then(|s| s.parse().ok()).unwrap_or(1_000_000);
+    let workers: usize = args.flag("workers").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let hp = StrategyHyper::default();
+    println!("Table 1 — bits/param for d={dim}, n={workers}:");
+    println!("{:<16} {:>14} {:>14}", "method", "worker→server", "server→worker");
+    for name in ALL_STRATEGIES {
+        let s = by_name(name, &hp).unwrap();
+        println!(
+            "{:<16} {:>14.2} {:>14.2}",
+            name,
+            s.uplink_bits_per_param(workers),
+            s.downlink_bits_per_param(workers)
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_train(args: &Args) -> Result<i32> {
+    let exp = load_experiment(args)?;
+    let hp = exp.hyper;
+    for strat_name in &exp.strategies {
+        let strategy = by_name(strat_name, &hp)
+            .ok_or_else(|| DlionError::Config(format!("unknown strategy '{strat_name}'")))?;
+        for &n in &exp.workers {
+            for &seed in &exp.seeds {
+                let task = exp.build_task(seed as u64)?;
+                let cfg = TrainConfig { seed: seed as u64, ..exp.train.clone() };
+                let result = if args.flag_bool("threaded") {
+                    let task_arc: Arc<dyn crate::tasks::GradTask + Send + Sync> =
+                        Arc::from(exp.build_task(seed as u64)?);
+                    run_threaded(task_arc, strategy.as_ref(), n, &cfg).0
+                } else {
+                    run_sequential(task.as_ref(), strategy.as_ref(), n, &cfg)
+                };
+                let fin = result.final_eval.unwrap();
+                println!(
+                    "{strat_name} n={n} seed={seed}: loss={:.4} acc={} up={}B down={}B ({:.1}s)",
+                    fin.loss,
+                    fin.accuracy.map_or("-".into(), |a| format!("{a:.4}")),
+                    result.total_uplink(),
+                    result.total_downlink(),
+                    result.wall_secs
+                );
+                if let Some(dir) = args.flag("out") {
+                    let path = format!("{dir}/{}_{strat_name}_n{n}_s{seed}.csv", exp.name);
+                    result.write_csv(&path)?;
+                }
+            }
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_sweep(args: &Args) -> Result<i32> {
+    let exp = load_experiment(args)?;
+    let out_dir = args.flag("out").unwrap_or("results").to_string();
+    std::fs::create_dir_all(&out_dir)?;
+    let mut summary = crate::util::csv::CsvWriter::create(
+        format!("{out_dir}/{}_summary.csv", exp.name),
+        &[
+            "strategy",
+            "workers",
+            "seed",
+            "final_loss",
+            "final_acc",
+            "best_acc",
+            "uplink_bytes",
+            "downlink_bytes",
+            "bits_per_param_iter",
+            "wall_secs",
+        ],
+    )?;
+    for strat_name in &exp.strategies {
+        let strategy = by_name(strat_name, &exp.hyper)
+            .ok_or_else(|| DlionError::Config(format!("unknown strategy '{strat_name}'")))?;
+        for &n in &exp.workers {
+            for &seed in &exp.seeds {
+                let task = exp.build_task(seed as u64)?;
+                let cfg = TrainConfig { seed: seed as u64, ..exp.train.clone() };
+                let result = run_sequential(task.as_ref(), strategy.as_ref(), n, &cfg);
+                let fin = result.final_eval.unwrap();
+                summary.row(&[
+                    strat_name.clone(),
+                    n.to_string(),
+                    seed.to_string(),
+                    format!("{:.6}", fin.loss),
+                    fin.accuracy.map_or(String::new(), |a| format!("{a:.6}")),
+                    result.best_accuracy().map_or(String::new(), |a| format!("{a:.6}")),
+                    result.total_uplink().to_string(),
+                    result.total_downlink().to_string(),
+                    format!("{:.3}", result.bits_per_param_per_iter(task.dim())),
+                    format!("{:.2}", result.wall_secs),
+                ])?;
+                println!(
+                    "done: {strat_name} n={n} seed={seed} loss={:.4}",
+                    fin.loss
+                );
+            }
+        }
+    }
+    summary.flush()?;
+    println!("summary written to {out_dir}/{}_summary.csv", exp.name);
+    Ok(0)
+}
+
+fn cmd_lm(args: &Args) -> Result<i32> {
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts").to_string();
+    let strat_name = args.flag("strategy").unwrap_or("d-lion-mavo").to_string();
+    let workers: usize = args.flag("workers").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let steps: usize = args.flag("steps").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let lr: f64 = args.flag("lr").and_then(|s| s.parse().ok()).unwrap_or(1e-3);
+    let wd: f32 = args.flag("wd").and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    let corpus_bytes: usize =
+        args.flag("corpus-bytes").and_then(|s| s.parse().ok()).unwrap_or(200_000);
+    let hp = StrategyHyper { weight_decay: wd, ..Default::default() };
+    let strategy = by_name(&strat_name, &hp)
+        .ok_or_else(|| DlionError::Config(format!("unknown strategy '{strat_name}'")))?;
+    let task = crate::lm::LmTask::new(
+        &artifacts,
+        corpus_bytes,
+        crate::lm::corpus::Grammar::default(),
+        42,
+    )?;
+    println!(
+        "lm: model={} d={} batch={} seq={} strategy={strat_name} workers={workers}",
+        task.rt.manifest.model_name,
+        task.dim(),
+        task.batch,
+        task.seq_plus1 - 1
+    );
+    let cfg = TrainConfig {
+        steps,
+        base_lr: lr,
+        warmup_steps: steps / 20,
+        eval_every: (steps / 10).max(1),
+        seed: 42,
+        ..Default::default()
+    };
+    let result = run_sequential(&task, strategy.as_ref(), workers, &cfg);
+    for r in &result.history {
+        if let Some(e) = &r.eval {
+            println!(
+                "step {:>5} loss {:.4} eval_loss {:.4} ppl {:.2}",
+                r.step,
+                r.train_loss,
+                e.loss,
+                e.loss.exp()
+            );
+        }
+    }
+    let fin = result.final_eval.unwrap();
+    println!(
+        "final: eval_loss={:.4} ppl={:.3} uplink={}B downlink={}B wall={:.1}s",
+        fin.loss,
+        fin.loss.exp(),
+        result.total_uplink(),
+        result.total_downlink(),
+        result.wall_secs
+    );
+    if let Some(out) = args.flag("out") {
+        result.write_csv(out)?;
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_overrides() {
+        let a = Args::parse(&argv("train --config x.toml --threaded train.steps=5")).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("config"), Some("x.toml"));
+        assert!(a.flag_bool("threaded"));
+        assert_eq!(a.overrides, vec!["train.steps=5"]);
+        let a = Args::parse(&argv("sweep --out=dir")).unwrap();
+        assert_eq!(a.flag("out"), Some("dir"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Args::parse(&argv("train bogus")).is_err());
+        assert!(run(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn help_and_listing_run() {
+        assert_eq!(run(&argv("help")).unwrap(), 0);
+        assert_eq!(run(&argv("strategies")).unwrap(), 0);
+        assert_eq!(run(&argv("bandwidth --dim 1000 --workers 8")).unwrap(), 0);
+    }
+
+    #[test]
+    fn quick_train_runs() {
+        let code = run(&argv(
+            "train task=quadratic strategies=d-lion-mavo workers=2 seeds=1 \
+             train.steps=20 train.eval_every=0 task.dim=16",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+}

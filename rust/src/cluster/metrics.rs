@@ -1,0 +1,166 @@
+//! Run metrics: per-step records, aggregates, CSV export.
+
+use crate::tasks::Eval;
+use crate::util::csv::CsvWriter;
+use std::path::Path;
+
+/// One training step's record.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub lr: f64,
+    pub train_loss: f64,
+    pub eval: Option<Eval>,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+}
+
+/// Full run result.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub task: String,
+    pub strategy: String,
+    pub nworkers: usize,
+    pub history: Vec<StepRecord>,
+    pub final_eval: Option<Eval>,
+    pub final_params: Option<Vec<f32>>,
+    pub wall_secs: f64,
+}
+
+impl RunResult {
+    pub fn new(task: String, strategy: String, nworkers: usize) -> Self {
+        RunResult {
+            task,
+            strategy,
+            nworkers,
+            history: Vec::new(),
+            final_eval: None,
+            final_params: None,
+            wall_secs: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, rec: StepRecord) {
+        self.history.push(rec);
+    }
+
+    /// Total bytes moved worker→server across the run.
+    pub fn total_uplink(&self) -> u64 {
+        self.history.iter().map(|r| r.uplink_bytes).sum()
+    }
+
+    /// Total bytes moved server→worker across the run.
+    pub fn total_downlink(&self) -> u64 {
+        self.history.iter().map(|r| r.downlink_bytes).sum()
+    }
+
+    /// Best held-out accuracy observed (periodic evals + final).
+    pub fn best_accuracy(&self) -> Option<f64> {
+        let peri = self
+            .history
+            .iter()
+            .filter_map(|r| r.eval.as_ref().and_then(|e| e.accuracy));
+        let fin = self.final_eval.as_ref().and_then(|e| e.accuracy);
+        peri.chain(fin).fold(None, |acc, a| Some(acc.map_or(a, |m: f64| m.max(a))))
+    }
+
+    /// Mean train loss over the last `k` steps (plateau estimate).
+    pub fn tail_loss(&self, k: usize) -> f64 {
+        let n = self.history.len();
+        let take = k.min(n).max(1);
+        let s: f64 = self.history[n - take..].iter().map(|r| r.train_loss).sum();
+        s / take as f64
+    }
+
+    /// Per-iteration communication bits per parameter *per worker* (both
+    /// directions) — the x-axis of Figure 4. The paper normalizes this
+    /// way: G-Lion/G-AdamW sit at 64 (= 32 up + 32 down).
+    pub fn bits_per_param_per_iter(&self, dim: usize) -> f64 {
+        if self.history.is_empty() {
+            return 0.0;
+        }
+        let per_iter =
+            (self.total_uplink() + self.total_downlink()) as f64 / self.history.len() as f64;
+        per_iter * 8.0 / dim as f64 / self.nworkers.max(1) as f64
+    }
+
+    /// Dump the history as CSV.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "step",
+                "lr",
+                "train_loss",
+                "eval_loss",
+                "eval_acc",
+                "uplink_bytes",
+                "downlink_bytes",
+            ],
+        )?;
+        for r in &self.history {
+            let (el, ea) = match &r.eval {
+                Some(e) => (
+                    format!("{:.6}", e.loss),
+                    e.accuracy.map_or(String::new(), |a| format!("{a:.6}")),
+                ),
+                None => (String::new(), String::new()),
+            };
+            w.row(&[
+                r.step.to_string(),
+                format!("{:.8}", r.lr),
+                format!("{:.6}", r.train_loss),
+                el,
+                ea,
+                r.uplink_bytes.to_string(),
+                r.downlink_bytes.to_string(),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> RunResult {
+        let mut r = RunResult::new("t".into(), "s".into(), 4);
+        for step in 0..n {
+            r.push(StepRecord {
+                step,
+                lr: 0.1,
+                train_loss: 1.0 / (step + 1) as f64,
+                eval: if step % 2 == 0 {
+                    Some(Eval { loss: 0.5, accuracy: Some(0.1 * step as f64) })
+                } else {
+                    None
+                },
+                uplink_bytes: 100,
+                downlink_bytes: 50,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = mk(10);
+        assert_eq!(r.total_uplink(), 1000);
+        assert_eq!(r.total_downlink(), 500);
+        assert!((r.best_accuracy().unwrap() - 0.8).abs() < 1e-12);
+        assert!(r.tail_loss(3) < r.tail_loss(10));
+        // 150 bytes/iter over dim 100, 4 workers -> 3 bits/param/worker
+        assert!((r.bits_per_param_per_iter(100) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let r = mk(4);
+        let path = std::env::temp_dir().join(format!("dlion_hist_{}.csv", std::process::id()));
+        r.write_csv(&path).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content.lines().count(), 5); // header + 4
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,293 @@
+//! Cluster runtime: the leader/worker training loop (paper Algorithm 1's
+//! outer `while not convergent` loop, for any [`Strategy`]).
+//!
+//! Two execution modes with identical semantics:
+//! * [`run_sequential`] — single-thread round loop; fastest on this
+//!   1-core box, used by the sweep benches (thousands of runs).
+//! * [`run_threaded`] — one OS thread per worker plus a server loop over
+//!   a byte-counted [`crate::comm`] fabric (in-proc channels); proves the
+//!   message protocol end-to-end and feeds the transport byte counters.
+//!
+//! Both assert the replicated-parameter invariant: every worker holds
+//! bit-identical parameters after every step (the downlink broadcast is
+//! the only thing that mutates them).
+
+pub mod metrics;
+
+use crate::comm::{inproc_fabric, CommStats, ServerTransport, WorkerTransport};
+use crate::optim::dist::{run_round, Strategy};
+use crate::tasks::{Eval, GradTask};
+use crate::util::math::cosine_lr;
+use crate::util::Rng;
+use metrics::{RunResult, StepRecord};
+use std::sync::Arc;
+
+/// Training-loop configuration (defaults mirror the paper's CIFAR setup:
+/// batch 32/worker, cosine schedule).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch_per_worker: usize,
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub min_lr_frac: f64,
+    /// evaluate every `eval_every` steps (0 = only at the end)
+    pub eval_every: usize,
+    pub seed: u64,
+    /// verify the replicated-parameter invariant every step (costly for
+    /// big d; always on in tests)
+    pub check_replicas: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 500,
+            batch_per_worker: 32,
+            base_lr: 1e-3,
+            warmup_steps: 0,
+            min_lr_frac: 0.0,
+            eval_every: 100,
+            seed: 42,
+            check_replicas: false,
+        }
+    }
+}
+
+/// Run the synchronous training loop in-process (no threads).
+pub fn run_sequential(
+    task: &dyn GradTask,
+    strategy: &dyn Strategy,
+    nworkers: usize,
+    cfg: &TrainConfig,
+) -> RunResult {
+    let d = task.dim();
+    let mut root = Rng::new(cfg.seed);
+    let params0 = task.init_params(&mut root);
+    let mut params: Vec<Vec<f32>> = vec![params0; nworkers];
+    let mut worker_rngs: Vec<Rng> = (0..nworkers).map(|i| root.fork(i as u64)).collect();
+    let mut workers: Vec<_> = (0..nworkers).map(|i| strategy.make_worker(i, d)).collect();
+    let mut server = strategy.make_server(nworkers, d);
+    let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; nworkers];
+    let mut result = RunResult::new(task.name(), strategy.name(), nworkers);
+    let t0 = std::time::Instant::now();
+    for step in 0..cfg.steps {
+        let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
+        let mut train_loss = 0.0f64;
+        for (w, ((g, p), r)) in
+            grads.iter_mut().zip(&params).zip(worker_rngs.iter_mut()).enumerate()
+        {
+            train_loss +=
+                task.minibatch_grad_worker(p, r, cfg.batch_per_worker, g, w, nworkers) as f64;
+        }
+        train_loss /= nworkers as f64;
+        let (up, down) = run_round(&mut workers, server.as_mut(), &mut params, &grads, lr, step);
+        if cfg.check_replicas {
+            for w in 1..nworkers {
+                assert_eq!(params[0], params[w], "replica divergence at step {step}");
+            }
+        }
+        let eval = if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            Some(task.evaluate(&params[0]))
+        } else {
+            None
+        };
+        result.push(StepRecord {
+            step,
+            lr: lr as f64,
+            train_loss,
+            eval,
+            uplink_bytes: up as u64,
+            downlink_bytes: down as u64,
+        });
+    }
+    result.final_eval = Some(task.evaluate(&params[0]));
+    result.wall_secs = t0.elapsed().as_secs_f64();
+    result.final_params = Some(params.swap_remove(0));
+    result
+}
+
+/// Run the same loop with one OS thread per worker over the in-process
+/// byte-counted fabric. Returns the result plus the transport stats.
+pub fn run_threaded(
+    task: Arc<dyn GradTask + Send + Sync>,
+    strategy: &dyn Strategy,
+    nworkers: usize,
+    cfg: &TrainConfig,
+) -> (RunResult, Arc<CommStats>) {
+    let d = task.dim();
+    let stats = CommStats::new();
+    let (mut server_tx, worker_txs) = inproc_fabric(nworkers, stats.clone());
+    let mut root = Rng::new(cfg.seed);
+    let params0 = task.init_params(&mut root);
+    let worker_rngs: Vec<Rng> = (0..nworkers).map(|i| root.fork(i as u64)).collect();
+    // metrics side-channel (not counted as training communication)
+    let (loss_tx, loss_rx) = std::sync::mpsc::channel::<(usize, f64)>();
+
+    let handles: Vec<_> = worker_txs
+        .into_iter()
+        .zip(worker_rngs)
+        .map(|(mut wt, mut rng)| {
+            let task = task.clone();
+            let mut logic = strategy.make_worker(wt.worker_id(), d);
+            let mut params = params0.clone();
+            let cfg = cfg.clone();
+            let loss_tx = loss_tx.clone();
+            std::thread::spawn(move || -> std::io::Result<Vec<f32>> {
+                let mut grad = vec![0.0f32; d];
+                for step in 0..cfg.steps {
+                    let lr = cosine_lr(
+                        step,
+                        cfg.steps,
+                        cfg.warmup_steps,
+                        cfg.base_lr,
+                        cfg.min_lr_frac,
+                    ) as f32;
+                    let wid = wt.worker_id();
+                    let loss = task.minibatch_grad_worker(
+                        &params,
+                        &mut rng,
+                        cfg.batch_per_worker,
+                        &mut grad,
+                        wid,
+                        nworkers,
+                    );
+                    let _ = loss_tx.send((step, loss as f64));
+                    let uplink = logic.encode(&grad, lr, step);
+                    wt.send(uplink)?;
+                    let downlink = wt.recv()?;
+                    logic.apply(&mut params, &downlink, lr, step);
+                }
+                Ok(params)
+            })
+        })
+        .collect();
+    drop(loss_tx);
+
+    // Server loop on the current thread.
+    let mut server = strategy.make_server(nworkers, d);
+    let t0 = std::time::Instant::now();
+    for step in 0..cfg.steps {
+        let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
+        let uplinks = server_tx.gather().expect("gather failed");
+        let downlink = server.aggregate(&uplinks, lr, step);
+        server_tx.broadcast(&downlink).expect("broadcast failed");
+    }
+
+    let mut result = RunResult::new(task.name(), strategy.name(), nworkers);
+    // collect losses per step (mean over workers)
+    let mut per_step = vec![(0.0f64, 0usize); cfg.steps];
+    for (step, loss) in loss_rx.iter() {
+        per_step[step].0 += loss;
+        per_step[step].1 += 1;
+    }
+    for (step, (sum, count)) in per_step.into_iter().enumerate() {
+        result.push(StepRecord {
+            step,
+            lr: cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac),
+            train_loss: sum / count.max(1) as f64,
+            eval: None,
+            uplink_bytes: 0, // tracked by CommStats in threaded mode
+            downlink_bytes: 0,
+        });
+    }
+    let mut final_params: Vec<Vec<f32>> = Vec::new();
+    for h in handles {
+        final_params.push(h.join().expect("worker panicked").expect("worker io error"));
+    }
+    if cfg.check_replicas {
+        for w in 1..nworkers {
+            assert_eq!(final_params[0], final_params[w], "replica divergence (threaded)");
+        }
+    }
+    result.final_eval = Some(task.evaluate(&final_params[0]));
+    result.wall_secs = t0.elapsed().as_secs_f64();
+    result.final_params = Some(final_params.swap_remove(0));
+    (result, stats)
+}
+
+/// Convenience: final evaluation of a sequential run.
+pub fn final_eval(
+    task: &dyn GradTask,
+    strategy: &dyn Strategy,
+    nworkers: usize,
+    cfg: &TrainConfig,
+) -> Eval {
+    run_sequential(task, strategy, nworkers, cfg).final_eval.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::dist::{by_name, StrategyHyper};
+    use crate::tasks::quadratic::Quadratic;
+
+    fn quick_cfg(steps: usize) -> TrainConfig {
+        TrainConfig {
+            steps,
+            batch_per_worker: 8,
+            base_lr: 0.01,
+            eval_every: 0,
+            seed: 7,
+            check_replicas: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sequential_and_threaded_agree_bit_exactly() {
+        // Same seed => same worker batches => identical trajectories for a
+        // deterministic strategy (d-lion-mavo has no strategy-side rng).
+        let task = Quadratic::new(64, 10.0, 0.5, 3);
+        let hp = StrategyHyper::default();
+        let strat = by_name("d-lion-mavo", &hp).unwrap();
+        let cfg = quick_cfg(50);
+        let seq = run_sequential(&task, strat.as_ref(), 4, &cfg);
+        let task_arc: Arc<dyn GradTask + Send + Sync> = Arc::new(Quadratic::new(64, 10.0, 0.5, 3));
+        let (thr, stats) = run_threaded(task_arc, strat.as_ref(), 4, &cfg);
+        assert_eq!(seq.final_params, thr.final_params);
+        // byte accounting: threaded CommStats must equal sequential sums
+        let seq_up: u64 = seq.history.iter().map(|r| r.uplink_bytes).sum();
+        let seq_down: u64 = seq.history.iter().map(|r| r.downlink_bytes).sum();
+        assert_eq!(stats.uplink(), seq_up);
+        assert_eq!(stats.downlink(), seq_down);
+    }
+
+    #[test]
+    fn all_strategies_run_and_reduce_loss() {
+        let task = Quadratic::new(32, 5.0, 0.3, 5);
+        let hp = StrategyHyper { weight_decay: 0.001, ..Default::default() };
+        for name in crate::optim::dist::ALL_STRATEGIES {
+            let strat = by_name(name, &hp).unwrap();
+            let lr = if name.starts_with("g-adamw") || name.starts_with("g-sgd") {
+                0.05
+            } else {
+                0.02
+            };
+            // DGC warms up sparsity over its first 200 steps and clips
+            // aggressively, so give every method the same longer horizon.
+            let cfg = TrainConfig { base_lr: lr, ..quick_cfg(700) };
+            let res = run_sequential(&task, strat.as_ref(), 4, &cfg);
+            let init_loss = task.evaluate(&task.init_params(&mut Rng::new(cfg.seed))).loss;
+            let fin = res.final_eval.unwrap().loss;
+            assert!(
+                fin < init_loss * 0.5,
+                "{name}: final={fin} init={init_loss}"
+            );
+        }
+    }
+
+    #[test]
+    fn lr_schedule_is_logged() {
+        let task = Quadratic::new(8, 1.0, 0.1, 1);
+        let strat = by_name("d-lion-avg", &StrategyHyper::default()).unwrap();
+        let cfg = TrainConfig {
+            warmup_steps: 5,
+            min_lr_frac: 0.1,
+            ..quick_cfg(20)
+        };
+        let res = run_sequential(&task, strat.as_ref(), 2, &cfg);
+        assert!(res.history[0].lr < res.history[5].lr);
+        assert!(res.history[19].lr < res.history[5].lr);
+    }
+}

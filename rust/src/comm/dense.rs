@@ -1,0 +1,81 @@
+//! Dense f32 codec — the 32d-bit baseline channel (Global Lion/AdamW).
+
+/// Payload bytes for `d` f32 values.
+#[inline]
+pub fn packed_len(d: usize) -> usize {
+    4 * d
+}
+
+/// Encode f32 slice as little-endian bytes.
+pub fn pack(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(packed_len(values.len()));
+    for &v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode all f32 values.
+pub fn unpack(payload: &[u8]) -> Vec<f32> {
+    assert!(payload.len() % 4 == 0, "dense payload not a multiple of 4");
+    payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Decode into a preallocated buffer.
+pub fn unpack_into(payload: &[u8], out: &mut [f32]) {
+    assert_eq!(payload.len(), 4 * out.len(), "dense payload size mismatch");
+    for (o, c) in out.iter_mut().zip(payload.chunks_exact(4)) {
+        *o = f32::from_le_bytes(c.try_into().unwrap());
+    }
+}
+
+/// Accumulate decoded values into `acc` (server-side gradient averaging
+/// hot path — no intermediate allocation).
+pub fn accumulate(payload: &[u8], acc: &mut [f32]) {
+    assert_eq!(payload.len(), 4 * acc.len(), "dense payload size mismatch");
+    for (a, c) in acc.iter_mut().zip(payload.chunks_exact(4)) {
+        *a += f32::from_le_bytes(c.try_into().unwrap());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        testing::forall(
+            0x91,
+            64,
+            |r| testing::gen_vec_normal(r, 0, 300, 10.0),
+            |v| unpack(&pack(v)) == *v,
+        );
+    }
+
+    #[test]
+    fn special_values() {
+        let v = [f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0, f32::MIN_POSITIVE];
+        let back = unpack(&pack(&v));
+        assert_eq!(v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   back.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let a = pack(&[1.0, 2.0]);
+        let b = pack(&[0.5, -1.0]);
+        let mut acc = vec![0.0f32; 2];
+        accumulate(&a, &mut acc);
+        accumulate(&b, &mut acc);
+        assert_eq!(acc, vec![1.5, 1.0]);
+    }
+
+    #[test]
+    fn size_is_32_bits_per_elem() {
+        assert_eq!(packed_len(1_000_000), 4_000_000);
+    }
+}

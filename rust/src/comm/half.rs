@@ -1,0 +1,128 @@
+//! bf16 codec — the 16-bit half-precision middle ground between dense
+//! f32 and the paper's 1-bit updates. Common production practice for
+//! gradient all-reduce; included so Figure-4-style studies can place
+//! D-Lion against the *de facto* baseline as well as the published ones.
+//!
+//! bf16 = the top 16 bits of IEEE f32 (8-bit exponent preserved), with
+//! round-to-nearest-even on encode.
+
+/// Payload bytes for `d` bf16 values.
+#[inline]
+pub fn packed_len(d: usize) -> usize {
+    2 * d
+}
+
+/// f32 → bf16 with round-to-nearest-even.
+#[inline]
+pub fn to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet NaN
+    }
+    // round-to-nearest-even on the truncated 16 bits: round up when the
+    // dropped half exceeds a tie (round bit set + any sticky bit), or on
+    // an exact tie when the kept mantissa is odd
+    let round_bit = (bits >> 15) & 1;
+    let sticky = bits & 0x7FFF;
+    let mut hi = (bits >> 16) as u16;
+    if round_bit == 1 && (sticky != 0 || hi & 1 == 1) {
+        hi = hi.wrapping_add(1);
+    }
+    hi
+}
+
+/// bf16 → f32 (exact).
+#[inline]
+pub fn from_bf16_bits(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Encode an f32 slice as bf16 LE bytes (16 bits/param).
+pub fn pack(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(packed_len(values.len()));
+    for &v in values {
+        out.extend_from_slice(&to_bf16_bits(v).to_le_bytes());
+    }
+    out
+}
+
+/// Decode into a preallocated f32 buffer.
+pub fn unpack_into(payload: &[u8], out: &mut [f32]) {
+    assert_eq!(payload.len(), 2 * out.len(), "bf16 payload size mismatch");
+    for (o, c) in out.iter_mut().zip(payload.chunks_exact(2)) {
+        *o = from_bf16_bits(u16::from_le_bytes(c.try_into().unwrap()));
+    }
+}
+
+/// Decode all values.
+pub fn unpack(payload: &[u8]) -> Vec<f32> {
+    let mut out = vec![0.0f32; payload.len() / 2];
+    unpack_into(payload, &mut out);
+    out
+}
+
+/// Accumulate decoded values into `acc` (server averaging hot path).
+pub fn accumulate(payload: &[u8], acc: &mut [f32]) {
+    assert_eq!(payload.len(), 2 * acc.len(), "bf16 payload size mismatch");
+    for (a, c) in acc.iter_mut().zip(payload.chunks_exact(2)) {
+        *a += from_bf16_bits(u16::from_le_bytes(c.try_into().unwrap()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn exact_for_bf16_representable() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0, -1024.0] {
+            assert_eq!(unpack(&pack(&[v])), vec![v]);
+        }
+    }
+
+    #[test]
+    fn relative_error_within_bf16_ulp() {
+        testing::forall(
+            0xC01,
+            200,
+            |r| r.normal_f32(0.0, 100.0),
+            |&x| {
+                let back = from_bf16_bits(to_bf16_bits(x));
+                // bf16 has 8 significand bits -> rel err <= 2^-8
+                x == 0.0 || ((back - x) / x).abs() <= 1.0 / 256.0
+            },
+        );
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-9 is exactly halfway between 1.0 and the next bf16;
+        // ties-to-even keeps the even (1.0) mantissa.
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(to_bf16_bits(halfway), 0x3F80);
+        // just above halfway rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(to_bf16_bits(above), 0x3F81);
+    }
+
+    #[test]
+    fn specials() {
+        assert!(from_bf16_bits(to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(from_bf16_bits(to_bf16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(from_bf16_bits(to_bf16_bits(-0.0)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn size_is_16_bits_per_param() {
+        assert_eq!(pack(&vec![1.0f32; 1000]).len(), 2000);
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let a = pack(&[1.0, 2.0]);
+        let mut acc = vec![0.5f32; 2];
+        accumulate(&a, &mut acc);
+        assert_eq!(acc, vec![1.5, 2.5]);
+    }
+}

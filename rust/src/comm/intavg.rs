@@ -1,0 +1,257 @@
+//! log(N)-bit integer codec for the D-Lion (Avg) downlink.
+//!
+//! After the server sums N strictly-binary worker updates, each element
+//! S[k] = Σ_i δ_i[k] lies in {−N, −N+2, …, N} — exactly N+1 values with
+//! S ≡ N (mod 2). We encode the rank r = (S+N)/2 ∈ {0..N} using
+//! b = ⌈log2(N+1)⌉ bits per element, bit-packed. This matches Table 1's
+//! "log(n)·d" server→worker bandwidth for Distributed Lion-Avg.
+
+use crate::util::math::bits_for_count;
+
+/// Bits per element for vote sums over `n` workers.
+#[inline]
+pub fn bits_per_elem(n: usize) -> u32 {
+    bits_for_count(n) // ceil(log2(n+1))
+}
+
+/// Payload bytes for `d` elements over `n` workers.
+#[inline]
+pub fn packed_len(d: usize, n: usize) -> usize {
+    ((d as u64 * bits_per_elem(n) as u64).div_ceil(8)) as usize
+}
+
+/// Pack vote sums S[k] ∈ {-n..n}, S[k] ≡ n (mod 2).
+///
+/// §Perf optimization #2: a 64-bit shift register replaces the per-bit
+/// write loop — one bounds-checked store per *byte* instead of per bit
+/// (b ≤ 7 always fits the register between flushes).
+pub fn pack(sums: &[i32], n: usize) -> Vec<u8> {
+    let b = bits_per_elem(n);
+    let mut out = Vec::with_capacity(packed_len(sums.len(), n));
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for &s in sums {
+        debug_assert!(
+            s.unsigned_abs() as usize <= n && (s + n as i32) % 2 == 0,
+            "vote sum {s} invalid for n={n}"
+        );
+        let rank = ((s + n as i32) / 2) as u64;
+        acc |= rank << nbits;
+        nbits += b;
+        while nbits >= 8 {
+            out.push(acc as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push(acc as u8);
+    }
+    debug_assert_eq!(out.len(), packed_len(sums.len(), n));
+    out
+}
+
+/// Reference per-bit implementation (§Perf ablation oracle).
+pub fn pack_naive(sums: &[i32], n: usize) -> Vec<u8> {
+    let b = bits_per_elem(n);
+    let mut out = vec![0u8; packed_len(sums.len(), n)];
+    let mut bitpos = 0usize;
+    for &s in sums {
+        let rank = ((s + n as i32) / 2) as u32;
+        let mut remaining = b;
+        let mut val = rank;
+        while remaining > 0 {
+            let byte = bitpos >> 3;
+            let off = bitpos & 7;
+            let take = (8 - off).min(remaining as usize) as u32;
+            out[byte] |= ((val & ((1 << take) - 1)) as u8) << off;
+            val >>= take;
+            remaining -= take;
+            bitpos += take as usize;
+        }
+    }
+    out
+}
+
+/// Unpack `d` vote sums.
+pub fn unpack(packed: &[u8], d: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; d];
+    unpack_into(packed, n, &mut out);
+    out
+}
+
+/// Unpack into a preallocated buffer (u64 shift-register fast path).
+pub fn unpack_into(packed: &[u8], n: usize, out: &mut [i32]) {
+    let b = bits_per_elem(n);
+    let mask: u64 = (1u64 << b) - 1;
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut pos = 0usize;
+    for o in out.iter_mut() {
+        while nbits < b {
+            acc |= (packed[pos] as u64) << nbits;
+            pos += 1;
+            nbits += 8;
+        }
+        *o = (acc & mask) as i32 * 2 - n as i32;
+        acc >>= b;
+        nbits -= b;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// General small-integer range packing (TernGrad downlink: S ∈ {−N..N},
+// no parity constraint, ⌈log2(2N+1)⌉ bits/element).
+// ---------------------------------------------------------------------------
+
+/// Bits per element for integers in [lo, hi].
+#[inline]
+pub fn bits_for_range(lo: i32, hi: i32) -> u32 {
+    debug_assert!(hi >= lo);
+    bits_for_count((hi - lo) as usize)
+}
+
+/// Payload bytes for `d` integers in [lo, hi].
+#[inline]
+pub fn packed_len_range(d: usize, lo: i32, hi: i32) -> usize {
+    ((d as u64 * bits_for_range(lo, hi) as u64).div_ceil(8)) as usize
+}
+
+/// Pack integers in [lo, hi] with the minimal fixed bit width.
+pub fn pack_range(vals: &[i32], lo: i32, hi: i32) -> Vec<u8> {
+    let b = bits_for_range(lo, hi);
+    let mut out = vec![0u8; packed_len_range(vals.len(), lo, hi)];
+    let mut bitpos = 0usize;
+    for &s in vals {
+        debug_assert!((lo..=hi).contains(&s), "value {s} outside [{lo},{hi}]");
+        let mut val = (s - lo) as u32;
+        let mut remaining = b;
+        while remaining > 0 {
+            let byte = bitpos >> 3;
+            let off = bitpos & 7;
+            let take = (8 - off).min(remaining as usize) as u32;
+            out[byte] |= ((val & ((1 << take) - 1)) as u8) << off;
+            val >>= take;
+            remaining -= take;
+            bitpos += take as usize;
+        }
+    }
+    out
+}
+
+/// Unpack `d` integers in [lo, hi].
+pub fn unpack_range(packed: &[u8], d: usize, lo: i32, hi: i32) -> Vec<i32> {
+    let b = bits_for_range(lo, hi);
+    let mut out = vec![0i32; d];
+    let mut bitpos = 0usize;
+    for o in out.iter_mut() {
+        let mut rank = 0u32;
+        let mut got = 0u32;
+        while got < b {
+            let byte = bitpos >> 3;
+            let off = bitpos & 7;
+            let take = (8 - off).min((b - got) as usize) as u32;
+            let bits = (packed[byte] >> off) as u32 & ((1 << take) - 1);
+            rank |= bits << got;
+            got += take;
+            bitpos += take as usize;
+        }
+        *o = rank as i32 + lo;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn gen_sums(rng: &mut Rng, d: usize, n: usize) -> Vec<i32> {
+        (0..d)
+            .map(|_| {
+                // sum of n random ±1
+                (0..n).map(|_| if rng.next_u64() & 1 == 0 { 1i32 } else { -1 }).sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_all_worker_counts() {
+        for n in [1usize, 2, 3, 4, 7, 8, 16, 31, 32, 33] {
+            testing::forall(
+                0x60 + n as u64,
+                32,
+                |r| {
+                    let d = r.below(150);
+                    gen_sums(r, d, n)
+                },
+                |sums| unpack(&pack(sums, n), sums.len(), n) == *sums,
+            );
+        }
+    }
+
+    #[test]
+    fn bits_per_elem_matches_table1() {
+        // Table 1: server→worker log(n)·d bits for D-Lion Avg.
+        assert_eq!(bits_per_elem(4), 3); // ceil(log2(5))
+        assert_eq!(bits_per_elem(8), 4);
+        assert_eq!(bits_per_elem(16), 5);
+        assert_eq!(bits_per_elem(32), 6);
+    }
+
+    #[test]
+    fn packed_size_exact() {
+        // 100 elems, n=4 -> 3 bits each -> 300 bits -> 38 bytes
+        assert_eq!(packed_len(100, 4), 38);
+        // n=1 -> 1 bit each, same as sign codec
+        assert_eq!(packed_len(64, 1), 8);
+    }
+
+    #[test]
+    fn extremes_roundtrip() {
+        for n in [1usize, 5, 32] {
+            let sums = vec![n as i32, -(n as i32)];
+            assert_eq!(unpack(&pack(&sums, n), 2, n), sums);
+        }
+    }
+
+    #[test]
+    fn fast_pack_matches_naive() {
+        for n in [1usize, 2, 4, 7, 32, 64] {
+            testing::forall(
+                0x68 + n as u64,
+                32,
+                |r| {
+                    let d = r.below(300);
+                    gen_sums(r, d, n)
+                },
+                |sums| pack(sums, n) == pack_naive(sums, n),
+            );
+        }
+    }
+
+    #[test]
+    fn range_roundtrip() {
+        for (lo, hi) in [(-4i32, 4i32), (0, 1), (-32, 32), (-1, 1), (0, 255)] {
+            testing::forall(
+                0x65 + hi as u64,
+                32,
+                |r| {
+                    let d = r.below(100);
+                    (0..d)
+                        .map(|_| lo + r.below((hi - lo + 1) as usize) as i32)
+                        .collect::<Vec<i32>>()
+                },
+                |vals| unpack_range(&pack_range(vals, lo, hi), vals.len(), lo, hi) == *vals,
+            );
+        }
+    }
+
+    #[test]
+    fn range_bits_match_terngrad_table1() {
+        // TernGrad downlink: ceil(log2(2N+1)) bits per element.
+        assert_eq!(bits_for_range(-4, 4), 4); // N=4: 9 values -> 4 bits
+        assert_eq!(bits_for_range(-32, 32), 7); // N=32: 65 values -> 7 bits
+    }
+}

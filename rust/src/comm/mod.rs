@@ -1,0 +1,26 @@
+//! Communication layer: bit-exact codecs + byte-counted transports.
+//!
+//! Codec → Table 1 mapping (d parameters, N workers):
+//!
+//! | channel                         | codec          | bits/param        |
+//! |---------------------------------|----------------|-------------------|
+//! | D-Lion worker→server            | [`sign`]       | 1                 |
+//! | D-Lion MaVo server→worker       | [`sign`]/[`tern`] | 1 (odd N) / 1.6 (even N, ties) |
+//! | D-Lion Avg server→worker        | [`intavg`]     | ⌈log2(N+1)⌉       |
+//! | TernGrad worker→server          | [`tern`]       | 1.6 (≈1.585 opt.) |
+//! | TernGrad server→worker          | [`intavg`]-style sum | ⌈log2(2N+1)⌉ |
+//! | GradDrop/DGC worker→server      | [`sparse`]     | 64·(1−η)          |
+//! | Global (and DGC down) channels  | [`dense`]      | 32                |
+
+pub mod dense;
+pub mod half;
+pub mod intavg;
+pub mod sign;
+pub mod simnet;
+pub mod sparse;
+pub mod tcp;
+pub mod tern;
+pub mod transport;
+pub mod varint;
+
+pub use transport::{inproc_fabric, CommStats, Message, ServerTransport, WorkerTransport};

@@ -1,0 +1,187 @@
+//! 1-bit sign-vector codec (Distributed Lion uplink; MaVo downlink).
+//!
+//! Packs a strictly binary vector δ ∈ {−1,+1}^d into ⌈d/8⌉ bytes
+//! (bit 1 ⇒ +1), i.e. exactly the `d` bits per parameter the paper's
+//! Table 1 reports for the D-Lion worker→server channel.
+
+/// Number of payload bytes for `d` elements.
+#[inline]
+pub fn packed_len(d: usize) -> usize {
+    d.div_ceil(8)
+}
+
+/// Pack signs (as i8 in {-1,+1}) into bits. Panics on values outside {-1,+1}.
+pub fn pack(signs: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(signs.len())];
+    for (i, &s) in signs.iter().enumerate() {
+        debug_assert!(s == 1 || s == -1, "sign codec requires strictly binary input");
+        if s > 0 {
+            out[i >> 3] |= 1 << (i & 7);
+        }
+    }
+    out
+}
+
+/// Pack from the sign bit of f32 values: v >= 0.0 ⇒ +1. This is the hot-path
+/// variant used by the worker: it never materializes the i8 vector.
+pub fn pack_f32(values: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(values.len())];
+    // Process 8 at a time: build a byte from the IEEE sign bits.
+    let chunks = values.chunks_exact(8);
+    let rem = chunks.remainder();
+    for (ci, chunk) in chunks.enumerate() {
+        let mut byte = 0u8;
+        for (j, &v) in chunk.iter().enumerate() {
+            // sign bit 0 => v >= 0 (or +0.0) => +1
+            byte |= (((v.to_bits() >> 31) ^ 1) as u8) << j;
+        }
+        out[ci] = byte;
+    }
+    let base = values.len() - rem.len();
+    for (j, &v) in rem.iter().enumerate() {
+        if v.to_bits() >> 31 == 0 {
+            out[(base + j) >> 3] |= 1 << ((base + j) & 7);
+        }
+    }
+    out
+}
+
+/// Unpack `d` signs into i8 {-1,+1}.
+pub fn unpack(packed: &[u8], d: usize) -> Vec<i8> {
+    assert!(packed.len() >= packed_len(d), "sign payload too short");
+    let mut out = vec![0i8; d];
+    unpack_into(packed, &mut out);
+    out
+}
+
+/// Unpack into a preallocated buffer (hot path, no allocation).
+pub fn unpack_into(packed: &[u8], out: &mut [i8]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = if packed[i >> 3] >> (i & 7) & 1 == 1 { 1 } else { -1 };
+    }
+}
+
+/// Byte → 8 signs lookup table (built at compile time): the server's
+/// vote-accumulation inner loop reads one byte and adds 8 precomputed
+/// ±1 values instead of doing 8 shift/mask ops (§Perf optimization #1,
+/// ~3× over the per-bit loop — see `cargo bench --bench hotpath`).
+static VOTE_LUT: [[i8; 8]; 256] = {
+    let mut lut = [[0i8; 8]; 256];
+    let mut byte = 0usize;
+    while byte < 256 {
+        let mut j = 0;
+        while j < 8 {
+            lut[byte][j] = if (byte >> j) & 1 == 1 { 1 } else { -1 };
+            j += 1;
+        }
+        byte += 1;
+    }
+    lut
+};
+
+/// Accumulate unpacked signs into an i32 vote buffer: votes[i] += δ[i].
+/// This is the server's majority-vote hot path: it never materializes
+/// the i8 vector for each worker.
+pub fn accumulate_votes(packed: &[u8], votes: &mut [i32]) {
+    let chunks = votes.chunks_exact_mut(8);
+    let len = chunks.len();
+    for (ci, chunk) in chunks.enumerate() {
+        let lut = &VOTE_LUT[packed[ci] as usize];
+        for j in 0..8 {
+            chunk[j] += lut[j] as i32;
+        }
+    }
+    for i in len * 8..votes.len() {
+        let bit = (packed[i >> 3] >> (i & 7)) & 1;
+        votes[i] += (bit as i32) * 2 - 1;
+    }
+}
+
+/// Reference per-bit implementation (kept for the §Perf ablation bench
+/// and as the property-test oracle for [`accumulate_votes`]).
+pub fn accumulate_votes_naive(packed: &[u8], votes: &mut [i32]) {
+    for (i, v) in votes.iter_mut().enumerate() {
+        let bit = (packed[i >> 3] >> (i & 7)) & 1;
+        *v += (bit as i32) * 2 - 1; // 1 -> +1, 0 -> -1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_exact() {
+        testing::forall(
+            0x51,
+            128,
+            |r| testing::gen_vec_sign(r, 0, 300),
+            |signs| unpack(&pack(signs), signs.len()) == *signs,
+        );
+    }
+
+    #[test]
+    fn packed_size_is_ceil_d_over_8() {
+        for d in [0, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let signs = vec![1i8; d];
+            assert_eq!(pack(&signs).len(), d.div_ceil(8));
+        }
+    }
+
+    #[test]
+    fn pack_f32_matches_pack_of_signs() {
+        let mut rng = Rng::new(0x52);
+        for _ in 0..64 {
+            let v = testing::gen_vec_normal(&mut rng, 0, 200, 1.0);
+            let signs: Vec<i8> = v.iter().map(|&x| if x >= 0.0 { 1 } else { -1 }).collect();
+            assert_eq!(pack_f32(&v), pack(&signs));
+        }
+    }
+
+    #[test]
+    fn pack_f32_zero_is_positive() {
+        assert_eq!(unpack(&pack_f32(&[0.0]), 1), vec![1]);
+        assert_eq!(unpack(&pack_f32(&[-0.0]), 1), vec![-1]); // IEEE -0 has sign bit set
+    }
+
+    #[test]
+    fn lut_accumulate_matches_naive() {
+        let mut rng = Rng::new(0x54);
+        for _ in 0..64 {
+            let d = rng.below(300) + 1;
+            let signs = (0..d)
+                .map(|_| if rng.next_u64() & 1 == 0 { 1i8 } else { -1 })
+                .collect::<Vec<_>>();
+            let packed = pack(&signs);
+            let mut fast = vec![3i32; d];
+            let mut slow = vec![3i32; d];
+            accumulate_votes(&packed, &mut fast);
+            accumulate_votes_naive(&packed, &mut slow);
+            assert_eq!(fast, slow);
+        }
+    }
+
+    #[test]
+    fn accumulate_votes_equals_sum_of_unpacked() {
+        let mut rng = Rng::new(0x53);
+        for _ in 0..32 {
+            let d = rng.below(200) + 1;
+            let n = rng.below(9) + 1;
+            let mut votes = vec![0i32; d];
+            let mut expect = vec![0i32; d];
+            for _ in 0..n {
+                let signs = (0..d)
+                    .map(|_| if rng.next_u64() & 1 == 0 { 1i8 } else { -1 })
+                    .collect::<Vec<_>>();
+                let packed = pack(&signs);
+                accumulate_votes(&packed, &mut votes);
+                for (e, &s) in expect.iter_mut().zip(&signs) {
+                    *e += s as i32;
+                }
+            }
+            assert_eq!(votes, expect);
+        }
+    }
+}

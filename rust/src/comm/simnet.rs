@@ -1,0 +1,118 @@
+//! Network wall-clock model: projects per-step communication time for
+//! each strategy on parameterized links (the paper's testbed-bound
+//! claim — "particularly advantageous for training large models" —
+//! made quantitative). Pure analytics over the measured/analytic byte
+//! counts; used by the `ext_netsim` bench and the `bandwidth_probe`
+//! example.
+//!
+//! Model (parameter-server topology, full-duplex links):
+//!   t_up   = latency + max_i(uplink_bytes_i) / server_bandwidth · N
+//!            (server ingests N worker payloads through one NIC)
+//!   t_down = latency + downlink_bytes · N / server_bandwidth
+//!   t_comm = t_up + t_down
+//! Worker NICs are assumed ≥ server NIC / N (the server is the
+//! bottleneck, as in the paper's 4-node × 8-GPU setting).
+
+use crate::optim::dist::Strategy;
+
+/// A link configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// server NIC bandwidth, bytes/second
+    pub bandwidth_bps: f64,
+    /// one-way latency, seconds
+    pub latency_s: f64,
+}
+
+impl Link {
+    pub fn gbit(gbits: f64) -> Link {
+        Link { bandwidth_bps: gbits * 1e9 / 8.0, latency_s: 50e-6 }
+    }
+}
+
+/// Per-step communication time estimate for a strategy.
+#[derive(Clone, Copy, Debug)]
+pub struct CommTime {
+    pub uplink_s: f64,
+    pub downlink_s: f64,
+}
+
+impl CommTime {
+    pub fn total(&self) -> f64 {
+        self.uplink_s + self.downlink_s
+    }
+}
+
+/// Estimate per-step communication time from the strategy's analytic
+/// bits/param (Table 1) on a d-parameter model with n workers.
+pub fn estimate(strategy: &dyn Strategy, d: usize, n: usize, link: Link) -> CommTime {
+    let up_bytes_per_worker = strategy.uplink_bits_per_param(n) * d as f64 / 8.0;
+    let down_bytes_per_worker = strategy.downlink_bits_per_param(n) * d as f64 / 8.0;
+    CommTime {
+        uplink_s: link.latency_s + up_bytes_per_worker * n as f64 / link.bandwidth_bps,
+        downlink_s: link.latency_s + down_bytes_per_worker * n as f64 / link.bandwidth_bps,
+    }
+}
+
+/// Projected step time = max(compute, comm) under compute/comm overlap,
+/// or compute + comm without overlap.
+pub fn step_time(compute_s: f64, comm: CommTime, overlap: bool) -> f64 {
+    if overlap {
+        compute_s.max(comm.total())
+    } else {
+        compute_s + comm.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::dist::{by_name, StrategyHyper};
+
+    #[test]
+    fn dlion_is_30x_faster_on_the_wire_than_global() {
+        let hp = StrategyHyper::default();
+        let dlion = by_name("d-lion-mavo", &hp).unwrap();
+        let glion = by_name("g-lion", &hp).unwrap();
+        let link = Link::gbit(10.0);
+        // 1B params, 33 workers (odd ⇒ MaVo downlink strictly 1 bit;
+        // even N pays the 1.6-bit ternary tie frame and lands at ~25x)
+        let (d, n) = (1_000_000_000, 33);
+        let t_dlion = estimate(dlion.as_ref(), d, n, link).total();
+        let t_glion = estimate(glion.as_ref(), d, n, link).total();
+        let ratio = t_glion / t_dlion;
+        assert!(
+            (28.0..36.0).contains(&ratio),
+            "expected ~32x wire-time ratio, got {ratio:.1}"
+        );
+    }
+
+    #[test]
+    fn latency_dominates_tiny_messages() {
+        let hp = StrategyHyper::default();
+        let s = by_name("d-lion-mavo", &hp).unwrap();
+        let link = Link { bandwidth_bps: 1e12, latency_s: 1e-3 };
+        let t = estimate(s.as_ref(), 1000, 4, link);
+        assert!((t.total() - 2e-3).abs() < 1e-4);
+    }
+
+    #[test]
+    fn overlap_hides_comm_under_compute() {
+        let comm = CommTime { uplink_s: 0.1, downlink_s: 0.1 };
+        assert_eq!(step_time(1.0, comm, true), 1.0);
+        assert!((step_time(1.0, comm, false) - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avg_downlink_costs_more_than_mavo() {
+        let hp = StrategyHyper::default();
+        let mavo = by_name("d-lion-mavo", &hp).unwrap();
+        let avg = by_name("d-lion-avg", &hp).unwrap();
+        let link = Link::gbit(10.0);
+        let n = 33; // odd: mavo downlink is strictly 1 bit
+        let t_mavo = estimate(mavo.as_ref(), 1_000_000, n, link);
+        let t_avg = estimate(avg.as_ref(), 1_000_000, n, link);
+        assert!(t_avg.downlink_s > t_mavo.downlink_s);
+        assert_eq!(t_avg.uplink_s, t_mavo.uplink_s);
+    }
+}

@@ -1,0 +1,84 @@
+//! Ternary codec: values in {−1, 0, +1} packed 5 per byte (base-3).
+//!
+//! 3^5 = 243 ≤ 256, so five trits fit one byte: 1.6 bits/element, matching
+//! TernGrad's ~1.5d-bit worker→server channel (Table 1; the theoretical
+//! optimum is log2(3) ≈ 1.585 bits). Also used for the D-Lion MaVo
+//! downlink when N is even (vote ties produce genuine zeros; with odd N
+//! the downlink is strictly binary and the 1-bit sign codec applies).
+
+/// Payload bytes for `d` ternary values.
+#[inline]
+pub fn packed_len(d: usize) -> usize {
+    d.div_ceil(5)
+}
+
+/// Pack trits in {-1,0,1} (stored as t+1 in {0,1,2}).
+pub fn pack(trits: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(trits.len())];
+    for (ci, chunk) in trits.chunks(5).enumerate() {
+        let mut byte = 0u16;
+        // Horner, last trit is highest power so decode pops in order.
+        for &t in chunk.iter().rev() {
+            debug_assert!((-1..=1).contains(&t), "ternary codec requires {{-1,0,1}}");
+            byte = byte * 3 + (t + 1) as u16;
+        }
+        out[ci] = byte as u8;
+    }
+    out
+}
+
+/// Unpack `d` trits.
+pub fn unpack(packed: &[u8], d: usize) -> Vec<i8> {
+    let mut out = vec![0i8; d];
+    unpack_into(packed, &mut out);
+    out
+}
+
+/// Unpack into a preallocated buffer.
+pub fn unpack_into(packed: &[u8], out: &mut [i8]) {
+    for (ci, chunk) in out.chunks_mut(5).enumerate() {
+        let mut v = packed[ci] as u16;
+        for o in chunk.iter_mut() {
+            *o = (v % 3) as i8 - 1;
+            v /= 3;
+        }
+    }
+}
+
+/// Effective bits per element of this encoding (8/5 = 1.6).
+pub const BITS_PER_ELEM: f64 = 8.0 / 5.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn roundtrip() {
+        testing::forall(
+            0x71,
+            128,
+            |r| testing::gen_vec_tern(r, 0, 300, 0.4),
+            |t| unpack(&pack(t), t.len()) == *t,
+        );
+    }
+
+    #[test]
+    fn size_is_1_6_bits_per_elem() {
+        assert_eq!(packed_len(5), 1);
+        assert_eq!(packed_len(6), 2);
+        assert_eq!(packed_len(1_000_000), 200_000); // 1.6e6 bits
+    }
+
+    #[test]
+    fn all_27_three_trit_combos() {
+        for a in -1..=1i8 {
+            for b in -1..=1i8 {
+                for c in -1..=1i8 {
+                    let t = [a, b, c];
+                    assert_eq!(unpack(&pack(&t), 3), t);
+                }
+            }
+        }
+    }
+}

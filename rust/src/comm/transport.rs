@@ -1,0 +1,206 @@
+//! Transport abstraction with per-direction byte accounting.
+//!
+//! The paper's claims are about *communication volume*; every byte that
+//! crosses a worker↔server boundary in this repo goes through a
+//! [`Transport`], whose counters feed the bandwidth columns of
+//! Table 1 / Figure 4 benches. Two implementations:
+//!
+//! * [`InProcTransport`] — `std::sync::mpsc` channels between threads
+//!   (the default cluster fabric).
+//! * `comm::tcp::TcpTransport` — real loopback TCP sockets, proving the
+//!   wire format is self-describing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Byte counters shared by all endpoints of one cluster.
+#[derive(Default, Debug)]
+pub struct CommStats {
+    /// bytes moved worker → server (sum over workers)
+    pub uplink_bytes: AtomicU64,
+    /// bytes moved server → worker (sum over workers)
+    pub downlink_bytes: AtomicU64,
+    /// number of uplink messages
+    pub uplink_msgs: AtomicU64,
+    /// number of downlink messages
+    pub downlink_msgs: AtomicU64,
+}
+
+impl CommStats {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+    pub fn record_uplink(&self, bytes: usize) {
+        self.uplink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.uplink_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn record_downlink(&self, bytes: usize) {
+        self.downlink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.downlink_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn uplink(&self) -> u64 {
+        self.uplink_bytes.load(Ordering::Relaxed)
+    }
+    pub fn downlink(&self) -> u64 {
+        self.downlink_bytes.load(Ordering::Relaxed)
+    }
+    pub fn total(&self) -> u64 {
+        self.uplink() + self.downlink()
+    }
+    pub fn reset(&self) {
+        self.uplink_bytes.store(0, Ordering::Relaxed);
+        self.downlink_bytes.store(0, Ordering::Relaxed);
+        self.uplink_msgs.store(0, Ordering::Relaxed);
+        self.downlink_msgs.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A message on the fabric.
+pub type Message = Vec<u8>;
+
+/// Server side of a transport: receive one uplink from each worker,
+/// broadcast one downlink to all.
+pub trait ServerTransport: Send {
+    fn num_workers(&self) -> usize;
+    /// Gather one message from every worker (index-aligned).
+    fn gather(&mut self) -> std::io::Result<Vec<Message>>;
+    /// Broadcast one message to every worker.
+    fn broadcast(&mut self, msg: &[u8]) -> std::io::Result<()>;
+}
+
+/// Worker side of a transport.
+pub trait WorkerTransport: Send {
+    fn worker_id(&self) -> usize;
+    /// Send an uplink message to the server.
+    fn send(&mut self, msg: Message) -> std::io::Result<()>;
+    /// Block for the next downlink broadcast.
+    fn recv(&mut self) -> std::io::Result<Message>;
+}
+
+// ---------------------------------------------------------------------------
+// In-process channel fabric
+// ---------------------------------------------------------------------------
+
+pub struct InProcServer {
+    uplinks: Vec<Receiver<Message>>,
+    downlinks: Vec<Sender<Message>>,
+    stats: Arc<CommStats>,
+}
+
+pub struct InProcWorker {
+    id: usize,
+    uplink: Sender<Message>,
+    downlink: Receiver<Message>,
+    stats: Arc<CommStats>,
+}
+
+/// Build an in-process fabric for `n` workers. Returns (server, workers).
+pub fn inproc_fabric(n: usize, stats: Arc<CommStats>) -> (InProcServer, Vec<InProcWorker>) {
+    let mut up_rx = Vec::with_capacity(n);
+    let mut down_tx = Vec::with_capacity(n);
+    let mut workers = Vec::with_capacity(n);
+    for id in 0..n {
+        let (utx, urx) = std::sync::mpsc::channel();
+        let (dtx, drx) = std::sync::mpsc::channel();
+        up_rx.push(urx);
+        down_tx.push(dtx);
+        workers.push(InProcWorker {
+            id,
+            uplink: utx,
+            downlink: drx,
+            stats: stats.clone(),
+        });
+    }
+    (InProcServer { uplinks: up_rx, downlinks: down_tx, stats }, workers)
+}
+
+impl ServerTransport for InProcServer {
+    fn num_workers(&self) -> usize {
+        self.uplinks.len()
+    }
+
+    fn gather(&mut self) -> std::io::Result<Vec<Message>> {
+        let mut msgs = Vec::with_capacity(self.uplinks.len());
+        for rx in &self.uplinks {
+            let m = rx.recv().map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::BrokenPipe, format!("gather: {e}"))
+            })?;
+            msgs.push(m);
+        }
+        Ok(msgs)
+    }
+
+    fn broadcast(&mut self, msg: &[u8]) -> std::io::Result<()> {
+        for tx in &self.downlinks {
+            self.stats.record_downlink(msg.len());
+            tx.send(msg.to_vec()).map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::BrokenPipe, format!("broadcast: {e}"))
+            })?;
+        }
+        Ok(())
+    }
+}
+
+impl WorkerTransport for InProcWorker {
+    fn worker_id(&self) -> usize {
+        self.id
+    }
+
+    fn send(&mut self, msg: Message) -> std::io::Result<()> {
+        self.stats.record_uplink(msg.len());
+        self.uplink.send(msg).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::BrokenPipe, format!("send: {e}"))
+        })
+    }
+
+    fn recv(&mut self) -> std::io::Result<Message> {
+        self.downlink.recv().map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::BrokenPipe, format!("recv: {e}"))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fabric_moves_messages_and_counts_bytes() {
+        let stats = CommStats::new();
+        let (mut server, workers) = inproc_fabric(3, stats.clone());
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|mut w| {
+                thread::spawn(move || {
+                    w.send(vec![w.worker_id() as u8; 10]).unwrap();
+                    let d = w.recv().unwrap();
+                    assert_eq!(d, vec![9u8; 4]);
+                })
+            })
+            .collect();
+        let msgs = server.gather().unwrap();
+        assert_eq!(msgs.len(), 3);
+        for (i, m) in msgs.iter().enumerate() {
+            assert_eq!(m, &vec![i as u8; 10]);
+        }
+        server.broadcast(&[9u8; 4]).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(stats.uplink(), 30);
+        assert_eq!(stats.downlink(), 12);
+        assert_eq!(stats.uplink_msgs.load(std::sync::atomic::Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn stats_reset() {
+        let stats = CommStats::new();
+        stats.record_uplink(100);
+        stats.record_downlink(50);
+        assert_eq!(stats.total(), 150);
+        stats.reset();
+        assert_eq!(stats.total(), 0);
+    }
+}

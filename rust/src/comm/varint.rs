@@ -1,0 +1,115 @@
+//! LEB128 varints + delta coding — compact sparse-index encoding.
+//!
+//! DGC's reference implementation ships 32-bit indices; for top-k
+//! selections the *gaps* between sorted indices are geometrically
+//! distributed with mean 1/keep_frac (≈25 for the paper's 4%), so
+//! delta + LEB128 stores most gaps in one byte: ~8–16 bits/index
+//! instead of 32. Used by [`crate::comm::sparse`]'s compact format.
+
+/// Append `v` as LEB128.
+pub fn write_u32(v: u32, out: &mut Vec<u8>) {
+    let mut v = v;
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read one LEB128 u32; returns (value, bytes consumed).
+pub fn read_u32(data: &[u8]) -> Option<(u32, usize)> {
+    let mut v: u32 = 0;
+    for (i, &byte) in data.iter().enumerate().take(5) {
+        v |= ((byte & 0x7F) as u32) << (7 * i);
+        if byte & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+    }
+    None
+}
+
+/// Encode sorted indices as delta varints.
+pub fn pack_sorted_indices(indices: &[u32], out: &mut Vec<u8>) {
+    let mut prev = 0u32;
+    for (i, &idx) in indices.iter().enumerate() {
+        debug_assert!(i == 0 || idx > prev, "indices must be strictly increasing");
+        let gap = if i == 0 { idx } else { idx - prev - 1 };
+        write_u32(gap, out);
+        prev = idx;
+    }
+}
+
+/// Decode `k` delta-varint indices; returns bytes consumed.
+pub fn unpack_sorted_indices(data: &[u8], k: usize, out: &mut Vec<u32>) -> Option<usize> {
+    let mut pos = 0usize;
+    let mut prev = 0u32;
+    for i in 0..k {
+        let (gap, used) = read_u32(&data[pos..])?;
+        pos += used;
+        let idx = if i == 0 { gap } else { prev + 1 + gap };
+        out.push(idx);
+        prev = idx;
+    }
+    Some(pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::Rng;
+
+    #[test]
+    fn varint_roundtrip_all_widths() {
+        for v in [0u32, 1, 127, 128, 16383, 16384, u32::MAX / 2, u32::MAX] {
+            let mut buf = Vec::new();
+            write_u32(v, &mut buf);
+            let (back, used) = read_u32(&buf).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(used, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncation() {
+        let mut buf = Vec::new();
+        write_u32(1_000_000, &mut buf);
+        assert!(read_u32(&buf[..buf.len() - 1]).is_none());
+    }
+
+    #[test]
+    fn indices_roundtrip() {
+        testing::forall(
+            0xB01,
+            100,
+            |r| {
+                let d = 1 + r.below(100_000);
+                let k = 1 + r.below(d.min(500));
+                r.sample_indices(d, k).into_iter().map(|i| i as u32).collect::<Vec<u32>>()
+            },
+            |idx| {
+                let mut buf = Vec::new();
+                pack_sorted_indices(idx, &mut buf);
+                let mut back = Vec::new();
+                let used = unpack_sorted_indices(&buf, idx.len(), &mut back).unwrap();
+                used == buf.len() && back == *idx
+            },
+        );
+    }
+
+    #[test]
+    fn dense_gaps_cost_about_one_byte_each() {
+        // 4% keep over 100k coords: mean gap 25 -> 1 byte per index.
+        let mut rng = Rng::new(0xB02);
+        let idx: Vec<u32> =
+            rng.sample_indices(100_000, 4_000).into_iter().map(|i| i as u32).collect();
+        let mut buf = Vec::new();
+        pack_sorted_indices(&idx, &mut buf);
+        let bits_per_index = buf.len() as f64 * 8.0 / idx.len() as f64;
+        assert!(bits_per_index < 12.0, "bits/index = {bits_per_index}");
+    }
+}

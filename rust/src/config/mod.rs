@@ -1,0 +1,231 @@
+//! Experiment configuration: TOML-subset files (see `configs/*.toml`)
+//! mapped onto typed structs, with CLI `key=value` overrides.
+
+pub mod toml;
+
+use crate::cluster::TrainConfig;
+use crate::error::{DlionError, Result};
+use crate::optim::dist::StrategyHyper;
+use std::path::Path;
+
+/// A full experiment: which task, which strategies, how many workers,
+/// training hyper-parameters, seeds.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub name: String,
+    pub task: String,
+    pub strategies: Vec<String>,
+    pub workers: Vec<usize>,
+    pub seeds: Vec<usize>,
+    pub train: TrainConfig,
+    pub hyper: StrategyHyper,
+    /// task-specific knobs
+    pub task_dim: usize,
+    pub task_hidden: usize,
+    pub task_train_n: usize,
+    pub task_test_n: usize,
+    pub task_noise: f64,
+    pub out_dir: String,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment {
+            name: "default".into(),
+            task: "mlp-vision".into(),
+            strategies: vec!["d-lion-mavo".into()],
+            workers: vec![4],
+            seeds: vec![42, 52, 62], // the paper's three seeds
+            train: TrainConfig::default(),
+            hyper: StrategyHyper::default(),
+            task_dim: 64,
+            task_hidden: 32,
+            task_train_n: 4096,
+            task_test_n: 1024,
+            task_noise: 0.3,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl Experiment {
+    /// Load from a TOML-subset file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse from a string.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = toml::parse(text).map_err(|e| DlionError::Config(e.to_string()))?;
+        let mut exp = Experiment::default();
+        let top = toml::section(&doc, "");
+        exp.name = top.str_or("name", &exp.name);
+        exp.task = top.str_or("task", &exp.task);
+        exp.out_dir = top.str_or("out_dir", &exp.out_dir);
+        exp.strategies = top.str_list_or(
+            "strategies",
+            &exp.strategies.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        exp.workers = top.usize_list_or("workers", &exp.workers);
+        exp.seeds = top.usize_list_or("seeds", &exp.seeds);
+
+        let t = toml::section(&doc, "train");
+        exp.train.steps = t.usize_or("steps", exp.train.steps);
+        exp.train.batch_per_worker = t.usize_or("batch_per_worker", exp.train.batch_per_worker);
+        exp.train.base_lr = t.f64_or("lr", exp.train.base_lr);
+        exp.train.warmup_steps = t.usize_or("warmup_steps", exp.train.warmup_steps);
+        exp.train.min_lr_frac = t.f64_or("min_lr_frac", exp.train.min_lr_frac);
+        exp.train.eval_every = t.usize_or("eval_every", exp.train.eval_every);
+        exp.train.check_replicas = t.bool_or("check_replicas", exp.train.check_replicas);
+
+        let h = toml::section(&doc, "hyper");
+        exp.hyper.beta1 = h.f64_or("beta1", exp.hyper.beta1 as f64) as f32;
+        exp.hyper.beta2 = h.f64_or("beta2", exp.hyper.beta2 as f64) as f32;
+        exp.hyper.weight_decay = h.f64_or("weight_decay", exp.hyper.weight_decay as f64) as f32;
+        exp.hyper.signum_beta = h.f64_or("signum_beta", exp.hyper.signum_beta as f64) as f32;
+        exp.hyper.sgd_momentum = h.f64_or("sgd_momentum", exp.hyper.sgd_momentum as f64) as f32;
+        exp.hyper.keep_frac = h.f64_or("keep_frac", exp.hyper.keep_frac as f64) as f32;
+        exp.hyper.dgc_clip_norm = h.f64_or("dgc_clip_norm", exp.hyper.dgc_clip_norm as f64) as f32;
+        exp.hyper.dgc_warmup_steps = h.usize_or("dgc_warmup_steps", exp.hyper.dgc_warmup_steps);
+
+        let tk = toml::section(&doc, "task");
+        exp.task_dim = tk.usize_or("dim", exp.task_dim);
+        exp.task_hidden = tk.usize_or("hidden", exp.task_hidden);
+        exp.task_train_n = tk.usize_or("train_n", exp.task_train_n);
+        exp.task_test_n = tk.usize_or("test_n", exp.task_test_n);
+        exp.task_noise = tk.f64_or("noise", exp.task_noise);
+        Ok(exp)
+    }
+
+    /// Apply `key=value` CLI overrides (dotted paths: `train.steps=100`).
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (key, val) = kv
+            .split_once('=')
+            .ok_or_else(|| DlionError::Config(format!("override '{kv}' is not key=value")))?;
+        let bad = |k: &str| DlionError::Config(format!("unknown override key '{k}'"));
+        let parse_usize =
+            |v: &str| v.parse::<usize>().map_err(|e| DlionError::Config(e.to_string()));
+        let parse_f64 =
+            |v: &str| v.parse::<f64>().map_err(|e| DlionError::Config(e.to_string()));
+        match key {
+            "name" => self.name = val.into(),
+            "task" => self.task = val.into(),
+            "out_dir" => self.out_dir = val.into(),
+            "strategies" => self.strategies = val.split(',').map(String::from).collect(),
+            "workers" => {
+                self.workers = val
+                    .split(',')
+                    .map(|s| s.parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| DlionError::Config(e.to_string()))?
+            }
+            "seeds" => {
+                self.seeds = val
+                    .split(',')
+                    .map(|s| s.parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| DlionError::Config(e.to_string()))?
+            }
+            "train.steps" => self.train.steps = parse_usize(val)?,
+            "train.batch_per_worker" => self.train.batch_per_worker = parse_usize(val)?,
+            "train.lr" => self.train.base_lr = parse_f64(val)?,
+            "train.warmup_steps" => self.train.warmup_steps = parse_usize(val)?,
+            "train.eval_every" => self.train.eval_every = parse_usize(val)?,
+            "hyper.beta1" => self.hyper.beta1 = parse_f64(val)? as f32,
+            "hyper.beta2" => self.hyper.beta2 = parse_f64(val)? as f32,
+            "hyper.weight_decay" => self.hyper.weight_decay = parse_f64(val)? as f32,
+            "hyper.keep_frac" => self.hyper.keep_frac = parse_f64(val)? as f32,
+            "task.dim" => self.task_dim = parse_usize(val)?,
+            "task.hidden" => self.task_hidden = parse_usize(val)?,
+            "task.train_n" => self.task_train_n = parse_usize(val)?,
+            "task.test_n" => self.task_test_n = parse_usize(val)?,
+            _ => return Err(bad(key)),
+        }
+        Ok(())
+    }
+
+    /// Instantiate the task named by `self.task`.
+    pub fn build_task(&self, seed: u64) -> Result<Box<dyn crate::tasks::GradTask + Send + Sync>> {
+        use crate::tasks::{data::VisionData, linreg::LinReg, mlp::MlpVision, quadratic::Quadratic};
+        use std::sync::Arc;
+        Ok(match self.task.as_str() {
+            "quadratic" => Box::new(Quadratic::new(
+                self.task_dim,
+                10.0,
+                self.task_noise as f32,
+                seed,
+            )),
+            "linreg" => Box::new(LinReg::new(
+                self.task_dim,
+                self.task_train_n,
+                self.task_noise as f32,
+                seed,
+            )),
+            "mlp-vision" => {
+                let data = Arc::new(VisionData::generate(
+                    self.task_train_n,
+                    self.task_test_n,
+                    self.task_noise as f32,
+                    seed,
+                ));
+                Box::new(MlpVision::new(data, self.task_hidden))
+            }
+            other => return Err(DlionError::Config(format!("unknown task '{other}'"))),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_override() {
+        let mut exp = Experiment::parse(
+            r#"
+name = "t"
+task = "quadratic"
+strategies = ["d-lion-mavo", "terngrad"]
+workers = [4, 8]
+
+[train]
+steps = 50
+lr = 0.02
+
+[hyper]
+weight_decay = 0.01
+
+[task]
+dim = 128
+"#,
+        )
+        .unwrap();
+        assert_eq!(exp.name, "t");
+        assert_eq!(exp.strategies.len(), 2);
+        assert_eq!(exp.workers, vec![4, 8]);
+        assert_eq!(exp.train.steps, 50);
+        assert!((exp.hyper.weight_decay - 0.01).abs() < 1e-7);
+        assert_eq!(exp.task_dim, 128);
+        exp.apply_override("train.steps=99").unwrap();
+        assert_eq!(exp.train.steps, 99);
+        exp.apply_override("workers=2,4").unwrap();
+        assert_eq!(exp.workers, vec![2, 4]);
+        assert!(exp.apply_override("garbage").is_err());
+        assert!(exp.apply_override("no.such.key=1").is_err());
+    }
+
+    #[test]
+    fn builds_all_tasks() {
+        let mut exp = Experiment::default();
+        exp.task_train_n = 64;
+        exp.task_test_n = 16;
+        for t in ["quadratic", "linreg", "mlp-vision"] {
+            exp.task = t.into();
+            let task = exp.build_task(1).unwrap();
+            assert!(task.dim() > 0);
+        }
+        exp.task = "bogus".into();
+        assert!(exp.build_task(1).is_err());
+    }
+}

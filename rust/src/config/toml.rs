@@ -1,0 +1,254 @@
+//! TOML-subset parser (no `toml`/`serde` crates offline — see DESIGN.md).
+//!
+//! Supported: `[section]` tables, `key = value` with string, integer,
+//! float, boolean, and flat arrays of those; `#` comments; blank lines.
+//! Nested tables/dotted keys are out of scope (our configs don't need
+//! them).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section → key → value. Top-level keys live in "".
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+impl std::error::Error for TomlError {}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, TomlError> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(TomlError { line, message: format!("cannot parse value '{s}'") })
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
+    let s = s.trim();
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(TomlError { line, message: "unterminated array".into() });
+        }
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        // split at top level (no nested arrays supported)
+        let items: Result<Vec<Value>, TomlError> =
+            inner.split(',').map(|p| parse_scalar(p, line)).collect();
+        return Ok(Value::Arr(items?));
+    }
+    parse_scalar(s, line)
+}
+
+/// Strip a trailing comment that is not inside a string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a document.
+pub fn parse(input: &str) -> Result<Doc, TomlError> {
+    let mut doc: Doc = BTreeMap::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut section = String::new();
+    for (ln, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(TomlError { line: ln + 1, message: "bad section header".into() });
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError {
+            line: ln + 1,
+            message: "expected 'key = value'".into(),
+        })?;
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(TomlError { line: ln + 1, message: "empty key".into() });
+        }
+        let val = parse_value(&line[eq + 1..], ln + 1)?;
+        doc.entry(section.clone()).or_default().insert(key, val);
+    }
+    Ok(doc)
+}
+
+/// Typed accessors with good error messages.
+pub struct Section<'a> {
+    pub name: &'a str,
+    pub map: &'a BTreeMap<String, Value>,
+}
+
+impl<'a> Section<'a> {
+    pub fn get(&self, key: &str) -> Option<&'a Value> {
+        self.map.get(key)
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_i64()).map(|i| i as usize).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.get(key)
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_i64()).map(|i| i as usize).collect())
+            .unwrap_or_else(|| default.to_vec())
+    }
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        self.get(key)
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_str()).map(String::from).collect())
+            .unwrap_or_else(|| default.iter().map(|s| s.to_string()).collect())
+    }
+}
+
+/// Get a section view (empty map if absent).
+pub fn section<'a>(doc: &'a Doc, name: &'a str) -> Section<'a> {
+    static EMPTY: once_cell::sync::Lazy<BTreeMap<String, Value>> =
+        once_cell::sync::Lazy::new(BTreeMap::new);
+    Section { name, map: doc.get(name).unwrap_or(&EMPTY) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig2"        # inline comment
+seed = 42
+
+[train]
+steps = 1000
+lr = 0.0005
+workers = [4, 8, 16, 32]
+strategies = ["d-lion-mavo", "g-lion"]
+check = true
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = parse(SAMPLE).unwrap();
+        let top = section(&doc, "");
+        assert_eq!(top.str_or("name", "?"), "fig2");
+        assert_eq!(top.usize_or("seed", 0), 42);
+        let train = section(&doc, "train");
+        assert_eq!(train.usize_or("steps", 0), 1000);
+        assert!((train.f64_or("lr", 0.0) - 0.0005).abs() < 1e-12);
+        assert_eq!(train.usize_list_or("workers", &[]), vec![4, 8, 16, 32]);
+        assert_eq!(
+            train.str_list_or("strategies", &[]),
+            vec!["d-lion-mavo".to_string(), "g-lion".to_string()]
+        );
+        assert!(train.bool_or("check", false));
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let doc = parse("").unwrap();
+        let s = section(&doc, "nope");
+        assert_eq!(s.usize_or("x", 7), 7);
+        assert_eq!(s.str_or("y", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse("k = [1, 2\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(section(&doc, "").str_or("k", ""), "a#b");
+    }
+}

@@ -1,0 +1,39 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the Distributed Lion library.
+#[derive(Error, Debug)]
+pub enum DlionError {
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for DlionError {
+    fn from(e: xla::Error) -> Self {
+        DlionError::Xla(format!("{e:?}"))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, DlionError>;

@@ -1,0 +1,34 @@
+//! # Distributed Lion
+//!
+//! A production-style reproduction of *Communication Efficient
+//! Distributed Training with Distributed Lion* (NeurIPS 2024) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: comm
+//!   codecs with exact Table-1 bandwidths, every optimizer/strategy from
+//!   the paper's evaluation, a threaded leader/worker cluster with byte
+//!   accounting, and theory diagnostics for Section 4.
+//! * **L2/L1 (`python/compile`)** — the GPT2++-style transformer
+//!   (fwd/bwd) and the fused Pallas `lion_step` / `majority_vote`
+//!   kernels, AOT-lowered to HLO text at build time.
+//! * **runtime** — loads the AOT artifacts through PJRT and serves them
+//!   to the coordinator's hot path; python never runs at train time.
+//!
+//! Quickstart: see `examples/quickstart.rs`, or
+//! `cargo run --release --example cifar_sim`.
+
+pub mod bench_utils;
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod error;
+pub mod lm;
+pub mod optim;
+pub mod runtime;
+pub mod tasks;
+pub mod testing;
+pub mod theory;
+pub mod util;
+
+pub use error::{DlionError, Result};

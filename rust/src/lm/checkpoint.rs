@@ -1,0 +1,226 @@
+//! Checkpointing: save/restore flat parameters (+ optimizer momenta)
+//! with integrity checks against the artifact manifest, so long LM runs
+//! can resume and the finetuning benches can branch from a shared
+//! pretrained state.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   "DLCK"            4 B
+//! version u32               4 B
+//! step    u64               8 B
+//! dim     u64               8 B
+//! model   u32 len + bytes   (manifest model name; must match on load)
+//! params  dim × f32
+//! nmom    u32               number of momentum buffers (0 or N)
+//! moms    nmom × dim × f32
+//! crc     u32               crc32 of everything above
+//! ```
+
+use crate::error::{DlionError, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"DLCK";
+const VERSION: u32 = 1;
+
+/// A training checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub model: String,
+    pub params: Vec<f32>,
+    /// per-worker optimizer momenta (empty if not saved)
+    pub momenta: Vec<Vec<f32>>,
+}
+
+/// crc32 (IEEE, bitwise — checkpoints are MB-scale, this is not hot).
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+impl Checkpoint {
+    pub fn new(step: u64, model: impl Into<String>, params: Vec<f32>) -> Self {
+        Checkpoint { step, model: model.into(), params, momenta: Vec::new() }
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let dim = self.params.len();
+        let mut out = Vec::with_capacity(64 + 4 * dim * (1 + self.momenta.len()));
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&(dim as u64).to_le_bytes());
+        out.extend_from_slice(&(self.model.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.model.as_bytes());
+        for &p in &self.params {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.momenta.len() as u32).to_le_bytes());
+        for m in &self.momenta {
+            assert_eq!(m.len(), dim, "momentum dim mismatch");
+            for &v in m {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse from bytes with full validation.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let err = |m: &str| DlionError::Artifact(format!("checkpoint: {m}"));
+        if data.len() < 32 {
+            return Err(err("truncated header"));
+        }
+        let (body, crc_bytes) = data.split_at(data.len() - 4);
+        let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        if crc32(body) != stored {
+            return Err(err("crc mismatch (corrupt file)"));
+        }
+        let mut r = body;
+        let mut take = |n: usize| -> Result<&[u8]> {
+            if r.len() < n {
+                return Err(DlionError::Artifact("checkpoint: truncated".into()));
+            }
+            let (head, tail) = r.split_at(n);
+            r = tail;
+            Ok(head)
+        };
+        if take(4)? != MAGIC {
+            return Err(err("bad magic"));
+        }
+        let version = u32::from_le_bytes(take(4)?.try_into().unwrap());
+        if version != VERSION {
+            return Err(err(&format!("unsupported version {version}")));
+        }
+        let step = u64::from_le_bytes(take(8)?.try_into().unwrap());
+        let dim = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
+        let name_len = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let model = String::from_utf8(take(name_len)?.to_vec())
+            .map_err(|_| err("bad model name"))?;
+        let mut params = vec![0.0f32; dim];
+        let pbytes = take(4 * dim)?;
+        for (p, c) in params.iter_mut().zip(pbytes.chunks_exact(4)) {
+            *p = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        let nmom = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let mut momenta = Vec::with_capacity(nmom);
+        for _ in 0..nmom {
+            let mbytes = take(4 * dim)?;
+            let mut m = vec![0.0f32; dim];
+            for (v, c) in m.iter_mut().zip(mbytes.chunks_exact(4)) {
+                *v = f32::from_le_bytes(c.try_into().unwrap());
+            }
+            momenta.push(m);
+        }
+        Ok(Checkpoint { step, model, params, momenta })
+    }
+
+    /// Write to a file (atomic: tmp + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&self.to_bytes())?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load from a file, checking the model name against `expect_model`
+    /// (pass "" to skip) and the dimension against `expect_dim`
+    /// (pass 0 to skip).
+    pub fn load(path: impl AsRef<Path>, expect_model: &str, expect_dim: usize) -> Result<Self> {
+        let mut data = Vec::new();
+        std::fs::File::open(path.as_ref())?.read_to_end(&mut data)?;
+        let ck = Self::from_bytes(&data)?;
+        if !expect_model.is_empty() && ck.model != expect_model {
+            return Err(DlionError::Artifact(format!(
+                "checkpoint is for model '{}', expected '{expect_model}'",
+                ck.model
+            )));
+        }
+        if expect_dim != 0 && ck.params.len() != expect_dim {
+            return Err(DlionError::Artifact(format!(
+                "checkpoint dim {} != expected {expect_dim}",
+                ck.params.len()
+            )));
+        }
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(1);
+        let mut params = vec![0.0f32; 1000];
+        rng.fill_normal(&mut params, 1.0);
+        let mut m = vec![0.0f32; 1000];
+        rng.fill_normal(&mut m, 0.1);
+        let mut ck = Checkpoint::new(1234, "tiny", params);
+        ck.momenta.push(m);
+        ck
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let ck = sample();
+        let path = std::env::temp_dir().join(format!("dlion_ck_{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path, "tiny", 1000).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let ck = sample();
+        let mut bytes = ck.to_bytes();
+        bytes[100] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_model_or_dim() {
+        let ck = sample();
+        let path = std::env::temp_dir().join(format!("dlion_ck2_{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        assert!(Checkpoint::load(&path, "other-model", 0).is_err());
+        assert!(Checkpoint::load(&path, "", 999).is_err());
+        assert!(Checkpoint::load(&path, "", 0).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        for cut in [3usize, 20, bytes.len() / 2, bytes.len() - 5] {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+}

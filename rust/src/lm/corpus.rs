@@ -1,0 +1,187 @@
+//! Synthetic byte-level corpus — the OpenWebText stand-in (DESIGN.md
+//! "Environment-forced substitutions"). Sentences are drawn from a
+//! stochastic template grammar over a fixed word bank, so the stream has
+//! real structure at several scales (characters → words → syntax) for a
+//! byte-level LM to learn, and perplexity differences between optimizers
+//! are meaningful.
+
+use crate::util::Rng;
+
+const SUBJECTS: &[&str] = &[
+    "the lion", "a worker", "the server", "the model", "a gradient", "the optimizer",
+    "the scheduler", "a tensor", "the network", "the dataset",
+];
+const VERBS: &[&str] = &[
+    "updates", "signs", "aggregates", "broadcasts", "compresses", "trains",
+    "averages", "reduces", "sends", "receives",
+];
+const OBJECTS: &[&str] = &[
+    "the momentum", "a binary vector", "the parameters", "the votes", "the batch",
+    "the learning rate", "the weights", "a sparse update", "the loss", "the bandwidth",
+];
+const ADVERBS: &[&str] = &[
+    "quickly", "efficiently", "silently", "in parallel", "every step", "without delay",
+];
+
+/// Grammar weights let us shift the distribution for the finetuning
+/// experiments (Table 4 analogue): each "domain" reweights clause types.
+#[derive(Clone, Copy, Debug)]
+pub struct Grammar {
+    /// probability a sentence carries an adverb
+    pub p_adverb: f64,
+    /// probability of a compound sentence ("... and ...")
+    pub p_compound: f64,
+    /// bias toward the first half of each word bank (domain vocabulary)
+    pub vocab_skew: f64,
+}
+
+impl Default for Grammar {
+    fn default() -> Self {
+        Grammar { p_adverb: 0.3, p_compound: 0.2, vocab_skew: 0.0 }
+    }
+}
+
+impl Grammar {
+    /// The 7 downstream "domains" used by the Table-4 analogue bench.
+    pub fn domain(i: usize) -> Grammar {
+        let t = i as f64 / 7.0;
+        Grammar {
+            p_adverb: 0.1 + 0.8 * t,
+            p_compound: 0.05 + 0.5 * (1.0 - t),
+            vocab_skew: -0.8 + 1.6 * t,
+        }
+    }
+
+    fn pick<'a>(&self, bank: &[&'a str], rng: &mut Rng) -> &'a str {
+        let n = bank.len();
+        let u = rng.uniform();
+        // skew < 0 biases early entries, > 0 late entries
+        let shaped = if self.vocab_skew >= 0.0 {
+            u.powf(1.0 / (1.0 + self.vocab_skew))
+        } else {
+            1.0 - (1.0 - u).powf(1.0 / (1.0 - self.vocab_skew))
+        };
+        bank[((shaped * n as f64) as usize).min(n - 1)]
+    }
+
+    fn clause(&self, rng: &mut Rng, out: &mut String) {
+        out.push_str(self.pick(SUBJECTS, rng));
+        out.push(' ');
+        out.push_str(self.pick(VERBS, rng));
+        out.push(' ');
+        out.push_str(self.pick(OBJECTS, rng));
+        if rng.uniform() < self.p_adverb {
+            out.push(' ');
+            out.push_str(self.pick(ADVERBS, rng));
+        }
+    }
+
+    /// One sentence ending in ". ".
+    pub fn sentence(&self, rng: &mut Rng, out: &mut String) {
+        self.clause(rng, out);
+        if rng.uniform() < self.p_compound {
+            out.push_str(" and ");
+            self.clause(rng, out);
+        }
+        out.push_str(". ");
+    }
+}
+
+/// A generated corpus of bytes with a train/valid split.
+pub struct Corpus {
+    pub train: Vec<u8>,
+    pub valid: Vec<u8>,
+}
+
+impl Corpus {
+    /// Generate `total_bytes` of text (deterministic in seed), 95/5 split.
+    pub fn generate(total_bytes: usize, grammar: Grammar, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut text = String::with_capacity(total_bytes + 128);
+        while text.len() < total_bytes {
+            grammar.sentence(&mut rng, &mut text);
+        }
+        let bytes = text.into_bytes();
+        let split = bytes.len() * 95 / 100;
+        Corpus { train: bytes[..split].to_vec(), valid: bytes[split..].to_vec() }
+    }
+
+    /// Sample a [batch, seq+1] window matrix of token ids (bytes) from a
+    /// split, using the caller's rng (the worker's private data stream).
+    pub fn sample_tokens(data: &[u8], rng: &mut Rng, batch: usize, seq_plus1: usize) -> Vec<i32> {
+        assert!(data.len() > seq_plus1, "corpus too small for seq len");
+        let mut out = Vec::with_capacity(batch * seq_plus1);
+        for _ in 0..batch {
+            let start = rng.below(data.len() - seq_plus1);
+            out.extend(data[start..start + seq_plus1].iter().map(|&b| b as i32));
+        }
+        out
+    }
+
+    /// Deterministic eval batches covering the validation split.
+    pub fn eval_batches(&self, batch: usize, seq_plus1: usize, max_batches: usize) -> Vec<Vec<i32>> {
+        let mut batches = Vec::new();
+        let mut pos = 0usize;
+        'outer: for _ in 0..max_batches {
+            let mut b = Vec::with_capacity(batch * seq_plus1);
+            for _ in 0..batch {
+                if pos + seq_plus1 > self.valid.len() {
+                    break 'outer;
+                }
+                b.extend(self.valid[pos..pos + seq_plus1].iter().map(|&x| x as i32));
+                pos += seq_plus1;
+            }
+            batches.push(b);
+        }
+        batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(5000, Grammar::default(), 1);
+        let b = Corpus::generate(5000, Grammar::default(), 1);
+        assert_eq!(a.train, b.train);
+        let c = Corpus::generate(5000, Grammar::default(), 2);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn text_is_ascii_sentences() {
+        let c = Corpus::generate(2000, Grammar::default(), 3);
+        let s = String::from_utf8(c.train.clone()).unwrap();
+        assert!(s.is_ascii());
+        assert!(s.contains(". "));
+        assert!(s.contains("the "));
+    }
+
+    #[test]
+    fn domains_differ() {
+        let a = Corpus::generate(4000, Grammar::domain(0), 5);
+        let b = Corpus::generate(4000, Grammar::domain(6), 5);
+        assert_ne!(a.train, b.train);
+        // domain 6 has high adverb rate -> "quickly" style words more common
+        let count = |data: &[u8], w: &str| {
+            String::from_utf8_lossy(data).matches(w).count()
+        };
+        let adverbs_b: usize = ADVERBS.iter().map(|w| count(&b.train, w)).sum();
+        let adverbs_a: usize = ADVERBS.iter().map(|w| count(&a.train, w)).sum();
+        assert!(adverbs_b > adverbs_a, "b={adverbs_b} a={adverbs_a}");
+    }
+
+    #[test]
+    fn sampling_shapes() {
+        let c = Corpus::generate(3000, Grammar::default(), 7);
+        let mut rng = Rng::new(9);
+        let toks = Corpus::sample_tokens(&c.train, &mut rng, 4, 33);
+        assert_eq!(toks.len(), 4 * 33);
+        assert!(toks.iter().all(|&t| (0..256).contains(&t)));
+        let evals = c.eval_batches(2, 33, 3);
+        assert!(!evals.is_empty());
+        assert!(evals.iter().all(|b| b.len() == 2 * 33));
+    }
+}

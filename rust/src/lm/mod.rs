@@ -1,0 +1,128 @@
+//! Language-model harness: glues the PJRT transformer artifacts into the
+//! cluster as a [`GradTask`], so every distributed strategy (D-Lion,
+//! G-AdamW, TernGrad, …) trains the *same* AOT-compiled model through
+//! the *same* coordinator code path. This is the Table 3/4 substrate.
+
+pub mod checkpoint;
+pub mod corpus;
+
+use crate::error::Result;
+use crate::runtime::trainstep::EvalStepExec;
+use crate::runtime::{Runtime, TrainStepExec};
+use crate::tasks::{Eval, GradTask};
+use crate::util::Rng;
+use corpus::{Corpus, Grammar};
+use std::sync::Arc;
+
+/// A byte-level transformer LM training task backed by AOT artifacts.
+pub struct LmTask {
+    pub rt: Arc<Runtime>,
+    pub corpus: Arc<Corpus>,
+    pub batch: usize,
+    pub seq_plus1: usize,
+    init: Vec<f32>,
+    eval_batches: Vec<Vec<i32>>,
+}
+
+impl LmTask {
+    /// Build from an artifacts dir; generates a deterministic corpus.
+    pub fn new(artifacts_dir: &str, corpus_bytes: usize, grammar: Grammar, seed: u64) -> Result<Self> {
+        let rt = Arc::new(Runtime::load(artifacts_dir)?);
+        Self::with_runtime(rt, corpus_bytes, grammar, seed)
+    }
+
+    pub fn with_runtime(
+        rt: Arc<Runtime>,
+        corpus_bytes: usize,
+        grammar: Grammar,
+        seed: u64,
+    ) -> Result<Self> {
+        let ts = TrainStepExec::new(&rt)?;
+        let (batch, seq_plus1) = (ts.batch, ts.seq_plus1);
+        drop(ts);
+        let corpus = Arc::new(Corpus::generate(corpus_bytes, grammar, seed));
+        let init = load_init_params(&rt)?;
+        let eval_batches = corpus.eval_batches(batch, seq_plus1, 8);
+        Ok(LmTask { rt, corpus, batch, seq_plus1, init, eval_batches })
+    }
+
+    /// Replace the corpus (finetuning: new domain, same weights).
+    pub fn with_corpus(&self, corpus_bytes: usize, grammar: Grammar, seed: u64) -> LmTask {
+        let corpus = Arc::new(Corpus::generate(corpus_bytes, grammar, seed));
+        let eval_batches = corpus.eval_batches(self.batch, self.seq_plus1, 8);
+        LmTask {
+            rt: self.rt.clone(),
+            corpus,
+            batch: self.batch,
+            seq_plus1: self.seq_plus1,
+            init: self.init.clone(),
+            eval_batches,
+        }
+    }
+
+    /// Start finetuning from pretrained parameters instead of the AOT init.
+    pub fn set_init(&mut self, params: Vec<f32>) {
+        assert_eq!(params.len(), self.init.len());
+        self.init = params;
+    }
+
+    /// Mean eval loss over the held-out batches (perplexity = exp(loss)).
+    pub fn eval_loss(&self, params: &[f32]) -> Result<f64> {
+        let es = EvalStepExec::new(&self.rt)?;
+        let mut total = 0.0f64;
+        for b in &self.eval_batches {
+            total += es.run(params, b)? as f64;
+        }
+        Ok(total / self.eval_batches.len().max(1) as f64)
+    }
+}
+
+/// Load `params_init.bin` (f32 LE, flat, written by aot.py).
+fn load_init_params(rt: &Runtime) -> Result<Vec<f32>> {
+    let path = rt.manifest.dir.join("params_init.bin");
+    let bytes = std::fs::read(&path)?;
+    if bytes.len() != 4 * rt.manifest.flat_dim {
+        return Err(crate::error::DlionError::Artifact(format!(
+            "params_init.bin has {} bytes, expected {}",
+            bytes.len(),
+            4 * rt.manifest.flat_dim
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+impl GradTask for LmTask {
+    fn name(&self) -> String {
+        format!("lm-{}", self.rt.manifest.model_name)
+    }
+
+    fn dim(&self) -> usize {
+        self.rt.manifest.flat_dim
+    }
+
+    fn init_params(&self, _rng: &mut Rng) -> Vec<f32> {
+        // deterministic init from the AOT pipeline; worker data streams
+        // provide the stochasticity
+        self.init.clone()
+    }
+
+    fn minibatch_grad(
+        &self,
+        params: &[f32],
+        rng: &mut Rng,
+        _batch: usize, // batch size is baked into the artifact shape
+        grad: &mut [f32],
+    ) -> f32 {
+        let ts = TrainStepExec::new(&self.rt).expect("train_step artifact");
+        let tokens = Corpus::sample_tokens(&self.corpus.train, rng, self.batch, self.seq_plus1);
+        ts.run(params, &tokens, grad).expect("train_step execution")
+    }
+
+    fn evaluate(&self, params: &[f32]) -> Eval {
+        let loss = self.eval_loss(params).expect("eval_step execution");
+        Eval { loss, accuracy: None }
+    }
+}

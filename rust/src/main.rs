@@ -1,0 +1,12 @@
+//! `dlion` — leader entrypoint for the Distributed Lion coordinator.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dlion::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

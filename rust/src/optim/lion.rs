@@ -1,0 +1,234 @@
+//! Lion (EvoLved Sign Momentum) — Chen et al. 2023b, paper eq. (1).
+//!
+//! ```text
+//! u_t     = sign(β1·m_t + (1−β1)·g_t)        // double-β interpolation
+//! x_{t+1} = x_t − ε·(u_t + λ·x_t)            // update + decoupled decay
+//! m_{t+1} = β2·m_t + (1−β2)·g_t              // momentum
+//! ```
+//!
+//! `sign` here is the *binarized* sign (0 ⇒ +1) so the update is strictly
+//! binary — required for the 1-bit D-Lion codec and numerically identical
+//! for continuous gradients (P[blend = 0] = 0). The Pallas `lion_step`
+//! kernel uses the same convention and the runtime integration test
+//! checks bit-exact agreement.
+
+use super::{LionParams, Optimizer};
+
+/// Binarized sign: x ≥ 0 ⇒ +1 else −1.
+#[inline(always)]
+pub fn bsign(x: f32) -> f32 {
+    // branch-free: flip on IEEE sign bit
+    f32::from_bits(0x3F80_0000 | (x.to_bits() & 0x8000_0000))
+}
+
+/// Single-node Lion optimizer.
+pub struct Lion {
+    pub hp: LionParams,
+    pub momentum: Vec<f32>,
+}
+
+impl Lion {
+    pub fn new(dim: usize, hp: LionParams) -> Self {
+        Lion { hp, momentum: vec![0.0; dim] }
+    }
+
+    /// Compute the binary update δ = bsign(β1·m + (1−β1)·g) *without*
+    /// touching params or momentum (worker-side D-Lion uses this).
+    pub fn peek_update(&self, grads: &[f32], out: &mut [f32]) {
+        let b1 = self.hp.beta1;
+        for ((o, &m), &g) in out.iter_mut().zip(&self.momentum).zip(grads) {
+            *o = bsign(b1 * m + (1.0 - b1) * g);
+        }
+    }
+
+    /// Advance only the momentum: m ← β2·m + (1−β2)·g.
+    pub fn advance_momentum(&mut self, grads: &[f32]) {
+        let b2 = self.hp.beta2;
+        for (m, &g) in self.momentum.iter_mut().zip(grads) {
+            *m = b2 * *m + (1.0 - b2) * g;
+        }
+    }
+
+    /// Apply an externally-aggregated update Δ (D-Lion worker-side apply):
+    /// x ← x − lr·(Δ + λ·x).
+    pub fn apply_aggregated(params: &mut [f32], delta: &[f32], lr: f32, wd: f32) {
+        for (p, &d) in params.iter_mut().zip(delta) {
+            *p -= lr * (d + wd * *p);
+        }
+    }
+
+    /// §Perf optimization #3 — the fused D-Lion worker hot path: compute
+    /// the blend sign bits AND advance the momentum in a single pass over
+    /// (m, g), writing the packed 1-bit payload directly. Replaces
+    /// peek_update (blend store) + pack_f32 (blend re-read) +
+    /// advance_momentum (second m/g pass): 3 passes → 1, and the d×4-byte
+    /// scratch store disappears. Bit-exact with the decomposed path
+    /// (tested below).
+    pub fn encode_fused(&mut self, grads: &[f32]) -> Vec<u8> {
+        let d = grads.len();
+        debug_assert_eq!(d, self.momentum.len());
+        let b1 = self.hp.beta1;
+        let b2 = self.hp.beta2;
+        let mut out = vec![0u8; crate::comm::sign::packed_len(d)];
+        let m_chunks = self.momentum.chunks_exact_mut(8);
+        let g_chunks = grads.chunks_exact(8);
+        let full = g_chunks.len();
+        for (ci, (mc, gc)) in m_chunks.zip(g_chunks).enumerate() {
+            let mut byte = 0u8;
+            for j in 0..8 {
+                let m = mc[j];
+                let g = gc[j];
+                let blend = b1 * m + (1.0 - b1) * g;
+                byte |= (((blend.to_bits() >> 31) ^ 1) as u8) << j;
+                mc[j] = b2 * m + (1.0 - b2) * g;
+            }
+            out[ci] = byte;
+        }
+        for i in full * 8..d {
+            let m = self.momentum[i];
+            let g = grads[i];
+            let blend = b1 * m + (1.0 - b1) * g;
+            if blend.to_bits() >> 31 == 0 {
+                out[i >> 3] |= 1 << (i & 7);
+            }
+            self.momentum[i] = b2 * m + (1.0 - b2) * g;
+        }
+        out
+    }
+}
+
+impl Optimizer for Lion {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), grads.len());
+        debug_assert_eq!(params.len(), self.momentum.len());
+        let LionParams { beta1, beta2, weight_decay } = self.hp;
+        for ((p, m), &g) in params.iter_mut().zip(&mut self.momentum).zip(grads) {
+            let u = bsign(beta1 * *m + (1.0 - beta1) * g);
+            *p -= lr * (u + weight_decay * *p);
+            *m = beta2 * *m + (1.0 - beta2) * g;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "lion"
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * self.momentum.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn bsign_convention() {
+        assert_eq!(bsign(3.0), 1.0);
+        assert_eq!(bsign(-3.0), -1.0);
+        assert_eq!(bsign(0.0), 1.0); // binarized: zero maps to +1
+        assert_eq!(bsign(-0.0), -1.0); // IEEE sign bit
+        assert_eq!(bsign(f32::MIN_POSITIVE), 1.0);
+    }
+
+    #[test]
+    fn bsign_matches_naive() {
+        testing::forall(
+            0xA1,
+            256,
+            |r| r.normal_f32(0.0, 10.0),
+            |&x| bsign(x) == if x.is_sign_positive() { 1.0 } else { -1.0 },
+        );
+    }
+
+    #[test]
+    fn step_matches_manual_unroll() {
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.1 };
+        let mut lion = Lion::new(2, hp);
+        let mut p = vec![1.0f32, -2.0];
+        let g = vec![0.5f32, -0.25];
+        let lr = 0.1;
+        // manual: m=0 so u = sign((1-b1) g) = sign(g)
+        let expect_p = [
+            1.0 - lr * (1.0 + 0.1 * 1.0),
+            -2.0 - lr * (-1.0 + 0.1 * -2.0),
+        ];
+        lion.step(&mut p, &g, lr);
+        testing::assert_allclose(&p, &expect_p, 1e-7, 1e-6, "lion step");
+        // momentum advanced: m = (1-b2) g
+        testing::assert_allclose(
+            &lion.momentum,
+            &[0.01 * 0.5, 0.01 * -0.25],
+            1e-8,
+            1e-6,
+            "lion momentum",
+        );
+    }
+
+    #[test]
+    fn peek_plus_apply_plus_advance_equals_step() {
+        // The decomposed worker-side path (peek_update / apply_aggregated /
+        // advance_momentum with N=1) must reproduce Optimizer::step exactly.
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.01 };
+        let mut rng = crate::util::Rng::new(0xA2);
+        let d = 64;
+        let mut a = Lion::new(d, hp);
+        let mut b = Lion::new(d, hp);
+        let mut pa = vec![0.0f32; d];
+        rng.fill_normal(&mut pa, 1.0);
+        let mut pb = pa.clone();
+        let mut delta = vec![0.0f32; d];
+        for step in 0..50 {
+            let mut g = vec![0.0f32; d];
+            let mut r2 = crate::util::Rng::new(1000 + step);
+            r2.fill_normal(&mut g, 1.0);
+            a.step(&mut pa, &g, 0.01);
+            b.peek_update(&g, &mut delta);
+            Lion::apply_aggregated(&mut pb, &delta, 0.01, hp.weight_decay);
+            b.advance_momentum(&g);
+        }
+        assert_eq!(pa, pb, "decomposed path must be bit-exact");
+        assert_eq!(a.momentum, b.momentum);
+    }
+
+    #[test]
+    fn encode_fused_is_bit_exact_with_decomposed_path() {
+        let hp = LionParams::default();
+        let mut rng = crate::util::Rng::new(0xA3);
+        for d in [1usize, 7, 8, 9, 64, 1000, 1003] {
+            let mut a = Lion::new(d, hp);
+            let mut b = Lion::new(d, hp);
+            rng.fill_normal(&mut a.momentum, 0.3);
+            b.momentum.copy_from_slice(&a.momentum);
+            for _ in 0..5 {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                let fused = a.encode_fused(&g);
+                let blend: Vec<f32> = b
+                    .momentum
+                    .iter()
+                    .zip(&g)
+                    .map(|(&m, &gg)| hp.beta1 * m + (1.0 - hp.beta1) * gg)
+                    .collect();
+                let decomposed = crate::comm::sign::pack_f32(&blend);
+                b.advance_momentum(&g);
+                assert_eq!(fused, decomposed, "d={d}");
+                assert_eq!(a.momentum, b.momentum, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_feasible_box() {
+        // With zero gradient signal the iterates converge into
+        // F = {x : |λ x|_inf <= 1} (Phase I, Thm 4.4).
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.5 };
+        let mut lion = Lion::new(1, hp);
+        let mut p = vec![100.0f32];
+        for _ in 0..2000 {
+            lion.step(&mut p, &[0.0], 0.01);
+        }
+        assert!((hp.weight_decay * p[0]).abs() <= 1.0 + 1e-3, "p={}", p[0]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Optimizers and distributed strategies.
+//!
+//! Two layers:
+//!
+//! * [`Optimizer`] — classical single-node optimizers operating on a flat
+//!   f32 parameter buffer: [`lion::Lion`], [`adamw::AdamW`],
+//!   [`sgd::SgdMomentum`], [`signum::Signum`]. These are the paper's
+//!   eq. (1) plus the comparison baselines.
+//! * [`dist`] — synchronous distributed strategies that split each step
+//!   into worker-encode / server-aggregate / worker-apply message phases
+//!   (Algorithm 1 in the paper and every baseline of Section 5.1).
+
+pub mod adamw;
+pub mod dist;
+pub mod lion;
+pub mod sgd;
+pub mod signum;
+
+/// A single-node optimizer over a flat parameter vector.
+pub trait Optimizer: Send {
+    /// One update: params ← params − lr·(update(grads) + decoupled wd term).
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
+
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// Bytes of optimizer state (paper §1: Lion halves Adam's state).
+    fn state_bytes(&self) -> usize;
+}
+
+/// Hyper-parameters shared by the Lion family (Table 2 CIFAR defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct LionParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for LionParams {
+    fn default() -> Self {
+        // Chen et al. 2023b defaults, used throughout the paper.
+        LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.005 }
+    }
+}
+
+/// Hyper-parameters for AdamW (paper Table 2 CIFAR defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamWParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamWParams {
+    fn default() -> Self {
+        AdamWParams { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0005 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::adamw::AdamW;
+    use super::lion::Lion;
+    use super::sgd::SgdMomentum;
+    use super::signum::Signum;
+    use super::*;
+
+    fn quad_grad(params: &[f32], out: &mut [f32]) {
+        // f(x) = 0.5 * ||x - 1||^2, grad = x - 1
+        for (g, &p) in out.iter_mut().zip(params) {
+            *g = p - 1.0;
+        }
+    }
+
+    fn converges<O: Optimizer>(mut opt: O, lr: f32, steps: usize) -> f32 {
+        let d = 16;
+        let mut params = vec![5.0f32; d];
+        let mut grads = vec![0.0f32; d];
+        for _ in 0..steps {
+            quad_grad(&params, &mut grads);
+            opt.step(&mut params, &grads, lr);
+        }
+        params.iter().map(|&p| (p - 1.0).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn all_optimizers_reduce_quadratic() {
+        assert!(converges(Lion::new(16, LionParams { weight_decay: 0.0, ..Default::default() }), 0.01, 2000) < 0.1);
+        assert!(converges(AdamW::new(16, AdamWParams { weight_decay: 0.0, ..Default::default() }), 0.05, 2000) < 0.1);
+        assert!(converges(SgdMomentum::new(16, 0.9, 0.0), 0.1, 2000) < 0.1);
+        assert!(converges(Signum::new(16, 0.9, 0.0), 0.01, 2000) < 0.1);
+    }
+
+    #[test]
+    fn state_sizes_match_paper_claim() {
+        // Lion stores one momentum; AdamW stores two (memory advantage, §1).
+        let d = 1000;
+        let lion = Lion::new(d, LionParams::default());
+        let adam = AdamW::new(d, AdamWParams::default());
+        assert_eq!(lion.state_bytes(), 4 * d);
+        assert_eq!(adam.state_bytes(), 8 * d);
+    }
+}

@@ -1,0 +1,63 @@
+//! SGD with (heavy-ball) momentum — base optimizer for the TernGrad,
+//! GradDrop, and DGC baselines (their reference implementations apply
+//! plain momentum-SGD on the decompressed aggregate gradient).
+
+use super::Optimizer;
+
+/// SGD with momentum and decoupled weight decay.
+pub struct SgdMomentum {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub velocity: Vec<f32>,
+}
+
+impl SgdMomentum {
+    pub fn new(dim: usize, momentum: f32, weight_decay: f32) -> Self {
+        SgdMomentum { momentum, weight_decay, velocity: vec![0.0; dim] }
+    }
+
+    /// Apply a raw (already aggregated) gradient with this optimizer's
+    /// state — used worker-side by the compression baselines.
+    pub fn apply_gradient(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        for ((p, v), &g) in params.iter_mut().zip(self.velocity.iter_mut()).zip(grad) {
+            *v = self.momentum * *v + g;
+            *p -= lr * (*v + self.weight_decay * *p);
+        }
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        self.apply_gradient(params, grads, lr);
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd-momentum"
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * self.velocity.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let mut opt = SgdMomentum::new(2, 0.0, 0.0);
+        let mut p = vec![1.0f32, 2.0];
+        opt.step(&mut p, &[0.5, -0.5], 0.1);
+        assert_eq!(p, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = SgdMomentum::new(1, 0.9, 0.0);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 1.0); // v=1, p=-1
+        opt.step(&mut p, &[1.0], 1.0); // v=1.9, p=-2.9
+        assert!((p[0] + 2.9).abs() < 1e-6, "p={}", p[0]);
+    }
+}

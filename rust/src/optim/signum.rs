@@ -1,0 +1,84 @@
+//! Signum (SignSGD with momentum, Bernstein et al. 2018) — the paper's
+//! Figure-4 ablation baseline (D-SIGNUM). Lion generalizes Signum: with
+//! β1 = β2 = β Lion's double-β blend collapses to Signum's single
+//! momentum sign.
+
+use super::lion::bsign;
+use super::Optimizer;
+
+/// Signum: m ← β·m + (1−β)·g ; x ← x − lr·(sign(m) + λx).
+pub struct Signum {
+    pub beta: f32,
+    pub weight_decay: f32,
+    pub momentum: Vec<f32>,
+}
+
+impl Signum {
+    pub fn new(dim: usize, beta: f32, weight_decay: f32) -> Self {
+        Signum { beta, weight_decay, momentum: vec![0.0; dim] }
+    }
+
+    /// Worker-side: compute binary update into `out` *after* advancing
+    /// momentum (Signum signs the freshly-updated momentum).
+    pub fn update_and_peek(&mut self, grads: &[f32], out: &mut [f32]) {
+        for ((m, &g), o) in self.momentum.iter_mut().zip(grads).zip(out.iter_mut()) {
+            *m = self.beta * *m + (1.0 - self.beta) * g;
+            *o = bsign(*m);
+        }
+    }
+}
+
+impl Optimizer for Signum {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        let beta = self.beta;
+        let wd = self.weight_decay;
+        for ((p, m), &g) in params.iter_mut().zip(self.momentum.iter_mut()).zip(grads) {
+            *m = beta * *m + (1.0 - beta) * g;
+            *p -= lr * (bsign(*m) + wd * *p);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "signum"
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * self.momentum.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::lion::Lion;
+    use crate::optim::LionParams;
+    use crate::util::Rng;
+
+    #[test]
+    fn signum_is_lion_with_equal_betas() {
+        // Lion with β1 = β2 = β signs (β·m + (1−β)g) which equals the
+        // *new* Signum momentum — trajectories must agree bit-exactly.
+        let beta = 0.95;
+        let d = 32;
+        let mut lion = Lion::new(d, LionParams { beta1: beta, beta2: beta, weight_decay: 0.0 });
+        let mut signum = Signum::new(d, beta, 0.0);
+        let mut pa = vec![0.5f32; d];
+        let mut pb = pa.clone();
+        let mut rng = Rng::new(0xB1);
+        for _ in 0..100 {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            lion.step(&mut pa, &g, 0.01);
+            signum.step(&mut pb, &g, 0.01);
+        }
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn updates_are_binary() {
+        let mut s = Signum::new(4, 0.99, 0.0);
+        let mut out = vec![0.0f32; 4];
+        s.update_and_peek(&[1.0, -1.0, 0.5, -0.0], &mut out);
+        assert!(out.iter().all(|&u| u == 1.0 || u == -1.0));
+    }
+}

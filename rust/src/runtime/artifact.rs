@@ -1,0 +1,230 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! (which writes `artifacts/manifest.json`) and the rust runtime
+//! (which loads and executes the HLO artifacts it describes).
+
+use crate::error::{DlionError, Result};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named tensor (parameter or artifact I/O).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// offset into the flat f32 parameter vector
+    pub offset: usize,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+}
+
+/// The full manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model_name: String,
+    pub config: BTreeMap<String, f64>,
+    pub params: Vec<ParamSpec>,
+    pub flat_dim: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_tensor(j: &Json, with_offset: bool) -> Result<ParamSpec> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| DlionError::Artifact("tensor missing name".into()))?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| DlionError::Artifact(format!("tensor {name} missing shape")))?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect();
+    let dtype = j
+        .get("dtype")
+        .and_then(|v| v.as_str())
+        .unwrap_or("f32")
+        .to_string();
+    let offset = if with_offset {
+        j.get("offset")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| DlionError::Artifact(format!("param {name} missing offset")))?
+    } else {
+        0
+    };
+    Ok(ParamSpec { name, shape, dtype, offset })
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let j = json::parse(text)?;
+        let model_name = j
+            .get("model")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let mut config = BTreeMap::new();
+        if let Some(cfg) = j.get("config").and_then(|v| v.as_obj()) {
+            for (k, v) in cfg {
+                if let Some(x) = v.as_f64() {
+                    config.insert(k.clone(), x);
+                }
+            }
+        }
+        let params: Vec<ParamSpec> = j
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().map(|p| parse_tensor(p, true)).collect::<Result<Vec<_>>>())
+            .transpose()?
+            .unwrap_or_default();
+        let flat_dim = j.get("flat_dim").and_then(|v| v.as_usize()).unwrap_or(0);
+        // validate contiguous layout
+        let mut expect = 0usize;
+        for p in &params {
+            if p.offset != expect {
+                return Err(DlionError::Artifact(format!(
+                    "param {} offset {} != expected {expect}",
+                    p.name, p.offset
+                )));
+            }
+            expect += p.numel();
+        }
+        if flat_dim != expect {
+            return Err(DlionError::Artifact(format!(
+                "flat_dim {flat_dim} != sum of param sizes {expect}"
+            )));
+        }
+        let mut artifacts = BTreeMap::new();
+        if let Some(arts) = j.get("artifacts").and_then(|v| v.as_obj()) {
+            for (name, a) in arts {
+                let file = a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| DlionError::Artifact(format!("artifact {name} missing file")))?
+                    .to_string();
+                let inputs = a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .map(|ar| ar.iter().map(|t| parse_tensor(t, false)).collect::<Result<Vec<_>>>())
+                    .transpose()?
+                    .unwrap_or_default();
+                let outputs = a
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .map(|ar| ar.iter().map(|t| parse_tensor(t, false)).collect::<Result<Vec<_>>>())
+                    .transpose()?
+                    .unwrap_or_default();
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec { name: name.clone(), file, inputs, outputs },
+                );
+            }
+        }
+        Ok(Manifest { dir, model_name, config, params, flat_dim, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| DlionError::Artifact(format!("no artifact '{name}' in manifest")))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Slice a flat parameter buffer into per-tensor views.
+    pub fn split_flat<'a>(&self, flat: &'a [f32]) -> Result<Vec<&'a [f32]>> {
+        if flat.len() != self.flat_dim {
+            return Err(DlionError::Artifact(format!(
+                "flat buffer len {} != flat_dim {}",
+                flat.len(),
+                self.flat_dim
+            )));
+        }
+        Ok(self
+            .params
+            .iter()
+            .map(|p| &flat[p.offset..p.offset + p.numel()])
+            .collect())
+    }
+
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).map(|&x| x as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "tiny",
+      "config": {"vocab": 256, "dim": 32, "layers": 2, "seq_len": 64, "batch": 4},
+      "flat_dim": 20,
+      "params": [
+        {"name": "embed", "shape": [4, 4], "dtype": "f32", "offset": 0},
+        {"name": "head",  "shape": [4],   "dtype": "f32", "offset": 16}
+      ],
+      "artifacts": {
+        "train_step": {
+          "file": "train_step_tiny.hlo.txt",
+          "inputs": [{"name": "tokens", "shape": [4, 65], "dtype": "i32"}],
+          "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.model_name, "tiny");
+        assert_eq!(m.flat_dim, 20);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].offset, 16);
+        assert_eq!(m.config_usize("vocab"), Some(256));
+        let a = m.artifact("train_step").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 65]);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn split_flat_views() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let flat: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let views = m.split_flat(&flat).unwrap();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].len(), 16);
+        assert_eq!(views[1][0], 16.0);
+        assert!(m.split_flat(&flat[..10]).is_err());
+    }
+
+    #[test]
+    fn rejects_gap_in_layout() {
+        let bad = SAMPLE.replace("\"offset\": 16", "\"offset\": 17");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! PJRT client wrapper: one CPU client, a compile cache of loaded
+//! executables keyed by artifact name, literal marshalling helpers.
+
+use crate::error::{DlionError, Result};
+use crate::runtime::artifact::Manifest;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// The runtime: a PJRT CPU client plus compiled executables for the
+/// artifacts in one manifest. Thread-safe (`compile` is internally
+/// locked; execution goes through &self).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create from an artifacts directory (must contain manifest.json).
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, executables: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.executables.lock().unwrap();
+            if let Some(exe) = cache.get(name) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.executables.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// tuple outputs (aot.py lowers with return_tuple=True).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| DlionError::Runtime(format!("artifact {name}: empty result")))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// f32 tensor literal from a slice (row-major).
+    pub fn literal_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(DlionError::Runtime(format!(
+                "literal shape {shape:?} needs {numel} elems, got {}",
+                data.len()
+            )));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// i32 tensor literal from a slice.
+    pub fn literal_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(DlionError::Runtime(format!(
+                "literal shape {shape:?} needs {numel} elems, got {}",
+                data.len()
+            )));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// i8 tensor literal (sign vectors) from raw bytes.
+    pub fn literal_i8(&self, data: &[i8], shape: &[usize]) -> Result<xla::Literal> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(DlionError::Runtime(format!(
+                "literal shape {shape:?} needs {numel} elems, got {}",
+                data.len()
+            )));
+        }
+        // i8 -> u8 reinterpret is a plain byte view
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            shape,
+            bytes,
+        )?)
+    }
+
+    /// Read back an f32 literal into a Vec.
+    pub fn to_vec_f32(&self, lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py` → `artifacts/*.hlo.txt` + `manifest.json`)
+//! and executes them from the rust hot path. Python never runs here.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod trainstep;
+
+pub use artifact::{ArtifactSpec, Manifest, ParamSpec};
+pub use client::Runtime;
+pub use trainstep::{LionUpdateExec, TrainStepExec};

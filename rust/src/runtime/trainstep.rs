@@ -1,0 +1,138 @@
+//! Typed wrappers over the AOT artifacts:
+//!
+//! * [`TrainStepExec`] — the L2 transformer `train_step`:
+//!   (tokens i32[B,T+1], params…) → (loss f32[], grads…), one fused
+//!   executable for forward + backward.
+//! * [`LionUpdateExec`] — the L1 Pallas fused Lion kernel:
+//!   (m f32[d], g f32[d]) → (delta i8[d] ∈ {−1,+1}, m_new f32[d]).
+//! * [`EvalStepExec`] — loss-only evaluation.
+
+use crate::error::{DlionError, Result};
+use crate::runtime::Runtime;
+
+/// Fused forward+backward over the transformer.
+pub struct TrainStepExec<'rt> {
+    rt: &'rt Runtime,
+    pub batch: usize,
+    pub seq_plus1: usize,
+}
+
+impl<'rt> TrainStepExec<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Result<Self> {
+        let spec = rt.manifest.artifact("train_step")?;
+        let tok = spec
+            .inputs
+            .first()
+            .ok_or_else(|| DlionError::Artifact("train_step has no inputs".into()))?;
+        if tok.shape.len() != 2 {
+            return Err(DlionError::Artifact(format!(
+                "train_step token input must be [B, T+1], got {:?}",
+                tok.shape
+            )));
+        }
+        // warm the compile cache
+        rt.executable("train_step")?;
+        Ok(TrainStepExec { rt, batch: tok.shape[0], seq_plus1: tok.shape[1] })
+    }
+
+    /// Run fwd+bwd: `flat_params` is the coordinator's flat buffer,
+    /// `tokens` is row-major [B, T+1]. Writes flat gradients into
+    /// `grad_out` and returns the scalar loss.
+    pub fn run(&self, flat_params: &[f32], tokens: &[i32], grad_out: &mut [f32]) -> Result<f32> {
+        let m = &self.rt.manifest;
+        if grad_out.len() != m.flat_dim {
+            return Err(DlionError::Runtime("grad_out size mismatch".into()));
+        }
+        let views = m.split_flat(flat_params)?;
+        let mut inputs = Vec::with_capacity(1 + views.len());
+        inputs.push(self.rt.literal_i32(tokens, &[self.batch, self.seq_plus1])?);
+        for (view, spec) in views.iter().zip(&m.params) {
+            inputs.push(self.rt.literal_f32(view, &spec.shape)?);
+        }
+        let outputs = self.rt.run("train_step", &inputs)?;
+        if outputs.len() != 1 + m.params.len() {
+            return Err(DlionError::Runtime(format!(
+                "train_step returned {} outputs, expected {}",
+                outputs.len(),
+                1 + m.params.len()
+            )));
+        }
+        let loss = outputs[0].to_vec::<f32>()?[0];
+        for (out, spec) in outputs[1..].iter().zip(&m.params) {
+            let dst = &mut grad_out[spec.offset..spec.offset + spec.numel()];
+            out.copy_raw_to(dst)?;
+        }
+        Ok(loss)
+    }
+}
+
+/// Loss-only eval step.
+pub struct EvalStepExec<'rt> {
+    rt: &'rt Runtime,
+    pub batch: usize,
+    pub seq_plus1: usize,
+}
+
+impl<'rt> EvalStepExec<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Result<Self> {
+        let spec = rt.manifest.artifact("eval_step")?;
+        let tok = spec
+            .inputs
+            .first()
+            .ok_or_else(|| DlionError::Artifact("eval_step has no inputs".into()))?;
+        rt.executable("eval_step")?;
+        Ok(EvalStepExec { rt, batch: tok.shape[0], seq_plus1: tok.shape[1] })
+    }
+
+    pub fn run(&self, flat_params: &[f32], tokens: &[i32]) -> Result<f32> {
+        let m = &self.rt.manifest;
+        let views = m.split_flat(flat_params)?;
+        let mut inputs = Vec::with_capacity(1 + views.len());
+        inputs.push(self.rt.literal_i32(tokens, &[self.batch, self.seq_plus1])?);
+        for (view, spec) in views.iter().zip(&m.params) {
+            inputs.push(self.rt.literal_f32(view, &spec.shape)?);
+        }
+        let outputs = self.rt.run("eval_step", &inputs)?;
+        Ok(outputs[0].to_vec::<f32>()?[0])
+    }
+}
+
+/// The fused Pallas Lion kernel (L1): one pass producing the binary
+/// update and the new momentum.
+pub struct LionUpdateExec<'rt> {
+    rt: &'rt Runtime,
+    pub dim: usize,
+}
+
+impl<'rt> LionUpdateExec<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Result<Self> {
+        let spec = rt.manifest.artifact("lion_update")?;
+        let dim = spec
+            .inputs
+            .first()
+            .map(|t| t.numel())
+            .ok_or_else(|| DlionError::Artifact("lion_update has no inputs".into()))?;
+        rt.executable("lion_update")?;
+        Ok(LionUpdateExec { rt, dim })
+    }
+
+    /// (m, g) → (delta ∈ {−1,+1} as i8, m_new).
+    pub fn run(&self, m: &[f32], g: &[f32]) -> Result<(Vec<i8>, Vec<f32>)> {
+        if m.len() != self.dim || g.len() != self.dim {
+            return Err(DlionError::Runtime(format!(
+                "lion_update dim mismatch: kernel d={}, got m={} g={}",
+                self.dim,
+                m.len(),
+                g.len()
+            )));
+        }
+        let inputs = [
+            self.rt.literal_f32(m, &[self.dim])?,
+            self.rt.literal_f32(g, &[self.dim])?,
+        ];
+        let outputs = self.rt.run("lion_update", &inputs)?;
+        let delta = outputs[0].to_vec::<i8>()?;
+        let m_new = outputs[1].to_vec::<f32>()?;
+        Ok((delta, m_new))
+    }
+}

@@ -1,0 +1,165 @@
+//! Synthetic vision dataset — the CIFAR-10 stand-in for the Figure 2–4
+//! sweeps (CIFAR itself is not redistributable inside this sandbox; see
+//! DESIGN.md). Ten classes of 16×16 grayscale images built from
+//! per-class frequency-grating templates plus per-sample deformation
+//! and additive noise, so the task is learnable but not trivially
+//! linearly separable; class difficulty varies with template overlap.
+
+use crate::util::Rng;
+
+pub const IMG_SIDE: usize = 16;
+pub const IMG_DIM: usize = IMG_SIDE * IMG_SIDE;
+pub const NUM_CLASSES: usize = 10;
+
+/// A fixed synthetic classification dataset.
+pub struct VisionData {
+    pub train_x: Vec<f32>, // n_train × IMG_DIM
+    pub train_y: Vec<u8>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<u8>,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+fn template(class: usize, rng: &mut Rng) -> Vec<f32> {
+    // Each class: sum of 2 oriented gratings + a class-specific blob.
+    let fx1 = 1.0 + rng.uniform() as f32 * 3.0;
+    let fy1 = 1.0 + rng.uniform() as f32 * 3.0;
+    let fx2 = 1.0 + rng.uniform() as f32 * 5.0;
+    let fy2 = 1.0 + rng.uniform() as f32 * 5.0;
+    let ph1 = rng.uniform() as f32 * std::f32::consts::TAU;
+    let ph2 = rng.uniform() as f32 * std::f32::consts::TAU;
+    let cx = rng.uniform() as f32 * IMG_SIDE as f32;
+    let cy = rng.uniform() as f32 * IMG_SIDE as f32;
+    let mut t = vec![0.0f32; IMG_DIM];
+    for y in 0..IMG_SIDE {
+        for x in 0..IMG_SIDE {
+            let xf = x as f32 / IMG_SIDE as f32 * std::f32::consts::TAU;
+            let yf = y as f32 / IMG_SIDE as f32 * std::f32::consts::TAU;
+            let g1 = (fx1 * xf + fy1 * yf + ph1).sin();
+            let g2 = (fx2 * xf + fy2 * yf + ph2).cos();
+            let dx = x as f32 - cx;
+            let dy = y as f32 - cy;
+            let blob = (-(dx * dx + dy * dy) / 18.0).exp();
+            t[y * IMG_SIDE + x] = 0.6 * g1 + 0.4 * g2 + 1.2 * blob;
+        }
+    }
+    // class parity flips contrast to add template diversity
+    if class % 2 == 1 {
+        for v in t.iter_mut() {
+            *v = -*v;
+        }
+    }
+    t
+}
+
+impl VisionData {
+    /// Generate deterministically from `seed`.
+    pub fn generate(n_train: usize, n_test: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let templates: Vec<Vec<f32>> = (0..NUM_CLASSES).map(|c| template(c, &mut rng)).collect();
+        let make = |n: usize, rng: &mut Rng| {
+            let mut xs = vec![0.0f32; n * IMG_DIM];
+            let mut ys = vec![0u8; n];
+            for i in 0..n {
+                let c = rng.below(NUM_CLASSES);
+                ys[i] = c as u8;
+                let shift_x = rng.below(3) as isize - 1; // small translation jitter
+                let shift_y = rng.below(3) as isize - 1;
+                let amp = 0.8 + 0.4 * rng.uniform() as f32;
+                let row = &mut xs[i * IMG_DIM..(i + 1) * IMG_DIM];
+                for y in 0..IMG_SIDE {
+                    for x in 0..IMG_SIDE {
+                        let sx = (x as isize + shift_x).rem_euclid(IMG_SIDE as isize) as usize;
+                        let sy = (y as isize + shift_y).rem_euclid(IMG_SIDE as isize) as usize;
+                        row[y * IMG_SIDE + x] =
+                            amp * templates[c][sy * IMG_SIDE + sx] + rng.normal_f32(0.0, noise);
+                    }
+                }
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = make(n_train, &mut rng);
+        let (test_x, test_y) = make(n_test, &mut rng);
+        VisionData { train_x, train_y, test_x, test_y, n_train, n_test }
+    }
+
+    pub fn train_row(&self, i: usize) -> (&[f32], usize) {
+        (&self.train_x[i * IMG_DIM..(i + 1) * IMG_DIM], self.train_y[i] as usize)
+    }
+
+    pub fn test_row(&self, i: usize) -> (&[f32], usize) {
+        (&self.test_x[i * IMG_DIM..(i + 1) * IMG_DIM], self.test_y[i] as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = VisionData::generate(50, 10, 0.3, 42);
+        let b = VisionData::generate(50, 10, 0.3, 42);
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.train_y, b.train_y);
+        let c = VisionData::generate(50, 10, 0.3, 43);
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let d = VisionData::generate(500, 100, 0.3, 1);
+        let mut seen = [false; NUM_CLASSES];
+        for &y in &d.train_y {
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn nearest_template_is_informative() {
+        // Sanity: a nearest-class-mean classifier on clean data should beat
+        // chance by a wide margin, i.e. the dataset is actually learnable.
+        let d = VisionData::generate(2000, 400, 0.3, 7);
+        let mut means = vec![vec![0.0f64; IMG_DIM]; NUM_CLASSES];
+        let mut counts = vec![0usize; NUM_CLASSES];
+        for i in 0..d.n_train {
+            let (x, y) = d.train_row(i);
+            counts[y] += 1;
+            for (m, &v) in means[y].iter_mut().zip(x) {
+                *m += v as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..d.n_test {
+            let (x, y) = d.test_row(i);
+            let best = (0..NUM_CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f64 = x
+                        .iter()
+                        .zip(&means[a])
+                        .map(|(&v, &m)| (v as f64 - m).powi(2))
+                        .sum();
+                    let db: f64 = x
+                        .iter()
+                        .zip(&means[b])
+                        .map(|(&v, &m)| (v as f64 - m).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.n_test as f64;
+        assert!(acc > 0.5, "nearest-mean acc={acc}, dataset too hard");
+        assert!(acc < 1.0, "dataset trivially separable");
+    }
+}

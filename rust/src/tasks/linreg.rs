@@ -1,0 +1,114 @@
+//! Linear-regression task on a fixed synthetic design matrix:
+//! f(w) = 1/(2n) Σ (xᵢᵀw − yᵢ)², minibatched by row sampling.
+//! A convex task with *data* (not additive-noise) stochasticity — the
+//! regime Assumption 4.1 actually describes.
+
+use super::{Eval, GradTask};
+use crate::util::Rng;
+
+pub struct LinReg {
+    pub dim: usize,
+    rows: Vec<f32>, // n × dim, row-major
+    targets: Vec<f32>,
+    n: usize,
+    pub truth: Vec<f32>,
+}
+
+impl LinReg {
+    pub fn new(dim: usize, n: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut truth = vec![0.0f32; dim];
+        rng.fill_normal(&mut truth, 1.0);
+        let mut rows = vec![0.0f32; n * dim];
+        rng.fill_normal(&mut rows, 1.0);
+        let targets: Vec<f32> = (0..n)
+            .map(|i| {
+                let x = &rows[i * dim..(i + 1) * dim];
+                crate::util::math::dot(x, &truth) as f32 + rng.normal_f32(0.0, noise)
+            })
+            .collect();
+        LinReg { dim, rows, targets, n, truth }
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        &self.rows[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+impl GradTask for LinReg {
+    fn name(&self) -> String {
+        format!("linreg-d{}-n{}", self.dim, self.n)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.dim];
+        rng.fill_normal(&mut p, 0.1);
+        p
+    }
+
+    fn minibatch_grad(
+        &self,
+        params: &[f32],
+        rng: &mut Rng,
+        batch: usize,
+        grad: &mut [f32],
+    ) -> f32 {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let b = batch.max(1);
+        let mut loss = 0.0f64;
+        for _ in 0..b {
+            let i = rng.below(self.n);
+            let x = self.row(i);
+            let err = crate::util::math::dot(x, params) as f32 - self.targets[i];
+            loss += 0.5 * (err as f64) * (err as f64);
+            crate::util::math::axpy(err / b as f32, x, grad);
+        }
+        (loss / b as f64) as f32
+    }
+
+    fn evaluate(&self, params: &[f32]) -> Eval {
+        let mut loss = 0.0f64;
+        for i in 0..self.n {
+            let err = crate::util::math::dot(self.row(i), params) as f32 - self.targets[i];
+            loss += 0.5 * (err as f64) * (err as f64);
+        }
+        Eval { loss: loss / self.n as f64, accuracy: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_is_near_optimal() {
+        let t = LinReg::new(8, 200, 0.01, 5);
+        let at_truth = t.evaluate(&t.truth).loss;
+        let mut rng = Rng::new(6);
+        let random = t.evaluate(&t.init_params(&mut rng)).loss;
+        assert!(at_truth < random / 10.0, "truth={at_truth} random={random}");
+    }
+
+    #[test]
+    fn finite_diff() {
+        let t = LinReg::new(10, 100, 0.1, 7);
+        super::super::finite_diff_check(&t, 11, 8, 8, 2e-2);
+    }
+
+    #[test]
+    fn full_batch_gradient_descent_converges() {
+        let t = LinReg::new(6, 100, 0.0, 8);
+        let mut rng = Rng::new(9);
+        let mut p = t.init_params(&mut rng);
+        let mut g = vec![0.0f32; 6];
+        for _ in 0..500 {
+            t.minibatch_grad(&p, &mut Rng::new(1), 100, &mut g);
+            crate::util::math::axpy(-0.05, &g.clone(), &mut p);
+        }
+        assert!(t.evaluate(&p).loss < 1e-2);
+    }
+}

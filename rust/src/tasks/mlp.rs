@@ -1,0 +1,294 @@
+//! Two-layer MLP classifier with hand-written backprop over the
+//! synthetic vision dataset — the rust-native model behind the
+//! Figure 2–4 sweeps (the paper's ViT-on-CIFAR role; the attention
+//! transformer itself lives in the JAX/PJRT path, `crate::lm`).
+//!
+//! Architecture: x → W1·x + b1 → ReLU → W2·h + b2 → softmax CE.
+//! Flat parameter layout: [W1 (h×in), b1 (h), W2 (c×h), b2 (c)].
+
+use super::data::{VisionData, IMG_DIM, NUM_CLASSES};
+use super::{Eval, GradTask};
+use crate::util::math::softmax;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// How training data is partitioned across workers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sharding {
+    /// every worker samples the full training set (the paper's main
+    /// setting, footnote 3)
+    Iid,
+    /// class-skewed: with probability `alpha` a worker samples only from
+    /// classes c with c ≡ worker (mod nworkers); with probability
+    /// 1−alpha it samples uniformly. alpha=0 ⇒ Iid, alpha=1 ⇒ fully
+    /// partitioned (the hardest non-i.i.d. regime).
+    ByClass { alpha: f64 },
+}
+
+pub struct MlpVision {
+    pub data: Arc<VisionData>,
+    pub hidden: usize,
+    pub input: usize,
+    pub classes: usize,
+    pub sharding: Sharding,
+    /// train-row indices grouped by label (for ByClass sampling)
+    by_class: Vec<Vec<usize>>,
+}
+
+impl MlpVision {
+    pub fn new(data: Arc<VisionData>, hidden: usize) -> Self {
+        Self::with_sharding(data, hidden, Sharding::Iid)
+    }
+
+    pub fn with_sharding(data: Arc<VisionData>, hidden: usize, sharding: Sharding) -> Self {
+        let mut by_class = vec![Vec::new(); NUM_CLASSES];
+        for i in 0..data.n_train {
+            by_class[data.train_y[i] as usize].push(i);
+        }
+        MlpVision { data, hidden, input: IMG_DIM, classes: NUM_CLASSES, sharding, by_class }
+    }
+
+    /// Draw one training-row index respecting the sharding policy.
+    fn draw_index(&self, rng: &mut Rng, worker: usize, nworkers: usize) -> usize {
+        match self.sharding {
+            Sharding::Iid => rng.below(self.data.n_train),
+            Sharding::ByClass { alpha } => {
+                if rng.uniform() < alpha && nworkers > 0 {
+                    // sample among this worker's resident classes
+                    let mine: Vec<usize> = (0..self.classes)
+                        .filter(|c| c % nworkers == worker % nworkers)
+                        .collect();
+                    let c = mine[rng.below(mine.len())];
+                    let rows = &self.by_class[c];
+                    rows[rng.below(rows.len())]
+                } else {
+                    rng.below(self.data.n_train)
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn w1_len(&self) -> usize {
+        self.hidden * self.input
+    }
+    #[inline]
+    fn w2_off(&self) -> usize {
+        self.w1_len() + self.hidden
+    }
+    #[inline]
+    fn b2_off(&self) -> usize {
+        self.w2_off() + self.classes * self.hidden
+    }
+
+    /// Forward pass for one sample; fills hidden activations and logits.
+    fn forward(&self, params: &[f32], x: &[f32], h: &mut [f32], logits: &mut [f32]) {
+        let (w1, rest) = params.split_at(self.w1_len());
+        let (b1, rest) = rest.split_at(self.hidden);
+        let (w2, b2) = rest.split_at(self.classes * self.hidden);
+        for j in 0..self.hidden {
+            let row = &w1[j * self.input..(j + 1) * self.input];
+            let z = crate::util::math::dot(row, x) as f32 + b1[j];
+            h[j] = z.max(0.0); // ReLU
+        }
+        for c in 0..self.classes {
+            let row = &w2[c * self.hidden..(c + 1) * self.hidden];
+            logits[c] = crate::util::math::dot(row, h) as f32 + b2[c];
+        }
+    }
+
+    /// Loss + gradient for one (x, y); accumulates into `grad`.
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: usize,
+        scale: f32,
+        grad: &mut [f32],
+        h: &mut [f32],
+        logits: &mut [f32],
+        probs: &mut [f32],
+    ) -> f32 {
+        self.forward(params, x, h, logits);
+        softmax(logits, probs);
+        let loss = -(probs[y].max(1e-12)).ln();
+        // dL/dlogit = p - onehot(y)
+        let w2 = &params[self.w2_off()..self.b2_off()];
+        let (gw2_all, gb2_zone) = {
+            let (head, tail) = grad.split_at_mut(self.b2_off());
+            (head, tail)
+        };
+        let (gw1_zone, g_rest) = gw2_all.split_at_mut(self.w1_len());
+        let (gb1_zone, gw2_zone) = g_rest.split_at_mut(self.hidden);
+        // backprop to hidden
+        let mut dh = vec![0.0f32; self.hidden];
+        for c in 0..self.classes {
+            let dlogit = (probs[c] - if c == y { 1.0 } else { 0.0 }) * scale;
+            gb2_zone[c] += dlogit;
+            let w2row = &w2[c * self.hidden..(c + 1) * self.hidden];
+            let gw2row = &mut gw2_zone[c * self.hidden..(c + 1) * self.hidden];
+            for j in 0..self.hidden {
+                gw2row[j] += dlogit * h[j];
+                dh[j] += dlogit * w2row[j];
+            }
+        }
+        // through ReLU into layer 1
+        for j in 0..self.hidden {
+            if h[j] > 0.0 {
+                let dz = dh[j];
+                gb1_zone[j] += dz;
+                let gw1row = &mut gw1_zone[j * self.input..(j + 1) * self.input];
+                crate::util::math::axpy(dz, x, gw1row);
+            }
+        }
+        loss
+    }
+}
+
+impl GradTask for MlpVision {
+    fn name(&self) -> String {
+        format!("mlp-vision-h{}", self.hidden)
+    }
+
+    fn dim(&self) -> usize {
+        self.b2_off() + self.classes
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.dim()];
+        // He init for W1, Xavier-ish for W2, zero biases.
+        let s1 = (2.0 / self.input as f32).sqrt();
+        let s2 = (1.0 / self.hidden as f32).sqrt();
+        let w1_len = self.w1_len();
+        let w2_off = self.w2_off();
+        let b2_off = self.b2_off();
+        rng.fill_normal(&mut p[..w1_len], s1);
+        let (_, tail) = p.split_at_mut(w2_off);
+        rng.fill_normal(&mut tail[..b2_off - w2_off], s2);
+        p
+    }
+
+    fn minibatch_grad(
+        &self,
+        params: &[f32],
+        rng: &mut Rng,
+        batch: usize,
+        grad: &mut [f32],
+    ) -> f32 {
+        self.minibatch_grad_worker(params, rng, batch, grad, 0, 0)
+    }
+
+    fn minibatch_grad_worker(
+        &self,
+        params: &[f32],
+        rng: &mut Rng,
+        batch: usize,
+        grad: &mut [f32],
+        worker: usize,
+        nworkers: usize,
+    ) -> f32 {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let b = batch.max(1);
+        let scale = 1.0 / b as f32;
+        let mut h = vec![0.0f32; self.hidden];
+        let mut logits = vec![0.0f32; self.classes];
+        let mut probs = vec![0.0f32; self.classes];
+        let mut loss = 0.0f64;
+        for _ in 0..b {
+            let i = self.draw_index(rng, worker, nworkers);
+            let (x, y) = self.data.train_row(i);
+            loss += self
+                .backward(params, x, y, scale, grad, &mut h, &mut logits, &mut probs)
+                as f64;
+        }
+        (loss / b as f64) as f32
+    }
+
+    fn evaluate(&self, params: &[f32]) -> Eval {
+        let mut h = vec![0.0f32; self.hidden];
+        let mut logits = vec![0.0f32; self.classes];
+        let mut probs = vec![0.0f32; self.classes];
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for i in 0..self.data.n_test {
+            let (x, y) = self.data.test_row(i);
+            self.forward(params, x, &mut h, &mut logits);
+            softmax(&logits, &mut probs);
+            loss += -(probs[y].max(1e-12) as f64).ln();
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == y {
+                correct += 1;
+            }
+        }
+        Eval {
+            loss: loss / self.data.n_test as f64,
+            accuracy: Some(correct as f64 / self.data.n_test as f64),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::lion::Lion;
+    use crate::optim::{LionParams, Optimizer};
+
+    fn small_task() -> MlpVision {
+        let data = Arc::new(VisionData::generate(400, 100, 0.3, 11));
+        MlpVision::new(data, 16)
+    }
+
+    #[test]
+    fn dim_matches_layout() {
+        let t = small_task();
+        assert_eq!(t.dim(), 16 * 256 + 16 + 10 * 16 + 10);
+    }
+
+    #[test]
+    fn finite_diff() {
+        let t = small_task();
+        super::super::finite_diff_check(&t, 21, 4, 10, 5e-2);
+    }
+
+    #[test]
+    fn byclass_sharding_skews_labels() {
+        let data = Arc::new(VisionData::generate(1000, 100, 0.3, 13));
+        let t = MlpVision::with_sharding(data, 8, Sharding::ByClass { alpha: 1.0 });
+        let mut rng = Rng::new(17);
+        let nworkers = 5;
+        // worker 0 with alpha=1 must only see classes ≡ 0 (mod 5)
+        for _ in 0..200 {
+            let i = t.draw_index(&mut rng, 0, nworkers);
+            let (_, y) = t.data.train_row(i);
+            assert_eq!(y % nworkers, 0, "worker 0 saw class {y}");
+        }
+        // alpha=0 is i.i.d. — all classes appear
+        let t = MlpVision::with_sharding(t.data.clone(), 8, Sharding::ByClass { alpha: 0.0 });
+        let mut seen = [false; 10];
+        for _ in 0..2000 {
+            let i = t.draw_index(&mut rng, 0, nworkers);
+            seen[t.data.train_row(i).1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn lion_training_beats_chance() {
+        let t = small_task();
+        let mut rng = Rng::new(31);
+        let mut p = t.init_params(&mut rng);
+        let mut lion = Lion::new(t.dim(), LionParams { weight_decay: 0.001, ..Default::default() });
+        let mut g = vec![0.0f32; t.dim()];
+        for _ in 0..300 {
+            t.minibatch_grad(&p, &mut rng, 32, &mut g);
+            lion.step(&mut p, &g, 1e-3);
+        }
+        let acc = t.evaluate(&p).accuracy.unwrap();
+        assert!(acc > 0.5, "acc={acc} (chance=0.1)");
+    }
+}

@@ -1,0 +1,96 @@
+//! Differentiable training tasks implemented natively in rust.
+//!
+//! These are the fast, deterministic substrates behind the Figure 2–4
+//! sweeps (the paper's CIFAR-10/ViT study is substituted with a synthetic
+//! vision task — see DESIGN.md "Environment-forced substitutions"). The
+//! PJRT/JAX transformer path (`crate::lm`) covers the large-scale
+//! Table 3/4 analogues; these tasks cover the optimizer-dynamics studies
+//! where thousands of training runs are needed.
+
+pub mod data;
+pub mod linreg;
+pub mod mlp;
+pub mod quadratic;
+
+use crate::util::Rng;
+
+/// Evaluation result on the task's held-out set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Eval {
+    pub loss: f64,
+    /// classification accuracy where applicable
+    pub accuracy: Option<f64>,
+}
+
+/// A stochastic-gradient task: the paper's `f(x; ξ)` oracle.
+///
+/// Deliberately NOT `Send + Sync`: the PJRT-backed [`crate::lm::LmTask`]
+/// wraps non-Send xla handles and runs through [`crate::cluster::run_sequential`];
+/// the threaded runner takes `dyn GradTask + Send + Sync` explicitly.
+pub trait GradTask {
+    fn name(&self) -> String;
+
+    /// Number of flat parameters d.
+    fn dim(&self) -> usize;
+
+    /// Draw initial parameters.
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32>;
+
+    /// Sample a minibatch with `rng` (the worker's private stream — the
+    /// paper's ξ_{i,t}), write ∇f(x; ξ) into `grad`, return the batch loss.
+    fn minibatch_grad(&self, params: &[f32], rng: &mut Rng, batch: usize, grad: &mut [f32])
+        -> f32;
+
+    /// Worker-aware variant for non-i.i.d. sharding (paper footnote 3:
+    /// the method "should be directly applicable to non-i.i.d data").
+    /// Default: ignore worker identity (i.i.d.). Tasks with data
+    /// partitioning override this; the cluster always calls it.
+    fn minibatch_grad_worker(
+        &self,
+        params: &[f32],
+        rng: &mut Rng,
+        batch: usize,
+        grad: &mut [f32],
+        _worker: usize,
+        _nworkers: usize,
+    ) -> f32 {
+        self.minibatch_grad(params, rng, batch, grad)
+    }
+
+    /// Deterministic held-out evaluation.
+    fn evaluate(&self, params: &[f32]) -> Eval;
+}
+
+#[cfg(test)]
+pub(crate) fn finite_diff_check(
+    task: &dyn GradTask,
+    seed: u64,
+    batch: usize,
+    probes: usize,
+    tol: f32,
+) {
+    // Gradient check: compare analytic grad against central differences on
+    // the SAME minibatch (replayed by reusing the rng seed).
+    let mut rng = Rng::new(seed);
+    let params = task.init_params(&mut rng);
+    let d = task.dim();
+    let mut grad = vec![0.0f32; d];
+    task.minibatch_grad(&params, &mut Rng::new(seed + 1), batch, &mut grad);
+    let mut probe_rng = Rng::new(seed + 2);
+    let eps = 1e-3f32;
+    for _ in 0..probes {
+        let k = probe_rng.below(d);
+        let mut pp = params.clone();
+        pp[k] += eps;
+        let mut scratch = vec![0.0f32; d];
+        let lp = task.minibatch_grad(&pp, &mut Rng::new(seed + 1), batch, &mut scratch);
+        pp[k] = params[k] - eps;
+        let lm = task.minibatch_grad(&pp, &mut Rng::new(seed + 1), batch, &mut scratch);
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (fd - grad[k]).abs() <= tol * (1.0 + fd.abs().max(grad[k].abs())),
+            "grad check failed at coord {k}: analytic={} fd={fd}",
+            grad[k]
+        );
+    }
+}

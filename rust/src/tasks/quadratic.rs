@@ -1,0 +1,144 @@
+//! Noisy quadratic task: f(x) = ½ (x−x*)ᵀ diag(a) (x−x*), stochastic
+//! gradient = ∇f + N(0, σ²I). The optimum and curvature are known in
+//! closed form, which makes this the substrate for the theory benches
+//! (Phase I/II, Theorems 4.4/4.6–4.8) where we need exact values of
+//! dist(x, F) and the KKT score.
+
+use super::{Eval, GradTask};
+use crate::util::Rng;
+
+pub struct Quadratic {
+    pub dim: usize,
+    /// diagonal curvature (condition number = max/min)
+    pub curvature: Vec<f32>,
+    /// optimum x*
+    pub optimum: Vec<f32>,
+    /// gradient noise σ
+    pub sigma: f32,
+    /// initial radius (how far x0 is from x*)
+    pub init_radius: f32,
+}
+
+impl Quadratic {
+    /// Ill-conditioned instance: curvature log-spaced in [1/κ, 1].
+    pub fn new(dim: usize, kappa: f32, sigma: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let curvature: Vec<f32> = (0..dim)
+            .map(|i| {
+                let t = i as f32 / (dim.max(2) - 1) as f32;
+                (1.0 / kappa).powf(1.0 - t)
+            })
+            .collect();
+        let mut optimum = vec![0.0f32; dim];
+        rng.fill_normal(&mut optimum, 1.0);
+        Quadratic { dim, curvature, optimum, sigma, init_radius: 5.0 }
+    }
+
+    /// True (noise-free) gradient at x.
+    pub fn true_grad(&self, params: &[f32], out: &mut [f32]) {
+        for ((o, (&a, &xs)), &x) in out
+            .iter_mut()
+            .zip(self.curvature.iter().zip(&self.optimum))
+            .zip(params)
+        {
+            *o = a * (x - xs);
+        }
+    }
+
+    /// True loss at x.
+    pub fn true_loss(&self, params: &[f32]) -> f64 {
+        params
+            .iter()
+            .zip(self.curvature.iter().zip(&self.optimum))
+            .map(|(&x, (&a, &xs))| 0.5 * a as f64 * ((x - xs) as f64).powi(2))
+            .sum()
+    }
+}
+
+impl GradTask for Quadratic {
+    fn name(&self) -> String {
+        format!("quadratic-d{}", self.dim)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.dim];
+        rng.fill_normal(&mut p, self.init_radius);
+        p
+    }
+
+    fn minibatch_grad(
+        &self,
+        params: &[f32],
+        rng: &mut Rng,
+        batch: usize,
+        grad: &mut [f32],
+    ) -> f32 {
+        self.true_grad(params, grad);
+        // batch of b i.i.d. noisy grads = true grad + N(0, σ²/b)
+        let eff_sigma = self.sigma / (batch.max(1) as f32).sqrt();
+        for g in grad.iter_mut() {
+            *g += rng.normal_f32(0.0, eff_sigma);
+        }
+        self.true_loss(params) as f32
+    }
+
+    fn evaluate(&self, params: &[f32]) -> Eval {
+        Eval { loss: self.true_loss(params), accuracy: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_zero_at_optimum() {
+        let q = Quadratic::new(8, 10.0, 0.1, 1);
+        assert!(q.true_loss(&q.optimum) < 1e-12);
+    }
+
+    #[test]
+    fn gradient_points_away_from_optimum() {
+        let q = Quadratic::new(4, 1.0, 0.0, 2);
+        let x: Vec<f32> = q.optimum.iter().map(|&o| o + 1.0).collect();
+        let mut g = vec![0.0; 4];
+        q.true_grad(&x, &mut g);
+        assert!(g.iter().all(|&gi| gi > 0.0));
+    }
+
+    #[test]
+    fn noise_shrinks_with_batch() {
+        let q = Quadratic::new(16, 1.0, 1.0, 3);
+        let x = vec![0.0f32; 16];
+        let mut g = vec![0.0f32; 16];
+        let reps = 200;
+        let mut var_b = |b: usize| -> f64 {
+            let mut rng = Rng::new(99);
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                q.minibatch_grad(&x, &mut rng, b, &mut g);
+                let mut tg = vec![0.0f32; 16];
+                q.true_grad(&x, &mut tg);
+                acc += g
+                    .iter()
+                    .zip(&tg)
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>();
+            }
+            acc / reps as f64
+        };
+        let v1 = var_b(1);
+        let v16 = var_b(16);
+        assert!(v16 < v1 / 8.0, "v1={v1} v16={v16}");
+    }
+
+    #[test]
+    fn finite_diff() {
+        let q = Quadratic::new(12, 5.0, 0.0, 4);
+        super::super::finite_diff_check(&q, 7, 4, 8, 2e-2);
+    }
+}

@@ -1,0 +1,202 @@
+//! In-repo property-testing mini-framework.
+//!
+//! The vendored crate set has no `proptest`, so this module provides the
+//! pieces we actually use: seeded generators, a `forall` driver that runs
+//! a property over many random cases, and failure reporting that prints
+//! the case index + seed so a failure replays deterministically:
+//!
+//! ```text
+//! property failed at case 37 (seed 0xDEADBEEF): <debug of input>
+//! ```
+//!
+//! Shrinking is deliberately simple: for `Vec`-shaped inputs we retry the
+//! property on prefixes to report a smaller witness when possible.
+
+use crate::util::Rng;
+use std::fmt::Debug;
+
+/// Default number of cases per property (overridable via DLION_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("DLION_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` random inputs drawn by `gen`. Panics with a
+/// replayable message on the first failure.
+pub fn forall<T: Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}): input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so it can
+/// explain *why* it failed.
+pub fn forall_explain<T: Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}): {why}\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Vec-input variant with prefix shrinking: on failure, finds the shortest
+/// failing prefix before panicking.
+pub fn forall_vec<T: Clone + Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> Vec<T>,
+    mut prop: impl FnMut(&[T]) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // Prefix shrink: binary search the shortest failing prefix.
+            let mut lo = 0usize; // prop passes on input[..lo] (empty passes or not, we check)
+            let mut hi = input.len(); // prop fails on input[..hi]
+            if prop(&input[..0]) {
+                while lo + 1 < hi {
+                    let mid = (lo + hi) / 2;
+                    if prop(&input[..mid]) {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+            } else {
+                hi = 0;
+            }
+            let witness = &input[..hi.max(1).min(input.len())];
+            panic!(
+                "property failed at case {case} (seed {seed:#x}); shrunk witness ({} of {} elems) = {witness:?}",
+                witness.len(),
+                input.len()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Vector of f32 drawn from N(0, sigma^2), random length in [min_len, max_len].
+pub fn gen_vec_normal(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    sigma: f32,
+) -> Vec<f32> {
+    let len = min_len + rng.below(max_len - min_len + 1);
+    let mut v = vec![0.0; len];
+    rng.fill_normal(&mut v, sigma);
+    v
+}
+
+/// Vector of signs in {-1, 0, +1} as i8 with a given zero probability.
+pub fn gen_vec_tern(rng: &mut Rng, min_len: usize, max_len: usize, p_zero: f64) -> Vec<i8> {
+    let len = min_len + rng.below(max_len - min_len + 1);
+    (0..len)
+        .map(|_| {
+            if rng.uniform() < p_zero {
+                0
+            } else if rng.next_u64() & 1 == 0 {
+                1
+            } else {
+                -1
+            }
+        })
+        .collect()
+}
+
+/// Vector of strict signs in {-1, +1} as i8.
+pub fn gen_vec_sign(rng: &mut Rng, min_len: usize, max_len: usize) -> Vec<i8> {
+    let len = min_len + rng.below(max_len - min_len + 1);
+    (0..len).map(|_| if rng.next_u64() & 1 == 0 { 1i8 } else { -1i8 }).collect()
+}
+
+/// Assert two float slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "{ctx}: mismatch at [{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially_true() {
+        forall(1, 32, |r| r.next_u64(), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 32, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk witness")]
+    fn forall_vec_shrinks() {
+        forall_vec(
+            3,
+            16,
+            |r| gen_vec_normal(r, 8, 32, 1.0),
+            |xs| xs.iter().all(|&x| x.abs() < 0.5), // will fail fast
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut r = Rng::new(4);
+        for _ in 0..100 {
+            let v = gen_vec_normal(&mut r, 3, 7, 1.0);
+            assert!((3..=7).contains(&v.len()));
+            let t = gen_vec_tern(&mut r, 0, 5, 0.3);
+            assert!(t.len() <= 5);
+            assert!(t.iter().all(|&x| (-1..=1).contains(&x)));
+            let s = gen_vec_sign(&mut r, 1, 4);
+            assert!(s.iter().all(|&x| x == 1 || x == -1));
+        }
+    }
+
+    #[test]
+    fn allclose_accepts_close() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-5, 1e-5, "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-5, "t");
+    }
+}

@@ -1,0 +1,164 @@
+//! Theory diagnostics from Section 4 / Appendix A.
+//!
+//! * Feasible set F = {x : ‖λx‖∞ ≤ 1} and dist(x, F) (Theorem 4.4 /
+//!   Phase I).
+//! * KKT surrogate score S(x) = ⟨∇f, sign(∇f) + λx⟩ (eq. 9 / Phase II).
+//! * Phase detector + trace recorder used by the `constraint_dynamics`
+//!   example.
+
+use crate::util::math::sign;
+
+/// Elementwise distance to the box F = {x : |λ x_k| ≤ 1}; returns the
+/// vector of per-coordinate violations max(|λx|−1, 0)/λ.
+pub fn box_violation(x: &[f32], lambda: f32) -> Vec<f32> {
+    x.iter()
+        .map(|&xi| {
+            let v = (lambda * xi).abs() - 1.0;
+            if v > 0.0 {
+                v / lambda
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// dist(x, F) in the L2 norm (Theorem 4.4 holds for any norm; L2 is what
+/// we plot).
+pub fn dist_to_feasible(x: &[f32], lambda: f32) -> f64 {
+    crate::util::math::l2_norm(&box_violation(x, lambda))
+}
+
+/// dist(x, F) in the L∞ norm.
+pub fn dist_to_feasible_linf(x: &[f32], lambda: f32) -> f64 {
+    crate::util::math::linf_norm(&box_violation(x, lambda))
+}
+
+/// Is x inside F?
+pub fn in_feasible(x: &[f32], lambda: f32) -> bool {
+    x.iter().all(|&xi| (lambda * xi).abs() <= 1.0 + 1e-6)
+}
+
+/// KKT surrogate score S(x) = ⟨∇f(x), sign(∇f(x)) + λx⟩ (paper eq. 9).
+/// Inside F this is ≥ 0 and S(x)=0 at KKT points (Proposition 4.5).
+pub fn kkt_score(grad: &[f32], x: &[f32], lambda: f32) -> f64 {
+    grad.iter()
+        .zip(x)
+        .map(|(&g, &xi)| g as f64 * (sign(g) as f64 + (lambda * xi) as f64))
+        .sum()
+}
+
+/// Phase of the Lion dynamics at x (Section 4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// outside F: constraint-enforcing (exponential approach)
+    ConstraintEnforcing,
+    /// inside F: objective-minimizing
+    Optimizing,
+}
+
+pub fn phase(x: &[f32], lambda: f32) -> Phase {
+    if in_feasible(x, lambda) {
+        Phase::Optimizing
+    } else {
+        Phase::ConstraintEnforcing
+    }
+}
+
+/// Verify the Phase-I contraction bound on a recorded distance trace:
+/// dist_t ≤ (1−ελ)^(t−s)·dist_s for all s ≤ t (up to `slack` multiplier,
+/// which absorbs the ±ε·Δ drift inside the bound's derivation).
+pub fn check_phase1_contraction(dists: &[f64], eps_lambda: f64, slack: f64) -> Result<(), String> {
+    let rate = 1.0 - eps_lambda;
+    for s in 0..dists.len() {
+        for t in s..dists.len() {
+            let bound = rate.powi((t - s) as i32) * dists[s] * slack + 1e-9;
+            if dists[t] > bound && dists[t] > 1e-6 {
+                return Err(format!(
+                    "contraction violated: dist[{t}]={} > (1-ελ)^{}·dist[{s}]={bound}",
+                    dists[t],
+                    t - s
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::lion::Lion;
+    use crate::optim::{LionParams, Optimizer};
+    use crate::tasks::quadratic::Quadratic;
+    use crate::tasks::GradTask;
+    use crate::util::Rng;
+
+    #[test]
+    fn violation_zero_inside_box() {
+        let lambda = 0.5;
+        let x = vec![1.9, -1.9, 0.0];
+        assert_eq!(dist_to_feasible(&x, lambda), 0.0);
+        assert!(in_feasible(&x, lambda));
+    }
+
+    #[test]
+    fn violation_positive_outside() {
+        let lambda = 1.0;
+        let x = vec![2.0, 0.0];
+        assert!((dist_to_feasible(&x, lambda) - 1.0).abs() < 1e-9);
+        assert_eq!(phase(&x, lambda), Phase::ConstraintEnforcing);
+    }
+
+    #[test]
+    fn kkt_score_nonnegative_inside_box() {
+        // Proposition A.5's intermediate fact: S_k(x) ≥ 0 when ‖λx‖∞ ≤ 1.
+        let mut rng = Rng::new(0x200);
+        let lambda = 0.7;
+        for _ in 0..200 {
+            let d = 16;
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            let x: Vec<f32> =
+                (0..d).map(|_| rng.uniform_in(-1.0, 1.0) / lambda).collect();
+            assert!(kkt_score(&g, &x, lambda) >= -1e-6);
+        }
+    }
+
+    #[test]
+    fn kkt_score_zero_at_boundary_kkt_point() {
+        // Case II of Prop 4.5: x_k = −sign(∂f)/λ zeroes S_k.
+        let lambda = 2.0;
+        let g = vec![3.0f32, -1.5];
+        let x = vec![-1.0 / lambda, 1.0 / lambda];
+        assert!(kkt_score(&g, &x, lambda).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lion_phase1_contracts_at_paper_rate() {
+        // Theorem 4.4: dist(x_t, F) ≤ (1−ελ)^{t−s} dist(x_s, F).
+        let lambda = 0.5f32;
+        let eps = 0.05f32;
+        let d = 32;
+        let q = Quadratic::new(d, 3.0, 0.0, 0x201);
+        let mut lion = Lion::new(d, LionParams { beta1: 0.9, beta2: 0.99, weight_decay: lambda });
+        let mut x = vec![20.0f32; d]; // far outside F (|λx| = 10)
+        let mut g = vec![0.0f32; d];
+        let mut dists = Vec::new();
+        for _ in 0..200 {
+            dists.push(dist_to_feasible(&x, lambda));
+            q.minibatch_grad(&x, &mut Rng::new(1), 8, &mut g);
+            lion.step(&mut x, &g, eps);
+        }
+        // slack 1.05 absorbs the ±ε drift of the binary update term
+        check_phase1_contraction(&dists, (eps * lambda) as f64, 1.05).unwrap();
+        // and the iterate ends inside F
+        assert!(in_feasible(&x, lambda + 1e-4));
+    }
+
+    #[test]
+    fn contraction_checker_rejects_flat_traces() {
+        let dists = vec![10.0, 10.0, 10.0, 10.0];
+        assert!(check_phase1_contraction(&dists, 0.1, 1.0).is_err());
+    }
+}

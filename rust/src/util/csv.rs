@@ -1,0 +1,70 @@
+//! Tiny CSV writer used by the metrics logger and bench harness.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) `path` and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, ncols: header.len() })
+    }
+
+    /// Write one row of string-formatted cells.
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(cells.len(), self.ncols, "csv row width mismatch");
+        writeln!(self.out, "{}", cells.join(","))
+    }
+
+    /// Write a row of f64 values with `{:.6}` formatting.
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = cells.iter().map(|x| format!("{x:.6}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Format helper: a `cells![a, b, c]`-like builder for mixed types.
+#[macro_export]
+macro_rules! csv_cells {
+    ($($x:expr),* $(,)?) => {
+        vec![$(format!("{}", $x)),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("dlion_csv_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&csv_cells!["x", 1]).unwrap();
+            w.row_f64(&[1.5, 2.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = content.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "x,1");
+        assert_eq!(lines[2], "1.500000,2.500000");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,227 @@
+//! Small numeric helpers shared across the crate.
+
+/// Elementwise sign with sign(0) = 0 (matches `jnp.sign` and the paper).
+#[inline]
+pub fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Integer sign of an i32 (-1, 0, 1).
+#[inline]
+pub fn isign(x: i32) -> i8 {
+    match x.cmp(&0) {
+        std::cmp::Ordering::Greater => 1,
+        std::cmp::Ordering::Less => -1,
+        std::cmp::Ordering::Equal => 0,
+    }
+}
+
+/// L2 norm.
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// L1 norm.
+pub fn l1_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| x.abs() as f64).sum()
+}
+
+/// L-infinity norm.
+pub fn linf_norm(xs: &[f32]) -> f64 {
+    xs.iter().fold(0.0f64, |acc, &x| acc.max(x.abs() as f64))
+}
+
+/// Dot product in f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// axpy: y += alpha * x.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Scale in place: x *= alpha.
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Percentile in [0, 100] via nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Numerically stable log-sum-exp over a slice.
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Softmax into `out` (stable).
+pub fn softmax(xs: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let lse = log_sum_exp(xs);
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = (x - lse).exp();
+    }
+}
+
+/// Ceil of integer log2(n+1): bits to represent integers 0..=n.
+pub fn bits_for_count(n: usize) -> u32 {
+    usize::BITS - n.leading_zeros()
+}
+
+/// Cosine learning-rate schedule with linear warmup, as used by the paper's
+/// CIFAR-10 experiments ("cosine learning rate scheduler").
+pub fn cosine_lr(step: usize, total: usize, warmup: usize, base: f64, min_frac: f64) -> f64 {
+    if total == 0 {
+        return base;
+    }
+    if step < warmup {
+        return base * (step + 1) as f64 / warmup.max(1) as f64;
+    }
+    let t = (step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64;
+    let cos = 0.5 * (1.0 + (std::f64::consts::PI * t.min(1.0)).cos());
+    base * (min_frac + (1.0 - min_frac) * cos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_matches_paper_convention() {
+        assert_eq!(sign(2.5), 1.0);
+        assert_eq!(sign(-0.1), -1.0);
+        assert_eq!(sign(0.0), 0.0);
+        assert_eq!(sign(-0.0), 0.0);
+    }
+
+    #[test]
+    fn isign_basic() {
+        assert_eq!(isign(5), 1);
+        assert_eq!(isign(-5), -1);
+        assert_eq!(isign(0), 0);
+    }
+
+    #[test]
+    fn norms() {
+        let v = [3.0, -4.0];
+        assert!((l2_norm(&v) - 5.0).abs() < 1e-12);
+        assert!((l1_norm(&v) - 7.0).abs() < 1e-12);
+        assert!((linf_norm(&v) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let a = [1.0, 2.0, 3.0];
+        let mut b = [4.0, 5.0, 6.0];
+        assert!((dot(&a, &b) - 32.0).abs() < 1e-12);
+        axpy(2.0, &a, &mut b);
+        assert_eq!(b, [6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((mean(&xs) - 3.0).abs() < 1e-12);
+        assert!((median(&xs) - 3.0).abs() < 1e-12);
+        assert!((median(&[1.0, 2.0, 3.0, 4.0]) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0f64.sqrt()).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let xs = [1.0, 2.0, 3.0, -100.0];
+        let mut out = [0.0; 4];
+        softmax(&xs, &mut out);
+        let s: f32 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(out[2] > out[1] && out[1] > out[0]);
+    }
+
+    #[test]
+    fn log_sum_exp_stable_for_large() {
+        let xs = [1000.0, 1000.0];
+        let lse = log_sum_exp(&xs);
+        assert!((lse - (1000.0 + 2f32.ln())).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bits_for_count_matches_table1() {
+        // Averaging downlink needs ceil(log2(N+1)) bits per element.
+        assert_eq!(bits_for_count(1), 1);
+        assert_eq!(bits_for_count(2), 2);
+        assert_eq!(bits_for_count(4), 3);
+        assert_eq!(bits_for_count(8), 4);
+        assert_eq!(bits_for_count(32), 6);
+    }
+
+    #[test]
+    fn cosine_lr_schedule() {
+        let base = 1.0;
+        // warmup ramps up
+        assert!(cosine_lr(0, 100, 10, base, 0.0) < cosine_lr(9, 100, 10, base, 0.0));
+        // decays to ~0 at the end
+        assert!(cosine_lr(99, 100, 10, base, 0.0) < 0.01);
+        // peak right after warmup
+        assert!((cosine_lr(10, 100, 10, base, 0.0) - base).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared utilities: deterministic RNG, mini-JSON, math/stats, CSV.
+//!
+//! These exist because the offline build environment vendors only the
+//! `xla` crate's dependency closure — no `rand`, `serde`, or `csv`
+//! crates — so the substrates are implemented in-repo (see DESIGN.md
+//! "Environment-forced substitutions").
+
+pub mod csv;
+pub mod json;
+pub mod math;
+pub mod rng;
+
+pub use rng::Rng;

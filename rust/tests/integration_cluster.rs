@@ -1,0 +1,205 @@
+//! Integration: strategies × cluster × tasks, end to end (no artifacts
+//! needed — the PJRT-artifact integration lives in integration_runtime.rs).
+
+use dlion::cluster::{run_sequential, run_threaded, TrainConfig};
+use dlion::optim::dist::{by_name, StrategyHyper, ALL_STRATEGIES};
+use dlion::tasks::data::VisionData;
+use dlion::tasks::mlp::MlpVision;
+use dlion::tasks::quadratic::Quadratic;
+use dlion::tasks::GradTask;
+use std::sync::Arc;
+
+fn vision_task() -> MlpVision {
+    let data = Arc::new(VisionData::generate(1500, 400, 1.6, 42));
+    MlpVision::new(data, 32)
+}
+
+#[test]
+fn dlion_matches_gadamw_on_vision_at_fraction_of_bandwidth() {
+    // The paper's headline (Fig. 2 + Table 1): comparable accuracy,
+    // ~30x less communication.
+    let task = vision_task();
+    let cfg = TrainConfig {
+        steps: 500,
+        batch_per_worker: 32,
+        base_lr: 1e-3,
+        eval_every: 0,
+        seed: 42,
+        ..Default::default()
+    };
+    let hp = StrategyHyper { weight_decay: 0.005, ..Default::default() };
+    let dlion = by_name("d-lion-mavo", &hp).unwrap();
+    let gadamw = by_name("g-adamw", &StrategyHyper { weight_decay: 0.0005, ..hp }).unwrap();
+    let r_dlion = run_sequential(&task, dlion.as_ref(), 4, &cfg);
+    let r_adamw = run_sequential(&task, gadamw.as_ref(), 4, &cfg);
+    let acc_dlion = r_dlion.final_eval.unwrap().accuracy.unwrap();
+    let acc_adamw = r_adamw.final_eval.unwrap().accuracy.unwrap();
+    assert!(acc_dlion > acc_adamw - 0.05, "dlion {acc_dlion} vs adamw {acc_adamw}");
+    let comm_ratio = (r_adamw.total_uplink() + r_adamw.total_downlink()) as f64
+        / (r_dlion.total_uplink() + r_dlion.total_downlink()) as f64;
+    assert!(comm_ratio > 20.0, "communication ratio only {comm_ratio:.1}x");
+}
+
+#[test]
+fn dlion_beats_compression_baselines_at_matched_bandwidth() {
+    // Fig. 4's shape: at ~matched (low) bandwidth D-Lion outperforms
+    // TernGrad / GradDrop / DGC.
+    let task = vision_task();
+    let cfg = TrainConfig {
+        steps: 500,
+        batch_per_worker: 32,
+        base_lr: 1e-3,
+        eval_every: 0,
+        seed: 52,
+        ..Default::default()
+    };
+    let hp = StrategyHyper { weight_decay: 0.005, ..Default::default() };
+    let dlion = by_name("d-lion-mavo", &hp).unwrap();
+    let acc_dlion = run_sequential(&task, dlion.as_ref(), 4, &cfg)
+        .final_eval
+        .unwrap()
+        .accuracy
+        .unwrap();
+    for name in ["terngrad", "graddrop", "dgc"] {
+        let hp_c = StrategyHyper { weight_decay: 0.0005, ..Default::default() };
+        let cfg_c = TrainConfig { base_lr: 5e-3, ..cfg.clone() };
+        let strat = by_name(name, &hp_c).unwrap();
+        let acc = run_sequential(&task, strat.as_ref(), 4, &cfg_c)
+            .final_eval
+            .unwrap()
+            .accuracy
+            .unwrap();
+        assert!(
+            acc_dlion > acc + 0.03,
+            "{name}: dlion {acc_dlion:.3} should clearly beat {acc:.3}"
+        );
+    }
+}
+
+#[test]
+fn replicas_identical_for_every_strategy_threaded() {
+    // The replicated-parameter invariant over the real threaded fabric.
+    for name in ALL_STRATEGIES {
+        let task: Arc<dyn GradTask + Send + Sync> = Arc::new(Quadratic::new(200, 5.0, 0.5, 9));
+        let hp = StrategyHyper::default();
+        let strat = by_name(name, &hp).unwrap();
+        let cfg = TrainConfig {
+            steps: 25,
+            batch_per_worker: 4,
+            base_lr: 5e-3,
+            eval_every: 0,
+            seed: 1,
+            check_replicas: true, // asserts equality at join
+            ..Default::default()
+        };
+        let (_res, stats) = run_threaded(task, strat.as_ref(), 3, &cfg);
+        assert!(stats.uplink() > 0 && stats.downlink() > 0, "{name} moved no bytes");
+    }
+}
+
+#[test]
+fn bandwidth_accounting_matches_analytic_table1() {
+    // Invariant 8: transport-counted bytes == analytic prediction, for
+    // the fixed-rate strategies (DGC's warmup makes it time-varying).
+    let d = 10_000;
+    for (name, n) in [
+        ("d-lion-mavo", 5usize),
+        ("d-lion-avg", 4),
+        ("d-signum-mavo", 3),
+        ("g-lion", 4),
+        ("g-adamw", 2),
+        ("terngrad", 4),
+    ] {
+        let task: Arc<dyn GradTask + Send + Sync> = Arc::new(Quadratic::new(d, 5.0, 0.5, 2));
+        let hp = StrategyHyper::default();
+        let strat = by_name(name, &hp).unwrap();
+        let steps = 4;
+        let cfg = TrainConfig {
+            steps,
+            batch_per_worker: 2,
+            base_lr: 1e-3,
+            eval_every: 0,
+            seed: 5,
+            ..Default::default()
+        };
+        let (_res, stats) = run_threaded(task, strat.as_ref(), n, &cfg);
+        let up_bits_per_param = stats.uplink() as f64 * 8.0 / (d * n * steps) as f64;
+        let down_bits_per_param = stats.downlink() as f64 * 8.0 / (d * n * steps) as f64;
+        let up_pred = strat.uplink_bits_per_param(n);
+        let down_pred = strat.downlink_bits_per_param(n);
+        // small slack for frame headers (tag/N/scaler bytes)
+        assert!(
+            (up_bits_per_param - up_pred).abs() / up_pred < 0.02,
+            "{name}: uplink {up_bits_per_param:.3} vs predicted {up_pred:.3}"
+        );
+        assert!(
+            (down_bits_per_param - down_pred).abs() / down_pred < 0.02,
+            "{name}: downlink {down_bits_per_param:.3} vs predicted {down_pred:.3}"
+        );
+    }
+}
+
+#[test]
+fn worker_scaling_shapes_match_figure3() {
+    // Fig. 3's qualitative claim: accuracy holds (degrades slowly) as k
+    // grows; MaVo stays within a few points of G-Lion at every k.
+    let task = vision_task();
+    let hp = StrategyHyper { weight_decay: 0.005, ..Default::default() };
+    let mavo = by_name("d-lion-mavo", &hp).unwrap();
+    let glion = by_name("g-lion", &hp).unwrap();
+    for k in [4usize, 16] {
+        let cfg = TrainConfig {
+            steps: 400,
+            batch_per_worker: 32,
+            base_lr: 5e-4,
+            eval_every: 0,
+            seed: 62,
+            ..Default::default()
+        };
+        let a_mavo = run_sequential(&task, mavo.as_ref(), k, &cfg)
+            .final_eval
+            .unwrap()
+            .accuracy
+            .unwrap();
+        let a_glion = run_sequential(&task, glion.as_ref(), k, &cfg)
+            .final_eval
+            .unwrap()
+            .accuracy
+            .unwrap();
+        assert!(
+            (a_mavo - a_glion).abs() < 0.08,
+            "k={k}: mavo {a_mavo:.3} vs g-lion {a_glion:.3}"
+        );
+        assert!(a_mavo > 0.5, "k={k}: mavo collapsed to {a_mavo:.3}");
+    }
+}
+
+#[test]
+fn config_file_end_to_end() {
+    // configs/*.toml drive the CLI path.
+    let exp = dlion::config::Experiment::parse(
+        r#"
+name = "it"
+task = "mlp-vision"
+strategies = ["d-lion-avg"]
+workers = [2]
+seeds = [1]
+
+[train]
+steps = 60
+lr = 0.001
+eval_every = 0
+
+[task]
+hidden = 16
+train_n = 400
+test_n = 100
+noise = 1.0
+"#,
+    )
+    .unwrap();
+    let task = exp.build_task(1).unwrap();
+    let strat = by_name(&exp.strategies[0], &exp.hyper).unwrap();
+    let res = run_sequential(task.as_ref(), strat.as_ref(), exp.workers[0], &exp.train);
+    assert!(res.final_eval.unwrap().accuracy.unwrap() > 0.15);
+}

@@ -1,0 +1,198 @@
+//! Cross-module property tests over the DESIGN.md invariant list,
+//! using the in-repo testing mini-framework (no proptest offline).
+
+use dlion::comm::{dense, intavg, sign, sparse, tern};
+use dlion::optim::dist::dlion::{Aggregation, DLion};
+use dlion::optim::dist::{by_name, Strategy, StrategyHyper};
+use dlion::optim::lion::bsign;
+use dlion::optim::{LionParams, Optimizer};
+use dlion::testing::{forall, forall_explain, gen_vec_normal, gen_vec_sign, gen_vec_tern};
+use dlion::theory;
+use dlion::util::Rng;
+
+#[test]
+fn invariant1_codec_roundtrips() {
+    forall(0xA01, 200, |r| gen_vec_sign(r, 0, 4096), |s| {
+        sign::unpack(&sign::pack(s), s.len()) == *s
+    });
+    forall(0xA02, 200, |r| gen_vec_tern(r, 0, 4096, 0.3), |t| {
+        tern::unpack(&tern::pack(t), t.len()) == *t
+    });
+    forall(0xA03, 200, |r| gen_vec_normal(r, 0, 2048, 100.0), |v| {
+        dense::unpack(&dense::pack(v)) == *v
+    });
+    forall(0xA04, 100, |r| {
+        let n = 1 + r.below(32);
+        let d = r.below(512);
+        let sums: Vec<i32> = (0..d)
+            .map(|_| (0..n).map(|_| if r.next_u64() & 1 == 0 { 1 } else { -1 }).sum())
+            .collect();
+        (n, sums)
+    }, |(n, sums)| intavg::unpack(&intavg::pack(sums, *n), sums.len(), *n) == *sums);
+}
+
+#[test]
+fn invariant2_packed_sizes_exact() {
+    forall_explain(0xA05, 100, |r| r.below(100_000), |&d| {
+        let want = d.div_ceil(8);
+        let got = sign::packed_len(d);
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("sign packed_len({d}) = {got}, want {want}"))
+        }
+    });
+    forall_explain(0xA06, 100, |r| (1 + r.below(64), r.below(10_000)), |&(n, d)| {
+        let bits = dlion::util::math::bits_for_count(n) as usize;
+        let want = (d * bits).div_ceil(8);
+        let got = intavg::packed_len(d, n);
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("intavg packed_len({d},{n}) = {got}, want {want}"))
+        }
+    });
+}
+
+#[test]
+fn invariant5_majority_vote_odd_under_flip() {
+    // sign(Σ δ) must be an odd function of the worker updates.
+    let hp = LionParams::default();
+    forall(0xA07, 50, |r| {
+        let n = 2 + r.below(6);
+        let d = 1 + r.below(200);
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| gen_vec_normal(r, d, d, 1.0)).collect();
+        grads
+    }, |grads| {
+        let n = grads.len();
+        let d = grads[0].len();
+        let run = |sgn: f32| -> Vec<u8> {
+            let strat = DLion::new(hp, Aggregation::MajorityVote);
+            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+            let mut server = strat.make_server(n, d);
+            let ups: Vec<_> = workers
+                .iter_mut()
+                .zip(grads)
+                .map(|(w, g)| {
+                    let gg: Vec<f32> = g.iter().map(|&x| sgn * x).collect();
+                    w.encode(&gg, 1e-3, 0)
+                })
+                .collect();
+            server.aggregate(&ups, 1e-3, 0)
+        };
+        let pos = run(1.0);
+        let neg = run(-1.0);
+        // decode both (tag-aware) and compare as trits
+        let decode = |msg: &[u8]| -> Vec<i8> {
+            match msg[0] {
+                1 => sign::unpack(&msg[1..], d),
+                2 => tern::unpack(&msg[1..], d),
+                t => panic!("tag {t}"),
+            }
+        };
+        let a = decode(&pos);
+        let b = decode(&neg);
+        // bsign(0)=+1 flips to -1 under negation, so strict oddness holds
+        // except where the blend is exactly 0 — measure-zero for normals.
+        a.iter().zip(&b).all(|(&x, &y)| x == -y)
+    });
+}
+
+#[test]
+fn invariant6_7_phase1_contraction_and_absorption() {
+    // For iterates outside F, one Lion step contracts the distance by
+    // (1−ελ) (up to the ε·Δ drift); once inside F with ελ small, the
+    // iterate stays inside (Thm 4.4's absorption).
+    forall_explain(0xA08, 30, |r| {
+        let d = 4 + r.below(64);
+        let lambda = 0.2 + r.uniform() as f32 * 0.8;
+        let eps = 0.01 + r.uniform() as f32 * 0.05;
+        let x0: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 10.0 / lambda)).collect();
+        (lambda, eps, x0)
+    }, |(lambda, eps, x0)| {
+        let d = x0.len();
+        let mut lion = dlion::optim::lion::Lion::new(
+            d,
+            LionParams { beta1: 0.9, beta2: 0.99, weight_decay: *lambda },
+        );
+        let mut x = x0.clone();
+        let mut rng = Rng::new(1);
+        let mut g = vec![0.0f32; d];
+        let mut dists = Vec::new();
+        let mut entered_at = None;
+        for t in 0..300 {
+            dists.push(theory::dist_to_feasible(&x, *lambda));
+            if entered_at.is_none() && theory::in_feasible(&x, *lambda) {
+                entered_at = Some(t);
+            }
+            rng.fill_normal(&mut g, 1.0);
+            lion.step(&mut x, &g, *eps);
+        }
+        theory::check_phase1_contraction(&dists, (*eps * *lambda) as f64, 1.1)
+            .map_err(|e| format!("λ={lambda} ε={eps}: {e}"))?;
+        // absorption: after entering, never exits by more than the ε slab
+        if let Some(s) = entered_at {
+            for (t, &dist) in dists.iter().enumerate().skip(s) {
+                if dist > (*eps * (1.0 + *lambda)) as f64 + 1e-6 {
+                    return Err(format!("exited F at t={t}: dist={dist}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_topk_threshold_property() {
+    // Every kept entry's |value| >= every dropped entry's |value|.
+    forall(0xA09, 100, |r| gen_vec_normal(r, 1, 500, 1.0), |v| {
+        let k = (v.len() / 7).max(1);
+        let entries = sparse::top_k(v, k);
+        let kept: std::collections::HashSet<usize> =
+            entries.iter().map(|e| e.index as usize).collect();
+        let min_kept = entries.iter().map(|e| e.value.abs()).fold(f32::INFINITY, f32::min);
+        v.iter()
+            .enumerate()
+            .filter(|(i, _)| !kept.contains(i))
+            .all(|(_, &x)| x.abs() <= min_kept + 1e-6)
+    });
+}
+
+#[test]
+fn strategy_determinism_same_seed_same_bytes() {
+    // Any strategy must be a deterministic function of (seed, grads):
+    // identical runs produce identical downlinks (TernGrad's ternarization
+    // rng is seeded per worker id).
+    let hp = StrategyHyper::default();
+    for name in ["d-lion-mavo", "d-lion-avg", "terngrad", "dgc", "g-lion"] {
+        forall(0xA0A, 10, |r| {
+            let d = 1 + r.below(128);
+            let n = 1 + r.below(4);
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| gen_vec_normal(r, d, d, 1.0)).collect();
+            grads
+        }, |grads| {
+            let n = grads.len();
+            let d = grads[0].len();
+            let run = || {
+                let strat = by_name(name, &hp).unwrap();
+                let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+                let mut server = strat.make_server(n, d);
+                let ups: Vec<_> = workers
+                    .iter_mut()
+                    .zip(grads)
+                    .map(|(w, g)| w.encode(g, 1e-3, 0))
+                    .collect();
+                server.aggregate(&ups, 1e-3, 0)
+            };
+            run() == run()
+        });
+    }
+}
+
+#[test]
+fn bsign_never_zero() {
+    forall(0xA0B, 500, |r| r.normal_f32(0.0, 1e-20), |&x| {
+        let s = bsign(x);
+        s == 1.0 || s == -1.0
+    });
+}

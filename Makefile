@@ -1,0 +1,32 @@
+# Distributed Lion — top-level convenience targets.
+#
+# `make verify` mirrors the CI tier-1 gate exactly; run it before
+# pushing. Everything cargo-related runs from rust/.
+
+CARGO_DIR := rust
+
+.PHONY: verify build test fmt fmt-check bench-quick clean
+
+## tier-1 verify: what CI runs (ROADMAP.md)
+verify:
+	cd $(CARGO_DIR) && cargo build --release && cargo test -q
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+fmt:
+	cd $(CARGO_DIR) && cargo fmt
+
+fmt-check:
+	cd $(CARGO_DIR) && cargo fmt --check
+
+## CI-speed smoke pass over the paper-table benches
+bench-quick:
+	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench table1_bandwidth -- --quick
+	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench hotpath -- --quick
+
+clean:
+	cd $(CARGO_DIR) && cargo clean

@@ -164,14 +164,26 @@ pub fn run_threaded(
         .collect();
     drop(loss_tx);
 
-    // Server loop on the current thread.
+    // Server loop on the current thread. Per-step bytes are CommStats
+    // deltas taken around the round: after `gather` returns, every
+    // step-`s` uplink has been recorded and no step-`s+1` uplink can
+    // exist (workers block on the downlink); after `broadcast` returns,
+    // all step-`s` downlink bytes are recorded — so the deltas are
+    // race-free and equal the sequential-mode accounting exactly.
     let mut server = strategy.make_server(nworkers, d);
+    let mut step_bytes: Vec<(u64, u64)> = Vec::with_capacity(cfg.steps);
+    let (mut prev_up, mut prev_down) = (0u64, 0u64);
     let t0 = std::time::Instant::now();
     for step in 0..cfg.steps {
         let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
         let uplinks = server_tx.gather().expect("gather failed");
+        let up_now = stats.uplink();
         let downlink = server.aggregate(&uplinks, lr, step);
         server_tx.broadcast(&downlink).expect("broadcast failed");
+        let down_now = stats.downlink();
+        step_bytes.push((up_now - prev_up, down_now - prev_down));
+        prev_up = up_now;
+        prev_down = down_now;
     }
 
     let mut result = RunResult::new(task.name(), strategy.name(), nworkers);
@@ -182,13 +194,17 @@ pub fn run_threaded(
         per_step[step].1 += 1;
     }
     for (step, (sum, count)) in per_step.into_iter().enumerate() {
+        let (uplink_bytes, downlink_bytes) = step_bytes[step];
+        // round through f32 exactly as the sequential recorder does, so
+        // the two modes' histories stay comparable field-for-field
+        let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
         result.push(StepRecord {
             step,
-            lr: cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac),
+            lr: lr as f64,
             train_loss: sum / count.max(1) as f64,
             eval: None,
-            uplink_bytes: 0, // tracked by CommStats in threaded mode
-            downlink_bytes: 0,
+            uplink_bytes,
+            downlink_bytes,
         });
     }
     let mut final_params: Vec<Vec<f32>> = Vec::new();
@@ -251,6 +267,12 @@ mod tests {
         let seq_down: u64 = seq.history.iter().map(|r| r.downlink_bytes).sum();
         assert_eq!(stats.uplink(), seq_up);
         assert_eq!(stats.downlink(), seq_down);
+        // ...and per-step histories must agree, not just the totals
+        assert_eq!(seq.history.len(), thr.history.len());
+        for (s, t) in seq.history.iter().zip(&thr.history) {
+            assert_eq!(s.uplink_bytes, t.uplink_bytes, "step {} uplink", s.step);
+            assert_eq!(s.downlink_bytes, t.downlink_bytes, "step {} downlink", s.step);
+        }
     }
 
     #[test]

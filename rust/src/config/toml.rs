@@ -189,9 +189,9 @@ impl<'a> Section<'a> {
 
 /// Get a section view (empty map if absent).
 pub fn section<'a>(doc: &'a Doc, name: &'a str) -> Section<'a> {
-    static EMPTY: once_cell::sync::Lazy<BTreeMap<String, Value>> =
-        once_cell::sync::Lazy::new(BTreeMap::new);
-    Section { name, map: doc.get(name).unwrap_or(&EMPTY) }
+    // no `once_cell` offline: std's OnceLock provides the lazy empty map
+    static EMPTY: std::sync::OnceLock<BTreeMap<String, Value>> = std::sync::OnceLock::new();
+    Section { name, map: doc.get(name).unwrap_or_else(|| EMPTY.get_or_init(BTreeMap::new)) }
 }
 
 #[cfg(test)]

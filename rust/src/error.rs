@@ -1,33 +1,56 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled: the offline vendored crate set
+//! has no `thiserror` — see DESIGN.md "Environment-forced substitutions").
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the Distributed Lion library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum DlionError {
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("codec error: {0}")]
     Codec(String),
-
-    #[error("cluster error: {0}")]
     Cluster(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
     Xla(String),
+}
+
+impl fmt::Display for DlionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DlionError::Config(m) => write!(f, "config error: {m}"),
+            DlionError::Codec(m) => write!(f, "codec error: {m}"),
+            DlionError::Cluster(m) => write!(f, "cluster error: {m}"),
+            DlionError::Runtime(m) => write!(f, "runtime error: {m}"),
+            DlionError::Artifact(m) => write!(f, "artifact error: {m}"),
+            DlionError::Io(e) => write!(f, "io error: {e}"),
+            DlionError::Json(e) => write!(f, "json error: {e}"),
+            DlionError::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DlionError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DlionError::Io(e) => Some(e),
+            DlionError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DlionError {
+    fn from(e: std::io::Error) -> Self {
+        DlionError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for DlionError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        DlionError::Json(e)
+    }
 }
 
 impl From<xla::Error> for DlionError {
@@ -37,3 +60,28 @@ impl From<xla::Error> for DlionError {
 }
 
 pub type Result<T> = std::result::Result<T, DlionError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_thiserror_format() {
+        assert_eq!(
+            DlionError::Config("bad key".into()).to_string(),
+            "config error: bad key"
+        );
+        let io: DlionError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(io.to_string().starts_with("io error: "));
+    }
+
+    #[test]
+    fn source_chains_io() {
+        use std::error::Error;
+        let e: DlionError =
+            std::io::Error::new(std::io::ErrorKind::Other, "inner").into();
+        assert!(e.source().is_some());
+        assert!(DlionError::Codec("x".into()).source().is_none());
+    }
+}

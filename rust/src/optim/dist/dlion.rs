@@ -1,0 +1,273 @@
+//! Distributed Lion (paper Algorithm 1) and the D-SIGNUM ablation.
+//!
+//! Worker: keep a private Lion momentum; each round send the *binary*
+//! update δ_i = sign(β1·m + (1−β1)·g) as a 1-bit frame, then advance the
+//! momentum (the fused [`Lion::encode_fused`] hot path does both in one
+//! pass). Server: accumulate the votes S = Σ_i δ_i and broadcast either
+//! sign(S) (majority vote) or S itself log(N)-bit-packed (average).
+//! Worker apply: x ← x − lr·(Δ + λx) with Δ the decoded aggregate —
+//! exactly [`Lion::apply_aggregated`], so a 1-worker D-Lion reproduces
+//! single-node Lion bit-for-bit.
+//!
+//! D-SIGNUM is the same round with Signum's single-β momentum
+//! (Bernstein et al. 2018), the paper's Figure-4 ablation.
+
+use super::{
+    frame, sign_family_downlink_bits, ServerLogic, SignVoteServer, Strategy, UpdateDecoder,
+    WorkerLogic, TAG_SIGN,
+};
+use crate::comm::sign;
+use crate::optim::lion::Lion;
+use crate::optim::signum::Signum;
+use crate::optim::LionParams;
+
+/// Server-side aggregation rule for 1-bit worker updates (Table 1's two
+/// Distributed-Lion rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregation {
+    /// Δ = sign(Σ δ_i): 1 bit/param downlink (odd N; 1.6 with even-N ties).
+    MajorityVote,
+    /// Δ = (Σ δ_i)/N: ⌈log2(N+1)⌉ bits/param downlink.
+    Average,
+}
+
+/// Distributed Lion strategy (factory).
+pub struct DLion {
+    pub hp: LionParams,
+    pub agg: Aggregation,
+}
+
+impl DLion {
+    pub fn new(hp: LionParams, agg: Aggregation) -> Self {
+        DLion { hp, agg }
+    }
+}
+
+struct DLionWorker {
+    lion: Lion,
+    weight_decay: f32,
+    decoder: UpdateDecoder,
+}
+
+impl WorkerLogic for DLionWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, _step: usize) -> Vec<u8> {
+        // One fused pass: blend-sign bits packed + momentum advanced.
+        frame(TAG_SIGN, &self.lion.encode_fused(grads))
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
+        let update = self.decoder.decode(downlink);
+        Lion::apply_aggregated(params, update, lr, self.weight_decay);
+    }
+}
+
+impl Strategy for DLion {
+    fn name(&self) -> String {
+        match self.agg {
+            Aggregation::MajorityVote => "d-lion-mavo".into(),
+            Aggregation::Average => "d-lion-avg".into(),
+        }
+    }
+
+    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(DLionWorker {
+            lion: Lion::new(dim, self.hp),
+            weight_decay: self.hp.weight_decay,
+            decoder: UpdateDecoder::new(dim),
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(SignVoteServer::new(nworkers, dim, self.agg))
+    }
+
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        1.0
+    }
+
+    fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
+        sign_family_downlink_bits(self.agg, nworkers)
+    }
+}
+
+/// D-SIGNUM: Signum workers behind the same vote/average servers.
+pub struct DSignum {
+    pub beta: f32,
+    pub weight_decay: f32,
+    pub agg: Aggregation,
+}
+
+impl DSignum {
+    pub fn new(beta: f32, weight_decay: f32, agg: Aggregation) -> Self {
+        DSignum { beta, weight_decay, agg }
+    }
+}
+
+struct DSignumWorker {
+    signum: Signum,
+    weight_decay: f32,
+    blend: Vec<f32>,
+    decoder: UpdateDecoder,
+}
+
+impl WorkerLogic for DSignumWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, _step: usize) -> Vec<u8> {
+        // Signum signs the freshly-advanced momentum.
+        self.signum.update_and_peek(grads, &mut self.blend);
+        frame(TAG_SIGN, &sign::pack_f32(&self.blend))
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
+        let update = self.decoder.decode(downlink);
+        Lion::apply_aggregated(params, update, lr, self.weight_decay);
+    }
+}
+
+impl Strategy for DSignum {
+    fn name(&self) -> String {
+        match self.agg {
+            Aggregation::MajorityVote => "d-signum-mavo".into(),
+            Aggregation::Average => "d-signum-avg".into(),
+        }
+    }
+
+    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(DSignumWorker {
+            signum: Signum::new(dim, self.beta, self.weight_decay),
+            weight_decay: self.weight_decay,
+            blend: vec![0.0; dim],
+            decoder: UpdateDecoder::new(dim),
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(SignVoteServer::new(nworkers, dim, self.agg))
+    }
+
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        1.0
+    }
+
+    fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
+        sign_family_downlink_bits(self.agg, nworkers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Optimizer;
+    use crate::util::Rng;
+
+    #[test]
+    fn one_worker_dlion_equals_single_node_lion() {
+        // With N = 1 the vote is the worker's own update, so the round
+        // must reproduce Optimizer::step bit-for-bit.
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.01 };
+        let d = 67;
+        for agg in [Aggregation::MajorityVote, Aggregation::Average] {
+            let strat = DLion::new(hp, agg);
+            let mut worker = strat.make_worker(0, d);
+            let mut server = strat.make_server(1, d);
+            let mut lion = Lion::new(d, hp);
+            let mut pa = vec![0.3f32; d];
+            let mut pb = pa.clone();
+            let mut rng = Rng::new(0xD1);
+            for step in 0..40 {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                let up = worker.encode(&g, 0.01, step);
+                let down = server.aggregate(&[up], 0.01, step);
+                worker.apply(&mut pa, &down, 0.01, step);
+                lion.step(&mut pb, &g, 0.01);
+            }
+            assert_eq!(pa, pb, "agg {agg:?} diverged from single-node Lion");
+        }
+    }
+
+    #[test]
+    fn mavo_downlink_is_binary_for_odd_n_ternary_for_even() {
+        let hp = LionParams::default();
+        let d = 50;
+        let strat = DLion::new(hp, Aggregation::MajorityVote);
+        let mut rng = Rng::new(0xD2);
+        for n in [1usize, 2, 3, 4, 5] {
+            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+            let mut server = strat.make_server(n, d);
+            let ups: Vec<_> = workers
+                .iter_mut()
+                .map(|w| {
+                    let mut g = vec![0.0f32; d];
+                    rng.fill_normal(&mut g, 1.0);
+                    w.encode(&g, 1e-3, 0)
+                })
+                .collect();
+            let down = server.aggregate(&ups, 1e-3, 0);
+            let expect = if n % 2 == 1 { super::super::TAG_SIGN } else { super::super::TAG_TERN };
+            assert_eq!(down[0], expect, "n={n}");
+            assert_eq!(down.len(), 1 + if n % 2 == 1 { d.div_ceil(8) } else { d.div_ceil(5) });
+        }
+    }
+
+    #[test]
+    fn avg_downlink_carries_exact_vote_sums() {
+        let hp = LionParams::default();
+        let d = 33;
+        let n = 4;
+        let strat = DLion::new(hp, Aggregation::Average);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut rng = Rng::new(0xD3);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect();
+        let ups: Vec<_> = workers
+            .iter_mut()
+            .zip(&grads)
+            .map(|(w, g)| w.encode(g, 1e-3, 0))
+            .collect();
+        // reference votes from the individual 1-bit frames
+        let mut votes = vec![0i32; d];
+        for up in &ups {
+            crate::comm::sign::accumulate_votes(&up[1..], &mut votes);
+        }
+        let down = server.aggregate(&ups, 1e-3, 0);
+        assert_eq!(down[0], super::super::TAG_INTAVG);
+        let got = crate::comm::intavg::unpack(&down[3..], d, n);
+        assert_eq!(got, votes);
+    }
+
+    #[test]
+    fn signum_collapses_to_lion_with_equal_betas() {
+        // D-SIGNUM(β) must equal D-Lion(β1=β2=β) trajectory-for-trajectory.
+        let beta = 0.95f32;
+        let d = 29;
+        let n = 3;
+        let lion_hp = LionParams { beta1: beta, beta2: beta, weight_decay: 0.005 };
+        let dl = DLion::new(lion_hp, Aggregation::MajorityVote);
+        let ds = DSignum::new(beta, 0.005, Aggregation::MajorityVote);
+        let mut wa: Vec<_> = (0..n).map(|i| dl.make_worker(i, d)).collect();
+        let mut wb: Vec<_> = (0..n).map(|i| ds.make_worker(i, d)).collect();
+        let mut sa = dl.make_server(n, d);
+        let mut sb = ds.make_server(n, d);
+        let mut pa: Vec<Vec<f32>> = vec![vec![0.2f32; d]; n];
+        let mut pb = pa.clone();
+        let mut rng = Rng::new(0xD4);
+        for step in 0..30 {
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut g = vec![0.0f32; d];
+                    rng.fill_normal(&mut g, 1.0);
+                    g
+                })
+                .collect();
+            super::super::run_round(&mut wa, sa.as_mut(), &mut pa, &grads, 0.01, step);
+            super::super::run_round(&mut wb, sb.as_mut(), &mut pb, &grads, 0.01, step);
+        }
+        assert_eq!(pa, pb);
+    }
+}

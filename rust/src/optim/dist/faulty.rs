@@ -1,0 +1,120 @@
+//! Byzantine fault injection (the `ext_byzantine` bench).
+//!
+//! The paper inherits SignSGD-with-majority-vote's robustness story
+//! (Bernstein et al. 2018c, cited in footnote 4): a 1-bit vote bounds a
+//! corrupt worker's per-coordinate influence to ±1 vote, while f32
+//! averaging is unbounded. [`FaultyWorker`] wraps an honest
+//! [`WorkerLogic`] and corrupts its uplink *payload* while preserving
+//! the frame tag and length, so the server still decodes a well-formed
+//! message — an adversary that keeps the protocol but lies about the
+//! content, the strongest attack the aggregation rule itself can see.
+
+use super::WorkerLogic;
+use crate::util::Rng;
+
+/// Corruption model applied to each uplink frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Replace every payload byte with uniform random bytes.
+    RandomBytes,
+    /// Bitwise-invert the payload (flips every vote / sign bit).
+    BitFlip,
+    /// No corruption (control arm).
+    Honest,
+}
+
+/// A worker whose uplinks are corrupted after honest encoding. The
+/// inner logic still advances its own state and applies downlinks
+/// honestly, so the attack is purely on the communicated update.
+pub struct FaultyWorker {
+    inner: Box<dyn WorkerLogic>,
+    fault: Fault,
+    rng: Rng,
+}
+
+impl FaultyWorker {
+    pub fn new(inner: Box<dyn WorkerLogic>, fault: Fault, seed: u64) -> Self {
+        FaultyWorker { inner, fault, rng: Rng::new(seed) }
+    }
+}
+
+impl WorkerLogic for FaultyWorker {
+    fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8> {
+        let mut msg = self.inner.encode(grads, lr, step);
+        match self.fault {
+            Fault::RandomBytes => {
+                // keep byte 0 (the frame tag) so the server can decode
+                for b in msg.iter_mut().skip(1) {
+                    *b = (self.rng.next_u64() & 0xFF) as u8;
+                }
+            }
+            Fault::BitFlip => {
+                for b in msg.iter_mut().skip(1) {
+                    *b = !*b;
+                }
+            }
+            Fault::Honest => {}
+        }
+        msg
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize) {
+        self.inner.apply(params, downlink, lr, step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::dist::{by_name, run_round, StrategyHyper};
+    use crate::util::Rng;
+
+    #[test]
+    fn faulty_frames_keep_tag_and_length() {
+        let hp = StrategyHyper::default();
+        let d = 123;
+        for name in ["d-lion-mavo", "g-lion", "terngrad"] {
+            let strat = by_name(name, &hp).unwrap();
+            let mut honest = strat.make_worker(0, d);
+            let mut faulty =
+                FaultyWorker::new(strat.make_worker(0, d), Fault::RandomBytes, 99);
+            let mut g = vec![0.0f32; d];
+            Rng::new(1).fill_normal(&mut g, 1.0);
+            let a = honest.encode(&g, 1e-3, 0);
+            let b = faulty.encode(&g, 1e-3, 0);
+            assert_eq!(a.len(), b.len(), "{name}: length must be preserved");
+            assert_eq!(a[0], b[0], "{name}: tag must be preserved");
+            assert_ne!(a[1..], b[1..], "{name}: payload must actually be corrupted");
+        }
+    }
+
+    #[test]
+    fn vote_bounds_byzantine_influence_on_replicas() {
+        // One corrupt worker among an odd majority: the round still
+        // completes and honest replicas stay bit-identical.
+        let hp = StrategyHyper::default();
+        let (d, n) = (64, 5);
+        let strat = by_name("d-lion-mavo", &hp).unwrap();
+        let mut workers: Vec<Box<dyn WorkerLogic>> =
+            (0..n).map(|i| strat.make_worker(i, d)).collect();
+        let honest = std::mem::replace(&mut workers[0], strat.make_worker(0, d));
+        workers[0] = Box::new(FaultyWorker::new(honest, Fault::RandomBytes, 7));
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];
+        let mut rng = Rng::new(2);
+        for step in 0..10 {
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut g = vec![0.0f32; d];
+                    rng.fill_normal(&mut g, 1.0);
+                    g
+                })
+                .collect();
+            run_round(&mut workers, server.as_mut(), &mut params, &grads, 1e-2, step);
+        }
+        for w in 2..n {
+            assert_eq!(params[1], params[w], "honest replicas diverged");
+        }
+        assert!(params[1].iter().all(|p| p.is_finite()));
+    }
+}

@@ -1,0 +1,181 @@
+//! Global baselines (G-Lion / G-AdamW / G-SGD): dense f32 gradients up,
+//! dense f32 mean down — the paper's 32d/32d accuracy references.
+//!
+//! The server is a stateless averager; every worker runs an identical
+//! replica of the single-node [`Optimizer`] on the broadcast mean, which
+//! keeps parameters bit-identical across workers (the same replicated-
+//! parameter invariant the 1-bit strategies satisfy) while reusing the
+//! [`crate::optim`] implementations unchanged.
+
+use super::{frame, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE};
+use crate::comm::dense;
+use crate::optim::adamw::AdamW;
+use crate::optim::lion::Lion;
+use crate::optim::sgd::SgdMomentum;
+use crate::optim::{AdamWParams, LionParams, Optimizer};
+
+/// Which single-node optimizer the workers replicate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlobalOpt {
+    Lion,
+    AdamW,
+    Sgd,
+}
+
+/// Global dense-gradient strategy (factory).
+pub struct Global {
+    pub opt: GlobalOpt,
+    pub hp: StrategyHyper,
+}
+
+impl Global {
+    pub fn new(opt: GlobalOpt, hp: StrategyHyper) -> Self {
+        Global { opt, hp }
+    }
+
+    fn build_optimizer(&self, dim: usize) -> Box<dyn Optimizer> {
+        match self.opt {
+            GlobalOpt::Lion => Box::new(Lion::new(
+                dim,
+                LionParams {
+                    beta1: self.hp.beta1,
+                    beta2: self.hp.beta2,
+                    weight_decay: self.hp.weight_decay,
+                },
+            )),
+            GlobalOpt::AdamW => Box::new(AdamW::new(
+                dim,
+                AdamWParams {
+                    weight_decay: self.hp.weight_decay,
+                    ..Default::default()
+                },
+            )),
+            GlobalOpt::Sgd => Box::new(SgdMomentum::new(
+                dim,
+                self.hp.sgd_momentum,
+                self.hp.weight_decay,
+            )),
+        }
+    }
+}
+
+struct GlobalWorker {
+    opt: Box<dyn Optimizer>,
+    mean_grad: Vec<f32>,
+}
+
+impl WorkerLogic for GlobalWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, _step: usize) -> Vec<u8> {
+        frame(TAG_DENSE, &dense::pack(grads))
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
+        assert_eq!(downlink[0], TAG_DENSE, "global strategies expect dense downlinks");
+        dense::unpack_into(&downlink[1..], &mut self.mean_grad);
+        self.opt.step(params, &self.mean_grad, lr);
+    }
+}
+
+/// Stateless dense averager over dense f32 uplinks.
+pub(crate) struct DenseAvgServer {
+    nworkers: usize,
+    acc: Vec<f32>,
+}
+
+impl DenseAvgServer {
+    pub(crate) fn new(nworkers: usize, dim: usize) -> Self {
+        DenseAvgServer { nworkers, acc: vec![0.0; dim] }
+    }
+}
+
+impl ServerLogic for DenseAvgServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        for up in uplinks {
+            assert_eq!(up[0], TAG_DENSE, "dense server expects dense uplinks");
+            dense::accumulate(&up[1..], &mut self.acc);
+        }
+        let inv = 1.0 / self.nworkers as f32;
+        for a in self.acc.iter_mut() {
+            *a *= inv;
+        }
+        frame(TAG_DENSE, &dense::pack(&self.acc))
+    }
+}
+
+impl Strategy for Global {
+    fn name(&self) -> String {
+        match self.opt {
+            GlobalOpt::Lion => "g-lion".into(),
+            GlobalOpt::AdamW => "g-adamw".into(),
+            GlobalOpt::Sgd => "g-sgd".into(),
+        }
+    }
+
+    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(GlobalWorker {
+            opt: self.build_optimizer(dim),
+            mean_grad: vec![0.0; dim],
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(DenseAvgServer::new(nworkers, dim))
+    }
+
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        32.0
+    }
+
+    fn downlink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        32.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn one_worker_global_equals_single_node_optimizer() {
+        let hp = StrategyHyper { weight_decay: 0.01, ..Default::default() };
+        let d = 31;
+        for opt in [GlobalOpt::Lion, GlobalOpt::AdamW, GlobalOpt::Sgd] {
+            let strat = Global::new(opt, hp);
+            let mut worker = strat.make_worker(0, d);
+            let mut server = strat.make_server(1, d);
+            let mut reference = strat.build_optimizer(d);
+            let mut pa = vec![0.4f32; d];
+            let mut pb = pa.clone();
+            let mut rng = Rng::new(0x61);
+            for step in 0..25 {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                let up = worker.encode(&g, 0.02, step);
+                let down = server.aggregate(&[up], 0.02, step);
+                worker.apply(&mut pa, &down, 0.02, step);
+                reference.step(&mut pb, &g, 0.02);
+            }
+            assert_eq!(pa, pb, "{opt:?} diverged from its single-node optimizer");
+        }
+    }
+
+    #[test]
+    fn server_broadcasts_exact_mean() {
+        let d = 10;
+        let mut server = DenseAvgServer::new(2, d);
+        let a: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..d).map(|i| -(i as f32) + 1.0).collect();
+        let ups = vec![
+            frame(TAG_DENSE, &dense::pack(&a)),
+            frame(TAG_DENSE, &dense::pack(&b)),
+        ];
+        let down = server.aggregate(&ups, 1e-3, 0);
+        let mean = dense::unpack(&down[1..]);
+        for (m, (x, y)) in mean.iter().zip(a.iter().zip(&b)) {
+            assert_eq!(*m, (x + y) / 2.0);
+        }
+    }
+}

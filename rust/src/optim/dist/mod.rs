@@ -1,0 +1,431 @@
+//! Distributed strategies: Algorithm 1's worker-encode / server-aggregate /
+//! worker-apply round, for Distributed Lion and every baseline of the
+//! paper's Section 5.1 evaluation (plus the extension baselines used by
+//! the projection benches).
+//!
+//! Layering: a [`Strategy`] is a stateless factory + analytic bandwidth
+//! model; it builds per-worker [`WorkerLogic`] state machines and one
+//! [`ServerLogic`]. The cluster layer ([`crate::cluster`]) drives them
+//! either in-process ([`run_round`]) or over a byte-counted transport
+//! fabric — both paths move the *same* frames, so the transport counters
+//! and the sequential byte accounting agree bit-exactly.
+//!
+//! ## Wire frames
+//!
+//! Every message starts with a one-byte codec tag; payloads are the
+//! bit-exact [`crate::comm`] codecs (Table 1 byte accounting):
+//!
+//! | tag | layout                                   | codec             |
+//! |-----|------------------------------------------|-------------------|
+//! | 1   | `[1][sign payload]`                      | [`sign`], 1 b/p   |
+//! | 2   | `[2][tern payload]`                      | [`tern`], 1.6 b/p |
+//! | 3   | `[3][n: u16 LE][intavg payload]`         | [`intavg`], ⌈log2(n+1)⌉ |
+//! | 4   | `[4][dense f32 payload]`                 | [`dense`], 32 b/p |
+//! | 5   | `[5][sparse payload]`                    | [`sparse`], 64·keep |
+//! | 6   | `[6][scale: f32 LE][tern payload]`       | TernGrad uplink   |
+//! | 7   | `[7][n: u16 LE][scale: f32 LE][range payload]` | TernGrad downlink, ⌈log2(2n+1)⌉ |
+//! | 8   | `[8][scale: f32 LE][sign payload]`       | EF-SignSGD uplink |
+//! | 9   | `[9][scale: f32 LE][u8 levels]`          | QSGD uplink, 8 b/p |
+
+pub mod dgc;
+pub mod dlion;
+pub mod faulty;
+pub mod global;
+pub mod terngrad;
+
+use crate::comm::{intavg, sign, tern};
+use crate::optim::LionParams;
+use crate::util::math::bits_for_count;
+
+pub use self::dgc::SparseTopK;
+pub use self::dlion::{Aggregation, DLion, DSignum};
+pub use self::faulty::{Fault, FaultyWorker};
+pub use self::global::{Global, GlobalOpt};
+pub use self::terngrad::{EfSignSgd, Qsgd, TernGrad};
+
+/// Frame tags (first byte of every uplink/downlink message).
+pub const TAG_SIGN: u8 = 1;
+pub const TAG_TERN: u8 = 2;
+pub const TAG_INTAVG: u8 = 3;
+pub const TAG_DENSE: u8 = 4;
+pub const TAG_SPARSE: u8 = 5;
+pub const TAG_TERN_SCALED: u8 = 6;
+pub const TAG_SUM_SCALED: u8 = 7;
+pub const TAG_SIGN_SCALED: u8 = 8;
+pub const TAG_QUANT: u8 = 9;
+
+/// Worker-side half of one synchronous round (Algorithm 1 lines 4–6, 9).
+///
+/// `encode` consumes the local stochastic gradient and produces the
+/// uplink frame, advancing any worker-local optimizer state (momentum,
+/// error feedback, residuals). `apply` consumes the server broadcast and
+/// updates the replicated parameters; every worker applies the identical
+/// downlink, which is what keeps replicas bit-identical.
+pub trait WorkerLogic: Send {
+    fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8>;
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize);
+}
+
+/// Server-side half: fold the index-aligned worker uplinks into one
+/// downlink frame (Algorithm 1 lines 7–8).
+pub trait ServerLogic: Send {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8>;
+}
+
+/// A distributed training strategy: a factory for worker/server logic
+/// plus the analytic Table-1 bandwidth model.
+pub trait Strategy: Send + Sync {
+    /// Registry name (e.g. "d-lion-mavo").
+    fn name(&self) -> String;
+
+    /// Build worker `worker`'s logic for a `dim`-parameter model.
+    fn make_worker(&self, worker: usize, dim: usize) -> Box<dyn WorkerLogic>;
+
+    /// Build the server logic for `nworkers` workers.
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic>;
+
+    /// Analytic worker→server payload bits per parameter (Table 1).
+    fn uplink_bits_per_param(&self, nworkers: usize) -> f64;
+
+    /// Analytic server→worker payload bits per parameter (Table 1).
+    fn downlink_bits_per_param(&self, nworkers: usize) -> f64;
+}
+
+/// Hyper-parameters shared by the whole strategy registry (a superset:
+/// each strategy reads the fields it needs; Table 2 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct StrategyHyper {
+    /// Lion update interpolation β1.
+    pub beta1: f32,
+    /// Lion momentum β2.
+    pub beta2: f32,
+    /// Decoupled weight decay λ (all strategies).
+    pub weight_decay: f32,
+    /// Signum momentum β (D-SIGNUM ablations).
+    pub signum_beta: f32,
+    /// Heavy-ball momentum for g-sgd / TernGrad / QSGD / EF-SignSGD.
+    pub sgd_momentum: f32,
+    /// Kept fraction 1−η for the sparse uplinks (GradDrop/DGC; paper 4%).
+    pub keep_frac: f32,
+    /// DGC gradient-clip threshold, in units of √d (RMS-element bound).
+    pub dgc_clip_norm: f32,
+    /// DGC sparsity warmup horizon (steps of exponential ramp to keep_frac).
+    pub dgc_warmup_steps: usize,
+}
+
+impl Default for StrategyHyper {
+    fn default() -> Self {
+        StrategyHyper {
+            beta1: 0.9,
+            beta2: 0.99,
+            weight_decay: 0.0,
+            signum_beta: 0.9,
+            sgd_momentum: 0.9,
+            keep_frac: 0.04,
+            dgc_clip_norm: 1.0,
+            dgc_warmup_steps: 200,
+        }
+    }
+}
+
+/// The registered Section-5.1 strategy matrix (what sweeps iterate).
+/// `by_name` additionally resolves the extension baselines "qsgd" and
+/// "ef-signsgd" used by the network-projection benches.
+pub const ALL_STRATEGIES: [&str; 10] = [
+    "d-lion-mavo",
+    "d-lion-avg",
+    "d-signum-mavo",
+    "d-signum-avg",
+    "g-lion",
+    "g-adamw",
+    "g-sgd",
+    "terngrad",
+    "graddrop",
+    "dgc",
+];
+
+/// Look up a strategy by registry name.
+pub fn by_name(name: &str, hp: &StrategyHyper) -> Option<Box<dyn Strategy>> {
+    let lion = LionParams {
+        beta1: hp.beta1,
+        beta2: hp.beta2,
+        weight_decay: hp.weight_decay,
+    };
+    Some(match name {
+        "d-lion-mavo" => Box::new(DLion::new(lion, Aggregation::MajorityVote)),
+        "d-lion-avg" => Box::new(DLion::new(lion, Aggregation::Average)),
+        "d-signum-mavo" => {
+            Box::new(DSignum::new(hp.signum_beta, hp.weight_decay, Aggregation::MajorityVote))
+        }
+        "d-signum-avg" => {
+            Box::new(DSignum::new(hp.signum_beta, hp.weight_decay, Aggregation::Average))
+        }
+        "g-lion" => Box::new(Global::new(GlobalOpt::Lion, *hp)),
+        "g-adamw" => Box::new(Global::new(GlobalOpt::AdamW, *hp)),
+        "g-sgd" => Box::new(Global::new(GlobalOpt::Sgd, *hp)),
+        "terngrad" => Box::new(TernGrad::new(*hp)),
+        "graddrop" => Box::new(SparseTopK::new(*hp, false)),
+        "dgc" => Box::new(SparseTopK::new(*hp, true)),
+        "qsgd" => Box::new(Qsgd::new(*hp)),
+        "ef-signsgd" => Box::new(EfSignSgd::new(*hp)),
+        _ => return None,
+    })
+}
+
+/// One synchronous round over in-process workers (the sequential-mode
+/// inner loop). Returns (uplink_bytes, downlink_bytes) with the same
+/// accounting the transport fabric records in threaded mode: uplink is
+/// the sum of worker frames, downlink is the broadcast frame × workers.
+pub fn run_round(
+    workers: &mut [Box<dyn WorkerLogic>],
+    server: &mut dyn ServerLogic,
+    params: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    lr: f32,
+    step: usize,
+) -> (usize, usize) {
+    debug_assert_eq!(workers.len(), params.len());
+    debug_assert_eq!(workers.len(), grads.len());
+    let uplinks: Vec<Vec<u8>> = workers
+        .iter_mut()
+        .zip(grads)
+        .map(|(w, g)| w.encode(g, lr, step))
+        .collect();
+    let up_bytes: usize = uplinks.iter().map(|m| m.len()).sum();
+    let downlink = server.aggregate(&uplinks, lr, step);
+    let down_bytes = downlink.len() * workers.len();
+    for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+        w.apply(p, &downlink, lr, step);
+    }
+    (up_bytes, down_bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Shared frame helpers
+// ---------------------------------------------------------------------------
+
+/// Build a `[tag][payload]` frame.
+pub(crate) fn frame(tag: u8, payload: &[u8]) -> Vec<u8> {
+    let mut msg = Vec::with_capacity(1 + payload.len());
+    msg.push(tag);
+    msg.extend_from_slice(payload);
+    msg
+}
+
+pub(crate) fn read_u16(msg: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes([msg[off], msg[off + 1]])
+}
+
+pub(crate) fn read_f32(msg: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([msg[off], msg[off + 1], msg[off + 2], msg[off + 3]])
+}
+
+/// Reusable decoder for the sign-family downlinks (TAG_SIGN / TAG_TERN /
+/// TAG_INTAVG) into a dense f32 update vector — allocation-free after
+/// the first round.
+pub(crate) struct UpdateDecoder {
+    trits: Vec<i8>,
+    votes: Vec<i32>,
+    update: Vec<f32>,
+}
+
+impl UpdateDecoder {
+    pub(crate) fn new(dim: usize) -> Self {
+        UpdateDecoder {
+            trits: vec![0; dim],
+            votes: vec![0; dim],
+            update: vec![0.0; dim],
+        }
+    }
+
+    /// Decode a downlink frame into the aggregated update Δ ∈ [−1, 1]^d.
+    pub(crate) fn decode(&mut self, msg: &[u8]) -> &[f32] {
+        match msg[0] {
+            TAG_SIGN => {
+                sign::unpack_into(&msg[1..], &mut self.trits);
+                for (u, &t) in self.update.iter_mut().zip(&self.trits) {
+                    *u = t as f32;
+                }
+            }
+            TAG_TERN => {
+                tern::unpack_into(&msg[1..], &mut self.trits);
+                for (u, &t) in self.update.iter_mut().zip(&self.trits) {
+                    *u = t as f32;
+                }
+            }
+            TAG_INTAVG => {
+                let n = read_u16(msg, 1) as usize;
+                intavg::unpack_into(&msg[3..], n, &mut self.votes);
+                let inv = 1.0 / n as f32;
+                for (u, &s) in self.update.iter_mut().zip(&self.votes) {
+                    *u = s as f32 * inv;
+                }
+            }
+            t => panic!("unexpected downlink tag {t}"),
+        }
+        &self.update
+    }
+}
+
+/// Shared server for the 1-bit sign-update family (D-Lion, D-SIGNUM):
+/// accumulate worker votes, then either majority-vote or integer-average
+/// the result (the two downlink columns of Table 1).
+pub(crate) struct SignVoteServer {
+    nworkers: usize,
+    agg: Aggregation,
+    votes: Vec<i32>,
+}
+
+impl SignVoteServer {
+    pub(crate) fn new(nworkers: usize, dim: usize, agg: Aggregation) -> Self {
+        SignVoteServer { nworkers, agg, votes: vec![0; dim] }
+    }
+}
+
+impl ServerLogic for SignVoteServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.votes.iter_mut().for_each(|v| *v = 0);
+        for up in uplinks {
+            assert_eq!(up[0], TAG_SIGN, "sign-vote server expects 1-bit uplinks");
+            sign::accumulate_votes(&up[1..], &mut self.votes);
+        }
+        match self.agg {
+            Aggregation::MajorityVote => {
+                if self.nworkers % 2 == 1 {
+                    // Odd N: the vote sum is never zero, the downlink is
+                    // strictly binary — 1 bit/param (Table 1's d·d row).
+                    let signs: Vec<i8> =
+                        self.votes.iter().map(|&v| if v > 0 { 1 } else { -1 }).collect();
+                    frame(TAG_SIGN, &sign::pack(&signs))
+                } else {
+                    // Even N: ties produce genuine zeros; pay the 1.6-bit
+                    // ternary frame.
+                    let trits: Vec<i8> =
+                        self.votes.iter().map(|&v| crate::util::math::isign(v)).collect();
+                    frame(TAG_TERN, &tern::pack(&trits))
+                }
+            }
+            Aggregation::Average => {
+                let payload = intavg::pack(&self.votes, self.nworkers);
+                let mut msg = Vec::with_capacity(3 + payload.len());
+                msg.push(TAG_INTAVG);
+                msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
+                msg.extend_from_slice(&payload);
+                msg
+            }
+        }
+    }
+}
+
+/// Downlink bits/param for the sign-update family.
+pub(crate) fn sign_family_downlink_bits(agg: Aggregation, nworkers: usize) -> f64 {
+    match agg {
+        Aggregation::MajorityVote => {
+            if nworkers % 2 == 1 {
+                1.0
+            } else {
+                tern::BITS_PER_ELEM
+            }
+        }
+        Aggregation::Average => bits_for_count(nworkers) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        let hp = StrategyHyper::default();
+        for name in ALL_STRATEGIES {
+            let s = by_name(name, &hp).unwrap_or_else(|| panic!("unregistered: {name}"));
+            assert_eq!(s.name(), name, "name round-trip");
+        }
+        // extension baselines resolve too
+        for name in ["qsgd", "ef-signsgd"] {
+            assert!(by_name(name, &hp).is_some(), "extension strategy {name}");
+        }
+        assert!(by_name("no-such-strategy", &hp).is_none());
+    }
+
+    #[test]
+    fn round_byte_accounting_matches_frame_sizes() {
+        let hp = StrategyHyper::default();
+        let (d, n) = (257, 4);
+        let mut rng = Rng::new(0xD15);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect();
+        for name in ALL_STRATEGIES {
+            let strat = by_name(name, &hp).unwrap();
+            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+            let mut server = strat.make_server(n, d);
+            let mut params: Vec<Vec<f32>> = vec![vec![0.5f32; d]; n];
+            let (up, down) =
+                run_round(&mut workers, server.as_mut(), &mut params, &grads, 1e-3, 0);
+            assert!(up > 0 && down > 0, "{name}: no bytes moved");
+            assert_eq!(down % n, 0, "{name}: downlink must be broadcast × n");
+            // replicas identical after one round
+            for w in 1..n {
+                assert_eq!(params[0], params[w], "{name}: replica divergence");
+            }
+        }
+    }
+
+    #[test]
+    fn update_decoder_roundtrips_all_tags() {
+        let d = 41;
+        let mut dec = UpdateDecoder::new(d);
+        let signs: Vec<i8> = (0..d).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+        let msg = frame(TAG_SIGN, &sign::pack(&signs));
+        let upd = dec.decode(&msg);
+        assert!(upd.iter().zip(&signs).all(|(&u, &s)| u == s as f32));
+
+        let trits: Vec<i8> = (0..d).map(|i| (i % 3) as i8 - 1).collect();
+        let msg = frame(TAG_TERN, &tern::pack(&trits));
+        let upd = dec.decode(&msg);
+        assert!(upd.iter().zip(&trits).all(|(&u, &t)| u == t as f32));
+
+        let n = 5usize;
+        let sums: Vec<i32> = (0..d).map(|i| (i as i32 % (n as i32 + 1)) * 2 - n as i32).collect();
+        let mut msg = vec![TAG_INTAVG];
+        msg.extend_from_slice(&(n as u16).to_le_bytes());
+        msg.extend_from_slice(&intavg::pack(&sums, n));
+        let upd = dec.decode(&msg);
+        assert!(upd
+            .iter()
+            .zip(&sums)
+            .all(|(&u, &s)| (u - s as f32 / n as f32).abs() < 1e-7));
+    }
+
+    #[test]
+    fn analytic_bits_match_comm_mod_formulas() {
+        let hp = StrategyHyper::default();
+        for n in [1usize, 2, 3, 4, 8, 16, 32, 33] {
+            let mavo = by_name("d-lion-mavo", &hp).unwrap();
+            assert_eq!(mavo.uplink_bits_per_param(n), 1.0);
+            assert_eq!(
+                mavo.downlink_bits_per_param(n),
+                if n % 2 == 1 { 1.0 } else { 1.6 }
+            );
+            let avg = by_name("d-lion-avg", &hp).unwrap();
+            assert_eq!(avg.downlink_bits_per_param(n), bits_for_count(n) as f64);
+            let tg = by_name("terngrad", &hp).unwrap();
+            assert_eq!(tg.uplink_bits_per_param(n), 1.6);
+            assert_eq!(
+                tg.downlink_bits_per_param(n),
+                intavg::bits_for_range(-(n as i32), n as i32) as f64
+            );
+            let g = by_name("g-lion", &hp).unwrap();
+            assert_eq!(g.uplink_bits_per_param(n), 32.0);
+            assert_eq!(g.downlink_bits_per_param(n), 32.0);
+        }
+    }
+}

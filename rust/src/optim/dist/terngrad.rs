@@ -1,0 +1,458 @@
+//! Quantized-gradient baselines.
+//!
+//! * [`TernGrad`] (Wen et al. 2017): stochastic ternarization
+//!   t ∈ {−1,0,+1} with per-worker scale s = ‖g‖∞, 1.6d-bit uplink
+//!   ([`tern`] codec; the paper's Table 1 quotes the 1.5d entropy bound).
+//!   The server sums the integer trits (S ∈ {−N..N}, ⌈log2(2N+1)⌉-bit
+//!   downlink via [`intavg::pack_range`]) and ships the mean scale, so
+//!   workers reconstruct ĝ = s̄·S/N — the scale-sharing variant of the
+//!   reference implementation.
+//! * [`Qsgd`] (Alistarh et al. 2017): 8-bit stochastic fixed-point
+//!   quantization with an f32 scale; dense f32 mean downlink.
+//! * [`EfSignSgd`] (Karimireddy et al. 2019): 1-bit sign compression
+//!   with error feedback and an ℓ1 scale; dense f32 mean downlink.
+//!
+//! All three apply momentum-SGD on the reconstructed mean gradient
+//! (their reference training recipes), reusing [`SgdMomentum`].
+
+use super::{
+    frame, read_f32, read_u16, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE,
+    TAG_QUANT, TAG_SIGN_SCALED, TAG_SUM_SCALED, TAG_TERN_SCALED,
+};
+use crate::comm::{dense, intavg, sign, tern};
+use crate::optim::lion::bsign;
+use crate::optim::sgd::SgdMomentum;
+use crate::util::math::{l1_norm, linf_norm};
+use crate::util::Rng;
+
+/// Seed domain for the per-worker ternarization/quantization streams —
+/// a fixed constant so identical runs produce identical bytes (the
+/// determinism invariant) while workers stay decorrelated.
+const QUANT_SEED: u64 = 0x7E26_0000;
+
+// ---------------------------------------------------------------------------
+// TernGrad
+// ---------------------------------------------------------------------------
+
+/// TernGrad strategy (factory).
+pub struct TernGrad {
+    pub hp: StrategyHyper,
+}
+
+impl TernGrad {
+    pub fn new(hp: StrategyHyper) -> Self {
+        TernGrad { hp }
+    }
+}
+
+struct TernGradWorker {
+    rng: Rng,
+    sgd: SgdMomentum,
+    trits: Vec<i8>,
+    mean_grad: Vec<f32>,
+}
+
+impl WorkerLogic for TernGradWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, _step: usize) -> Vec<u8> {
+        let s = linf_norm(grads) as f32;
+        let inv = if s > 0.0 { 1.0 / s } else { 0.0 };
+        for (t, &g) in self.trits.iter_mut().zip(grads) {
+            // P[t = sign(g)] = |g|/s  (unbiased: s·E[t] = g)
+            let p = (g.abs() * inv) as f64;
+            *t = if self.rng.uniform() < p {
+                if g >= 0.0 {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                0
+            };
+        }
+        let mut msg = Vec::with_capacity(5 + tern::packed_len(self.trits.len()));
+        msg.push(TAG_TERN_SCALED);
+        msg.extend_from_slice(&s.to_le_bytes());
+        msg.extend_from_slice(&tern::pack(&self.trits));
+        msg
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
+        assert_eq!(downlink[0], TAG_SUM_SCALED, "terngrad expects a scaled-sum downlink");
+        let n = read_u16(downlink, 1) as usize;
+        let mean_scale = read_f32(downlink, 3);
+        let d = params.len();
+        let sums = intavg::unpack_range(&downlink[7..], d, -(n as i32), n as i32);
+        let scale = mean_scale / n as f32;
+        for (o, &v) in self.mean_grad.iter_mut().zip(&sums) {
+            *o = scale * v as f32;
+        }
+        self.sgd.apply_gradient(params, &self.mean_grad, lr);
+    }
+}
+
+struct TernGradServer {
+    nworkers: usize,
+    trits: Vec<i8>,
+    sums: Vec<i32>,
+}
+
+impl ServerLogic for TernGradServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.sums.iter_mut().for_each(|s| *s = 0);
+        let mut scale_sum = 0.0f32;
+        for up in uplinks {
+            assert_eq!(up[0], TAG_TERN_SCALED, "terngrad server expects ternary uplinks");
+            scale_sum += read_f32(up, 1);
+            tern::unpack_into(&up[5..], &mut self.trits);
+            for (s, &t) in self.sums.iter_mut().zip(&self.trits) {
+                *s += t as i32;
+            }
+        }
+        let mean_scale = scale_sum / self.nworkers as f32;
+        let n = self.nworkers as i32;
+        let payload = intavg::pack_range(&self.sums, -n, n);
+        let mut msg = Vec::with_capacity(7 + payload.len());
+        msg.push(TAG_SUM_SCALED);
+        msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
+        msg.extend_from_slice(&mean_scale.to_le_bytes());
+        msg.extend_from_slice(&payload);
+        msg
+    }
+}
+
+impl Strategy for TernGrad {
+    fn name(&self) -> String {
+        "terngrad".into()
+    }
+
+    fn make_worker(&self, worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(TernGradWorker {
+            rng: Rng::new(QUANT_SEED ^ worker as u64),
+            sgd: SgdMomentum::new(dim, self.hp.sgd_momentum, self.hp.weight_decay),
+            trits: vec![0; dim],
+            mean_grad: vec![0.0; dim],
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(TernGradServer {
+            nworkers,
+            trits: vec![0; dim],
+            sums: vec![0; dim],
+        })
+    }
+
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        tern::BITS_PER_ELEM // 1.6 (vs the 1.585-bit entropy optimum)
+    }
+
+    fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
+        intavg::bits_for_range(-(nworkers as i32), nworkers as i32) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QSGD (8-bit stochastic fixed-point)
+// ---------------------------------------------------------------------------
+
+/// QSGD strategy (factory), at the byte quantization level (s = 127).
+pub struct Qsgd {
+    pub hp: StrategyHyper,
+}
+
+impl Qsgd {
+    pub fn new(hp: StrategyHyper) -> Self {
+        Qsgd { hp }
+    }
+}
+
+struct QsgdWorker {
+    rng: Rng,
+    sgd: SgdMomentum,
+    levels: Vec<u8>,
+    mean_grad: Vec<f32>,
+}
+
+impl WorkerLogic for QsgdWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, _step: usize) -> Vec<u8> {
+        let s = linf_norm(grads) as f32;
+        let inv = if s > 0.0 { 127.0 / s } else { 0.0 };
+        for (l, &g) in self.levels.iter_mut().zip(grads) {
+            let x = g.abs() * inv; // in [0, 127]
+            let lo = x.floor();
+            let level = lo as i32 + (self.rng.uniform() < (x - lo) as f64) as i32;
+            let signed = if g >= 0.0 { level } else { -level };
+            *l = (signed.clamp(-127, 127) as i8) as u8;
+        }
+        let mut msg = Vec::with_capacity(5 + self.levels.len());
+        msg.push(TAG_QUANT);
+        msg.extend_from_slice(&s.to_le_bytes());
+        msg.extend_from_slice(&self.levels);
+        msg
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
+        assert_eq!(downlink[0], TAG_DENSE, "qsgd expects dense downlinks");
+        dense::unpack_into(&downlink[1..], &mut self.mean_grad);
+        self.sgd.apply_gradient(params, &self.mean_grad, lr);
+    }
+}
+
+struct ScaledLevelsServer {
+    nworkers: usize,
+    acc: Vec<f32>,
+}
+
+impl ServerLogic for ScaledLevelsServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        for up in uplinks {
+            assert_eq!(up[0], TAG_QUANT, "qsgd server expects quantized uplinks");
+            let s = read_f32(up, 1);
+            let unit = s / 127.0;
+            for (a, &b) in self.acc.iter_mut().zip(&up[5..]) {
+                *a += unit * (b as i8) as f32;
+            }
+        }
+        let inv = 1.0 / self.nworkers as f32;
+        for a in self.acc.iter_mut() {
+            *a *= inv;
+        }
+        frame(TAG_DENSE, &dense::pack(&self.acc))
+    }
+}
+
+impl Strategy for Qsgd {
+    fn name(&self) -> String {
+        "qsgd".into()
+    }
+
+    fn make_worker(&self, worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(QsgdWorker {
+            rng: Rng::new(QUANT_SEED ^ 0x0515_0000 ^ worker as u64),
+            sgd: SgdMomentum::new(dim, self.hp.sgd_momentum, self.hp.weight_decay),
+            levels: vec![0; dim],
+            mean_grad: vec![0.0; dim],
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(ScaledLevelsServer { nworkers, acc: vec![0.0; dim] })
+    }
+
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        8.0
+    }
+
+    fn downlink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        32.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EF-SignSGD (1-bit with error feedback)
+// ---------------------------------------------------------------------------
+
+/// EF-SignSGD strategy (factory).
+pub struct EfSignSgd {
+    pub hp: StrategyHyper,
+}
+
+impl EfSignSgd {
+    pub fn new(hp: StrategyHyper) -> Self {
+        EfSignSgd { hp }
+    }
+}
+
+struct EfSignSgdWorker {
+    sgd: SgdMomentum,
+    error: Vec<f32>,
+    corrected: Vec<f32>,
+    mean_grad: Vec<f32>,
+}
+
+impl WorkerLogic for EfSignSgdWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, _step: usize) -> Vec<u8> {
+        let d = grads.len();
+        for ((c, e), &g) in self.corrected.iter_mut().zip(&self.error).zip(grads) {
+            *c = g + e;
+        }
+        let scale = (l1_norm(&self.corrected) / d as f64) as f32;
+        // e ← p − scale·sign(p): what the 1-bit frame cannot carry
+        for (e, &p) in self.error.iter_mut().zip(&self.corrected) {
+            *e = p - scale * bsign(p);
+        }
+        let mut msg = Vec::with_capacity(5 + sign::packed_len(d));
+        msg.push(TAG_SIGN_SCALED);
+        msg.extend_from_slice(&scale.to_le_bytes());
+        msg.extend_from_slice(&sign::pack_f32(&self.corrected));
+        msg
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
+        assert_eq!(downlink[0], TAG_DENSE, "ef-signsgd expects dense downlinks");
+        dense::unpack_into(&downlink[1..], &mut self.mean_grad);
+        self.sgd.apply_gradient(params, &self.mean_grad, lr);
+    }
+}
+
+struct ScaledSignServer {
+    nworkers: usize,
+    trits: Vec<i8>,
+    acc: Vec<f32>,
+}
+
+impl ServerLogic for ScaledSignServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        for up in uplinks {
+            assert_eq!(up[0], TAG_SIGN_SCALED, "ef-signsgd server expects scaled signs");
+            let scale = read_f32(up, 1);
+            sign::unpack_into(&up[5..], &mut self.trits);
+            for (a, &t) in self.acc.iter_mut().zip(&self.trits) {
+                *a += scale * t as f32;
+            }
+        }
+        let inv = 1.0 / self.nworkers as f32;
+        for a in self.acc.iter_mut() {
+            *a *= inv;
+        }
+        frame(TAG_DENSE, &dense::pack(&self.acc))
+    }
+}
+
+impl Strategy for EfSignSgd {
+    fn name(&self) -> String {
+        "ef-signsgd".into()
+    }
+
+    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(EfSignSgdWorker {
+            sgd: SgdMomentum::new(dim, self.hp.sgd_momentum, self.hp.weight_decay),
+            error: vec![0.0; dim],
+            corrected: vec![0.0; dim],
+            mean_grad: vec![0.0; dim],
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(ScaledSignServer {
+            nworkers,
+            trits: vec![0; dim],
+            acc: vec![0.0; dim],
+        })
+    }
+
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        1.0
+    }
+
+    fn downlink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        32.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn terngrad_is_unbiased_in_expectation() {
+        let d = 8;
+        let hp = StrategyHyper::default();
+        let strat = TernGrad::new(hp);
+        let mut w = strat.make_worker(0, d);
+        let grads: Vec<f32> = vec![2.0, -1.0, 0.5, 0.0, -2.0, 1.5, -0.25, 1.0];
+        let reps = 4000;
+        let mut mean = vec![0.0f64; d];
+        for step in 0..reps {
+            let up = w.encode(&grads, 1e-3, step);
+            assert_eq!(up[0], TAG_TERN_SCALED);
+            let s = read_f32(&up, 1);
+            assert_eq!(s, 2.0);
+            let trits = tern::unpack(&up[5..], d);
+            for (m, &t) in mean.iter_mut().zip(&trits) {
+                *m += s as f64 * t as f64 / reps as f64;
+            }
+        }
+        for (m, &g) in mean.iter().zip(&grads) {
+            assert!((m - g as f64).abs() < 0.12, "E[s·t]={m} vs g={g}");
+        }
+    }
+
+    #[test]
+    fn terngrad_roundtrip_reconstructs_scaled_sum() {
+        let d = 100;
+        let n = 4;
+        let hp = StrategyHyper::default();
+        let strat = TernGrad::new(hp);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut rng = Rng::new(0x7E);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect();
+        let ups: Vec<_> = workers
+            .iter_mut()
+            .zip(&grads)
+            .map(|(w, g)| w.encode(g, 1e-3, 0))
+            .collect();
+        let down = server.aggregate(&ups, 1e-3, 0);
+        assert_eq!(down[0], TAG_SUM_SCALED);
+        assert_eq!(read_u16(&down, 1) as usize, n);
+        let sums = intavg::unpack_range(&down[7..], d, -(n as i32), n as i32);
+        // every sum must be reachable from n trits
+        assert!(sums.iter().all(|s| s.unsigned_abs() as usize <= n));
+    }
+
+    #[test]
+    fn qsgd_quantization_error_bounded_by_one_level() {
+        let d = 64;
+        let hp = StrategyHyper::default();
+        let strat = Qsgd::new(hp);
+        let mut w = strat.make_worker(0, d);
+        let mut server = strat.make_server(1, d);
+        let mut g = vec![0.0f32; d];
+        Rng::new(0x05).fill_normal(&mut g, 3.0);
+        let up = w.encode(&g, 1e-3, 0);
+        let down = server.aggregate(&[up], 1e-3, 0);
+        let recon = dense::unpack(&down[1..]);
+        let s = linf_norm(&g) as f32;
+        let unit = s / 127.0;
+        for (r, &x) in recon.iter().zip(&g) {
+            assert!((r - x).abs() <= unit + 1e-6, "recon {r} vs {x} (unit {unit})");
+        }
+    }
+
+    #[test]
+    fn ef_signsgd_error_feedback_preserves_signal() {
+        // With a constant gradient the error-compensated 1-bit stream's
+        // running mean must converge to the true gradient.
+        let d = 16;
+        let hp = StrategyHyper::default();
+        let strat = EfSignSgd::new(hp);
+        let mut w = strat.make_worker(0, d);
+        let mut server = strat.make_server(1, d);
+        let g: Vec<f32> = (0..d).map(|i| (i as f32 - 7.5) / 4.0).collect();
+        let reps = 400;
+        let mut mean = vec![0.0f64; d];
+        for step in 0..reps {
+            let up = w.encode(&g, 1e-3, step);
+            let down = server.aggregate(&[up], 1e-3, step);
+            for (m, &r) in mean.iter_mut().zip(&dense::unpack(&down[1..])) {
+                *m += r as f64 / reps as f64;
+            }
+        }
+        for (m, &x) in mean.iter().zip(&g) {
+            assert!((m - x as f64).abs() < 0.05, "mean {m} vs g {x}");
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! Cross-module property tests over the DESIGN.md invariant list,
 //! using the in-repo testing mini-framework (no proptest offline).
 
-use dlion::comm::{dense, intavg, sign, sparse, tern};
+use dlion::comm::{dense, half, intavg, sign, sparse, tern, varint};
 use dlion::optim::dist::dlion::{Aggregation, DLion};
 use dlion::optim::dist::{by_name, Strategy, StrategyHyper};
 use dlion::optim::lion::bsign;
@@ -50,6 +50,98 @@ fn invariant2_packed_sizes_exact() {
             Ok(())
         } else {
             Err(format!("intavg packed_len({d},{n}) = {got}, want {want}"))
+        }
+    });
+}
+
+#[test]
+fn invariant1b_varint_half_sparse_roundtrips() {
+    // varint: sorted index sets survive delta+LEB128 exactly, and the
+    // decoder consumes exactly the bytes the encoder wrote.
+    forall(0xA11, 150, |r| {
+        let d = 1 + r.below(100_000);
+        let k = 1 + r.below(d.min(400));
+        r.sample_indices(d, k).into_iter().map(|i| i as u32).collect::<Vec<u32>>()
+    }, |idx| {
+        let mut buf = Vec::new();
+        varint::pack_sorted_indices(idx, &mut buf);
+        let mut back = Vec::new();
+        varint::unpack_sorted_indices(&buf, idx.len(), &mut back) == Some(buf.len())
+            && back == *idx
+    });
+    // half (bf16): decode∘encode is the identity on every non-NaN bf16
+    // bit pattern, and encode∘decode stays within one bf16 ulp.
+    for h in 0..=u16::MAX {
+        if half::from_bf16_bits(h).is_nan() {
+            continue;
+        }
+        assert_eq!(half::to_bf16_bits(half::from_bf16_bits(h)), h, "bf16 bits {h:#06x}");
+    }
+    forall(0xA12, 300, |r| r.normal_f32(0.0, 50.0), |&x| {
+        let back = half::from_bf16_bits(half::to_bf16_bits(x));
+        x == 0.0 || ((back - x) / x).abs() <= 1.0 / 256.0
+    });
+    // sparse: entry sets survive both the classic and compact formats.
+    forall(0xA13, 150, |r| {
+        let d = 1 + r.below(20_000);
+        let k = r.below(d.min(300) + 1);
+        let entries: Vec<sparse::Entry> = r
+            .sample_indices(d, k)
+            .into_iter()
+            .map(|i| sparse::Entry { index: i as u32, value: r.normal_f32(0.0, 1.0) })
+            .collect();
+        (d, entries)
+    }, |(d, entries)| {
+        let classic = sparse::unpack(&sparse::pack(*d, entries));
+        let compact = sparse::unpack_compact(&sparse::pack_compact(*d, entries));
+        classic == (*d, entries.clone()) && compact == (*d, entries.clone())
+    });
+}
+
+#[test]
+fn invariant2b_packed_sizes_varint_half_sparse() {
+    // half: exactly 16 bits/param.
+    forall_explain(0xA14, 100, |r| r.below(10_000), |&d| {
+        let v = vec![1.0f32; d];
+        let got = half::pack(&v).len();
+        if got == half::packed_len(d) && got == 2 * d {
+            Ok(())
+        } else {
+            Err(format!("half pack({d}) = {got} bytes, want {}", 2 * d))
+        }
+    });
+    // sparse classic: 64 header bits + 64 bits/entry, exactly.
+    forall_explain(0xA15, 100, |r| {
+        let d = 1 + r.below(5_000);
+        let k = r.below(d.min(200) + 1);
+        (d, k)
+    }, |&(d, k)| {
+        let entries: Vec<sparse::Entry> = (0..k)
+            .map(|i| sparse::Entry { index: i as u32, value: 1.0 })
+            .collect();
+        let got = sparse::pack(d, &entries).len();
+        let want = sparse::packed_len(k);
+        if got == want && want == 8 + 8 * k {
+            Ok(())
+        } else {
+            Err(format!("sparse pack(d={d}, k={k}) = {got} bytes, want {want}"))
+        }
+    });
+    // varint: single-byte gaps for dense-ish selections (the DGC 4% regime
+    // rides ~1 byte/index), never worse than 5 bytes/index.
+    forall_explain(0xA16, 60, |r| {
+        let d = 1_000 + r.below(100_000);
+        let k = 1 + d / (20 + r.below(60));
+        (d, k)
+    }, |&(d, k)| {
+        let mut rng = Rng::new((d + k) as u64);
+        let idx: Vec<u32> = rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
+        let mut buf = Vec::new();
+        varint::pack_sorted_indices(&idx, &mut buf);
+        if buf.len() <= 5 * k {
+            Ok(())
+        } else {
+            Err(format!("varint used {} bytes for {k} indices", buf.len()))
         }
     });
 }

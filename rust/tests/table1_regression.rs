@@ -1,0 +1,127 @@
+//! Table-1 regression: each fixed-rate strategy's *measured* bits/param
+//! from a short `run_sequential` must match the analytic formulas
+//! documented in `rust/src/comm/mod.rs` (1-bit D-Lion uplink,
+//! ⌈log2(N+1)⌉ Avg downlink, 1.6-bit TernGrad uplink, ⌈log2(2N+1)⌉
+//! TernGrad downlink, 32-bit global channels) — the contract that keeps
+//! the wire format honest as codecs and frames evolve.
+
+use dlion::cluster::{run_sequential, TrainConfig};
+use dlion::optim::dist::{by_name, StrategyHyper};
+use dlion::tasks::quadratic::Quadratic;
+use dlion::util::math::bits_for_count;
+
+const D: usize = 4096;
+const STEPS: usize = 4;
+
+fn measured_bits(name: &str, n: usize) -> (f64, f64) {
+    let task = Quadratic::new(D, 5.0, 0.3, 9);
+    let hp = StrategyHyper::default();
+    let strat = by_name(name, &hp).unwrap();
+    let cfg = TrainConfig {
+        steps: STEPS,
+        batch_per_worker: 2,
+        base_lr: 1e-3,
+        eval_every: 0,
+        seed: 3,
+        ..Default::default()
+    };
+    let res = run_sequential(&task, strat.as_ref(), n, &cfg);
+    let denom = (D * n * STEPS) as f64;
+    (
+        res.total_uplink() as f64 * 8.0 / denom,
+        res.total_downlink() as f64 * 8.0 / denom,
+    )
+}
+
+fn assert_close(measured: f64, analytic: f64, ctx: &str) {
+    // slack for the frame headers (tag / n / scale bytes)
+    assert!(
+        (measured - analytic).abs() / analytic < 0.02,
+        "{ctx}: measured {measured:.4} bits/param vs analytic {analytic:.4}"
+    );
+}
+
+#[test]
+fn dlion_mavo_is_one_bit_each_way_for_odd_n() {
+    for n in [1usize, 3, 5] {
+        let (up, down) = measured_bits("d-lion-mavo", n);
+        assert_close(up, 1.0, "mavo uplink");
+        assert_close(down, 1.0, "mavo downlink (odd n)");
+    }
+}
+
+#[test]
+fn dlion_mavo_even_n_pays_the_ternary_tie_frame() {
+    for n in [2usize, 4] {
+        let (up, down) = measured_bits("d-lion-mavo", n);
+        assert_close(up, 1.0, "mavo uplink");
+        assert_close(down, 1.6, "mavo downlink (even n)");
+    }
+}
+
+#[test]
+fn dlion_avg_downlink_is_log_n_bits() {
+    for n in [2usize, 4, 8] {
+        let (up, down) = measured_bits("d-lion-avg", n);
+        assert_close(up, 1.0, "avg uplink");
+        assert_close(down, bits_for_count(n) as f64, "avg downlink");
+    }
+}
+
+#[test]
+fn signum_matches_dlion_rates() {
+    let (up, down) = measured_bits("d-signum-mavo", 3);
+    assert_close(up, 1.0, "signum uplink");
+    assert_close(down, 1.0, "signum downlink");
+    let (up, down) = measured_bits("d-signum-avg", 4);
+    assert_close(up, 1.0, "signum-avg uplink");
+    assert_close(down, 3.0, "signum-avg downlink"); // ceil(log2(5))
+}
+
+#[test]
+fn global_channels_are_dense_32_bit() {
+    for name in ["g-lion", "g-adamw", "g-sgd"] {
+        let (up, down) = measured_bits(name, 2);
+        assert_close(up, 32.0, "global uplink");
+        assert_close(down, 32.0, "global downlink");
+    }
+}
+
+#[test]
+fn terngrad_rates_match_table1() {
+    for n in [4usize, 8] {
+        let (up, down) = measured_bits("terngrad", n);
+        assert_close(up, 1.6, "terngrad uplink"); // 8/5 packed trits
+        let expect = bits_for_count(2 * n) as f64; // ceil(log2(2n+1))
+        assert_close(down, expect, "terngrad downlink");
+    }
+}
+
+#[test]
+fn graddrop_uplink_tracks_keep_fraction() {
+    // keep 4%: 64·keep bits/param plus the 64-bit header.
+    let (up, down) = measured_bits("graddrop", 4);
+    let k = (0.04f64 * D as f64).ceil();
+    let analytic = (64.0 + 64.0 * k) / D as f64;
+    assert_close(up, analytic, "graddrop uplink");
+    assert_close(down, 32.0, "graddrop downlink");
+}
+
+#[test]
+fn analytic_model_agrees_with_measurement_for_fixed_rate_strategies() {
+    // The strategy's own Table-1 model (what the netsim bench projects
+    // from) must agree with what actually crossed the wire.
+    for (name, n) in [
+        ("d-lion-mavo", 5usize),
+        ("d-lion-avg", 4),
+        ("d-signum-mavo", 3),
+        ("g-lion", 2),
+        ("terngrad", 4),
+    ] {
+        let hp = StrategyHyper::default();
+        let strat = by_name(name, &hp).unwrap();
+        let (up, down) = measured_bits(name, n);
+        assert_close(up, strat.uplink_bits_per_param(n), name);
+        assert_close(down, strat.downlink_bits_per_param(n), name);
+    }
+}

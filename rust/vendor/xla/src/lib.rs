@@ -1,0 +1,266 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! This container has no XLA/PJRT toolchain, so the coordinator links
+//! against this API-compatible stub instead of the real bindings
+//! (elie222/xla-rs lineage). Literal construction and marshalling work
+//! (they are plain byte shuffling); anything that would need the PJRT
+//! runtime — client construction, compilation, execution — returns a
+//! structured [`Error`] that the `dlion` runtime layer surfaces as
+//! "artifacts unavailable", which the tests and benches already gate on.
+//! Swapping in the real crate is a one-line change in `rust/Cargo.toml`.
+
+use std::path::Path;
+
+/// Stub error: carries a message; formatted into `DlionError::Xla`.
+#[derive(Debug, Clone)]
+pub struct Error {
+    pub message: String,
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error {
+        message: format!(
+            "{what}: XLA/PJRT runtime not available in this offline build \
+             (stub crate rust/vendor/xla; install the real bindings to enable)"
+        ),
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the dlion runtime marshals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S8,
+    S32,
+    S64,
+    U8,
+}
+
+/// Native scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    const SIZE: usize;
+    fn write_le(&self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr, $n:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            const SIZE: usize = $n;
+            fn write_le(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn read_le(bytes: &[u8]) -> Self {
+                <$t>::from_le_bytes(bytes.try_into().expect("literal byte width"))
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32, 4);
+native!(f64, ElementType::F64, 8);
+native!(i8, ElementType::S8, 1);
+native!(i32, ElementType::S32, 4);
+native!(i64, ElementType::S64, 8);
+native!(u8, ElementType::U8, 1);
+
+/// A host-side tensor literal (bytes + dims + dtype). Construction and
+/// read-back work in the stub; only device execution is unavailable.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// 1-D literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * T::SIZE);
+        for v in data {
+            v.write_le(&mut bytes);
+        }
+        Literal { ty: T::TY, dims: vec![data.len() as i64], bytes }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut bytes = Vec::with_capacity(T::SIZE);
+        v.write_le(&mut bytes);
+        Literal { ty: T::TY, dims: vec![], bytes }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let new: i64 = dims.iter().product();
+        let old: i64 = self.dims.iter().product();
+        if new != old {
+            return Err(Error {
+                message: format!("reshape {:?} -> {dims:?}: element count mismatch", self.dims),
+            });
+        }
+        Ok(Literal { ty: self.ty, dims: dims.to_vec(), bytes: self.bytes.clone() })
+    }
+
+    /// Build from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    /// Read back as a native vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error {
+                message: format!("to_vec: literal is {:?}, requested {:?}", self.ty, T::TY),
+            });
+        }
+        Ok(self.bytes.chunks_exact(T::SIZE).map(T::read_le).collect())
+    }
+
+    /// Copy raw elements into a preallocated buffer.
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        if dst.len() * T::SIZE != self.bytes.len() {
+            return Err(Error {
+                message: format!(
+                    "copy_raw_to: literal has {} bytes, destination wants {}",
+                    self.bytes.len(),
+                    dst.len() * T::SIZE
+                ),
+            });
+        }
+        for (d, c) in dst.iter_mut().zip(self.bytes.chunks_exact(T::SIZE)) {
+            *d = T::read_le(c);
+        }
+        Ok(())
+    }
+
+    /// Flatten a tuple literal — only produced by execution, which the
+    /// stub cannot do.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module text (held verbatim; the stub cannot compile it).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| Error {
+            message: format!("read {}: {e}", path.as_ref().display()),
+        })?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation wrapper (stub).
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: () }
+    }
+}
+
+/// PJRT client (stub: construction fails cleanly).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Loaded executable (stub: unreachable, execution always errors).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = vec![1.0f32, -2.5, 0.0];
+        let lit = Literal::vec1(&v);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), v);
+        let r = lit.reshape(&[3, 1]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), v);
+        assert!(lit.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_i8_from_untyped() {
+        let bytes = [1u8, 255, 0];
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S8, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<i8>().unwrap(), vec![1, -1, 0]);
+    }
+
+    #[test]
+    fn copy_raw_to_checks_width() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        let mut out = [0.0f32; 2];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, [1.0, 2.0]);
+        let mut bad = [0.0f32; 3];
+        assert!(lit.copy_raw_to(&mut bad).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_fail_cleanly() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("not available"));
+    }
+}

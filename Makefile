@@ -5,11 +5,15 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check bench-quick clean
+.PHONY: verify build test docs fmt fmt-check bench-quick clean
 
 ## tier-1 verify: what CI runs (ROADMAP.md)
 verify:
 	cd $(CARGO_DIR) && cargo build --release && cargo test -q
+
+## rustdoc with warnings denied (CI gates this alongside tier-1)
+docs:
+	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 build:
 	cd $(CARGO_DIR) && cargo build --release

@@ -58,7 +58,7 @@ fn main() {
         let handles: Vec<_> = (0..n)
             .map(|id| {
                 let stats = stats.clone();
-                let mut logic = strategy.make_worker(id, d);
+                let mut logic = strategy.make_worker(id, n, d);
                 std::thread::spawn(move || {
                     let mut w = tcp::TcpWorker::connect(port, id, stats).unwrap();
                     let mut rng = dlion::util::Rng::new(id as u64);

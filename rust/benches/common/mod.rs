@@ -22,7 +22,11 @@ pub fn table2_hparams(method: &str) -> (f64, StrategyHyper) {
             hp.weight_decay = 0.0005;
             1e-3
         }
-        "g-lion" | "d-lion-avg" | "d-lion-mavo" => {
+        "g-lion" | "d-lion-avg" | "d-lion-mavo" | "d-lion-ef" | "d-lion-msync" => {
+            hp.weight_decay = 0.005;
+            5e-4
+        }
+        name if name.starts_with("bandwidth-aware") => {
             hp.weight_decay = 0.005;
             5e-4
         }

@@ -44,9 +44,9 @@ fn main() {
             let mut params = vec![params0; K];
             let mut rngs: Vec<Rng> = (0..K).map(|i| root.fork(i as u64)).collect();
             let mut workers: Vec<Box<dyn WorkerLogic>> =
-                (0..K).map(|i| strategy.make_worker(i, d)).collect();
+                (0..K).map(|i| strategy.make_worker(i, K, d)).collect();
             for b in 0..nbyz {
-                let honest = std::mem::replace(&mut workers[b], strategy.make_worker(b, d));
+                let honest = std::mem::replace(&mut workers[b], strategy.make_worker(b, K, d));
                 workers[b] =
                     Box::new(FaultyWorker::new(honest, Fault::RandomBytes, 100 + b as u64));
             }

@@ -15,7 +15,17 @@ use dlion::comm::simnet::{estimate, Link};
 use dlion::optim::dist::{by_name, StrategyHyper};
 
 const METHODS: &[&str] = &[
-    "g-adamw", "g-lion", "d-lion-avg", "d-lion-mavo", "terngrad", "dgc", "qsgd", "ef-signsgd",
+    "g-adamw",
+    "g-lion",
+    "d-lion-avg",
+    "d-lion-mavo",
+    "d-lion-ef",
+    "d-lion-msync",
+    "bandwidth-aware(d-lion-mavo,g-lion)",
+    "terngrad",
+    "dgc",
+    "qsgd",
+    "ef-signsgd",
 ];
 
 fn main() {

@@ -23,6 +23,9 @@ const METHODS: &[&str] = &[
     "g-lion",
     "d-lion-avg",
     "d-lion-mavo",
+    "d-lion-ef",
+    "d-lion-msync",
+    "bandwidth-aware(d-lion-mavo,g-lion)",
     "d-signum-avg",
     "d-signum-mavo",
     "terngrad",
@@ -40,6 +43,9 @@ fn main() {
     let expectation: &[(&str, &str)] = &[
         ("d-lion-mavo", "lower-left (best)"),
         ("d-lion-avg", "lower-left"),
+        ("d-lion-ef", "lower-left (EF extension)"),
+        ("d-lion-msync", "near lower-left + sync premium"),
+        ("bandwidth-aware(d-lion-mavo,g-lion)", "tracks the link budget"),
         ("d-signum-mavo", "same bits, worse error"),
         ("d-signum-avg", "same bits, worse error"),
         ("g-lion", "64 bits, low error"),

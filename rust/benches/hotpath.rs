@@ -36,7 +36,7 @@ fn strategy_round(d: usize, n: usize) {
     });
     for name in ["d-lion-mavo", "d-lion-avg", "d-signum-mavo", "terngrad", "dgc", "g-lion", "g-adamw"] {
         let strat = by_name(name, &hp).unwrap();
-        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
         let mut server = strat.make_server(n, d);
         let mut params: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];
         let mut step = 0usize;

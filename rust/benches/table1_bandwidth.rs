@@ -57,7 +57,7 @@ fn measured_table() {
         for &n in &[4usize, 32] {
             for name in ["d-lion-mavo", "d-lion-avg", "terngrad", "dgc", "g-adamw"] {
                 let strat = by_name(name, &hp).unwrap();
-                let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+                let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
                 let mut server = strat.make_server(n, d);
                 let mut rng = Rng::new(7);
                 let grads: Vec<Vec<f32>> = (0..n)

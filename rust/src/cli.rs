@@ -10,7 +10,7 @@
 use crate::cluster::{run_sequential, run_threaded, TrainConfig};
 use crate::config::Experiment;
 use crate::error::{DlionError, Result};
-use crate::optim::dist::{by_name, StrategyHyper, ALL_STRATEGIES};
+use crate::optim::dist::{by_name, StrategyHyper, ALL_STRATEGIES, EXTENSION_STRATEGIES};
 use crate::tasks::GradTask;
 use std::sync::Arc;
 
@@ -66,7 +66,8 @@ COMMANDS:
   train       run one experiment   (--config configs/fig2.toml, --threaded)
   sweep       strategies × workers × seeds sweep, CSV to --out dir
   bandwidth   print the Table-1 bandwidth matrix (--dim, --workers)
-  strategies  list registered distributed strategies
+  strategies  list registered distributed strategies (core + extensions:
+              d-lion-ef, d-lion-msync, bandwidth-aware(<cheap>,<rich>))
   lm          train the AOT transformer (--artifacts artifacts/,
               --strategy d-lion-mavo, --workers 4, --steps 200)
   help        this text
@@ -85,6 +86,9 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "strategies" => {
             for s in ALL_STRATEGIES {
                 println!("{s}");
+            }
+            for s in EXTENSION_STRATEGIES {
+                println!("{s}  (extension)");
             }
             Ok(0)
         }
@@ -112,11 +116,11 @@ fn cmd_bandwidth(args: &Args) -> Result<i32> {
     let workers: usize = args.flag("workers").and_then(|s| s.parse().ok()).unwrap_or(32);
     let hp = StrategyHyper::default();
     println!("Table 1 — bits/param for d={dim}, n={workers}:");
-    println!("{:<16} {:>14} {:>14}", "method", "worker→server", "server→worker");
-    for name in ALL_STRATEGIES {
+    println!("{:<38} {:>14} {:>14}", "method", "worker→server", "server→worker");
+    for &name in ALL_STRATEGIES.iter().chain(EXTENSION_STRATEGIES.iter()) {
         let s = by_name(name, &hp).unwrap();
         println!(
-            "{:<16} {:>14.2} {:>14.2}",
+            "{:<38} {:>14.2} {:>14.2}",
             name,
             s.uplink_bits_per_param(workers),
             s.downlink_bits_per_param(workers)
@@ -310,6 +314,21 @@ mod tests {
         let code = run(&argv(
             "train task=quadratic strategies=d-lion-mavo workers=2 seeds=1 \
              train.steps=20 train.eval_every=0 task.dim=16",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn quick_train_runs_extension_strategies() {
+        // d-lion-ef, d-lion-msync, and the bare bandwidth-aware alias are
+        // trainable end-to-end from the CLI (the composite
+        // bandwidth-aware(a,b) form contains a comma and must come from a
+        // TOML config's strategies list instead of a CLI override).
+        let code = run(&argv(
+            "train task=quadratic strategies=d-lion-ef,d-lion-msync,bandwidth-aware \
+             workers=2 seeds=1 train.steps=12 train.eval_every=0 task.dim=16 \
+             hyper.msync_every=4 hyper.link_budget=8",
         ))
         .unwrap();
         assert_eq!(code, 0);

@@ -66,7 +66,7 @@ pub fn run_sequential(
     let params0 = task.init_params(&mut root);
     let mut params: Vec<Vec<f32>> = vec![params0; nworkers];
     let mut worker_rngs: Vec<Rng> = (0..nworkers).map(|i| root.fork(i as u64)).collect();
-    let mut workers: Vec<_> = (0..nworkers).map(|i| strategy.make_worker(i, d)).collect();
+    let mut workers: Vec<_> = (0..nworkers).map(|i| strategy.make_worker(i, nworkers, d)).collect();
     let mut server = strategy.make_server(nworkers, d);
     let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; nworkers];
     let mut result = RunResult::new(task.name(), strategy.name(), nworkers);
@@ -121,18 +121,20 @@ pub fn run_threaded(
     let mut root = Rng::new(cfg.seed);
     let params0 = task.init_params(&mut root);
     let worker_rngs: Vec<Rng> = (0..nworkers).map(|i| root.fork(i as u64)).collect();
-    // metrics side-channel (not counted as training communication)
+    // metrics side-channels (not counted as training communication)
     let (loss_tx, loss_rx) = std::sync::mpsc::channel::<(usize, f64)>();
+    let (eval_tx, eval_rx) = std::sync::mpsc::channel::<(usize, Eval)>();
 
     let handles: Vec<_> = worker_txs
         .into_iter()
         .zip(worker_rngs)
         .map(|(mut wt, mut rng)| {
             let task = task.clone();
-            let mut logic = strategy.make_worker(wt.worker_id(), d);
+            let mut logic = strategy.make_worker(wt.worker_id(), nworkers, d);
             let mut params = params0.clone();
             let cfg = cfg.clone();
             let loss_tx = loss_tx.clone();
+            let eval_tx = eval_tx.clone();
             std::thread::spawn(move || -> std::io::Result<Vec<f32>> {
                 let mut grad = vec![0.0f32; d];
                 for step in 0..cfg.steps {
@@ -157,12 +159,19 @@ pub fn run_threaded(
                     wt.send(uplink)?;
                     let downlink = wt.recv()?;
                     logic.apply(&mut params, &downlink, lr, step);
+                    // Periodic eval on worker 0's replica — the same
+                    // post-apply point the sequential driver evaluates,
+                    // so the two modes' histories agree record-for-record.
+                    if wid == 0 && cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+                        let _ = eval_tx.send((step, task.evaluate(&params)));
+                    }
                 }
                 Ok(params)
             })
         })
         .collect();
     drop(loss_tx);
+    drop(eval_tx);
 
     // Server loop on the current thread. Per-step bytes are CommStats
     // deltas taken around the round: after `gather` returns, every
@@ -206,6 +215,10 @@ pub fn run_threaded(
             uplink_bytes,
             downlink_bytes,
         });
+    }
+    // merge worker-0's periodic evals into the per-step history
+    for (step, eval) in eval_rx.iter() {
+        result.history[step].eval = Some(eval);
     }
     let mut final_params: Vec<Vec<f32>> = Vec::new();
     for h in handles {
@@ -276,10 +289,38 @@ mod tests {
     }
 
     #[test]
+    fn threaded_periodic_eval_matches_sequential() {
+        // The threaded driver must honor eval_every with the same cadence
+        // and the same post-apply evaluation point as the sequential one;
+        // identical trajectories => identical eval records.
+        let cfg = TrainConfig { eval_every: 10, ..quick_cfg(35) };
+        let task = Quadratic::new(48, 8.0, 0.4, 11);
+        let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+        let seq = run_sequential(&task, strat.as_ref(), 3, &cfg);
+        let task_arc: Arc<dyn GradTask + Send + Sync> = Arc::new(Quadratic::new(48, 8.0, 0.4, 11));
+        let (thr, _) = run_threaded(task_arc, strat.as_ref(), 3, &cfg);
+        let seq_evals: Vec<(usize, f64)> = seq
+            .history
+            .iter()
+            .filter_map(|r| r.eval.as_ref().map(|e| (r.step, e.loss)))
+            .collect();
+        let thr_evals: Vec<(usize, f64)> = thr
+            .history
+            .iter()
+            .filter_map(|r| r.eval.as_ref().map(|e| (r.step, e.loss)))
+            .collect();
+        assert_eq!(seq_evals.len(), 3, "steps 9, 19, 29");
+        assert_eq!(seq_evals, thr_evals, "threaded eval cadence/values diverged");
+    }
+
+    #[test]
     fn all_strategies_run_and_reduce_loss() {
         let task = Quadratic::new(32, 5.0, 0.3, 5);
         let hp = StrategyHyper { weight_decay: 0.001, ..Default::default() };
-        for name in crate::optim::dist::ALL_STRATEGIES {
+        for &name in crate::optim::dist::ALL_STRATEGIES
+            .iter()
+            .chain(crate::optim::dist::EXTENSION_STRATEGIES.iter())
+        {
             let strat = by_name(name, &hp).unwrap();
             let lr = if name.starts_with("g-adamw") || name.starts_with("g-sgd") {
                 0.05

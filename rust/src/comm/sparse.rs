@@ -59,6 +59,15 @@ pub fn scatter_add(payload: &[u8], acc: &mut [f32]) {
     }
 }
 
+/// Scatter-add a compact-format payload into a dense accumulator.
+pub fn scatter_add_compact(payload: &[u8], acc: &mut [f32]) {
+    let (d, entries) = unpack_compact(payload);
+    assert_eq!(d, acc.len(), "sparse dim mismatch");
+    for e in entries {
+        acc[e.index as usize] += e.value;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Compact format: delta-varint indices + f32 values. ~40(1−η)·d bits
 // instead of 64(1−η)·d for the paper's 4% keep rate (see comm::varint).

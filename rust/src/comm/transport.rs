@@ -2,11 +2,11 @@
 //!
 //! The paper's claims are about *communication volume*; every byte that
 //! crosses a worker↔server boundary in this repo goes through a
-//! [`Transport`], whose counters feed the bandwidth columns of
-//! Table 1 / Figure 4 benches. Two implementations:
+//! [`ServerTransport`]/[`WorkerTransport`] pair, whose counters feed the
+//! bandwidth columns of Table 1 / Figure 4 benches. Two implementations:
 //!
-//! * [`InProcTransport`] — `std::sync::mpsc` channels between threads
-//!   (the default cluster fabric).
+//! * [`InProcServer`]/[`InProcWorker`] — `std::sync::mpsc` channels
+//!   between threads (the default cluster fabric).
 //! * `comm::tcp::TcpTransport` — real loopback TCP sockets, proving the
 //!   wire format is self-describing.
 

@@ -88,6 +88,9 @@ impl Experiment {
         exp.hyper.keep_frac = h.f64_or("keep_frac", exp.hyper.keep_frac as f64) as f32;
         exp.hyper.dgc_clip_norm = h.f64_or("dgc_clip_norm", exp.hyper.dgc_clip_norm as f64) as f32;
         exp.hyper.dgc_warmup_steps = h.usize_or("dgc_warmup_steps", exp.hyper.dgc_warmup_steps);
+        exp.hyper.msync_every = h.usize_or("msync_every", exp.hyper.msync_every);
+        exp.hyper.compact_sparse = h.bool_or("compact_sparse", exp.hyper.compact_sparse);
+        exp.hyper.link_budget = h.f64_or("link_budget", exp.hyper.link_budget as f64) as f32;
 
         let tk = toml::section(&doc, "task");
         exp.task_dim = tk.usize_or("dim", exp.task_dim);
@@ -136,6 +139,19 @@ impl Experiment {
             "hyper.beta2" => self.hyper.beta2 = parse_f64(val)? as f32,
             "hyper.weight_decay" => self.hyper.weight_decay = parse_f64(val)? as f32,
             "hyper.keep_frac" => self.hyper.keep_frac = parse_f64(val)? as f32,
+            "hyper.msync_every" => self.hyper.msync_every = parse_usize(val)?,
+            "hyper.compact_sparse" => {
+                self.hyper.compact_sparse = match val {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => {
+                        return Err(DlionError::Config(format!(
+                            "hyper.compact_sparse expects true/false, got '{other}'"
+                        )))
+                    }
+                }
+            }
+            "hyper.link_budget" => self.hyper.link_budget = parse_f64(val)? as f32,
             "task.dim" => self.task_dim = parse_usize(val)?,
             "task.hidden" => self.task_hidden = parse_usize(val)?,
             "task.train_n" => self.task_train_n = parse_usize(val)?,
@@ -195,6 +211,9 @@ lr = 0.02
 
 [hyper]
 weight_decay = 0.01
+msync_every = 8
+compact_sparse = true
+link_budget = 6.0
 
 [task]
 dim = 128
@@ -206,13 +225,40 @@ dim = 128
         assert_eq!(exp.workers, vec![4, 8]);
         assert_eq!(exp.train.steps, 50);
         assert!((exp.hyper.weight_decay - 0.01).abs() < 1e-7);
+        assert_eq!(exp.hyper.msync_every, 8);
+        assert!(exp.hyper.compact_sparse);
+        assert!((exp.hyper.link_budget - 6.0).abs() < 1e-7);
         assert_eq!(exp.task_dim, 128);
         exp.apply_override("train.steps=99").unwrap();
         assert_eq!(exp.train.steps, 99);
         exp.apply_override("workers=2,4").unwrap();
         assert_eq!(exp.workers, vec![2, 4]);
+        exp.apply_override("hyper.msync_every=16").unwrap();
+        assert_eq!(exp.hyper.msync_every, 16);
+        exp.apply_override("hyper.compact_sparse=true").unwrap();
+        assert!(exp.hyper.compact_sparse);
+        assert!(exp.apply_override("hyper.compact_sparse=maybe").is_err());
+        exp.apply_override("hyper.link_budget=8.5").unwrap();
+        assert!((exp.hyper.link_budget - 8.5).abs() < 1e-6);
         assert!(exp.apply_override("garbage").is_err());
         assert!(exp.apply_override("no.such.key=1").is_err());
+    }
+
+    #[test]
+    fn shipped_configs_parse_and_strategies_resolve() {
+        // keep configs/*.toml honest: every listed strategy must resolve
+        // (including the composite bandwidth-aware name, which exercises
+        // the quote-aware TOML array splitting)
+        for path in ["../configs/fig2.toml", "../configs/lioncub.toml"] {
+            let exp = Experiment::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+            assert!(!exp.strategies.is_empty(), "{path}: empty strategies");
+            for s in &exp.strategies {
+                assert!(
+                    crate::optim::dist::by_name(s, &exp.hyper).is_some(),
+                    "{path}: strategy '{s}' does not resolve"
+                );
+            }
+        }
     }
 
     #[test]

@@ -88,6 +88,27 @@ fn parse_scalar(s: &str, line: usize) -> Result<Value, TomlError> {
     Err(TomlError { line, message: format!("cannot parse value '{s}'") })
 }
 
+/// Split an array body on commas that are not inside a quoted string
+/// (strategy names like `"bandwidth-aware(d-lion-mavo,g-lion)"` carry
+/// commas of their own).
+fn split_array_items(inner: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&inner[start..]);
+    parts
+}
+
 fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
     let s = s.trim();
     if s.starts_with('[') {
@@ -100,7 +121,7 @@ fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
         }
         // split at top level (no nested arrays supported)
         let items: Result<Vec<Value>, TomlError> =
-            inner.split(',').map(|p| parse_scalar(p, line)).collect();
+            split_array_items(inner).into_iter().map(|p| parse_scalar(p, line)).collect();
         return Ok(Value::Arr(items?));
     }
     parse_scalar(s, line)
@@ -250,5 +271,16 @@ check = true
     fn hash_inside_string_is_not_comment() {
         let doc = parse("k = \"a#b\"").unwrap();
         assert_eq!(section(&doc, "").str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn comma_inside_string_does_not_split_array_items() {
+        // composite strategy names carry commas of their own
+        let doc =
+            parse("s = [\"bandwidth-aware(d-lion-mavo,g-lion)\", \"d-lion-ef\"]").unwrap();
+        assert_eq!(
+            section(&doc, "").str_list_or("s", &[]),
+            vec!["bandwidth-aware(d-lion-mavo,g-lion)".to_string(), "d-lion-ef".to_string()]
+        );
     }
 }

@@ -20,8 +20,11 @@
 //! ## Strategy registry
 //!
 //! [`optim::dist::by_name`] resolves every row of the paper's evaluation
-//! matrix (plus two extension baselines); channels name the codec each
-//! direction rides on ([`comm`]) and the resulting Table-1 bits/param:
+//! matrix plus the extension strategies; channels name the codec each
+//! direction rides on ([`comm`]) and the resulting Table-1 bits/param.
+//! Prose documentation of every entry (wire format, frame layout,
+//! formulas, which paper table/figure it reproduces) lives in
+//! `docs/STRATEGIES.md`.
 //!
 //! | name            | paper §        | uplink (codec, bits)     | downlink (codec, bits)        |
 //! |-----------------|----------------|--------------------------|-------------------------------|
@@ -33,10 +36,16 @@
 //! | `g-adamw`       | §5.1 baseline  | `dense`, 32              | `dense`, 32                   |
 //! | `g-sgd`         | §5.1 baseline  | `dense`, 32              | `dense`, 32                   |
 //! | `terngrad`      | §5.1 baseline  | `tern`+scale, 1.6        | `intavg` range, ⌈log2(2N+1)⌉  |
-//! | `graddrop`      | §5.1 baseline  | `sparse`, 64·keep        | `dense`, 32                   |
-//! | `dgc`           | §5.1 baseline  | `sparse`, 64·keep (warmup) | `dense`, 32                 |
+//! | `graddrop`      | §5.1 baseline  | `sparse`, 64·keep¹       | `dense`, 32                   |
+//! | `dgc`           | §5.1 baseline  | `sparse`, 64·keep¹ (warmup) | `dense`, 32                |
 //! | `qsgd`          | extension      | 8-bit quant + scale      | `dense`, 32                   |
 //! | `ef-signsgd`    | extension      | `sign`+scale, 1          | `dense`, 32                   |
+//! | `d-lion-ef`     | ext. (Lion Cub) | `sign`, 1               | as d-lion-mavo                |
+//! | `d-lion-msync`  | ext. (Lion Cub) | `sign`+bf16, 1 + 16/k   | as d-lion-mavo + 16/k         |
+//! | `bandwidth-aware(a,b)` | ext. (Lion Cub) | wrapped frames    | budget-weighted mix           |
+//!
+//! ¹ with `StrategyHyper::compact_sparse`, the sparse uplinks switch to
+//! delta-varint indices at ≈40·keep bits/param.
 
 pub mod bench_utils;
 pub mod cli;

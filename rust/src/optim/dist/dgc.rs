@@ -5,12 +5,19 @@
 //! Uplink: the k = ⌈keep·d⌉ largest-|value| entries of the local
 //! accumulator as a [`sparse`] frame ((1−η)·64d bits, Table 1's GradDrop
 //! row — index overhead included, as the reference implementations ship).
+//! With [`StrategyHyper::compact_sparse`] set, the uplink switches to the
+//! delta-varint compact format ([`sparse::pack_compact`], `TAG_SPARSE_COMPACT`):
+//! ~40 bits/entry at the paper's 4% keep rate (1-byte index gaps + f32
+//! value) instead of 64.
 //! Downlink: the dense f32 mean of the scatter-added worker updates
 //! (32d bits, the "DGC down" row). Apply: plain decoupled-decay SGD on
 //! the reconstructed mean — DGC's momentum lives *inside* the
 //! compression (velocity accumulation before top-k), not in the apply.
 
-use super::{frame, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE, TAG_SPARSE};
+use super::{
+    frame, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE, TAG_SPARSE,
+    TAG_SPARSE_COMPACT,
+};
 use crate::comm::{dense, sparse};
 use crate::optim::lion::Lion;
 use crate::util::math::l2_norm;
@@ -98,7 +105,11 @@ impl WorkerLogic for SparseWorker {
                 self.momentum[i] = 0.0;
             }
         }
-        frame(TAG_SPARSE, &sparse::pack(d, &entries))
+        if self.hp.compact_sparse {
+            frame(TAG_SPARSE_COMPACT, &sparse::pack_compact(d, &entries))
+        } else {
+            frame(TAG_SPARSE, &sparse::pack(d, &entries))
+        }
     }
 
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
@@ -121,8 +132,11 @@ impl ServerLogic for SparseAvgServer {
         assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         for up in uplinks {
-            assert_eq!(up[0], TAG_SPARSE, "sparse server expects sparse uplinks");
-            sparse::scatter_add(&up[1..], &mut self.acc);
+            match up[0] {
+                TAG_SPARSE => sparse::scatter_add(&up[1..], &mut self.acc),
+                TAG_SPARSE_COMPACT => sparse::scatter_add_compact(&up[1..], &mut self.acc),
+                t => panic!("sparse server expects sparse uplinks, got tag {t}"),
+            }
         }
         let inv = 1.0 / self.nworkers as f32;
         for a in self.acc.iter_mut() {
@@ -141,7 +155,7 @@ impl Strategy for SparseTopK {
         }
     }
 
-    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+    fn make_worker(&self, _worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
         Box::new(SparseWorker {
             hp: self.hp,
             momentum_correction: self.momentum_correction,
@@ -157,9 +171,12 @@ impl Strategy for SparseTopK {
     }
 
     /// Steady-state (post-warmup) rate: 64 bits per kept entry
-    /// (u32 index + f32 value), i.e. keep·64 = (1−η)·64 bits/param.
+    /// (u32 index + f32 value), i.e. keep·64 = (1−η)·64 bits/param —
+    /// or ~40 bits/entry (1-byte delta-varint index + f32 value) when
+    /// `compact_sparse` is on.
     fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
-        64.0 * self.hp.keep_frac as f64
+        let bits_per_entry = if self.hp.compact_sparse { 40.0 } else { 64.0 };
+        bits_per_entry * self.hp.keep_frac as f64
     }
 
     fn downlink_bits_per_param(&self, _nworkers: usize) -> f64 {
@@ -182,7 +199,7 @@ mod tests {
         // encoding, velocity + sent entries == sum of gradients so far.
         let d = 40;
         let strat = SparseTopK::new(mk_hp(), false);
-        let mut w = strat.make_worker(0, d);
+        let mut w = strat.make_worker(0, 1, d);
         let mut rng = Rng::new(0x5A);
         let mut total = vec![0.0f32; d];
         let mut sent = vec![0.0f32; d];
@@ -201,7 +218,7 @@ mod tests {
         }
         // reconstruct the worker's remaining residual: total - sent
         // must have no mass that was both sent and kept
-        let mut w2 = strat.make_worker(0, d);
+        let mut w2 = strat.make_worker(0, 1, d);
         let up = w2.encode(&total, 1e-3, 1000); // one-shot reference
         let (_, one_shot) = sparse::unpack(&up[1..]);
         assert!(!one_shot.is_empty());
@@ -217,7 +234,7 @@ mod tests {
         let d = 1000;
         let hp = mk_hp();
         let strat = SparseTopK::new(hp, true);
-        let mut w = strat.make_worker(0, d);
+        let mut w = strat.make_worker(0, 1, d);
         let mut rng = Rng::new(0x5B);
         let mut ks = Vec::new();
         for step in 0..12 {
@@ -236,11 +253,64 @@ mod tests {
     }
 
     #[test]
+    fn compact_sparse_rounds_match_classic_bit_for_bit() {
+        // The compact wire format must be a pure re-encoding: same
+        // entries, same server reconstruction, identical trajectories.
+        let (d, n) = (512, 3);
+        let hp = StrategyHyper { keep_frac: 0.04, ..Default::default() };
+        let hp_c = StrategyHyper { compact_sparse: true, ..hp };
+        for momentum_correction in [false, true] {
+            let classic = SparseTopK::new(hp, momentum_correction);
+            let compact = SparseTopK::new(hp_c, momentum_correction);
+            let mut wa: Vec<_> = (0..n).map(|i| classic.make_worker(i, n, d)).collect();
+            let mut wb: Vec<_> = (0..n).map(|i| compact.make_worker(i, n, d)).collect();
+            let mut sa = classic.make_server(n, d);
+            let mut sb = compact.make_server(n, d);
+            let mut pa: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];
+            let mut pb = pa.clone();
+            let mut rng = Rng::new(0x5D);
+            let mut saved_classic = 0usize;
+            let mut saved_compact = 0usize;
+            for step in 0..10 {
+                let grads: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut g = vec![0.0f32; d];
+                        rng.fill_normal(&mut g, 1.0);
+                        g
+                    })
+                    .collect();
+                let (ua, _) = crate::optim::dist::run_round(
+                    &mut wa, sa.as_mut(), &mut pa, &grads, 1e-2, step,
+                );
+                let (ub, _) = crate::optim::dist::run_round(
+                    &mut wb, sb.as_mut(), &mut pb, &grads, 1e-2, step,
+                );
+                saved_classic += ua;
+                saved_compact += ub;
+                assert!(ub < ua, "step {step}: compact must be smaller");
+            }
+            assert_eq!(pa, pb, "compact format changed the trajectory");
+            assert!(
+                saved_compact * 4 < saved_classic * 3,
+                "compact {saved_compact}B should be well under 3/4 of classic {saved_classic}B"
+            );
+        }
+    }
+
+    #[test]
+    fn compact_model_rate_is_40_bits_per_entry() {
+        let hp = StrategyHyper { keep_frac: 0.04, compact_sparse: true, ..Default::default() };
+        let s = SparseTopK::new(hp, false);
+        assert!((s.uplink_bits_per_param(4) - 1.6).abs() < 1e-9); // 40 × 0.04
+        assert_eq!(s.downlink_bits_per_param(4), 32.0);
+    }
+
+    #[test]
     fn uplink_frame_size_matches_keep_rate() {
         let d = 500;
         let hp = StrategyHyper { keep_frac: 0.04, ..Default::default() };
         let strat = SparseTopK::new(hp, false);
-        let mut w = strat.make_worker(0, d);
+        let mut w = strat.make_worker(0, 1, d);
         let mut g = vec![0.0f32; d];
         Rng::new(0x5C).fill_normal(&mut g, 1.0);
         let up = w.encode(&g, 1e-3, 0);

@@ -69,7 +69,7 @@ impl Strategy for DLion {
         }
     }
 
-    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+    fn make_worker(&self, _worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
         Box::new(DLionWorker {
             lion: Lion::new(dim, self.hp),
             weight_decay: self.hp.weight_decay,
@@ -131,7 +131,7 @@ impl Strategy for DSignum {
         }
     }
 
-    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+    fn make_worker(&self, _worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
         Box::new(DSignumWorker {
             signum: Signum::new(dim, self.beta, self.weight_decay),
             weight_decay: self.weight_decay,
@@ -167,7 +167,7 @@ mod tests {
         let d = 67;
         for agg in [Aggregation::MajorityVote, Aggregation::Average] {
             let strat = DLion::new(hp, agg);
-            let mut worker = strat.make_worker(0, d);
+            let mut worker = strat.make_worker(0, 1, d);
             let mut server = strat.make_server(1, d);
             let mut lion = Lion::new(d, hp);
             let mut pa = vec![0.3f32; d];
@@ -192,7 +192,7 @@ mod tests {
         let strat = DLion::new(hp, Aggregation::MajorityVote);
         let mut rng = Rng::new(0xD2);
         for n in [1usize, 2, 3, 4, 5] {
-            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
             let mut server = strat.make_server(n, d);
             let ups: Vec<_> = workers
                 .iter_mut()
@@ -215,7 +215,7 @@ mod tests {
         let d = 33;
         let n = 4;
         let strat = DLion::new(hp, Aggregation::Average);
-        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
         let mut server = strat.make_server(n, d);
         let mut rng = Rng::new(0xD3);
         let grads: Vec<Vec<f32>> = (0..n)
@@ -250,8 +250,8 @@ mod tests {
         let lion_hp = LionParams { beta1: beta, beta2: beta, weight_decay: 0.005 };
         let dl = DLion::new(lion_hp, Aggregation::MajorityVote);
         let ds = DSignum::new(beta, 0.005, Aggregation::MajorityVote);
-        let mut wa: Vec<_> = (0..n).map(|i| dl.make_worker(i, d)).collect();
-        let mut wb: Vec<_> = (0..n).map(|i| ds.make_worker(i, d)).collect();
+        let mut wa: Vec<_> = (0..n).map(|i| dl.make_worker(i, n, d)).collect();
+        let mut wb: Vec<_> = (0..n).map(|i| ds.make_worker(i, n, d)).collect();
         let mut sa = dl.make_server(n, d);
         let mut sb = ds.make_server(n, d);
         let mut pa: Vec<Vec<f32>> = vec![vec![0.2f32; d]; n];

@@ -75,9 +75,9 @@ mod tests {
         let d = 123;
         for name in ["d-lion-mavo", "g-lion", "terngrad"] {
             let strat = by_name(name, &hp).unwrap();
-            let mut honest = strat.make_worker(0, d);
+            let mut honest = strat.make_worker(0, 1, d);
             let mut faulty =
-                FaultyWorker::new(strat.make_worker(0, d), Fault::RandomBytes, 99);
+                FaultyWorker::new(strat.make_worker(0, 1, d), Fault::RandomBytes, 99);
             let mut g = vec![0.0f32; d];
             Rng::new(1).fill_normal(&mut g, 1.0);
             let a = honest.encode(&g, 1e-3, 0);
@@ -96,8 +96,8 @@ mod tests {
         let (d, n) = (64, 5);
         let strat = by_name("d-lion-mavo", &hp).unwrap();
         let mut workers: Vec<Box<dyn WorkerLogic>> =
-            (0..n).map(|i| strat.make_worker(i, d)).collect();
-        let honest = std::mem::replace(&mut workers[0], strat.make_worker(0, d));
+            (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let honest = std::mem::replace(&mut workers[0], strat.make_worker(0, n, d));
         workers[0] = Box::new(FaultyWorker::new(honest, Fault::RandomBytes, 7));
         let mut server = strat.make_server(n, d);
         let mut params: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];

@@ -113,7 +113,7 @@ impl Strategy for Global {
         }
     }
 
-    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+    fn make_worker(&self, _worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
         Box::new(GlobalWorker {
             opt: self.build_optimizer(dim),
             mean_grad: vec![0.0; dim],
@@ -144,7 +144,7 @@ mod tests {
         let d = 31;
         for opt in [GlobalOpt::Lion, GlobalOpt::AdamW, GlobalOpt::Sgd] {
             let strat = Global::new(opt, hp);
-            let mut worker = strat.make_worker(0, d);
+            let mut worker = strat.make_worker(0, 1, d);
             let mut server = strat.make_server(1, d);
             let mut reference = strat.build_optimizer(d);
             let mut pa = vec![0.4f32; d];

@@ -20,17 +20,26 @@
 //! | 1   | `[1][sign payload]`                      | [`sign`], 1 b/p   |
 //! | 2   | `[2][tern payload]`                      | [`tern`], 1.6 b/p |
 //! | 3   | `[3][n: u16 LE][intavg payload]`         | [`intavg`], ⌈log2(n+1)⌉ |
-//! | 4   | `[4][dense f32 payload]`                 | [`dense`], 32 b/p |
-//! | 5   | `[5][sparse payload]`                    | [`sparse`], 64·keep |
+//! | 4   | `[4][dense f32 payload]`                 | [`dense`](crate::comm::dense), 32 b/p |
+//! | 5   | `[5][sparse payload]`                    | [`sparse`](crate::comm::sparse), 64·keep |
 //! | 6   | `[6][scale: f32 LE][tern payload]`       | TernGrad uplink   |
 //! | 7   | `[7][n: u16 LE][scale: f32 LE][range payload]` | TernGrad downlink, ⌈log2(2n+1)⌉ |
 //! | 8   | `[8][scale: f32 LE][sign payload]`       | EF-SignSGD uplink |
 //! | 9   | `[9][scale: f32 LE][u8 levels]`          | QSGD uplink, 8 b/p |
+//! | 10  | `[10][compact sparse payload]`           | [`sparse`](crate::comm::sparse) compact, ≈40·keep |
+//! | 11  | `[11][sign payload][bf16 momentum]`      | msync uplink, 1 + 16 b/p |
+//! | 12  | `[12][vote frame][bf16 mean momentum]`   | msync downlink    |
+//!
+//! The bandwidth-aware selector ([`select`]) adds no framing of its own:
+//! its rounds are the wrapped strategies' frames verbatim.
 
 pub mod dgc;
 pub mod dlion;
+pub mod ef;
 pub mod faulty;
 pub mod global;
+pub mod msync;
+pub mod select;
 pub mod terngrad;
 
 use crate::comm::{intavg, sign, tern};
@@ -39,8 +48,11 @@ use crate::util::math::bits_for_count;
 
 pub use self::dgc::SparseTopK;
 pub use self::dlion::{Aggregation, DLion, DSignum};
+pub use self::ef::DLionEf;
 pub use self::faulty::{Fault, FaultyWorker};
 pub use self::global::{Global, GlobalOpt};
+pub use self::msync::DLionMsync;
+pub use self::select::BandwidthAware;
 pub use self::terngrad::{EfSignSgd, Qsgd, TernGrad};
 
 /// Frame tags (first byte of every uplink/downlink message).
@@ -53,6 +65,9 @@ pub const TAG_TERN_SCALED: u8 = 6;
 pub const TAG_SUM_SCALED: u8 = 7;
 pub const TAG_SIGN_SCALED: u8 = 8;
 pub const TAG_QUANT: u8 = 9;
+pub const TAG_SPARSE_COMPACT: u8 = 10;
+pub const TAG_SIGN_MOM: u8 = 11;
+pub const TAG_MSYNC_DOWN: u8 = 12;
 
 /// Worker-side half of one synchronous round (Algorithm 1 lines 4–6, 9).
 ///
@@ -61,6 +76,18 @@ pub const TAG_QUANT: u8 = 9;
 /// error feedback, residuals). `apply` consumes the server broadcast and
 /// updates the replicated parameters; every worker applies the identical
 /// downlink, which is what keeps replicas bit-identical.
+///
+/// # Examples
+///
+/// ```
+/// use dlion::optim::dist::{by_name, StrategyHyper};
+///
+/// let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+/// let mut worker = strat.make_worker(0, 1, 8); // worker 0 of 1, dim 8
+/// let uplink = worker.encode(&[1.0; 8], 1e-3, 0);
+/// assert_eq!(uplink[0], dlion::optim::dist::TAG_SIGN); // 1-bit frame
+/// assert_eq!(uplink.len(), 1 + 1); // tag + 8 sign bits
+/// ```
 pub trait WorkerLogic: Send {
     fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8>;
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize);
@@ -68,18 +95,52 @@ pub trait WorkerLogic: Send {
 
 /// Server-side half: fold the index-aligned worker uplinks into one
 /// downlink frame (Algorithm 1 lines 7–8).
+///
+/// # Examples
+///
+/// ```
+/// use dlion::optim::dist::{by_name, StrategyHyper, TAG_SIGN};
+///
+/// let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+/// let (n, d) = (3, 8);
+/// let mut workers: Vec<_> = (0..n).map(|w| strat.make_worker(w, n, d)).collect();
+/// let mut server = strat.make_server(n, d);
+/// let ups: Vec<_> = workers.iter_mut().map(|w| w.encode(&[1.0; 8], 1e-3, 0)).collect();
+/// let down = server.aggregate(&ups, 1e-3, 0);
+/// assert_eq!(down[0], TAG_SIGN); // odd N: strictly binary majority vote
+/// ```
 pub trait ServerLogic: Send {
     fn aggregate(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8>;
 }
 
 /// A distributed training strategy: a factory for worker/server logic
 /// plus the analytic Table-1 bandwidth model.
+///
+/// # Examples
+///
+/// Drive one synchronous round by hand (what [`run_round`] does):
+///
+/// ```
+/// use dlion::optim::dist::{by_name, run_round, StrategyHyper};
+///
+/// let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+/// let (n, d) = (3, 16);
+/// let mut workers: Vec<_> = (0..n).map(|w| strat.make_worker(w, n, d)).collect();
+/// let mut server = strat.make_server(n, d);
+/// let mut params = vec![vec![0.5f32; d]; n];
+/// let grads = vec![vec![1.0f32; d]; n];
+/// let (up, down) = run_round(&mut workers, server.as_mut(), &mut params, &grads, 1e-3, 0);
+/// assert!(up > 0 && down > 0);
+/// assert_eq!(params[0], params[1]); // replicas stay bit-identical
+/// ```
 pub trait Strategy: Send + Sync {
     /// Registry name (e.g. "d-lion-mavo").
     fn name(&self) -> String;
 
-    /// Build worker `worker`'s logic for a `dim`-parameter model.
-    fn make_worker(&self, worker: usize, dim: usize) -> Box<dyn WorkerLogic>;
+    /// Build worker `worker`'s logic for a `dim`-parameter model in an
+    /// `nworkers`-worker cluster (the count lets bandwidth-aware logic
+    /// replay the server's selection schedule).
+    fn make_worker(&self, worker: usize, nworkers: usize, dim: usize) -> Box<dyn WorkerLogic>;
 
     /// Build the server logic for `nworkers` workers.
     fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic>;
@@ -111,6 +172,15 @@ pub struct StrategyHyper {
     pub dgc_clip_norm: f32,
     /// DGC sparsity warmup horizon (steps of exponential ramp to keep_frac).
     pub dgc_warmup_steps: usize,
+    /// Momentum-sync cadence for `d-lion-msync` (rounds between bf16
+    /// momentum frames; 0 disables sync).
+    pub msync_every: usize,
+    /// Ship GradDrop/DGC uplinks in the delta-varint compact sparse
+    /// format (~40 bits/entry) instead of the classic 64-bit entries.
+    pub compact_sparse: bool,
+    /// Link budget for the `bandwidth-aware` selector, in bits/param per
+    /// round (uplink + downlink combined, analytic Table-1 accounting).
+    pub link_budget: f32,
 }
 
 impl Default for StrategyHyper {
@@ -124,13 +194,14 @@ impl Default for StrategyHyper {
             keep_frac: 0.04,
             dgc_clip_norm: 1.0,
             dgc_warmup_steps: 200,
+            msync_every: 32,
+            compact_sparse: false,
+            link_budget: 4.0,
         }
     }
 }
 
 /// The registered Section-5.1 strategy matrix (what sweeps iterate).
-/// `by_name` additionally resolves the extension baselines "qsgd" and
-/// "ef-signsgd" used by the network-projection benches.
 pub const ALL_STRATEGIES: [&str; 10] = [
     "d-lion-mavo",
     "d-lion-avg",
@@ -144,16 +215,74 @@ pub const ALL_STRATEGIES: [&str; 10] = [
     "dgc",
 ];
 
+/// Extension strategies `by_name` resolves beyond the Section-5.1 matrix:
+/// the network-projection baselines plus the Lion Cub-style variants
+/// (error feedback, momentum sync, bandwidth-aware selection).
+pub const EXTENSION_STRATEGIES: [&str; 5] = [
+    "qsgd",
+    "ef-signsgd",
+    "d-lion-ef",
+    "d-lion-msync",
+    "bandwidth-aware(d-lion-mavo,g-lion)",
+];
+
 /// Look up a strategy by registry name.
+///
+/// Resolves every entry of [`ALL_STRATEGIES`] and
+/// [`EXTENSION_STRATEGIES`]. The bandwidth-aware selector also accepts
+/// the composite form `bandwidth-aware(<cheap>,<rich>)` for any two
+/// registered (non-composite) names, and the bare alias
+/// `bandwidth-aware` for the default `(d-lion-mavo,g-lion)` pair.
+///
+/// # Examples
+///
+/// ```
+/// use dlion::optim::dist::{by_name, StrategyHyper};
+///
+/// let hp = StrategyHyper::default();
+/// let dlion = by_name("d-lion-mavo", &hp).expect("registered");
+/// assert_eq!(dlion.name(), "d-lion-mavo");
+/// assert_eq!(dlion.uplink_bits_per_param(8), 1.0);
+///
+/// // amortized momentum-sync accounting: 1 + 16/msync_every bits up
+/// let hp2 = StrategyHyper { msync_every: 8, ..hp };
+/// let msync = by_name("d-lion-msync", &hp2).unwrap();
+/// assert_eq!(msync.uplink_bits_per_param(3), 3.0);
+///
+/// // composite selector names resolve recursively
+/// assert!(by_name("bandwidth-aware(d-lion-mavo,g-lion)", &hp).is_some());
+/// assert!(by_name("no-such-strategy", &hp).is_none());
+/// ```
 pub fn by_name(name: &str, hp: &StrategyHyper) -> Option<Box<dyn Strategy>> {
     let lion = LionParams {
         beta1: hp.beta1,
         beta2: hp.beta2,
         weight_decay: hp.weight_decay,
     };
+    if let Some(rest) = name.strip_prefix("bandwidth-aware") {
+        let (cheap_name, rich_name) = if rest.is_empty() {
+            ("d-lion-mavo", "g-lion")
+        } else {
+            rest.strip_prefix('(')?.strip_suffix(')')?.split_once(',')?
+        };
+        let (cheap_name, rich_name) = (cheap_name.trim(), rich_name.trim());
+        // one level of composition only: a nested selector's name would
+        // carry its own comma and could never round-trip through this
+        // parser, so reject selector arms outright
+        if cheap_name.starts_with("bandwidth-aware") || rich_name.starts_with("bandwidth-aware") {
+            return None;
+        }
+        let cheap = by_name(cheap_name, hp)?;
+        let rich = by_name(rich_name, hp)?;
+        return Some(Box::new(BandwidthAware::new(cheap, rich, hp.link_budget as f64)));
+    }
     Some(match name {
         "d-lion-mavo" => Box::new(DLion::new(lion, Aggregation::MajorityVote)),
         "d-lion-avg" => Box::new(DLion::new(lion, Aggregation::Average)),
+        "d-lion-ef" => Box::new(DLionEf::new(lion, Aggregation::MajorityVote)),
+        "d-lion-msync" => {
+            Box::new(DLionMsync::new(lion, Aggregation::MajorityVote, hp.msync_every))
+        }
         "d-signum-mavo" => {
             Box::new(DSignum::new(hp.signum_beta, hp.weight_decay, Aggregation::MajorityVote))
         }
@@ -340,15 +469,19 @@ mod tests {
     #[test]
     fn registry_resolves_all_names() {
         let hp = StrategyHyper::default();
-        for name in ALL_STRATEGIES {
+        for &name in ALL_STRATEGIES.iter().chain(EXTENSION_STRATEGIES.iter()) {
             let s = by_name(name, &hp).unwrap_or_else(|| panic!("unregistered: {name}"));
             assert_eq!(s.name(), name, "name round-trip");
         }
-        // extension baselines resolve too
-        for name in ["qsgd", "ef-signsgd"] {
-            assert!(by_name(name, &hp).is_some(), "extension strategy {name}");
-        }
+        // the bare selector alias resolves to the default pair
+        let ba = by_name("bandwidth-aware", &hp).unwrap();
+        assert_eq!(ba.name(), "bandwidth-aware(d-lion-mavo,g-lion)");
         assert!(by_name("no-such-strategy", &hp).is_none());
+        assert!(by_name("bandwidth-aware(nope,g-lion)", &hp).is_none());
+        assert!(by_name("bandwidth-aware(", &hp).is_none());
+        // nested selectors are rejected (their names cannot round-trip)
+        assert!(by_name("bandwidth-aware(bandwidth-aware,g-lion)", &hp).is_none());
+        assert!(by_name("bandwidth-aware(d-lion-mavo,bandwidth-aware)", &hp).is_none());
     }
 
     #[test]
@@ -363,9 +496,9 @@ mod tests {
                 g
             })
             .collect();
-        for name in ALL_STRATEGIES {
+        for &name in ALL_STRATEGIES.iter().chain(EXTENSION_STRATEGIES.iter()) {
             let strat = by_name(name, &hp).unwrap();
-            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
             let mut server = strat.make_server(n, d);
             let mut params: Vec<Vec<f32>> = vec![vec![0.5f32; d]; n];
             let (up, down) =

@@ -1,0 +1,318 @@
+//! Momentum-synchronized Distributed Lion (Lion Cub's momentum-sync
+//! direction, Ishikawa et al. 2024; Distributed Sign Momentum, Yu et al.
+//! 2024).
+//!
+//! Plain D-Lion keeps each worker's Lion momentum private forever; under
+//! heterogeneous (non-iid) shards the momenta slowly drift apart and the
+//! majority vote degrades. This variant re-synchronizes them every
+//! `msync_every` rounds by shipping a quantized momentum frame alongside
+//! the usual 1-bit update:
+//!
+//! * **Ordinary round** — bit-identical to `d-lion-mavo`: `[TAG_SIGN]`
+//!   uplink into the shared `SignVoteServer`, majority-vote downlink.
+//! * **Sync round** (every `msync_every`-th, i.e. when
+//!   `(step+1) % msync_every == 0`) — the worker appends its
+//!   just-advanced momentum as a bf16 payload ([`crate::comm::half`]):
+//!   `[TAG_SIGN_MOM][sign payload][bf16 momentum]`. The server feeds the
+//!   sign part through the normal vote, averages the decoded momenta in
+//!   f32, and broadcasts `[TAG_MSYNC_DOWN][vote frame][bf16 mean]`.
+//!   Every worker overwrites its momentum with the decoded bf16 mean, so
+//!   worker momenta are **bitwise equal** after every sync round (they
+//!   all decode the same broadcast bytes).
+//!
+//! Amortized bandwidth (Table-1 accounting): the bf16 frame adds
+//! 16/msync_every bits/param to each direction on top of D-Lion MaVo's
+//! 1-bit uplink and 1/1.6-bit downlink.
+
+use super::{
+    frame, sign_family_downlink_bits, Aggregation, ServerLogic, SignVoteServer, Strategy,
+    UpdateDecoder, WorkerLogic, TAG_INTAVG, TAG_MSYNC_DOWN, TAG_SIGN, TAG_SIGN_MOM, TAG_TERN,
+};
+use crate::comm::{half, intavg, sign, tern};
+use crate::optim::lion::Lion;
+use crate::optim::LionParams;
+
+/// Is `step` a momentum-sync round for the given cadence?
+#[inline]
+pub fn is_sync_round(step: usize, msync_every: usize) -> bool {
+    msync_every > 0 && (step + 1) % msync_every == 0
+}
+
+/// Byte length of the inner vote frame at the head of a
+/// `TAG_MSYNC_DOWN` downlink (`d`-parameter model; reads the intavg
+/// worker count from the frame itself).
+fn inner_frame_len(inner: &[u8], d: usize) -> usize {
+    match inner[0] {
+        TAG_SIGN => 1 + sign::packed_len(d),
+        TAG_TERN => 1 + tern::packed_len(d),
+        TAG_INTAVG => {
+            let n = super::read_u16(inner, 1) as usize;
+            3 + intavg::packed_len(d, n)
+        }
+        t => panic!("unexpected inner msync tag {t}"),
+    }
+}
+
+/// Momentum-synchronized D-Lion strategy (factory). Registry name
+/// `d-lion-msync`.
+pub struct DLionMsync {
+    pub hp: LionParams,
+    pub agg: Aggregation,
+    /// sync cadence in rounds (0 disables sync — degenerates to D-Lion).
+    pub msync_every: usize,
+}
+
+impl DLionMsync {
+    pub fn new(hp: LionParams, agg: Aggregation, msync_every: usize) -> Self {
+        DLionMsync { hp, agg, msync_every }
+    }
+}
+
+struct MsyncWorker {
+    lion: Lion,
+    weight_decay: f32,
+    msync_every: usize,
+    decoder: UpdateDecoder,
+}
+
+impl WorkerLogic for MsyncWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, step: usize) -> Vec<u8> {
+        if is_sync_round(step, self.msync_every) {
+            let packed = self.lion.encode_fused(grads);
+            let mut msg =
+                Vec::with_capacity(1 + packed.len() + half::packed_len(self.lion.momentum.len()));
+            msg.push(TAG_SIGN_MOM);
+            msg.extend_from_slice(&packed);
+            msg.extend_from_slice(&half::pack(&self.lion.momentum));
+            msg
+        } else {
+            frame(TAG_SIGN, &self.lion.encode_fused(grads))
+        }
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize) {
+        if is_sync_round(step, self.msync_every) {
+            assert_eq!(downlink[0], TAG_MSYNC_DOWN, "msync expects a sync downlink");
+            let d = params.len();
+            let inner = &downlink[1..];
+            let ilen = inner_frame_len(inner, d);
+            let update = self.decoder.decode(&inner[..ilen]);
+            Lion::apply_aggregated(params, update, lr, self.weight_decay);
+            // Overwrite the local momentum with the broadcast mean: every
+            // worker decodes the same bytes, so momenta become bitwise
+            // equal here.
+            half::unpack_into(&inner[ilen..], &mut self.lion.momentum);
+        } else {
+            let update = self.decoder.decode(downlink);
+            Lion::apply_aggregated(params, update, lr, self.weight_decay);
+        }
+    }
+}
+
+struct MsyncServer {
+    vote: SignVoteServer,
+    nworkers: usize,
+    msync_every: usize,
+    mom_acc: Vec<f32>,
+}
+
+impl ServerLogic for MsyncServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8> {
+        if !is_sync_round(step, self.msync_every) {
+            return self.vote.aggregate(uplinks, lr, step);
+        }
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        let d = self.mom_acc.len();
+        let sign_len = sign::packed_len(d);
+        self.mom_acc.iter_mut().for_each(|a| *a = 0.0);
+        let mut sign_frames: Vec<Vec<u8>> = Vec::with_capacity(self.nworkers);
+        for up in uplinks {
+            assert_eq!(up[0], TAG_SIGN_MOM, "msync server expects sign+momentum uplinks");
+            sign_frames.push(frame(TAG_SIGN, &up[1..1 + sign_len]));
+            half::accumulate(&up[1 + sign_len..], &mut self.mom_acc);
+        }
+        let inv = 1.0 / self.nworkers as f32;
+        for a in self.mom_acc.iter_mut() {
+            *a *= inv;
+        }
+        let inner = self.vote.aggregate(&sign_frames, lr, step);
+        let mut msg = Vec::with_capacity(1 + inner.len() + half::packed_len(d));
+        msg.push(TAG_MSYNC_DOWN);
+        msg.extend_from_slice(&inner);
+        msg.extend_from_slice(&half::pack(&self.mom_acc));
+        msg
+    }
+}
+
+impl Strategy for DLionMsync {
+    fn name(&self) -> String {
+        "d-lion-msync".into()
+    }
+
+    fn make_worker(&self, _worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(MsyncWorker {
+            lion: Lion::new(dim, self.hp),
+            weight_decay: self.hp.weight_decay,
+            msync_every: self.msync_every,
+            decoder: UpdateDecoder::new(dim),
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(MsyncServer {
+            vote: SignVoteServer::new(nworkers, dim, self.agg),
+            nworkers,
+            msync_every: self.msync_every,
+            mom_acc: vec![0.0; dim],
+        })
+    }
+
+    /// Amortized over the cadence: 1-bit sign + a 16-bit bf16 momentum
+    /// frame every `msync_every` rounds.
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        let sync = if self.msync_every > 0 { 16.0 / self.msync_every as f64 } else { 0.0 };
+        1.0 + sync
+    }
+
+    fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
+        let sync = if self.msync_every > 0 { 16.0 / self.msync_every as f64 } else { 0.0 };
+        sign_family_downlink_bits(self.agg, nworkers) + sync
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk(every: usize) -> DLionMsync {
+        DLionMsync::new(
+            LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.01 },
+            Aggregation::MajorityVote,
+            every,
+        )
+    }
+
+    fn rand_grads(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect()
+    }
+
+    #[test]
+    fn momenta_bitwise_equal_after_sync_round() {
+        // Diverge momenta with per-worker gradients, then check through
+        // the wire: the sync round after a resync, fed *identical*
+        // gradients, must produce bitwise-identical bf16 momentum
+        // payloads from every worker (possible only if the resynced
+        // momenta were bitwise equal).
+        let (d, n, every) = (67, 3, 2);
+        let strat = mk(every);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.2f32; d]; n];
+        let mut rng = Rng::new(0x515);
+        // steps 0..=1: per-worker grads, momenta diverge; step 1 syncs.
+        for step in 0..2 {
+            let grads = rand_grads(&mut rng, n, d);
+            super::super::run_round(&mut workers, server.as_mut(), &mut params, &grads, 0.01, step);
+        }
+        // step 2 (ordinary), step 3 (sync): identical gradient everywhere.
+        let mut shared = vec![0.0f32; d];
+        rng.fill_normal(&mut shared, 1.0);
+        let grads = vec![shared; n];
+        super::super::run_round(&mut workers, server.as_mut(), &mut params, &grads, 0.01, 2);
+        let ups: Vec<Vec<u8>> =
+            workers.iter_mut().zip(&grads).map(|(w, g)| w.encode(g, 0.01, 3)).collect();
+        let sign_len = sign::packed_len(d);
+        for up in &ups {
+            assert_eq!(up[0], TAG_SIGN_MOM);
+            assert_eq!(
+                up[1 + sign_len..],
+                ups[0][1 + sign_len..],
+                "momentum payloads differ after resync"
+            );
+        }
+        // Sanity: before any sync, divergent grads yield divergent momenta.
+        let strat2 = mk(1); // sync every round => first round already ships momenta
+        let mut w2: Vec<_> = (0..n).map(|i| strat2.make_worker(i, n, d)).collect();
+        let grads = rand_grads(&mut rng, n, d);
+        let ups2: Vec<Vec<u8>> =
+            w2.iter_mut().zip(&grads).map(|(w, g)| w.encode(g, 0.01, 0)).collect();
+        assert!(
+            (1..n).any(|w| ups2[w][1 + sign_len..] != ups2[0][1 + sign_len..]),
+            "divergent grads should give divergent momentum frames"
+        );
+    }
+
+    #[test]
+    fn ordinary_rounds_are_bitwise_dlion() {
+        // With the sync cadence never firing inside the horizon, msync
+        // must reproduce plain d-lion-mavo trajectories bit-for-bit.
+        let (d, n) = (41, 3);
+        let ms = mk(1000);
+        let dl = super::super::DLion::new(ms.hp, Aggregation::MajorityVote);
+        let mut wa: Vec<_> = (0..n).map(|i| ms.make_worker(i, n, d)).collect();
+        let mut wb: Vec<_> = (0..n).map(|i| dl.make_worker(i, n, d)).collect();
+        let mut sa = ms.make_server(n, d);
+        let mut sb = dl.make_server(n, d);
+        let mut pa: Vec<Vec<f32>> = vec![vec![0.3f32; d]; n];
+        let mut pb = pa.clone();
+        let mut rng = Rng::new(0x516);
+        for step in 0..30 {
+            let grads = rand_grads(&mut rng, n, d);
+            super::super::run_round(&mut wa, sa.as_mut(), &mut pa, &grads, 0.01, step);
+            super::super::run_round(&mut wb, sb.as_mut(), &mut pb, &grads, 0.01, step);
+        }
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn sync_round_frames_carry_the_bf16_momentum() {
+        let (d, n, every) = (30, 2, 3);
+        let strat = mk(every);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.0f32; d]; n];
+        let mut rng = Rng::new(0x517);
+        for step in 0..6 {
+            let grads = rand_grads(&mut rng, n, d);
+            let ups: Vec<Vec<u8>> =
+                workers.iter_mut().zip(&grads).map(|(w, g)| w.encode(g, 0.01, step)).collect();
+            let expect_sync = is_sync_round(step, every);
+            for up in &ups {
+                if expect_sync {
+                    assert_eq!(up[0], TAG_SIGN_MOM, "step {step}");
+                    assert_eq!(up.len(), 1 + sign::packed_len(d) + half::packed_len(d));
+                } else {
+                    assert_eq!(up[0], TAG_SIGN, "step {step}");
+                    assert_eq!(up.len(), 1 + sign::packed_len(d));
+                }
+            }
+            let down = server.aggregate(&ups, 0.01, step);
+            if expect_sync {
+                assert_eq!(down[0], TAG_MSYNC_DOWN);
+            }
+            for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+                w.apply(p, &down, 0.01, step);
+            }
+            for w in 1..n {
+                assert_eq!(params[0], params[w], "replica divergence at step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn amortized_bits_model() {
+        let s = mk(8);
+        assert_eq!(s.uplink_bits_per_param(3), 1.0 + 2.0);
+        assert_eq!(s.downlink_bits_per_param(3), 1.0 + 2.0);
+        assert_eq!(s.downlink_bits_per_param(4), 1.6 + 2.0);
+        let never = mk(0);
+        assert_eq!(never.uplink_bits_per_param(3), 1.0);
+    }
+}

@@ -1,0 +1,306 @@
+//! Bandwidth-aware strategy selection — the Lion Cub observation that
+//! the best compressor depends on the link, made operational: wrap two
+//! registered strategies (a *cheap* one and a *rich* one) and pick
+//! per-round whichever the link budget affords.
+//!
+//! The selector is a deterministic token bucket over the strategies'
+//! analytic Table-1 models ([`Strategy::uplink_bits_per_param`] +
+//! [`Strategy::downlink_bits_per_param`]). Every round must spend at
+//! least the cheap arm's cost, so the bucket accrues the *net* credit
+//! `link_budget − cheap` per round (clamped to `[0, rich − cheap]`);
+//! when the credit covers the rich arm's surcharge `rich − cheap`, the
+//! rich round runs and the surcharge is deducted. Worker and server
+//! replay the identical schedule (it is a pure function of the budget
+//! and the two cost models), so no selection bit ever crosses the wire
+//! — the frames are the wrapped strategies' frames, unchanged.
+//!
+//! This makes `link_budget` a true cap: long-run spend is
+//! `min(max(budget, cheap), rich)` bits/param/round — feasible budgets
+//! are met exactly (header slack aside), budgets below the cheap cost
+//! degenerate to always-cheap (the bucket never accrues), and budgets
+//! at or above the rich cost run rich every round.
+//!
+//! Each round's gradient flows through the **chosen arm only** — the
+//! idle arm's `encode` is never called, so strategies whose encode
+//! assumes its frame ships (residual accumulators like DGC/GradDrop or
+//! the EF variants: they clear sent mass, or bank exactly the
+//! compression error) keep their invariants intact. The trade-off is
+//! that each arm's optimizer state tracks only the subsequence of
+//! rounds it served, which is the honest semantics of per-round
+//! selection.
+
+use super::{ServerLogic, Strategy, WorkerLogic};
+
+/// Deterministic token-bucket schedule shared by workers, the server,
+/// and the analytic bandwidth model.
+#[derive(Clone, Copy, Debug)]
+pub struct BucketSchedule {
+    /// net credit accrued per round: budget − cheap cost (bits/param).
+    gain: f64,
+    /// rich arm's surcharge over the cheap arm: rich − cheap cost.
+    surcharge: f64,
+    credit: f64,
+}
+
+impl BucketSchedule {
+    pub fn new(budget: f64, cheap_cost: f64, rich_cost: f64) -> Self {
+        BucketSchedule {
+            gain: budget - cheap_cost,
+            surcharge: rich_cost - cheap_cost,
+            credit: 0.0,
+        }
+    }
+
+    /// Advance one round; returns true when the rich strategy runs.
+    /// Order matters: accrue, fire, deduct, and only then clamp the
+    /// leftover to `[0, surcharge]` — clamping before the fire check
+    /// would destroy earned credit and systematically underspend
+    /// budgets whose net gain does not divide the surcharge. The final
+    /// clamp keeps an infeasible budget (below the cheap cost) from
+    /// accruing and bounds any banked burst to one rich round. A
+    /// non-positive surcharge (the "rich" arm is no costlier than the
+    /// cheap one) always runs rich.
+    pub fn next(&mut self) -> bool {
+        let cap = self.surcharge.max(0.0);
+        self.credit += self.gain;
+        let rich = self.credit >= self.surcharge;
+        if rich {
+            self.credit -= self.surcharge;
+        }
+        self.credit = self.credit.clamp(0.0, cap);
+        rich
+    }
+}
+
+/// Bandwidth-aware meta-strategy (factory). Registry names:
+/// `bandwidth-aware` (defaults to wrapping `d-lion-mavo` and `g-lion`)
+/// or `bandwidth-aware(<cheap>,<rich>)` for any two registered names.
+pub struct BandwidthAware {
+    pub cheap: Box<dyn Strategy>,
+    pub rich: Box<dyn Strategy>,
+    /// link budget in bits/param/round, uplink + downlink combined.
+    pub link_budget: f64,
+}
+
+impl BandwidthAware {
+    pub fn new(cheap: Box<dyn Strategy>, rich: Box<dyn Strategy>, link_budget: f64) -> Self {
+        BandwidthAware { cheap, rich, link_budget }
+    }
+
+    /// Round cost of a strategy under the selector's accounting.
+    fn cost(s: &dyn Strategy, nworkers: usize) -> f64 {
+        s.uplink_bits_per_param(nworkers) + s.downlink_bits_per_param(nworkers)
+    }
+
+    fn schedule(&self, nworkers: usize) -> BucketSchedule {
+        BucketSchedule::new(
+            self.link_budget,
+            Self::cost(self.cheap.as_ref(), nworkers),
+            Self::cost(self.rich.as_ref(), nworkers),
+        )
+    }
+
+    /// The rich-round fraction over `horizon` rounds (what the analytic
+    /// bits/param model amortizes over).
+    fn rich_fraction(&self, nworkers: usize, horizon: usize) -> f64 {
+        let mut sched = self.schedule(nworkers);
+        let rich = (0..horizon).filter(|_| sched.next()).count();
+        rich as f64 / horizon as f64
+    }
+}
+
+struct SelectWorker {
+    cheap: Box<dyn WorkerLogic>,
+    rich: Box<dyn WorkerLogic>,
+    sched: BucketSchedule,
+    rich_now: bool,
+}
+
+impl WorkerLogic for SelectWorker {
+    fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8> {
+        self.rich_now = self.sched.next();
+        // Only the chosen arm sees this round's gradient: encoding the
+        // idle arm would break residual accumulators (their encode
+        // assumes the frame ships) and would waste a dense encode per
+        // cheap round for strategies like g-lion.
+        if self.rich_now {
+            self.rich.encode(grads, lr, step)
+        } else {
+            self.cheap.encode(grads, lr, step)
+        }
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize) {
+        if self.rich_now {
+            self.rich.apply(params, downlink, lr, step);
+        } else {
+            self.cheap.apply(params, downlink, lr, step);
+        }
+    }
+}
+
+struct SelectServer {
+    cheap: Box<dyn ServerLogic>,
+    rich: Box<dyn ServerLogic>,
+    sched: BucketSchedule,
+}
+
+impl ServerLogic for SelectServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8> {
+        if self.sched.next() {
+            self.rich.aggregate(uplinks, lr, step)
+        } else {
+            self.cheap.aggregate(uplinks, lr, step)
+        }
+    }
+}
+
+impl Strategy for BandwidthAware {
+    fn name(&self) -> String {
+        format!("bandwidth-aware({},{})", self.cheap.name(), self.rich.name())
+    }
+
+    fn make_worker(&self, worker: usize, nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(SelectWorker {
+            cheap: self.cheap.make_worker(worker, nworkers, dim),
+            rich: self.rich.make_worker(worker, nworkers, dim),
+            sched: self.schedule(nworkers),
+            rich_now: false,
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(SelectServer {
+            cheap: self.cheap.make_server(nworkers, dim),
+            rich: self.rich.make_server(nworkers, dim),
+            sched: self.schedule(nworkers),
+        })
+    }
+
+    fn uplink_bits_per_param(&self, nworkers: usize) -> f64 {
+        let f = self.rich_fraction(nworkers, AMORTIZE_HORIZON);
+        f * self.rich.uplink_bits_per_param(nworkers)
+            + (1.0 - f) * self.cheap.uplink_bits_per_param(nworkers)
+    }
+
+    fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
+        let f = self.rich_fraction(nworkers, AMORTIZE_HORIZON);
+        f * self.rich.downlink_bits_per_param(nworkers)
+            + (1.0 - f) * self.cheap.downlink_bits_per_param(nworkers)
+    }
+}
+
+/// Horizon the analytic model amortizes the schedule over. The bucket
+/// schedule is eventually periodic with a short period, so this is far
+/// past mixing for any realistic budget.
+const AMORTIZE_HORIZON: usize = 10_000;
+
+#[cfg(test)]
+mod tests {
+    use super::super::{by_name, run_round, StrategyHyper};
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk(budget: f32) -> Box<dyn Strategy> {
+        let hp = StrategyHyper { link_budget: budget, ..Default::default() };
+        by_name("bandwidth-aware(d-lion-mavo,g-lion)", &hp).unwrap()
+    }
+
+    #[test]
+    fn bucket_alternates_at_half_rich_budget() {
+        // cheap = d-lion-mavo odd N (1+1=2), rich = g-lion (64). Budget 33
+        // nets 31 credit/round against a 62 surcharge: rich every other
+        // round exactly, average spend (2+64)/2 = 33 = the budget.
+        let mut s = BucketSchedule::new(33.0, 2.0, 64.0);
+        let pattern: Vec<bool> = (0..8).map(|_| s.next()).collect();
+        assert_eq!(pattern, vec![false, true, false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn degenerate_budgets() {
+        // Budget equal to the cheap cost: zero net gain, never rich.
+        let mut s = BucketSchedule::new(2.0, 2.0, 64.0);
+        assert!((0..320).all(|_| !s.next()));
+        // Budget below the cheap cost: infeasible, still never rich.
+        let mut s = BucketSchedule::new(1.0, 2.0, 64.0);
+        assert!((0..64).all(|_| !s.next()));
+        // Budget at/above the rich cost: always rich.
+        let mut s = BucketSchedule::new(64.0, 2.0, 64.0);
+        assert!((0..16).all(|_| s.next()));
+        // Slightly feasible: gain 2 vs surcharge 62 → rich every 31st.
+        let mut s = BucketSchedule::new(4.0, 2.0, 64.0);
+        let fired = (0..124).filter(|_| s.next()).count();
+        assert_eq!(fired, 4, "4 rich rounds in 124 at 2 net bits/round");
+    }
+
+    #[test]
+    fn non_divisible_budget_is_met_not_underspent() {
+        // gain 40 vs surcharge 62 does not divide evenly; leftover
+        // credit after a fire must carry over (not be clamped away) so
+        // the long-run spend converges to the budget, not below it.
+        let (budget, cheap, rich) = (42.0, 2.0, 64.0);
+        let mut s = BucketSchedule::new(budget, cheap, rich);
+        let rounds = 10_000;
+        let fired = (0..rounds).filter(|_| s.next()).count() as f64;
+        let spend = (cheap * (rounds as f64 - fired) + rich * fired) / rounds as f64;
+        assert!(
+            (spend - budget).abs() < 0.1,
+            "long-run spend {spend:.3} should meet the {budget} budget"
+        );
+    }
+
+    #[test]
+    fn worker_and_server_schedules_agree_and_replicas_hold() {
+        let (d, n) = (48, 3);
+        let strat = mk(33.0);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];
+        let mut rng = Rng::new(0xBA);
+        for step in 0..20 {
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut g = vec![0.0f32; d];
+                    rng.fill_normal(&mut g, 1.0);
+                    g
+                })
+                .collect();
+            let (up, _) =
+                run_round(&mut workers, server.as_mut(), &mut params, &grads, 0.01, step);
+            // alternating schedule: odd steps rich (dense), even cheap (sign)
+            let per_worker = up / n;
+            if step % 2 == 1 {
+                assert_eq!(per_worker, 1 + 4 * d, "step {step}: expected dense frames");
+            } else {
+                assert_eq!(per_worker, 1 + d.div_ceil(8), "step {step}: expected sign frames");
+            }
+            for w in 1..n {
+                assert_eq!(params[0], params[w], "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn amortized_model_is_budget_shaped() {
+        let n = 3;
+        // alternating: (2 + 64)/2 = 33 total; up = (1+32)/2, down likewise
+        let s = mk(33.0);
+        assert!((s.uplink_bits_per_param(n) - 16.5).abs() < 0.05);
+        assert!((s.downlink_bits_per_param(n) - 16.5).abs() < 0.05);
+        // generous budget: pure rich
+        let s = mk(128.0);
+        assert_eq!(s.uplink_bits_per_param(n), 32.0);
+        // budget exactly the cheap cost: pure cheap, spend == budget
+        let s = mk(2.0);
+        assert_eq!(s.uplink_bits_per_param(n), 1.0);
+        assert_eq!(s.downlink_bits_per_param(n), 1.0);
+    }
+
+    #[test]
+    fn name_round_trips_through_registry() {
+        let s = mk(4.0);
+        assert_eq!(s.name(), "bandwidth-aware(d-lion-mavo,g-lion)");
+        let again = by_name(&s.name(), &StrategyHyper::default()).unwrap();
+        assert_eq!(again.name(), s.name());
+    }
+}

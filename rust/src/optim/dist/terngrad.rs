@@ -126,7 +126,7 @@ impl Strategy for TernGrad {
         "terngrad".into()
     }
 
-    fn make_worker(&self, worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+    fn make_worker(&self, worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
         Box::new(TernGradWorker {
             rng: Rng::new(QUANT_SEED ^ worker as u64),
             sgd: SgdMomentum::new(dim, self.hp.sgd_momentum, self.hp.weight_decay),
@@ -229,7 +229,7 @@ impl Strategy for Qsgd {
         "qsgd".into()
     }
 
-    fn make_worker(&self, worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+    fn make_worker(&self, worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
         Box::new(QsgdWorker {
             rng: Rng::new(QUANT_SEED ^ 0x0515_0000 ^ worker as u64),
             sgd: SgdMomentum::new(dim, self.hp.sgd_momentum, self.hp.weight_decay),
@@ -329,7 +329,7 @@ impl Strategy for EfSignSgd {
         "ef-signsgd".into()
     }
 
-    fn make_worker(&self, _worker: usize, dim: usize) -> Box<dyn WorkerLogic> {
+    fn make_worker(&self, _worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
         Box::new(EfSignSgdWorker {
             sgd: SgdMomentum::new(dim, self.hp.sgd_momentum, self.hp.weight_decay),
             error: vec![0.0; dim],
@@ -365,7 +365,7 @@ mod tests {
         let d = 8;
         let hp = StrategyHyper::default();
         let strat = TernGrad::new(hp);
-        let mut w = strat.make_worker(0, d);
+        let mut w = strat.make_worker(0, 1, d);
         let grads: Vec<f32> = vec![2.0, -1.0, 0.5, 0.0, -2.0, 1.5, -0.25, 1.0];
         let reps = 4000;
         let mut mean = vec![0.0f64; d];
@@ -390,7 +390,7 @@ mod tests {
         let n = 4;
         let hp = StrategyHyper::default();
         let strat = TernGrad::new(hp);
-        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
         let mut server = strat.make_server(n, d);
         let mut rng = Rng::new(0x7E);
         let grads: Vec<Vec<f32>> = (0..n)
@@ -418,7 +418,7 @@ mod tests {
         let d = 64;
         let hp = StrategyHyper::default();
         let strat = Qsgd::new(hp);
-        let mut w = strat.make_worker(0, d);
+        let mut w = strat.make_worker(0, 1, d);
         let mut server = strat.make_server(1, d);
         let mut g = vec![0.0f32; d];
         Rng::new(0x05).fill_normal(&mut g, 3.0);
@@ -439,7 +439,7 @@ mod tests {
         let d = 16;
         let hp = StrategyHyper::default();
         let strat = EfSignSgd::new(hp);
-        let mut w = strat.make_worker(0, d);
+        let mut w = strat.make_worker(0, 1, d);
         let mut server = strat.make_server(1, d);
         let g: Vec<f32> = (0..d).map(|i| (i as f32 - 7.5) / 4.0).collect();
         let reps = 400;

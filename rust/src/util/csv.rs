@@ -21,10 +21,13 @@ impl CsvWriter {
         Ok(CsvWriter { out, ncols: header.len() })
     }
 
-    /// Write one row of string-formatted cells.
+    /// Write one row of string-formatted cells. Cells containing a
+    /// comma, quote, or newline are quoted per RFC 4180 (composite
+    /// strategy names like `bandwidth-aware(a,b)` carry commas).
     pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
         debug_assert_eq!(cells.len(), self.ncols, "csv row width mismatch");
-        writeln!(self.out, "{}", cells.join(","))
+        let quoted: Vec<String> = cells.iter().map(|c| quote_cell(c)).collect();
+        writeln!(self.out, "{}", quoted.join(","))
     }
 
     /// Write a row of f64 values with `{:.6}` formatting.
@@ -35,6 +38,16 @@ impl CsvWriter {
 
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.out.flush()
+    }
+}
+
+/// RFC 4180 quoting: wrap in quotes (doubling embedded quotes) only when
+/// the cell contains a comma, quote, or line break.
+fn quote_cell(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') || cell.contains('\r') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
     }
 }
 
@@ -65,6 +78,34 @@ mod tests {
         assert_eq!(lines[0], "a,b");
         assert_eq!(lines[1], "x,1");
         assert_eq!(lines[2], "1.500000,2.500000");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cells_with_commas_are_quoted() {
+        let dir = std::env::temp_dir().join(format!("dlion_csvq_{}", std::process::id()));
+        let path = dir.join("q.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["strategy", "n"]).unwrap();
+            w.row(&csv_cells!["bandwidth-aware(d-lion-mavo,g-lion)", 4]).unwrap();
+            w.row(&csv_cells!["say \"hi\"", 1]).unwrap();
+            w.flush().unwrap();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = content.lines().collect();
+        assert_eq!(lines[1], "\"bandwidth-aware(d-lion-mavo,g-lion)\",4");
+        assert_eq!(lines[2], "\"say \"\"hi\"\"\",1");
+        // every row still has exactly one unquoted separator
+        for l in &lines[1..] {
+            let mut in_q = false;
+            let seps = l.chars().filter(|&c| {
+                if c == '"' {
+                    in_q = !in_q;
+                }
+                c == ',' && !in_q
+            });
+            assert_eq!(seps.count(), 1, "row {l}");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -160,7 +160,7 @@ fn invariant5_majority_vote_odd_under_flip() {
         let d = grads[0].len();
         let run = |sgn: f32| -> Vec<u8> {
             let strat = DLion::new(hp, Aggregation::MajorityVote);
-            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
             let mut server = strat.make_server(n, d);
             let ups: Vec<_> = workers
                 .iter_mut()
@@ -267,7 +267,7 @@ fn strategy_determinism_same_seed_same_bytes() {
             let d = grads[0].len();
             let run = || {
                 let strat = by_name(name, &hp).unwrap();
-                let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, d)).collect();
+                let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
                 let mut server = strat.make_server(n, d);
                 let ups: Vec<_> = workers
                     .iter_mut()
@@ -279,6 +279,155 @@ fn strategy_determinism_same_seed_same_bytes() {
             run() == run()
         });
     }
+}
+
+#[test]
+fn invariant8_ef_residual_is_exactly_the_compression_error() {
+    // d-lion-ef: replay the worker's recursion from public pieces. The
+    // residual e_{t+1} = p_t − γ_t·sign(p_t) is by construction exactly
+    // what the 1-bit frame dropped; if the worker's residual ever
+    // deviated, its next frame would diverge from the replayed one.
+    let hp = StrategyHyper::default();
+    forall_explain(0xB01, 25, |r| {
+        let d = 1 + r.below(300);
+        let steps = 5 + r.below(40);
+        let grads: Vec<Vec<f32>> = (0..steps).map(|_| gen_vec_normal(r, d, d, 1.0)).collect();
+        grads
+    }, |grads| {
+        let d = grads[0].len();
+        let strat = by_name("d-lion-ef", &hp).unwrap();
+        let mut worker = strat.make_worker(0, 1, d);
+        let mut momentum = vec![0.0f32; d];
+        let mut error = vec![0.0f32; d];
+        for (step, g) in grads.iter().enumerate() {
+            let up = worker.encode(g, 1e-3, step);
+            // p_t = β1·m + (1−β1)·g + e, from the externally-held state
+            let p: Vec<f32> = momentum
+                .iter()
+                .zip(g)
+                .zip(&error)
+                .map(|((&m, &gg), &e)| hp.beta1 * m + (1.0 - hp.beta1) * gg + e)
+                .collect();
+            let expect = sign::pack_f32(&p);
+            if up[1..] != expect[..] {
+                return Err(format!("step {step}: EF frame diverged from residual recursion"));
+            }
+            let scale = (p.iter().map(|&x| x.abs() as f64).sum::<f64>() / d as f64) as f32;
+            for (e, &pp) in error.iter_mut().zip(&p) {
+                *e = pp - scale * bsign(pp);
+            }
+            for (m, &gg) in momentum.iter_mut().zip(g) {
+                *m = hp.beta2 * *m + (1.0 - hp.beta2) * gg;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn invariant9_msync_round_leaves_momenta_bitwise_equal() {
+    // d-lion-msync: after a sync round every worker holds the decoded
+    // bf16 mean momentum — bitwise equal across workers. Observed on the
+    // wire: the next sync round's momentum payloads are identical when
+    // the interleaving gradients are shared, and the payload equals the
+    // re-advanced broadcast mean.
+    forall_explain(0xB02, 20, |r| {
+        let d = 1 + r.below(200);
+        let n = 2 + r.below(4);
+        let pre: Vec<Vec<f32>> = (0..n).map(|_| gen_vec_normal(r, d, d, 1.0)).collect();
+        let shared = gen_vec_normal(r, d, d, 1.0);
+        (pre, shared)
+    }, |(pre, shared)| {
+        let d = pre[0].len();
+        let n = pre.len();
+        let hp = StrategyHyper { msync_every: 2, ..Default::default() };
+        let strat = by_name("d-lion-msync", &hp).unwrap();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];
+        // step 0 (ordinary) + step 1 (sync) with per-worker grads.
+        for step in 0..2 {
+            let ups: Vec<Vec<u8>> = workers
+                .iter_mut()
+                .zip(pre)
+                .map(|(w, g)| w.encode(g, 1e-2, step))
+                .collect();
+            let down = server.aggregate(&ups, 1e-2, step);
+            for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+                w.apply(p, &down, 1e-2, step);
+            }
+        }
+        // step 2 ordinary with a shared gradient, step 3 sync: payloads
+        // must be bitwise identical across workers.
+        let grads = vec![shared.clone(); n];
+        for (step, expect_equal) in [(2usize, false), (3usize, true)] {
+            let ups: Vec<Vec<u8>> = workers
+                .iter_mut()
+                .zip(&grads)
+                .map(|(w, g)| w.encode(g, 1e-2, step))
+                .collect();
+            if expect_equal {
+                let off = 1 + sign::packed_len(d);
+                for (w, up) in ups.iter().enumerate() {
+                    if up[off..] != ups[0][off..] {
+                        return Err(format!("worker {w}: momentum payload differs post-sync"));
+                    }
+                }
+            }
+            let down = server.aggregate(&ups, 1e-2, step);
+            for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+                w.apply(p, &down, 1e-2, step);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn invariant10_bandwidth_selector_never_exceeds_the_budget() {
+    // The selector's cumulative measured traffic never exceeds the
+    // configured link budget (bits/param/round, up+down, per worker) up
+    // to frame-header slack — for any budget that affords the cheap arm.
+    forall_explain(0xB03, 12, |r| {
+        let d = 256 + r.below(2048);
+        let n = 1 + 2 * r.below(3); // odd: 1, 3, 5
+        let budget = 3.0 + r.uniform() * 61.0; // [3, 64): cheap=2 .. rich=64
+        (d, n, budget)
+    }, |&(d, n, budget)| {
+        let hp = StrategyHyper { link_budget: budget as f32, ..Default::default() };
+        let strat = by_name("bandwidth-aware(d-lion-mavo,g-lion)", &hp).unwrap();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];
+        let mut rng = Rng::new((d + n) as u64);
+        let rounds = 40;
+        let mut total_bits = 0.0f64;
+        for step in 0..rounds {
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut g = vec![0.0f32; d];
+                    rng.fill_normal(&mut g, 1.0);
+                    g
+                })
+                .collect();
+            let (up, down) = dlion::optim::dist::run_round(
+                &mut workers, server.as_mut(), &mut params, &grads, 1e-2, step,
+            );
+            // per-worker accounting, matching the analytic model
+            total_bits += (up + down) as f64 * 8.0 / n as f64;
+        }
+        let spent = total_bits / (rounds as f64 * d as f64);
+        // True-cap bound: the bucket accrues budget−cheap net credit per
+        // round and every rich surcharge is fully funded from it, so
+        // average spend ≤ cheap + (budget−cheap) = budget, up to
+        // frame-header slack (all sampled budgets afford the 2-bit
+        // cheap arm).
+        if spent <= budget + 0.5 {
+            Ok(())
+        } else {
+            Err(format!("d={d} n={n}: spent {spent:.3} bits/param/round vs budget {budget:.3}"))
+        }
+    });
 }
 
 #[test]

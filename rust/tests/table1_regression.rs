@@ -13,10 +13,9 @@ use dlion::util::math::bits_for_count;
 const D: usize = 4096;
 const STEPS: usize = 4;
 
-fn measured_bits(name: &str, n: usize) -> (f64, f64) {
+fn measured_bits_hp(name: &str, n: usize, hp: &StrategyHyper) -> (f64, f64) {
     let task = Quadratic::new(D, 5.0, 0.3, 9);
-    let hp = StrategyHyper::default();
-    let strat = by_name(name, &hp).unwrap();
+    let strat = by_name(name, hp).unwrap();
     let cfg = TrainConfig {
         steps: STEPS,
         batch_per_worker: 2,
@@ -31,6 +30,10 @@ fn measured_bits(name: &str, n: usize) -> (f64, f64) {
         res.total_uplink() as f64 * 8.0 / denom,
         res.total_downlink() as f64 * 8.0 / denom,
     )
+}
+
+fn measured_bits(name: &str, n: usize) -> (f64, f64) {
+    measured_bits_hp(name, n, &StrategyHyper::default())
 }
 
 fn assert_close(measured: f64, analytic: f64, ctx: &str) {
@@ -105,6 +108,73 @@ fn graddrop_uplink_tracks_keep_fraction() {
     let analytic = (64.0 + 64.0 * k) / D as f64;
     assert_close(up, analytic, "graddrop uplink");
     assert_close(down, 32.0, "graddrop downlink");
+}
+
+#[test]
+fn dlion_ef_rides_the_same_one_bit_channels_as_mavo() {
+    // Error feedback is worker-local: the wire must stay at D-Lion rates.
+    for n in [1usize, 3, 5] {
+        let (up, down) = measured_bits("d-lion-ef", n);
+        assert_close(up, 1.0, "ef uplink");
+        assert_close(down, 1.0, "ef downlink (odd n)");
+    }
+}
+
+#[test]
+fn msync_amortized_bits_account_for_the_momentum_frame() {
+    // msync_every = 2 with STEPS = 4 fires exactly 2 sync rounds, so the
+    // measured average equals the amortized model: 1 + 16/2 = 9 bits each
+    // way on top of the odd-N MaVo base.
+    let hp = StrategyHyper { msync_every: 2, ..Default::default() };
+    let n = 3;
+    let (up, down) = measured_bits_hp("d-lion-msync", n, &hp);
+    assert_close(up, 9.0, "msync amortized uplink");
+    assert_close(down, 9.0, "msync amortized downlink");
+    // ...and the strategy's own model agrees with the wire.
+    let strat = by_name("d-lion-msync", &hp).unwrap();
+    assert_close(up, strat.uplink_bits_per_param(n), "msync model uplink");
+    assert_close(down, strat.downlink_bits_per_param(n), "msync model downlink");
+}
+
+#[test]
+fn bandwidth_aware_selector_matches_its_amortized_model() {
+    // Budget 33 against cheap d-lion-mavo (2 bits total, odd N) and rich
+    // g-lion (64): the bucket alternates cheap/rich, so 4 steps hold
+    // exactly two of each and the measurement equals the long-run model.
+    let hp = StrategyHyper { link_budget: 33.0, ..Default::default() };
+    let name = "bandwidth-aware(d-lion-mavo,g-lion)";
+    let n = 3;
+    let (up, down) = measured_bits_hp(name, n, &hp);
+    assert_close(up, 16.5, "selector uplink (half sign, half dense)");
+    assert_close(down, 16.5, "selector downlink");
+    let strat = by_name(name, &hp).unwrap();
+    assert_close(up, strat.uplink_bits_per_param(n), "selector model uplink");
+    assert_close(down, strat.downlink_bits_per_param(n), "selector model downlink");
+    // The measured total respects the configured budget (plus frame-header
+    // slack): the "never exceeds the link budget" contract, on the wire.
+    assert!(
+        up + down <= 33.0 * 1.02,
+        "selector overspent the link budget: {up} + {down} vs 33"
+    );
+}
+
+#[test]
+fn compact_sparse_uplink_is_40_bits_per_entry() {
+    // delta-varint indices ride ~1 byte each at the 4% keep rate: 8-bit
+    // index + 32-bit value = 40 bits/entry, vs 64 for the classic format
+    // (regression for the ROADMAP compact-sparse item).
+    let hp = StrategyHyper { compact_sparse: true, dgc_warmup_steps: 0, ..Default::default() };
+    let k = (0.04f64 * D as f64).ceil();
+    // headers: 8-bit tag + 96-bit (d, k, index_bytes) compact header
+    let analytic = (104.0 + 40.0 * k) / D as f64;
+    for name in ["graddrop", "dgc"] {
+        let (up, down) = measured_bits_hp(name, 4, &hp);
+        assert_close(up, analytic, name);
+        assert_close(down, 32.0, name);
+        // the strategy's analytic model uses the headerless 40·keep rate
+        let strat = by_name(name, &hp).unwrap();
+        assert_close(strat.uplink_bits_per_param(4), 40.0 * 0.04, name);
+    }
 }
 
 #[test]

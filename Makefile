@@ -5,7 +5,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test docs fmt fmt-check bench-quick clean
+.PHONY: verify build test docs fmt fmt-check clippy bench-quick topology clean
 
 ## tier-1 verify: what CI runs (ROADMAP.md)
 verify:
@@ -27,10 +27,18 @@ fmt:
 fmt-check:
 	cd $(CARGO_DIR) && cargo fmt --check
 
+## lint gate CI runs alongside tier-1 (all targets, warnings are errors)
+clippy:
+	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
+
 ## CI-speed smoke pass over the paper-table benches
 bench-quick:
 	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench table1_bandwidth -- --quick
 	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench hotpath -- --quick
+
+## quick pass over the topology × local-steps extension bench
+topology:
+	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench ext_topology -- --quick
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

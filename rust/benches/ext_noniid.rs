@@ -2,36 +2,114 @@
 //! non-i.i.d. data. Each worker's batches are class-skewed with
 //! parameter α ∈ {0, 0.5, 0.9}; α=0 is the paper's i.i.d. setting.
 //!
-//! Question: does the majority vote stay robust when workers' gradient
-//! signs systematically disagree (label skew), compared with gradient
-//! averaging (G-Lion) and update averaging (D-Lion Avg)?
+//! Two questions:
+//! * does the majority vote stay robust when workers' gradient signs
+//!   systematically disagree (label skew), compared with gradient
+//!   averaging (G-Lion) and update averaging (D-Lion Avg)?
+//! * how far do the private Lion momenta drift apart between syncs —
+//!   the failure mode `d-lion-msync` periodically repairs and
+//!   `d-lion-ef` compensates for — as a function of the skew?
+//!
+//! The drift column is the run-mean RMS per-parameter deviation of the
+//! worker momenta from their across-worker mean,
+//! `√(Σ_w ‖m_w − m̄‖² / (n·d))`, probed through
+//! `WorkerLogic::momentum()` after every round ("-" for strategies
+//! whose workers keep no probe-able momentum; G-Lion's replicated
+//! momenta are identical by construction).
 //!
 //! Run: `cargo bench --bench ext_noniid [-- --quick]`
 
 mod common;
 
 use dlion::bench_utils::Table;
-use dlion::cluster::run_sequential;
-use dlion::optim::dist::by_name;
+use dlion::cluster::TrainConfig;
+use dlion::optim::dist::{by_name, run_round, Strategy};
 use dlion::tasks::data::VisionData;
 use dlion::tasks::mlp::{MlpVision, Sharding};
+use dlion::tasks::GradTask;
+use dlion::util::math::cosine_lr;
+use dlion::util::Rng;
 use std::sync::Arc;
 
-const METHODS: &[&str] = &["g-lion", "d-lion-avg", "d-lion-mavo"];
+const METHODS: &[&str] = &["g-lion", "d-lion-avg", "d-lion-mavo", "d-lion-ef", "d-lion-msync"];
+
+/// RMS per-parameter deviation of the worker momenta from their mean.
+fn momentum_drift(momenta: &[&[f32]]) -> f64 {
+    let n = momenta.len();
+    let d = momenta[0].len();
+    let mut sq = 0.0f64;
+    for i in 0..d {
+        let mean: f64 = momenta.iter().map(|m| m[i] as f64).sum::<f64>() / n as f64;
+        sq += momenta.iter().map(|m| (m[i] as f64 - mean).powi(2)).sum::<f64>();
+    }
+    (sq / (n * d) as f64).sqrt()
+}
+
+/// The sequential training loop, replicated by hand so the worker
+/// momenta stay probe-able between rounds. Returns (final accuracy,
+/// run-mean momentum drift if the strategy exposes momenta).
+fn run_with_drift(
+    task: &dyn GradTask,
+    strategy: &dyn Strategy,
+    nworkers: usize,
+    cfg: &TrainConfig,
+) -> (f64, Option<f64>) {
+    // This loop mirrors run_sequential's flat every-step round only —
+    // it exists so the momenta stay probe-able between rounds. Refuse
+    // strategies whose cadence the cluster engine would handle
+    // differently rather than silently training them at H = 1.
+    assert_eq!(
+        strategy.local_steps(),
+        1,
+        "run_with_drift drives flat every-step rounds; {} needs the cluster engine",
+        strategy.name()
+    );
+    let d = task.dim();
+    let mut root = Rng::new(cfg.seed);
+    let params0 = task.init_params(&mut root);
+    let mut params: Vec<Vec<f32>> = vec![params0; nworkers];
+    let mut rngs: Vec<Rng> = (0..nworkers).map(|i| root.fork(i as u64)).collect();
+    let mut workers: Vec<_> = (0..nworkers).map(|i| strategy.make_worker(i, nworkers, d)).collect();
+    let mut server = strategy.make_server(nworkers, d);
+    let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; nworkers];
+    let mut drift_sum = 0.0f64;
+    let mut drift_rounds = 0usize;
+    for step in 0..cfg.steps {
+        let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
+        for (w, ((g, p), r)) in grads.iter_mut().zip(&params).zip(rngs.iter_mut()).enumerate() {
+            let _ = task.minibatch_grad_worker(p, r, cfg.batch_per_worker, g, w, nworkers);
+        }
+        run_round(&mut workers, server.as_mut(), &mut params, &grads, lr, step);
+        let momenta: Option<Vec<&[f32]>> = workers.iter().map(|w| w.momentum()).collect();
+        if let Some(moms) = momenta {
+            drift_sum += momentum_drift(&moms);
+            drift_rounds += 1;
+        }
+    }
+    let acc = task.evaluate(&params[0]).accuracy.unwrap_or(0.0);
+    let drift = (drift_rounds > 0).then(|| drift_sum / drift_rounds as f64);
+    (acc, drift)
+}
 
 fn main() {
     let quick = dlion::bench_utils::quick_mode();
     let alphas = [0.0f64, 0.5, 0.9];
     let k = 8; // label skew needs several workers to matter
     let mut header: Vec<String> = vec!["method".into()];
-    header.extend(alphas.iter().map(|a| format!("acc @ α={a}")));
+    for a in &alphas {
+        header.push(format!("acc @ α={a}"));
+        header.push(format!("drift @ α={a}"));
+    }
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(
         &format!("Extension — non-i.i.d. class skew (k={k} workers)"),
         &header_refs,
     );
     for &method in METHODS {
-        let (lr, hp) = common::table2_hparams(method);
+        let (lr, mut hp) = common::table2_hparams(method);
+        // resync often enough for the drift repair to show inside the
+        // bench horizon
+        hp.msync_every = 16;
         let strategy = by_name(method, &hp).unwrap();
         let mut row = vec![method.to_string()];
         for &alpha in &alphas {
@@ -41,15 +119,20 @@ fn main() {
             let task = MlpVision::with_sharding(data, 64, sharding);
             let mut cfg = common::train_cfg(if quick { 120 } else { 800 }, 42);
             cfg.base_lr = lr;
-            let res = run_sequential(&task, strategy.as_ref(), k, &cfg);
-            let acc = res.final_eval.unwrap().accuracy.unwrap();
+            let (acc, drift) = run_with_drift(&task, strategy.as_ref(), k, &cfg);
             row.push(format!("{acc:.3}"));
-            eprintln!("noniid: {method} α={alpha} -> {acc:.3}");
+            row.push(drift.map_or("-".into(), |x| format!("{x:.5}")));
+            eprintln!(
+                "noniid: {method} α={alpha} -> acc {acc:.3} drift {}",
+                drift.map_or("-".into(), |x| format!("{x:.5}"))
+            );
         }
         t.row(row);
     }
     t.print();
     t.write_csv(common::out_dir().join("ext_noniid.csv")).unwrap();
     println!("Footnote-3 check: accuracy should degrade gracefully with α for all");
-    println!("methods, with MaVo staying within a few points of G-Lion.");
+    println!("methods, with MaVo staying within a few points of G-Lion; momentum");
+    println!("drift should grow with α and sit lower for d-lion-msync (periodic");
+    println!("bf16 resync) than for plain d-lion-mavo.");
 }

@@ -1,0 +1,82 @@
+//! Extension — topology-aware rounds: group sizes × local-step windows
+//! against flat every-step d-lion-mavo.
+//!
+//! Two orthogonal levers over the same 1-bit frames:
+//! * **Hierarchical majority vote** (`hier:<g>`): workers uplink to a
+//!   group aggregator that ships exact `intavg` vote partials to the
+//!   root — the trajectory is bit-identical to the flat star, but the
+//!   root's inbound link carries ⌈log₂(g+1)⌉ bits/param per *group*
+//!   instead of 1 bit/param per *worker* (the `agg up` column).
+//! * **Local steps** (`d-lion-local(H)`): one wire round every H
+//!   optimizer steps, amortizing the worker edge to 1/H bits/param/step
+//!   at some accuracy cost from the staler aggregation.
+//!
+//! Worker-edge columns are per worker per optimizer step (Table-1
+//! normalization); the `agg` columns are the root link's total
+//! bits/param per step (all groups combined).
+//!
+//! Run: `cargo bench --bench ext_topology [-- --quick]`
+
+mod common;
+
+use dlion::bench_utils::Table;
+use dlion::cluster::run_sequential;
+use dlion::cluster::topology::Topology;
+use dlion::optim::dist::by_name;
+use dlion::tasks::GradTask;
+
+fn main() {
+    let quick = dlion::bench_utils::quick_mode();
+    let k = 8;
+    let steps = if quick { 120 } else { 800 };
+    let cases: &[(&str, Topology)] = &[
+        ("d-lion-mavo", Topology::Star),
+        ("d-lion-mavo", Topology::Hierarchical { group_size: 2 }),
+        ("d-lion-mavo", Topology::Hierarchical { group_size: 4 }),
+        ("d-lion-local(2)", Topology::Star),
+        ("d-lion-local(4)", Topology::Star),
+        ("d-lion-local(8)", Topology::Star),
+        ("d-lion-local(4)", Topology::Hierarchical { group_size: 4 }),
+    ];
+    let mut t = Table::new(
+        &format!("Extension — topology × local steps (k={k} workers, {steps} steps)"),
+        &[
+            "method",
+            "topology",
+            "final acc",
+            "up b/p/step",
+            "down b/p/step",
+            "agg up b/p/step",
+            "agg down b/p/step",
+        ],
+    );
+    for &(method, topo) in cases {
+        let (lr, hp) = common::table2_hparams(method);
+        let strategy = by_name(method, &hp).unwrap();
+        let task = common::vision_task(42);
+        let mut cfg = common::train_cfg(steps, 42);
+        cfg.base_lr = lr;
+        cfg.topology = topo;
+        let d = task.dim();
+        let res = run_sequential(&task, strategy.as_ref(), k, &cfg);
+        let denom_worker = (d * k * res.history.len()) as f64;
+        let denom_link = (d * res.history.len()) as f64;
+        let acc = res.final_eval.as_ref().unwrap().accuracy.unwrap_or(0.0);
+        t.row(vec![
+            method.to_string(),
+            topo.to_string(),
+            format!("{acc:.3}"),
+            format!("{:.3}", res.total_uplink() as f64 * 8.0 / denom_worker),
+            format!("{:.3}", res.total_downlink() as f64 * 8.0 / denom_worker),
+            format!("{:.3}", res.total_agg_uplink() as f64 * 8.0 / denom_link),
+            format!("{:.3}", res.total_agg_downlink() as f64 * 8.0 / denom_link),
+        ]);
+        eprintln!("topology: {method} @ {topo} -> acc {acc:.3}");
+    }
+    t.print();
+    t.write_csv(common::out_dir().join("ext_topology.csv")).unwrap();
+    println!("Checks: every hier row's accuracy equals the flat d-lion-mavo row");
+    println!("(vote partials are exact); d-lion-local(H) divides the worker-edge");
+    println!("bits by H; the root link (agg up) pays ceil(log2(g+1)) bits/param");
+    println!("per group — cheaper than relaying g sign frames once g > 2.");
+}

@@ -67,12 +67,16 @@ COMMANDS:
   sweep       strategies × workers × seeds sweep, CSV to --out dir
   bandwidth   print the Table-1 bandwidth matrix (--dim, --workers)
   strategies  list registered distributed strategies (core + extensions:
-              d-lion-ef, d-lion-msync, bandwidth-aware(<cheap>,<rich>))
+              d-lion-ef, d-lion-msync, d-lion-local(<H>),
+              bandwidth-aware(<cheap>,<rich>))
   lm          train the AOT transformer (--artifacts artifacts/,
               --strategy d-lion-mavo, --workers 4, --steps 200)
   help        this text
 
 Overrides use dotted keys, e.g.: train.steps=500 hyper.weight_decay=0.01
+topology=hier:4 routes rounds worker→group-aggregator→root (default
+star); hyper.local_steps=<H> sets the window for the bare d-lion-local
+alias.
 ";
 
 /// Entry point used by main.rs (kept here so it is unit-testable).
@@ -133,8 +137,9 @@ fn cmd_train(args: &Args) -> Result<i32> {
     let exp = load_experiment(args)?;
     let hp = exp.hyper;
     for strat_name in &exp.strategies {
-        let strategy = by_name(strat_name, &hp)
-            .ok_or_else(|| DlionError::Config(format!("unknown strategy '{strat_name}'")))?;
+        // by_name's error message names the exact parse failure; let it
+        // surface verbatim (malformed composite names included)
+        let strategy = by_name(strat_name, &hp)?;
         for &n in &exp.workers {
             for &seed in &exp.seeds {
                 let task = exp.build_task(seed as u64)?;
@@ -180,13 +185,14 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
             "best_acc",
             "uplink_bytes",
             "downlink_bytes",
+            "agg_uplink_bytes",
+            "agg_downlink_bytes",
             "bits_per_param_iter",
             "wall_secs",
         ],
     )?;
     for strat_name in &exp.strategies {
-        let strategy = by_name(strat_name, &exp.hyper)
-            .ok_or_else(|| DlionError::Config(format!("unknown strategy '{strat_name}'")))?;
+        let strategy = by_name(strat_name, &exp.hyper)?;
         for &n in &exp.workers {
             for &seed in &exp.seeds {
                 let task = exp.build_task(seed as u64)?;
@@ -202,6 +208,8 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
                     result.best_accuracy().map_or(String::new(), |a| format!("{a:.6}")),
                     result.total_uplink().to_string(),
                     result.total_downlink().to_string(),
+                    result.total_agg_uplink().to_string(),
+                    result.total_agg_downlink().to_string(),
                     format!("{:.3}", result.bits_per_param_per_iter(task.dim())),
                     format!("{:.2}", result.wall_secs),
                 ])?;
@@ -227,8 +235,7 @@ fn cmd_lm(args: &Args) -> Result<i32> {
     let corpus_bytes: usize =
         args.flag("corpus-bytes").and_then(|s| s.parse().ok()).unwrap_or(200_000);
     let hp = StrategyHyper { weight_decay: wd, ..Default::default() };
-    let strategy = by_name(&strat_name, &hp)
-        .ok_or_else(|| DlionError::Config(format!("unknown strategy '{strat_name}'")))?;
+    let strategy = by_name(&strat_name, &hp)?;
     let task = crate::lm::LmTask::new(
         &artifacts,
         corpus_bytes,
@@ -321,16 +328,42 @@ mod tests {
 
     #[test]
     fn quick_train_runs_extension_strategies() {
-        // d-lion-ef, d-lion-msync, and the bare bandwidth-aware alias are
-        // trainable end-to-end from the CLI (the composite
-        // bandwidth-aware(a,b) form contains a comma and must come from a
-        // TOML config's strategies list instead of a CLI override).
+        // d-lion-ef, d-lion-msync, d-lion-local, and the bare
+        // bandwidth-aware alias are trainable end-to-end from the CLI
+        // (the composite bandwidth-aware(a,b) form contains a comma and
+        // must come from a TOML config's strategies list instead of a
+        // CLI override).
         let code = run(&argv(
-            "train task=quadratic strategies=d-lion-ef,d-lion-msync,bandwidth-aware \
+            "train task=quadratic strategies=d-lion-ef,d-lion-msync,bandwidth-aware,d-lion-local \
              workers=2 seeds=1 train.steps=12 train.eval_every=0 task.dim=16 \
-             hyper.msync_every=4 hyper.link_budget=8",
+             hyper.msync_every=4 hyper.link_budget=8 hyper.local_steps=3",
         ))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn quick_train_runs_hierarchical_topology() {
+        let code = run(&argv(
+            "train task=quadratic strategies=d-lion-mavo topology=hier:2 \
+             workers=4 seeds=1 train.steps=10 train.eval_every=0 task.dim=16",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn malformed_strategy_name_surfaces_the_parse_error() {
+        // Satellite contract: the by_name parse failure reaches the CLI
+        // error verbatim — no silent "unknown strategy" collapse.
+        let err = run(&argv(
+            "train task=quadratic strategies=d-lion-local(x) workers=1 seeds=1 train.steps=2",
+        ))
+        .err()
+        .expect("malformed name must fail");
+        assert!(
+            err.to_string().contains("d-lion-local(<H>)"),
+            "error should explain the expected form: {err}"
+        );
     }
 }

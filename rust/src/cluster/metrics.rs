@@ -4,15 +4,24 @@ use crate::tasks::Eval;
 use crate::util::csv::CsvWriter;
 use std::path::Path;
 
-/// One training step's record.
+/// One training step's record. The four byte counters are per-hop: the
+/// worker-edge pair is Table 1's accounting; the aggregator pair covers
+/// the group↔root links of a hierarchical topology (0 on the flat star
+/// and on the local steps of a local-steps strategy).
 #[derive(Clone, Debug)]
 pub struct StepRecord {
     pub step: usize,
     pub lr: f64,
     pub train_loss: f64,
     pub eval: Option<Eval>,
+    /// worker → aggregator (star: worker → server)
     pub uplink_bytes: u64,
+    /// aggregator → worker (star: server → worker)
     pub downlink_bytes: u64,
+    /// aggregator → root (hierarchical only)
+    pub agg_uplink_bytes: u64,
+    /// root → aggregator (hierarchical only)
+    pub agg_downlink_bytes: u64,
 }
 
 /// Full run result.
@@ -54,6 +63,18 @@ impl RunResult {
         self.history.iter().map(|r| r.downlink_bytes).sum()
     }
 
+    /// Total aggregator→root bytes (hierarchical topologies; 0 on the
+    /// flat star).
+    pub fn total_agg_uplink(&self) -> u64 {
+        self.history.iter().map(|r| r.agg_uplink_bytes).sum()
+    }
+
+    /// Total root→aggregator bytes (hierarchical topologies; 0 on the
+    /// flat star).
+    pub fn total_agg_downlink(&self) -> u64 {
+        self.history.iter().map(|r| r.agg_downlink_bytes).sum()
+    }
+
     /// Best held-out accuracy observed (periodic evals + final).
     pub fn best_accuracy(&self) -> Option<f64> {
         let peri = self
@@ -74,7 +95,10 @@ impl RunResult {
 
     /// Per-iteration communication bits per parameter *per worker* (both
     /// directions) — the x-axis of Figure 4. The paper normalizes this
-    /// way: G-Lion/G-AdamW sit at 64 (= 32 up + 32 down).
+    /// way: G-Lion/G-AdamW sit at 64 (= 32 up + 32 down). Worker-edge
+    /// hops only: the aggregator↔root links have their own totals
+    /// ([`Self::total_agg_uplink`]) because they are per *group*, not
+    /// per worker.
     pub fn bits_per_param_per_iter(&self, dim: usize) -> f64 {
         if self.history.is_empty() {
             return 0.0;
@@ -96,6 +120,8 @@ impl RunResult {
                 "eval_acc",
                 "uplink_bytes",
                 "downlink_bytes",
+                "agg_uplink_bytes",
+                "agg_downlink_bytes",
             ],
         )?;
         for r in &self.history {
@@ -114,6 +140,8 @@ impl RunResult {
                 ea,
                 r.uplink_bytes.to_string(),
                 r.downlink_bytes.to_string(),
+                r.agg_uplink_bytes.to_string(),
+                r.agg_downlink_bytes.to_string(),
             ])?;
         }
         w.flush()
@@ -138,6 +166,8 @@ mod tests {
                 },
                 uplink_bytes: 100,
                 downlink_bytes: 50,
+                agg_uplink_bytes: 25,
+                agg_downlink_bytes: 10,
             });
         }
         r
@@ -148,6 +178,8 @@ mod tests {
         let r = mk(10);
         assert_eq!(r.total_uplink(), 1000);
         assert_eq!(r.total_downlink(), 500);
+        assert_eq!(r.total_agg_uplink(), 250);
+        assert_eq!(r.total_agg_downlink(), 100);
         assert!((r.best_accuracy().unwrap() - 0.8).abs() < 1e-12);
         assert!(r.tail_loss(3) < r.tail_loss(10));
         // 150 bytes/iter over dim 100, 4 workers -> 3 bits/param/worker

@@ -8,22 +8,34 @@
 //!   a byte-counted [`crate::comm`] fabric (in-proc channels); proves the
 //!   message protocol end-to-end and feeds the transport byte counters.
 //!
-//! Both assert the replicated-parameter invariant: every worker holds
-//! bit-identical parameters after every step (the downlink broadcast is
-//! the only thing that mutates them).
+//! Neither driver owns the round choreography: both hand the gathered
+//! uplinks to one shared [`topology::RoundEngine`], which routes them
+//! through the configured [`topology::Topology`] (flat star, or a
+//! two-level worker → group-aggregator → root tree) at the strategy's
+//! communication cadence ([`Strategy::local_steps`]) and returns per-hop
+//! byte accounting. That is what keeps the two modes bit-exact in
+//! parameters *and* in the full per-hop byte history.
+//!
+//! Both assert the replicated-parameter invariant at every **sync
+//! point**: every worker holds bit-identical parameters after every
+//! communication round (the downlink broadcast is the only global
+//! mutation). Local-steps strategies explore independently between sync
+//! points and reconcile at the next round.
 
 pub mod metrics;
+pub mod topology;
 
 use crate::comm::{inproc_fabric, CommStats, ServerTransport, WorkerTransport};
-use crate::optim::dist::{run_round, Strategy};
+use crate::optim::dist::Strategy;
 use crate::tasks::{Eval, GradTask};
 use crate::util::math::cosine_lr;
 use crate::util::Rng;
 use metrics::{RunResult, StepRecord};
 use std::sync::Arc;
+use topology::{HopBytes, RoundEngine, Topology};
 
 /// Training-loop configuration (defaults mirror the paper's CIFAR setup:
-/// batch 32/worker, cosine schedule).
+/// batch 32/worker, cosine schedule, flat star).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub steps: usize,
@@ -34,9 +46,11 @@ pub struct TrainConfig {
     /// evaluate every `eval_every` steps (0 = only at the end)
     pub eval_every: usize,
     pub seed: u64,
-    /// verify the replicated-parameter invariant every step (costly for
-    /// big d; always on in tests)
+    /// verify the replicated-parameter invariant at every sync point
+    /// (costly for big d; always on in tests)
     pub check_replicas: bool,
+    /// communication layout (config syntax: `star` / `hier:<group_size>`)
+    pub topology: Topology,
 }
 
 impl Default for TrainConfig {
@@ -50,6 +64,7 @@ impl Default for TrainConfig {
             eval_every: 100,
             seed: 42,
             check_replicas: false,
+            topology: Topology::Star,
         }
     }
 }
@@ -62,12 +77,12 @@ pub fn run_sequential(
     cfg: &TrainConfig,
 ) -> RunResult {
     let d = task.dim();
+    let mut engine = RoundEngine::new(strategy, nworkers, d, cfg.topology);
     let mut root = Rng::new(cfg.seed);
     let params0 = task.init_params(&mut root);
     let mut params: Vec<Vec<f32>> = vec![params0; nworkers];
     let mut worker_rngs: Vec<Rng> = (0..nworkers).map(|i| root.fork(i as u64)).collect();
     let mut workers: Vec<_> = (0..nworkers).map(|i| strategy.make_worker(i, nworkers, d)).collect();
-    let mut server = strategy.make_server(nworkers, d);
     let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; nworkers];
     let mut result = RunResult::new(task.name(), strategy.name(), nworkers);
     let t0 = std::time::Instant::now();
@@ -81,12 +96,29 @@ pub fn run_sequential(
                 task.minibatch_grad_worker(p, r, cfg.batch_per_worker, g, w, nworkers) as f64;
         }
         train_loss /= nworkers as f64;
-        let (up, down) = run_round(&mut workers, server.as_mut(), &mut params, &grads, lr, step);
-        if cfg.check_replicas {
-            for w in 1..nworkers {
-                assert_eq!(params[0], params[w], "replica divergence at step {step}");
+        let hops = if engine.is_sync_step(step) {
+            let uplinks: Vec<Vec<u8>> = workers
+                .iter_mut()
+                .zip(&grads)
+                .map(|(w, g)| w.encode(g, lr, step))
+                .collect();
+            let (downlink, hops) = engine.aggregate(&uplinks, lr, step);
+            for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+                w.apply(p, &downlink, lr, step);
             }
-        }
+            if cfg.check_replicas {
+                for w in 1..nworkers {
+                    assert_eq!(params[0], params[w], "replica divergence at sync step {step}");
+                }
+            }
+            hops
+        } else {
+            // local phase: no bytes move; replicas explore independently
+            for ((w, p), g) in workers.iter_mut().zip(params.iter_mut()).zip(&grads) {
+                w.local_step(p, g, lr, step);
+            }
+            HopBytes::default()
+        };
         let eval = if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
             Some(task.evaluate(&params[0]))
         } else {
@@ -97,8 +129,10 @@ pub fn run_sequential(
             lr: lr as f64,
             train_loss,
             eval,
-            uplink_bytes: up as u64,
-            downlink_bytes: down as u64,
+            uplink_bytes: hops.uplink as u64,
+            downlink_bytes: hops.downlink as u64,
+            agg_uplink_bytes: hops.agg_uplink as u64,
+            agg_downlink_bytes: hops.agg_downlink as u64,
         });
     }
     result.final_eval = Some(task.evaluate(&params[0]));
@@ -109,6 +143,12 @@ pub fn run_sequential(
 
 /// Run the same loop with one OS thread per worker over the in-process
 /// byte-counted fabric. Returns the result plus the transport stats.
+///
+/// The worker-edge hops move over real channels (the fabric counts
+/// them); the aggregator↔root hops of a hierarchical topology are
+/// engine-simulated in the server thread and recorded on the same
+/// [`CommStats`], so the per-hop accounting equals the sequential
+/// driver's exactly.
 pub fn run_threaded(
     task: Arc<dyn GradTask + Send + Sync>,
     strategy: &dyn Strategy,
@@ -116,6 +156,7 @@ pub fn run_threaded(
     cfg: &TrainConfig,
 ) -> (RunResult, Arc<CommStats>) {
     let d = task.dim();
+    let local_steps = strategy.local_steps().max(1);
     let stats = CommStats::new();
     let (mut server_tx, worker_txs) = inproc_fabric(nworkers, stats.clone());
     let mut root = Rng::new(cfg.seed);
@@ -155,12 +196,16 @@ pub fn run_threaded(
                         nworkers,
                     );
                     let _ = loss_tx.send((step, loss as f64));
-                    let uplink = logic.encode(&grad, lr, step);
-                    wt.send(uplink)?;
-                    let downlink = wt.recv()?;
-                    logic.apply(&mut params, &downlink, lr, step);
+                    if (step + 1) % local_steps == 0 {
+                        let uplink = logic.encode(&grad, lr, step);
+                        wt.send(uplink)?;
+                        let downlink = wt.recv()?;
+                        logic.apply(&mut params, &downlink, lr, step);
+                    } else {
+                        logic.local_step(&mut params, &grad, lr, step);
+                    }
                     // Periodic eval on worker 0's replica — the same
-                    // post-apply point the sequential driver evaluates,
+                    // post-step point the sequential driver evaluates,
                     // so the two modes' histories agree record-for-record.
                     if wid == 0 && cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
                         let _ = eval_tx.send((step, task.evaluate(&params)));
@@ -173,24 +218,37 @@ pub fn run_threaded(
     drop(loss_tx);
     drop(eval_tx);
 
-    // Server loop on the current thread. Per-step bytes are CommStats
-    // deltas taken around the round: after `gather` returns, every
-    // step-`s` uplink has been recorded and no step-`s+1` uplink can
-    // exist (workers block on the downlink); after `broadcast` returns,
-    // all step-`s` downlink bytes are recorded — so the deltas are
-    // race-free and equal the sequential-mode accounting exactly.
-    let mut server = strategy.make_server(nworkers, d);
-    let mut step_bytes: Vec<(u64, u64)> = Vec::with_capacity(cfg.steps);
+    // Server loop on the current thread. Per-step worker-edge bytes are
+    // CommStats deltas taken around the round: after `gather` returns,
+    // every step-`s` uplink has been recorded and no step-`s+1` uplink
+    // can exist (workers block on the downlink); after `broadcast`
+    // returns, all step-`s` downlink bytes are recorded — so the deltas
+    // are race-free and equal the sequential-mode accounting exactly.
+    // Aggregator-hop bytes come straight from the engine (they never
+    // race: the engine runs on this thread).
+    let mut engine = RoundEngine::new(strategy, nworkers, d, cfg.topology);
+    let mut step_bytes: Vec<(u64, u64, u64, u64)> = Vec::with_capacity(cfg.steps);
     let (mut prev_up, mut prev_down) = (0u64, 0u64);
     let t0 = std::time::Instant::now();
     for step in 0..cfg.steps {
+        if !engine.is_sync_step(step) {
+            step_bytes.push((0, 0, 0, 0));
+            continue;
+        }
         let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
         let uplinks = server_tx.gather().expect("gather failed");
         let up_now = stats.uplink();
-        let downlink = server.aggregate(&uplinks, lr, step);
+        let (downlink, hops) = engine.aggregate(&uplinks, lr, step);
+        stats.record_agg_uplink(hops.agg_uplink);
+        stats.record_agg_downlink(hops.agg_downlink);
         server_tx.broadcast(&downlink).expect("broadcast failed");
         let down_now = stats.downlink();
-        step_bytes.push((up_now - prev_up, down_now - prev_down));
+        step_bytes.push((
+            up_now - prev_up,
+            down_now - prev_down,
+            hops.agg_uplink as u64,
+            hops.agg_downlink as u64,
+        ));
         prev_up = up_now;
         prev_down = down_now;
     }
@@ -203,7 +261,8 @@ pub fn run_threaded(
         per_step[step].1 += 1;
     }
     for (step, (sum, count)) in per_step.into_iter().enumerate() {
-        let (uplink_bytes, downlink_bytes) = step_bytes[step];
+        let (uplink_bytes, downlink_bytes, agg_uplink_bytes, agg_downlink_bytes) =
+            step_bytes[step];
         // round through f32 exactly as the sequential recorder does, so
         // the two modes' histories stay comparable field-for-field
         let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
@@ -214,6 +273,8 @@ pub fn run_threaded(
             eval: None,
             uplink_bytes,
             downlink_bytes,
+            agg_uplink_bytes,
+            agg_downlink_bytes,
         });
     }
     // merge worker-0's periodic evals into the per-step history
@@ -224,7 +285,9 @@ pub fn run_threaded(
     for h in handles {
         final_params.push(h.join().expect("worker panicked").expect("worker io error"));
     }
-    if cfg.check_replicas {
+    // the replica invariant holds at sync points; the final join is one
+    // only when the run ended on a sync boundary
+    if cfg.check_replicas && cfg.steps % local_steps == 0 {
         for w in 1..nworkers {
             assert_eq!(final_params[0], final_params[w], "replica divergence (threaded)");
         }
@@ -280,11 +343,17 @@ mod tests {
         let seq_down: u64 = seq.history.iter().map(|r| r.downlink_bytes).sum();
         assert_eq!(stats.uplink(), seq_up);
         assert_eq!(stats.downlink(), seq_down);
+        // flat star: no aggregator hops on either driver
+        assert_eq!(stats.agg_uplink(), 0);
+        assert_eq!(stats.agg_downlink(), 0);
+        assert_eq!(seq.total_agg_uplink(), 0);
         // ...and per-step histories must agree, not just the totals
         assert_eq!(seq.history.len(), thr.history.len());
         for (s, t) in seq.history.iter().zip(&thr.history) {
             assert_eq!(s.uplink_bytes, t.uplink_bytes, "step {} uplink", s.step);
             assert_eq!(s.downlink_bytes, t.downlink_bytes, "step {} downlink", s.step);
+            assert_eq!(s.agg_uplink_bytes, t.agg_uplink_bytes, "step {} agg up", s.step);
+            assert_eq!(s.agg_downlink_bytes, t.agg_downlink_bytes, "step {} agg down", s.step);
         }
     }
 
@@ -338,6 +407,48 @@ mod tests {
                 "{name}: final={fin} init={init_loss}"
             );
         }
+    }
+
+    #[test]
+    fn hierarchical_topology_runs_every_strategy() {
+        // The relay/vote/dense-sum partial paths must keep every
+        // registry strategy training (and its replicas identical at
+        // sync points) under a two-group tree.
+        let task = Quadratic::new(24, 5.0, 0.3, 6);
+        let hp = StrategyHyper { weight_decay: 0.001, ..Default::default() };
+        for &name in crate::optim::dist::ALL_STRATEGIES
+            .iter()
+            .chain(crate::optim::dist::EXTENSION_STRATEGIES.iter())
+        {
+            let strat = by_name(name, &hp).unwrap();
+            let cfg = TrainConfig {
+                topology: Topology::Hierarchical { group_size: 2 },
+                base_lr: 0.02,
+                ..quick_cfg(40)
+            };
+            let res = run_sequential(&task, strat.as_ref(), 4, &cfg);
+            assert!(res.total_agg_uplink() > 0, "{name}: no aggregator-hop bytes");
+            assert!(res.total_agg_downlink() > 0, "{name}: no root-broadcast bytes");
+        }
+    }
+
+    #[test]
+    fn local_steps_move_zero_bytes_between_syncs() {
+        let task = Quadratic::new(40, 5.0, 0.3, 8);
+        let strat = by_name("d-lion-local(4)", &StrategyHyper::default()).unwrap();
+        let cfg = quick_cfg(20);
+        let res = run_sequential(&task, strat.as_ref(), 3, &cfg);
+        for r in &res.history {
+            if (r.step + 1) % 4 == 0 {
+                assert!(r.uplink_bytes > 0 && r.downlink_bytes > 0, "sync step {}", r.step);
+            } else {
+                assert_eq!(r.uplink_bytes, 0, "local step {} moved bytes", r.step);
+                assert_eq!(r.downlink_bytes, 0, "local step {} moved bytes", r.step);
+            }
+        }
+        // amortized: exactly steps/4 sync rounds
+        let sync_rounds = res.history.iter().filter(|r| r.uplink_bytes > 0).count();
+        assert_eq!(sync_rounds, 5);
     }
 
     #[test]

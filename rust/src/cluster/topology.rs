@@ -1,0 +1,339 @@
+//! Topology-aware round engine: *who* the sign frames flow through and
+//! *when* they flow.
+//!
+//! The paper's Algorithm 1 hard-wires a flat star — every worker talks
+//! to one server, every step. The two strongest follow-ups change the
+//! routing and the cadence, not the frames: Lion Cub's hierarchical /
+//! bandwidth-structured aggregation, and local-steps sign momentum
+//! (ship one frame per H optimizer steps). This module factors both out
+//! of the cluster drivers:
+//!
+//! * [`Topology`] — [`Topology::Star`] (the paper's layout) or
+//!   [`Topology::Hierarchical`] with a group size: workers send to a
+//!   group aggregator, aggregators send one *partial* frame to the
+//!   root, and the broadcast retraces the tree downward. Partials come
+//!   from [`ServerLogic::partial`]/[`ServerLogic::fold`]: the sign-vote
+//!   family ships `intavg` vote sums (integer — **bit-exact vs the
+//!   flat star for any grouping**), the dense family ships f32 partial
+//!   sums (the same numbers regrouped; bit-exact for one group, and
+//!   within f32 summation-order ulps of the flat star beyond that),
+//!   and every other codec falls back to a relay frame (members
+//!   forwarded verbatim — bit-exact for any grouping).
+//! * [`RoundEngine`] — the shared choreography both
+//!   [`crate::cluster::run_sequential`] and
+//!   [`crate::cluster::run_threaded`] drive: it owns the group and root
+//!   [`ServerLogic`] instances, knows the communication cadence
+//!   ([`Strategy::local_steps`]), and returns per-hop byte accounting
+//!   ([`HopBytes`]) so the Table-1 byte bookkeeping extends to every
+//!   link of the tree.
+//!
+//! Invariants (tested in `tests/topology_parity.rs`):
+//! * `Hierarchical { group_size ≥ nworkers }` is bit-identical to the
+//!   flat star in parameters and worker-edge bytes (every family).
+//! * For the sign-vote family and for relayed codecs, *any* grouping is
+//!   trajectory-identical to the flat star; the dense family's
+//!   multi-group fold regroups an f32 sum and may differ from the star
+//!   in the last ulp (never between the two drivers).
+//! * Sequential and threaded drivers agree bit-exactly on parameters
+//!   and on the full per-hop byte history, for every topology.
+
+use crate::error::{DlionError, Result};
+use crate::optim::dist::{ServerLogic, Strategy};
+use std::fmt;
+use std::ops::Range;
+
+/// Cluster communication layout.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Topology {
+    /// Every worker uplinks straight to the single server (Algorithm 1).
+    #[default]
+    Star,
+    /// Two-level tree: workers 0..g-1 share aggregator 0, workers
+    /// g..2g-1 share aggregator 1, … (the last group may be smaller);
+    /// aggregators fold their group and forward one partial to the root.
+    Hierarchical {
+        /// workers per group aggregator (≥ 1).
+        group_size: usize,
+    },
+}
+
+impl Topology {
+    /// Parse the config syntax: `"star"` or `"hier:<group_size>"`.
+    pub fn parse(s: &str) -> Result<Topology> {
+        let s = s.trim();
+        if s == "star" {
+            return Ok(Topology::Star);
+        }
+        if let Some(gs) = s.strip_prefix("hier:") {
+            let group_size: usize = gs.parse().map_err(|_| {
+                DlionError::Config(format!(
+                    "topology 'hier:<group_size>' needs an integer, got '{gs}'"
+                ))
+            })?;
+            if group_size == 0 {
+                return Err(DlionError::Config("topology group_size must be >= 1".into()));
+            }
+            return Ok(Topology::Hierarchical { group_size });
+        }
+        Err(DlionError::Config(format!(
+            "unknown topology '{s}' (expected 'star' or 'hier:<group_size>')"
+        )))
+    }
+
+    /// Contiguous worker ranges per group aggregator (one `0..n` range
+    /// for the star, where the "aggregator" is the root itself).
+    pub fn groups(&self, nworkers: usize) -> Vec<Range<usize>> {
+        match *self {
+            Topology::Star => vec![0..nworkers],
+            Topology::Hierarchical { group_size } => {
+                assert!(group_size >= 1, "group_size must be >= 1");
+                let mut out = Vec::with_capacity(nworkers.div_ceil(group_size));
+                let mut start = 0;
+                while start < nworkers {
+                    let end = (start + group_size).min(nworkers);
+                    out.push(start..end);
+                    start = end;
+                }
+                out
+            }
+        }
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Topology::Star => write!(f, "star"),
+            Topology::Hierarchical { group_size } => write!(f, "hier:{group_size}"),
+        }
+    }
+}
+
+/// Per-hop byte accounting for one communication round. Worker-edge
+/// hops (`uplink`/`downlink`) are what Table 1 counts; the aggregator
+/// hops are zero for the flat star.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HopBytes {
+    /// worker → aggregator (star: worker → server), summed over workers
+    pub uplink: usize,
+    /// aggregator → root, summed over groups (0 for the star)
+    pub agg_uplink: usize,
+    /// root → aggregator, broadcast × groups (0 for the star)
+    pub agg_downlink: usize,
+    /// aggregator → worker (star: server → worker), broadcast × workers
+    pub downlink: usize,
+}
+
+/// The round choreography shared by the sequential and threaded cluster
+/// drivers: routes the gathered worker uplinks through the configured
+/// [`Topology`] and returns the broadcast downlink plus the per-hop
+/// byte counts.
+pub struct RoundEngine {
+    groups: Vec<Range<usize>>,
+    /// one `ServerLogic` per group aggregator (empty for the star)
+    group_servers: Vec<Box<dyn ServerLogic>>,
+    root: Box<dyn ServerLogic>,
+    nworkers: usize,
+    local_steps: usize,
+}
+
+impl RoundEngine {
+    /// Build the engine for `strategy` over `nworkers` workers of a
+    /// `dim`-parameter model. The communication cadence comes from the
+    /// strategy itself ([`Strategy::local_steps`]), so the engine and
+    /// the worker logic can never disagree about which steps sync.
+    pub fn new(
+        strategy: &dyn Strategy,
+        nworkers: usize,
+        dim: usize,
+        topology: Topology,
+    ) -> RoundEngine {
+        let local_steps = strategy.local_steps().max(1);
+        let (groups, group_servers) = match topology {
+            Topology::Star => (topology.groups(nworkers), Vec::new()),
+            Topology::Hierarchical { .. } => {
+                let groups = topology.groups(nworkers);
+                let servers: Vec<_> =
+                    groups.iter().map(|g| strategy.make_server(g.len(), dim)).collect();
+                (groups, servers)
+            }
+        };
+        RoundEngine {
+            groups,
+            group_servers,
+            root: strategy.make_server(nworkers, dim),
+            nworkers,
+            local_steps,
+        }
+    }
+
+    /// Communication cadence: a frame crosses the wire every
+    /// `local_steps`-th step (1 = every step, Algorithm 1).
+    pub fn local_steps(&self) -> usize {
+        self.local_steps
+    }
+
+    /// Is `step` a communication (sync) step? Sync steps are those with
+    /// `(step + 1) % local_steps == 0`, matching the msync convention.
+    pub fn is_sync_step(&self, step: usize) -> bool {
+        (step + 1) % self.local_steps == 0
+    }
+
+    /// Route one round: fold the index-aligned worker uplinks through
+    /// the topology into the broadcast downlink. Returns the downlink
+    /// frame (identical for every worker — the replicated-parameter
+    /// invariant rides on this) and the per-hop byte accounting.
+    pub fn aggregate(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> (Vec<u8>, HopBytes) {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        let uplink_bytes: usize = uplinks.iter().map(|m| m.len()).sum();
+        if self.group_servers.is_empty() {
+            // Flat star: the root aggregates all workers directly.
+            let downlink = self.root.aggregate(uplinks, lr, step);
+            let hops = HopBytes {
+                uplink: uplink_bytes,
+                agg_uplink: 0,
+                agg_downlink: 0,
+                downlink: downlink.len() * self.nworkers,
+            };
+            return (downlink, hops);
+        }
+        // Two-level: group partials up, root fold, broadcast retraces
+        // the tree (root → G aggregators → nworkers workers).
+        let partials: Vec<Vec<u8>> = self
+            .group_servers
+            .iter_mut()
+            .zip(&self.groups)
+            .map(|(gs, range)| gs.partial(&uplinks[range.clone()], lr, step))
+            .collect();
+        let agg_uplink: usize = partials.iter().map(|m| m.len()).sum();
+        let downlink = self.root.fold(&partials, lr, step);
+        let hops = HopBytes {
+            uplink: uplink_bytes,
+            agg_uplink,
+            agg_downlink: downlink.len() * self.groups.len(),
+            downlink: downlink.len() * self.nworkers,
+        };
+        (downlink, hops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::dist::{by_name, StrategyHyper};
+    use crate::util::Rng;
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        assert_eq!(Topology::parse("star").unwrap(), Topology::Star);
+        assert_eq!(
+            Topology::parse("hier:4").unwrap(),
+            Topology::Hierarchical { group_size: 4 }
+        );
+        for t in [Topology::Star, Topology::Hierarchical { group_size: 7 }] {
+            assert_eq!(Topology::parse(&t.to_string()).unwrap(), t);
+        }
+        assert!(Topology::parse("hier:0").is_err());
+        assert!(Topology::parse("hier:x").is_err());
+        assert!(Topology::parse("ring").is_err());
+    }
+
+    #[test]
+    fn groups_cover_workers_exactly() {
+        let t = Topology::Hierarchical { group_size: 3 };
+        assert_eq!(t.groups(7), vec![0..3, 3..6, 6..7]);
+        assert_eq!(t.groups(3), vec![0..3]);
+        assert_eq!(Topology::Star.groups(5), vec![0..5]);
+        // group_size beyond nworkers degenerates to one group
+        let t = Topology::Hierarchical { group_size: 99 };
+        assert_eq!(t.groups(4), vec![0..4]);
+    }
+
+    #[test]
+    fn engine_star_matches_run_round_accounting() {
+        let (n, d) = (4, 129);
+        let hp = StrategyHyper::default();
+        let strat = by_name("d-lion-mavo", &hp).unwrap();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut engine = RoundEngine::new(strat.as_ref(), n, d, Topology::Star);
+        let mut rng = Rng::new(0x70);
+        let ups: Vec<Vec<u8>> = workers
+            .iter_mut()
+            .map(|w| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                w.encode(&g, 1e-3, 0)
+            })
+            .collect();
+        let (down, hops) = engine.aggregate(&ups, 1e-3, 0);
+        assert_eq!(hops.uplink, ups.iter().map(|m| m.len()).sum::<usize>());
+        assert_eq!(hops.downlink, down.len() * n);
+        assert_eq!(hops.agg_uplink, 0);
+        assert_eq!(hops.agg_downlink, 0);
+    }
+
+    #[test]
+    fn hierarchical_vote_partials_are_exact() {
+        // Any grouping of the sign-vote family must produce the very
+        // same downlink bytes as the flat star (integer sums regroup).
+        let (n, d) = (6, 200);
+        let hp = StrategyHyper::default();
+        let mut rng = Rng::new(0x71);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect();
+        let frames = |topology: Topology| -> Vec<u8> {
+            let strat = by_name("d-lion-mavo", &hp).unwrap();
+            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+            let mut engine = RoundEngine::new(strat.as_ref(), n, d, topology);
+            let ups: Vec<Vec<u8>> = workers
+                .iter_mut()
+                .zip(&grads)
+                .map(|(w, g)| w.encode(g, 1e-3, 0))
+                .collect();
+            engine.aggregate(&ups, 1e-3, 0).0
+        };
+        let flat = frames(Topology::Star);
+        for gs in [1usize, 2, 3, 4, 6, 9] {
+            assert_eq!(
+                frames(Topology::Hierarchical { group_size: gs }),
+                flat,
+                "group_size={gs} changed the downlink"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_agg_hop_is_cheaper_than_relaying_for_votes() {
+        // The intavg vote partial must beat forwarding the member sign
+        // frames verbatim once groups are large enough (log2(g+1) < g).
+        let (n, d) = (8, 4096);
+        let hp = StrategyHyper::default();
+        let strat = by_name("d-lion-mavo", &hp).unwrap();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut engine =
+            RoundEngine::new(strat.as_ref(), n, d, Topology::Hierarchical { group_size: 4 });
+        let mut rng = Rng::new(0x72);
+        let ups: Vec<Vec<u8>> = workers
+            .iter_mut()
+            .map(|w| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                w.encode(&g, 1e-3, 0)
+            })
+            .collect();
+        let (_, hops) = engine.aggregate(&ups, 1e-3, 0);
+        // 2 groups × (3-byte head + 3 bits/param) vs 8 × 1 bit/param
+        assert!(hops.agg_uplink > 0);
+        assert!(
+            hops.agg_uplink < hops.uplink,
+            "vote partials ({}) should be cheaper than the worker edge ({})",
+            hops.agg_uplink,
+            hops.uplink
+        );
+    }
+}

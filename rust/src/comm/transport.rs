@@ -14,13 +14,22 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-/// Byte counters shared by all endpoints of one cluster.
+/// Byte counters shared by all endpoints of one cluster. The worker-edge
+/// pair (`uplink`/`downlink`) is recorded by the transports themselves;
+/// the aggregator pair covers the group↔root hops of a hierarchical
+/// topology ([`crate::cluster::topology`]), recorded by the round engine
+/// (in-process aggregators are co-located with the root, so that hop is
+/// simulated — its byte accounting is exact, its latency is not).
 #[derive(Default, Debug)]
 pub struct CommStats {
-    /// bytes moved worker → server (sum over workers)
+    /// bytes moved worker → server/aggregator (sum over workers)
     pub uplink_bytes: AtomicU64,
-    /// bytes moved server → worker (sum over workers)
+    /// bytes moved server/aggregator → worker (sum over workers)
     pub downlink_bytes: AtomicU64,
+    /// bytes moved aggregator → root (sum over groups; 0 on a flat star)
+    pub agg_uplink_bytes: AtomicU64,
+    /// bytes moved root → aggregator (broadcast × groups; 0 on a flat star)
+    pub agg_downlink_bytes: AtomicU64,
     /// number of uplink messages
     pub uplink_msgs: AtomicU64,
     /// number of downlink messages
@@ -39,18 +48,35 @@ impl CommStats {
         self.downlink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.downlink_msgs.fetch_add(1, Ordering::Relaxed);
     }
+    /// Record one round's aggregator→root traffic (all groups).
+    pub fn record_agg_uplink(&self, bytes: usize) {
+        self.agg_uplink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+    /// Record one round's root→aggregator traffic (broadcast × groups).
+    pub fn record_agg_downlink(&self, bytes: usize) {
+        self.agg_downlink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
     pub fn uplink(&self) -> u64 {
         self.uplink_bytes.load(Ordering::Relaxed)
     }
     pub fn downlink(&self) -> u64 {
         self.downlink_bytes.load(Ordering::Relaxed)
     }
+    pub fn agg_uplink(&self) -> u64 {
+        self.agg_uplink_bytes.load(Ordering::Relaxed)
+    }
+    pub fn agg_downlink(&self) -> u64 {
+        self.agg_downlink_bytes.load(Ordering::Relaxed)
+    }
+    /// All bytes that crossed any link (worker edge + aggregator hops).
     pub fn total(&self) -> u64 {
-        self.uplink() + self.downlink()
+        self.uplink() + self.downlink() + self.agg_uplink() + self.agg_downlink()
     }
     pub fn reset(&self) {
         self.uplink_bytes.store(0, Ordering::Relaxed);
         self.downlink_bytes.store(0, Ordering::Relaxed);
+        self.agg_uplink_bytes.store(0, Ordering::Relaxed);
+        self.agg_downlink_bytes.store(0, Ordering::Relaxed);
         self.uplink_msgs.store(0, Ordering::Relaxed);
         self.downlink_msgs.store(0, Ordering::Relaxed);
     }
@@ -200,6 +226,11 @@ mod tests {
         stats.record_uplink(100);
         stats.record_downlink(50);
         assert_eq!(stats.total(), 150);
+        stats.record_agg_uplink(30);
+        stats.record_agg_downlink(20);
+        assert_eq!(stats.agg_uplink(), 30);
+        assert_eq!(stats.agg_downlink(), 20);
+        assert_eq!(stats.total(), 200, "total covers every hop");
         stats.reset();
         assert_eq!(stats.total(), 0);
     }

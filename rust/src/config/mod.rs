@@ -69,8 +69,14 @@ impl Experiment {
         );
         exp.workers = top.usize_list_or("workers", &exp.workers);
         exp.seeds = top.usize_list_or("seeds", &exp.seeds);
+        let topo = top.str_or("topology", &exp.train.topology.to_string());
+        exp.train.topology = crate::cluster::topology::Topology::parse(&topo)?;
 
         let t = toml::section(&doc, "train");
+        // `topology` is accepted both at top level and under [train]
+        // (it is a TrainConfig field); the [train] spelling wins.
+        let topo = t.str_or("topology", &exp.train.topology.to_string());
+        exp.train.topology = crate::cluster::topology::Topology::parse(&topo)?;
         exp.train.steps = t.usize_or("steps", exp.train.steps);
         exp.train.batch_per_worker = t.usize_or("batch_per_worker", exp.train.batch_per_worker);
         exp.train.base_lr = t.f64_or("lr", exp.train.base_lr);
@@ -91,6 +97,7 @@ impl Experiment {
         exp.hyper.msync_every = h.usize_or("msync_every", exp.hyper.msync_every);
         exp.hyper.compact_sparse = h.bool_or("compact_sparse", exp.hyper.compact_sparse);
         exp.hyper.link_budget = h.f64_or("link_budget", exp.hyper.link_budget as f64) as f32;
+        exp.hyper.local_steps = h.usize_or("local_steps", exp.hyper.local_steps);
 
         let tk = toml::section(&doc, "task");
         exp.task_dim = tk.usize_or("dim", exp.task_dim);
@@ -130,6 +137,9 @@ impl Experiment {
                     .collect::<std::result::Result<_, _>>()
                     .map_err(|e| DlionError::Config(e.to_string()))?
             }
+            "topology" | "train.topology" => {
+                self.train.topology = crate::cluster::topology::Topology::parse(val)?
+            }
             "train.steps" => self.train.steps = parse_usize(val)?,
             "train.batch_per_worker" => self.train.batch_per_worker = parse_usize(val)?,
             "train.lr" => self.train.base_lr = parse_f64(val)?,
@@ -152,6 +162,7 @@ impl Experiment {
                 }
             }
             "hyper.link_budget" => self.hyper.link_budget = parse_f64(val)? as f32,
+            "hyper.local_steps" => self.hyper.local_steps = parse_usize(val)?,
             "task.dim" => self.task_dim = parse_usize(val)?,
             "task.hidden" => self.task_hidden = parse_usize(val)?,
             "task.train_n" => self.task_train_n = parse_usize(val)?,
@@ -204,6 +215,7 @@ name = "t"
 task = "quadratic"
 strategies = ["d-lion-mavo", "terngrad"]
 workers = [4, 8]
+topology = "hier:4"
 
 [train]
 steps = 50
@@ -214,6 +226,7 @@ weight_decay = 0.01
 msync_every = 8
 compact_sparse = true
 link_budget = 6.0
+local_steps = 8
 
 [task]
 dim = 128
@@ -224,10 +237,15 @@ dim = 128
         assert_eq!(exp.strategies.len(), 2);
         assert_eq!(exp.workers, vec![4, 8]);
         assert_eq!(exp.train.steps, 50);
+        assert_eq!(
+            exp.train.topology,
+            crate::cluster::topology::Topology::Hierarchical { group_size: 4 }
+        );
         assert!((exp.hyper.weight_decay - 0.01).abs() < 1e-7);
         assert_eq!(exp.hyper.msync_every, 8);
         assert!(exp.hyper.compact_sparse);
         assert!((exp.hyper.link_budget - 6.0).abs() < 1e-7);
+        assert_eq!(exp.hyper.local_steps, 8);
         assert_eq!(exp.task_dim, 128);
         exp.apply_override("train.steps=99").unwrap();
         assert_eq!(exp.train.steps, 99);
@@ -240,8 +258,36 @@ dim = 128
         assert!(exp.apply_override("hyper.compact_sparse=maybe").is_err());
         exp.apply_override("hyper.link_budget=8.5").unwrap();
         assert!((exp.hyper.link_budget - 8.5).abs() < 1e-6);
+        exp.apply_override("hyper.local_steps=2").unwrap();
+        assert_eq!(exp.hyper.local_steps, 2);
+        exp.apply_override("topology=star").unwrap();
+        assert_eq!(exp.train.topology, crate::cluster::topology::Topology::Star);
+        exp.apply_override("train.topology=hier:2").unwrap();
+        assert_eq!(
+            exp.train.topology,
+            crate::cluster::topology::Topology::Hierarchical { group_size: 2 }
+        );
+        assert!(exp.apply_override("topology=ring").is_err());
+        assert!(exp.apply_override("topology=hier:0").is_err());
         assert!(exp.apply_override("garbage").is_err());
         assert!(exp.apply_override("no.such.key=1").is_err());
+    }
+
+    #[test]
+    fn bad_topology_in_file_is_a_parse_error() {
+        let err = Experiment::parse("topology = \"mesh\"\n").err().expect("must fail");
+        assert!(err.to_string().contains("unknown topology"));
+        let err = Experiment::parse("[train]\ntopology = \"mesh\"\n").err().expect("must fail");
+        assert!(err.to_string().contains("unknown topology"));
+    }
+
+    #[test]
+    fn topology_under_train_section_is_honored() {
+        let exp = Experiment::parse("[train]\ntopology = \"hier:3\"\n").unwrap();
+        assert_eq!(
+            exp.train.topology,
+            crate::cluster::topology::Topology::Hierarchical { group_size: 3 }
+        );
     }
 
     #[test]
@@ -249,12 +295,13 @@ dim = 128
         // keep configs/*.toml honest: every listed strategy must resolve
         // (including the composite bandwidth-aware name, which exercises
         // the quote-aware TOML array splitting)
-        for path in ["../configs/fig2.toml", "../configs/lioncub.toml"] {
+        for path in ["../configs/fig2.toml", "../configs/lioncub.toml", "../configs/topology.toml"]
+        {
             let exp = Experiment::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
             assert!(!exp.strategies.is_empty(), "{path}: empty strategies");
             for s in &exp.strategies {
                 assert!(
-                    crate::optim::dist::by_name(s, &exp.hyper).is_some(),
+                    crate::optim::dist::by_name(s, &exp.hyper).is_ok(),
                     "{path}: strategy '{s}' does not resolve"
                 );
             }

@@ -42,10 +42,16 @@
 //! | `ef-signsgd`    | extension      | `sign`+scale, 1          | `dense`, 32                   |
 //! | `d-lion-ef`     | ext. (Lion Cub) | `sign`, 1               | as d-lion-mavo                |
 //! | `d-lion-msync`  | ext. (Lion Cub) | `sign`+bf16, 1 + 16/k   | as d-lion-mavo + 16/k         |
+//! | `d-lion-local(H)` | ext. (local steps) | `sign`, 1/H        | as d-lion-mavo ÷ H            |
 //! | `bandwidth-aware(a,b)` | ext. (Lion Cub) | wrapped frames    | budget-weighted mix           |
 //!
 //! ¹ with `StrategyHyper::compact_sparse`, the sparse uplinks switch to
 //! delta-varint indices at ≈40·keep bits/param.
+//!
+//! Rounds route through a configurable [`cluster::topology::Topology`]
+//! (flat star or a two-level worker → group-aggregator → root tree with
+//! exact partial aggregation) at the strategy's communication cadence —
+//! see `docs/STRATEGIES.md` § "Topologies".
 
 pub mod bench_utils;
 pub mod cli;

@@ -59,6 +59,10 @@ impl WorkerLogic for DLionWorker {
         let update = self.decoder.decode(downlink);
         Lion::apply_aggregated(params, update, lr, self.weight_decay);
     }
+
+    fn momentum(&self) -> Option<&[f32]> {
+        Some(&self.lion.momentum)
+    }
 }
 
 impl Strategy for DLion {
@@ -120,6 +124,10 @@ impl WorkerLogic for DSignumWorker {
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
         let update = self.decoder.decode(downlink);
         Lion::apply_aggregated(params, update, lr, self.weight_decay);
+    }
+
+    fn momentum(&self) -> Option<&[f32]> {
+        Some(&self.signum.momentum)
     }
 }
 

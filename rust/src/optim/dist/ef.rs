@@ -83,6 +83,10 @@ impl WorkerLogic for EfWorker {
         let update = self.decoder.decode(downlink);
         Lion::apply_aggregated(params, update, lr, self.weight_decay);
     }
+
+    fn momentum(&self) -> Option<&[f32]> {
+        Some(&self.lion.momentum)
+    }
 }
 
 impl Strategy for DLionEf {

@@ -61,6 +61,17 @@ impl WorkerLogic for FaultyWorker {
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize) {
         self.inner.apply(params, downlink, lr, step);
     }
+
+    // Local steps and the momentum probe are worker-local (nothing on
+    // the wire to corrupt): delegate so wrapping a local-steps strategy
+    // keeps its cadence and the drift benches keep their probe.
+    fn local_step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, step: usize) {
+        self.inner.local_step(params, grads, lr, step);
+    }
+
+    fn momentum(&self) -> Option<&[f32]> {
+        self.inner.momentum()
+    }
 }
 
 #[cfg(test)]

@@ -7,7 +7,9 @@
 //! parameter invariant the 1-bit strategies satisfy) while reusing the
 //! [`crate::optim`] implementations unchanged.
 
-use super::{frame, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE};
+use super::{
+    frame, read_u16, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE, TAG_DENSE_SUM,
+};
 use crate::comm::dense;
 use crate::optim::adamw::AdamW;
 use crate::optim::lion::Lion;
@@ -102,6 +104,44 @@ impl ServerLogic for DenseAvgServer {
         }
         frame(TAG_DENSE, &dense::pack(&self.acc))
     }
+
+    /// Group hop: ship the group's f32 partial gradient sum (tag 14) —
+    /// 32 bits/param per *group* instead of per worker, which is where
+    /// hierarchical aggregation pays off for the dense family.
+    /// Layout: `[TAG_DENSE_SUM][g: u16 LE][dense f32 payload]`.
+    fn partial(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        for up in uplinks {
+            assert_eq!(up[0], TAG_DENSE, "dense server expects dense uplinks");
+            dense::accumulate(&up[1..], &mut self.acc);
+        }
+        let payload = dense::pack(&self.acc);
+        let mut msg = Vec::with_capacity(3 + payload.len());
+        msg.push(TAG_DENSE_SUM);
+        msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
+        msg.extend_from_slice(&payload);
+        msg
+    }
+
+    /// Root hop: add the group sums (left-to-right, the same f32
+    /// accumulation order the flat server uses within a group) and
+    /// broadcast the mean over the full worker count.
+    fn fold(&mut self, partials: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        let mut total = 0usize;
+        for p in partials {
+            assert_eq!(p[0], TAG_DENSE_SUM, "dense fold expects dense-sum partials");
+            total += read_u16(p, 1) as usize;
+            dense::accumulate(&p[3..], &mut self.acc);
+        }
+        assert_eq!(total, self.nworkers, "group partials must cover all workers");
+        let inv = 1.0 / self.nworkers as f32;
+        for a in self.acc.iter_mut() {
+            *a *= inv;
+        }
+        frame(TAG_DENSE, &dense::pack(&self.acc))
+    }
 }
 
 impl Strategy for Global {
@@ -160,6 +200,30 @@ mod tests {
             }
             assert_eq!(pa, pb, "{opt:?} diverged from its single-node optimizer");
         }
+    }
+
+    #[test]
+    fn one_group_dense_fold_is_bitwise_flat() {
+        // partial over the single full group + fold must reproduce the
+        // flat aggregate byte-for-byte (same f32 accumulation order;
+        // the root adds the partial into a zeroed accumulator, which is
+        // exact because a left-to-right f32 sum is never -0.0).
+        let (n, d) = (4, 57);
+        let mut rng = Rng::new(0x62);
+        let ups: Vec<Vec<u8>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                frame(TAG_DENSE, &dense::pack(&g))
+            })
+            .collect();
+        let mut flat = DenseAvgServer::new(n, d);
+        let mut group = DenseAvgServer::new(n, d);
+        let mut root = DenseAvgServer::new(n, d);
+        let reference = flat.aggregate(&ups, 1e-3, 0);
+        let partial = group.partial(&ups, 1e-3, 0);
+        assert_eq!(partial[0], TAG_DENSE_SUM);
+        assert_eq!(root.fold(&[partial], 1e-3, 0), reference);
     }
 
     #[test]

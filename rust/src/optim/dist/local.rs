@@ -1,0 +1,313 @@
+//! Local-steps Distributed Lion (`d-lion-local(H)`) — the "Distributed
+//! Sign Momentum with Local Steps" direction (Yu et al. 2024): take H
+//! local Lion steps between communication rounds and ship the **sign of
+//! the accumulated update**, amortizing the 1-bit frame to 1/H
+//! bits/param per optimizer step.
+//!
+//! One H-step window on worker i (base x̄ = the replicated parameters at
+//! the last sync point, bitwise equal across workers):
+//!
+//! ```text
+//! for t in window:                  # H steps, the last one syncs
+//!     u_t = sign(β1·m_t + (1−β1)·g_t)    # the usual Lion update
+//!     a  += u_t                          # accumulate the binary votes
+//!     m  ← β2·m_t + (1−β2)·g_t           # momentum (every step)
+//!     if t is not the sync step:
+//!         x ← x − ε_t·(u_t + λx)         # LOCAL exploration step
+//! send sign(a)                           # 1-bit frame, Λ = Σ_window ε_t
+//! recv Δ = MajorityVote_i(sign(a_i))     # the flat d-lion-mavo server
+//! x ← x̄ − Λ·(Δ + λ·x̄);  x̄ ← x           # reconcile: replicas re-equal
+//! ```
+//!
+//! The local steps explore (they move the points at which gradients are
+//! sampled and feed the momentum) but the *global* trajectory advances
+//! only by the aggregated sign step with the window's summed learning
+//! rate — so replicas are bit-identical at every sync point, which is
+//! where the cluster drivers assert the replica invariant. With H = 1
+//! there are no local steps, `a = u_t`, and the strategy is bit-exact
+//! `d-lion-mavo` (tested below and in `tests/topology_parity.rs`).
+//!
+//! Wire format: identical to `d-lion-mavo` (tag-1 uplink into the
+//! shared sign-vote server, majority-vote downlink) — it is the
+//! *cadence* that changes, which is why the analytic Table-1 model
+//! divides by H. The server also inherits the exact hierarchical vote
+//! partials, so `d-lion-local(H)` composes with
+//! [`crate::cluster::topology::Topology::Hierarchical`] for free.
+
+use super::{
+    frame, sign_family_downlink_bits, Aggregation, ServerLogic, SignVoteServer, Strategy,
+    UpdateDecoder, WorkerLogic, TAG_SIGN,
+};
+use crate::comm::sign;
+use crate::optim::lion::{bsign, Lion};
+use crate::optim::LionParams;
+
+/// Local-steps Distributed Lion strategy (factory). Registry names
+/// `d-lion-local(<H>)` and the bare `d-lion-local` alias (H from
+/// `StrategyHyper::local_steps`).
+pub struct DLionLocal {
+    pub hp: LionParams,
+    /// window length H ≥ 1: one wire round every H optimizer steps.
+    pub h: usize,
+}
+
+impl DLionLocal {
+    pub fn new(hp: LionParams, h: usize) -> Self {
+        assert!(h >= 1, "d-lion-local needs H >= 1");
+        DLionLocal { hp, h }
+    }
+}
+
+struct LocalWorker {
+    lion: Lion,
+    weight_decay: f32,
+    /// accumulated binary votes over the current window, each ∈ [−H, H]
+    acc: Vec<i32>,
+    /// replicated parameters at the last sync point (the window base)
+    base: Vec<f32>,
+    /// Σ of the window's learning rates (including the sync step's)
+    lr_sum: f32,
+    /// local steps taken this window (0 ⇒ base not yet captured)
+    local_taken: usize,
+    /// scratch for the packed sign(acc) frame
+    signs: Vec<i8>,
+    decoder: UpdateDecoder,
+}
+
+impl WorkerLogic for LocalWorker {
+    fn local_step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, _step: usize) {
+        if self.local_taken == 0 {
+            // window start: params are the replicated sync-point state
+            self.base.copy_from_slice(params);
+        }
+        self.local_taken += 1;
+        self.lr_sum += lr;
+        let b1 = self.lion.hp.beta1;
+        let b2 = self.lion.hp.beta2;
+        let wd = self.weight_decay;
+        // fused: vote accumulation + local Lion step + momentum advance
+        for (((p, m), &g), a) in params
+            .iter_mut()
+            .zip(self.lion.momentum.iter_mut())
+            .zip(grads)
+            .zip(self.acc.iter_mut())
+        {
+            let u = bsign(b1 * *m + (1.0 - b1) * g);
+            *a += u as i32;
+            *p -= lr * (u + wd * *p);
+            *m = b2 * *m + (1.0 - b2) * g;
+        }
+    }
+
+    fn encode(&mut self, grads: &[f32], lr: f32, _step: usize) -> Vec<u8> {
+        // The sync step contributes its vote and momentum advance but no
+        // local parameter step — its update ships inside the aggregate.
+        self.lr_sum += lr;
+        let b1 = self.lion.hp.beta1;
+        let b2 = self.lion.hp.beta2;
+        for (((m, &g), a), s) in self
+            .lion
+            .momentum
+            .iter_mut()
+            .zip(grads)
+            .zip(self.acc.iter_mut())
+            .zip(self.signs.iter_mut())
+        {
+            let u = bsign(b1 * *m + (1.0 - b1) * g);
+            *a += u as i32;
+            // binarized like bsign: a zero vote sum ships +1, keeping
+            // the uplink strictly 1-bit
+            *s = if *a >= 0 { 1 } else { -1 };
+            *m = b2 * *m + (1.0 - b2) * g;
+        }
+        frame(TAG_SIGN, &sign::pack(&self.signs))
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], _lr: f32, _step: usize) {
+        if self.local_taken == 0 {
+            // H = 1 (or a degenerate 1-step window): no local step ran,
+            // so the current params *are* the window base.
+            self.base.copy_from_slice(params);
+        }
+        let update = self.decoder.decode(downlink);
+        // rewind the local exploration, apply the aggregate once with
+        // the window's summed learning rate
+        params.copy_from_slice(&self.base);
+        Lion::apply_aggregated(params, update, self.lr_sum, self.weight_decay);
+        self.local_taken = 0;
+        self.lr_sum = 0.0;
+        self.acc.iter_mut().for_each(|a| *a = 0);
+    }
+
+    fn momentum(&self) -> Option<&[f32]> {
+        Some(&self.lion.momentum)
+    }
+}
+
+impl Strategy for DLionLocal {
+    fn name(&self) -> String {
+        format!("d-lion-local({})", self.h)
+    }
+
+    fn make_worker(&self, _worker: usize, _nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        Box::new(LocalWorker {
+            lion: Lion::new(dim, self.hp),
+            weight_decay: self.hp.weight_decay,
+            acc: vec![0; dim],
+            base: vec![0.0; dim],
+            lr_sum: 0.0,
+            local_taken: 0,
+            signs: vec![0; dim],
+            decoder: UpdateDecoder::new(dim),
+        })
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        Box::new(SignVoteServer::new(nworkers, dim, Aggregation::MajorityVote))
+    }
+
+    /// Amortized over the window: one 1-bit frame per H steps.
+    fn uplink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        1.0 / self.h as f64
+    }
+
+    fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
+        sign_family_downlink_bits(Aggregation::MajorityVote, nworkers) / self.h as f64
+    }
+
+    fn local_steps(&self) -> usize {
+        self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{by_name, run_round, DLion, StrategyHyper};
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_grads(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect()
+    }
+
+    #[test]
+    fn h1_is_bitwise_dlion_mavo() {
+        // With H = 1 every step syncs, the vote accumulator holds one
+        // vote, and the trajectory must equal d-lion-mavo bit-for-bit
+        // (frames AND parameters).
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.01 };
+        let (d, n) = (67, 3);
+        let local = DLionLocal::new(hp, 1);
+        let mavo = DLion::new(hp, Aggregation::MajorityVote);
+        let mut wa: Vec<_> = (0..n).map(|i| local.make_worker(i, n, d)).collect();
+        let mut wb: Vec<_> = (0..n).map(|i| mavo.make_worker(i, n, d)).collect();
+        let mut sa = local.make_server(n, d);
+        let mut sb = mavo.make_server(n, d);
+        let mut pa: Vec<Vec<f32>> = vec![vec![0.3f32; d]; n];
+        let mut pb = pa.clone();
+        let mut rng = Rng::new(0x10C);
+        for step in 0..40 {
+            let grads = rand_grads(&mut rng, n, d);
+            let ups_a: Vec<Vec<u8>> =
+                wa.iter_mut().zip(&grads).map(|(w, g)| w.encode(g, 0.01, step)).collect();
+            let ups_b: Vec<Vec<u8>> =
+                wb.iter_mut().zip(&grads).map(|(w, g)| w.encode(g, 0.01, step)).collect();
+            assert_eq!(ups_a, ups_b, "step {step}: H=1 frames must equal d-lion-mavo");
+            let down_a = sa.aggregate(&ups_a, 0.01, step);
+            let down_b = sb.aggregate(&ups_b, 0.01, step);
+            assert_eq!(down_a, down_b);
+            for (w, p) in wa.iter_mut().zip(pa.iter_mut()) {
+                w.apply(p, &down_a, 0.01, step);
+            }
+            for (w, p) in wb.iter_mut().zip(pb.iter_mut()) {
+                w.apply(p, &down_b, 0.01, step);
+            }
+            assert_eq!(pa, pb, "step {step}");
+        }
+    }
+
+    #[test]
+    fn replicas_diverge_locally_and_reconcile_at_sync() {
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.005 };
+        let (d, n, h) = (50, 3, 4);
+        let strat = DLionLocal::new(hp, h);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.2f32; d]; n];
+        let mut rng = Rng::new(0x10D);
+        for step in 0..16 {
+            let grads = rand_grads(&mut rng, n, d);
+            if (step + 1) % h == 0 {
+                run_round(&mut workers, server.as_mut(), &mut params, &grads, 0.01, step);
+                for w in 1..n {
+                    assert_eq!(params[0], params[w], "sync step {step}: replicas must agree");
+                }
+            } else {
+                for ((w, p), g) in workers.iter_mut().zip(params.iter_mut()).zip(&grads) {
+                    w.local_step(p, g, 0.01, step);
+                }
+                // per-worker gradients drive the local replicas apart
+                assert!(
+                    (1..n).any(|w| params[w] != params[0]),
+                    "local step {step}: replicas should explore independently"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn window_applies_summed_learning_rate_from_the_base() {
+        // One window with H = 2 and a single worker: the final state
+        // must be x̄ − Λ·(Δ + λ·x̄) with Λ = lr0 + lr1 and Δ the worker's
+        // own accumulated-sign vote (N = 1 majority vote).
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.1 };
+        let d = 33;
+        let strat = DLionLocal::new(hp, 2);
+        let mut worker = strat.make_worker(0, 1, d);
+        let mut server = strat.make_server(1, d);
+        let mut rng = Rng::new(0x10E);
+        let g0 = rand_grads(&mut rng, 1, d).pop().unwrap();
+        let g1 = rand_grads(&mut rng, 1, d).pop().unwrap();
+        let base: Vec<f32> = (0..d).map(|i| 0.1 * (i as f32 - 16.0)).collect();
+        let mut params = base.clone();
+        let (lr0, lr1) = (0.02f32, 0.01f32);
+        worker.local_step(&mut params, &g0, lr0, 0);
+        let up = worker.encode(&g1, lr1, 1);
+        let down = server.aggregate(&[up.clone()], lr1, 1);
+        worker.apply(&mut params, &down, lr1, 1);
+        // reference: replay the vote from the frame
+        let votes = sign::unpack(&up[1..], d);
+        let lam = lr0 + lr1;
+        for ((&p, &b), &v) in params.iter().zip(&base).zip(&votes) {
+            let expect = b - lam * (v as f32 + hp.weight_decay * b);
+            assert_eq!(p, expect);
+        }
+    }
+
+    #[test]
+    fn amortized_bits_model_divides_by_h() {
+        let hp = StrategyHyper::default();
+        for h in [1usize, 2, 4, 8] {
+            let s = by_name(&format!("d-lion-local({h})"), &hp).unwrap();
+            assert_eq!(s.local_steps(), h);
+            assert_eq!(s.uplink_bits_per_param(3), 1.0 / h as f64);
+            assert_eq!(s.downlink_bits_per_param(3), 1.0 / h as f64);
+            assert_eq!(s.downlink_bits_per_param(4), 1.6 / h as f64);
+        }
+    }
+
+    #[test]
+    fn name_round_trips_through_registry() {
+        let hp = StrategyHyper::default();
+        let s = by_name("d-lion-local(6)", &hp).unwrap();
+        assert_eq!(s.name(), "d-lion-local(6)");
+        let again = by_name(&s.name(), &hp).unwrap();
+        assert_eq!(again.local_steps(), 6);
+    }
+}

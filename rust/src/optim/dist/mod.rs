@@ -29,20 +29,27 @@
 //! | 10  | `[10][compact sparse payload]`           | [`sparse`](crate::comm::sparse) compact, ≈40·keep |
 //! | 11  | `[11][sign payload][bf16 momentum]`      | msync uplink, 1 + 16 b/p |
 //! | 12  | `[12][vote frame][bf16 mean momentum]`   | msync downlink    |
+//! | 13  | `[13][count: u16 LE][(len: u32 LE, frame)*]` | relay partial (aggregator→root fallback) |
+//! | 14  | `[14][count: u16 LE][dense f32 payload]` | dense-sum partial (global family) |
 //!
 //! The bandwidth-aware selector ([`select`]) adds no framing of its own:
-//! its rounds are the wrapped strategies' frames verbatim.
+//! its rounds are the wrapped strategies' frames verbatim. Tags 13/14
+//! and the tag-3 vote partial only ever cross the aggregator→root hop
+//! of a hierarchical topology ([`crate::cluster::topology`]); workers
+//! never see them.
 
 pub mod dgc;
 pub mod dlion;
 pub mod ef;
 pub mod faulty;
 pub mod global;
+pub mod local;
 pub mod msync;
 pub mod select;
 pub mod terngrad;
 
 use crate::comm::{intavg, sign, tern};
+use crate::error::{DlionError, Result};
 use crate::optim::LionParams;
 use crate::util::math::bits_for_count;
 
@@ -51,6 +58,7 @@ pub use self::dlion::{Aggregation, DLion, DSignum};
 pub use self::ef::DLionEf;
 pub use self::faulty::{Fault, FaultyWorker};
 pub use self::global::{Global, GlobalOpt};
+pub use self::local::DLionLocal;
 pub use self::msync::DLionMsync;
 pub use self::select::BandwidthAware;
 pub use self::terngrad::{EfSignSgd, Qsgd, TernGrad};
@@ -68,6 +76,8 @@ pub const TAG_QUANT: u8 = 9;
 pub const TAG_SPARSE_COMPACT: u8 = 10;
 pub const TAG_SIGN_MOM: u8 = 11;
 pub const TAG_MSYNC_DOWN: u8 = 12;
+pub const TAG_RELAY: u8 = 13;
+pub const TAG_DENSE_SUM: u8 = 14;
 
 /// Worker-side half of one synchronous round (Algorithm 1 lines 4–6, 9).
 ///
@@ -91,6 +101,27 @@ pub const TAG_MSYNC_DOWN: u8 = 12;
 pub trait WorkerLogic: Send {
     fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8>;
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize);
+
+    /// Take one purely local optimizer step (no communication). Called
+    /// by the cluster drivers on the non-sync steps of a local-steps
+    /// strategy ([`Strategy::local_steps`] > 1); replicas may diverge
+    /// between sync points and are reconciled by the next `apply`.
+    ///
+    /// Strategies that communicate every step (`local_steps() == 1`,
+    /// the default) never receive this call.
+    fn local_step(&mut self, _params: &mut [f32], _grads: &[f32], _lr: f32, _step: usize) {
+        panic!(
+            "local_step called on a strategy with local_steps == 1; \
+             only local-steps strategies (d-lion-local) support it"
+        );
+    }
+
+    /// Introspection hook: the worker's optimizer momentum, when it has
+    /// one. Benches use this to measure momentum drift across workers
+    /// under non-iid shards; never used on the training path.
+    fn momentum(&self) -> Option<&[f32]> {
+        None
+    }
 }
 
 /// Server-side half: fold the index-aligned worker uplinks into one
@@ -111,6 +142,34 @@ pub trait WorkerLogic: Send {
 /// ```
 pub trait ServerLogic: Send {
     fn aggregate(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8>;
+
+    /// Group-aggregator hop of a hierarchical topology: fold this
+    /// group's uplinks into one *partial* frame for the root.
+    ///
+    /// The default is a relay frame (tag 13) carrying the member
+    /// uplinks verbatim — always exact, but it compresses nothing.
+    /// Strategies with a mergeable aggregate override it: the sign-vote
+    /// family ships its integer vote sums as a tag-3 `intavg` frame
+    /// (⌈log₂(g+1)⌉ bits/param for a g-worker group), the dense family
+    /// ships f32 partial sums (tag 14). A `ServerLogic` built for a
+    /// group (via `make_server(group_size, dim)`) only ever sees
+    /// `partial`; root instances only see `aggregate`/`fold`.
+    fn partial(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        relay_pack(uplinks)
+    }
+
+    /// Root hop of a hierarchical topology: fold the group partials
+    /// into the final downlink frame. Must pair with `partial`: the
+    /// default unwraps relay frames back into the flat uplink list and
+    /// aggregates it, which reproduces the flat-star downlink
+    /// bit-for-bit for any grouping.
+    fn fold(&mut self, partials: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8> {
+        let mut flat: Vec<Vec<u8>> = Vec::new();
+        for p in partials {
+            relay_unpack(p, &mut flat);
+        }
+        self.aggregate(&flat, lr, step)
+    }
 }
 
 /// A distributed training strategy: a factory for worker/server logic
@@ -150,6 +209,14 @@ pub trait Strategy: Send + Sync {
 
     /// Analytic server→worker payload bits per parameter (Table 1).
     fn downlink_bits_per_param(&self, nworkers: usize) -> f64;
+
+    /// Communication cadence: the cluster drivers run one wire round
+    /// every `local_steps()`-th step and call
+    /// [`WorkerLogic::local_step`] on the steps in between. 1 (the
+    /// default) is Algorithm 1's every-step round.
+    fn local_steps(&self) -> usize {
+        1
+    }
 }
 
 /// Hyper-parameters shared by the whole strategy registry (a superset:
@@ -181,6 +248,10 @@ pub struct StrategyHyper {
     /// Link budget for the `bandwidth-aware` selector, in bits/param per
     /// round (uplink + downlink combined, analytic Table-1 accounting).
     pub link_budget: f32,
+    /// Local-step window H for `d-lion-local` (one wire round every H
+    /// optimizer steps; the explicit `d-lion-local(<H>)` name overrides
+    /// this). Must be ≥ 1; 1 degenerates to `d-lion-mavo`.
+    pub local_steps: usize,
 }
 
 impl Default for StrategyHyper {
@@ -197,6 +268,7 @@ impl Default for StrategyHyper {
             msync_every: 32,
             compact_sparse: false,
             link_budget: 4.0,
+            local_steps: 4,
         }
     }
 }
@@ -217,12 +289,14 @@ pub const ALL_STRATEGIES: [&str; 10] = [
 
 /// Extension strategies `by_name` resolves beyond the Section-5.1 matrix:
 /// the network-projection baselines plus the Lion Cub-style variants
-/// (error feedback, momentum sync, bandwidth-aware selection).
-pub const EXTENSION_STRATEGIES: [&str; 5] = [
+/// (error feedback, momentum sync, bandwidth-aware selection) and the
+/// local-steps D-Lion family.
+pub const EXTENSION_STRATEGIES: [&str; 6] = [
     "qsgd",
     "ef-signsgd",
     "d-lion-ef",
     "d-lion-msync",
+    "d-lion-local(4)",
     "bandwidth-aware(d-lion-mavo,g-lion)",
 ];
 
@@ -232,7 +306,13 @@ pub const EXTENSION_STRATEGIES: [&str; 5] = [
 /// [`EXTENSION_STRATEGIES`]. The bandwidth-aware selector also accepts
 /// the composite form `bandwidth-aware(<cheap>,<rich>)` for any two
 /// registered (non-composite) names, and the bare alias
-/// `bandwidth-aware` for the default `(d-lion-mavo,g-lion)` pair.
+/// `bandwidth-aware` for the default `(d-lion-mavo,g-lion)` pair. The
+/// local-steps family accepts `d-lion-local(<H>)` for any H ≥ 1, and
+/// the bare alias `d-lion-local` for `StrategyHyper::local_steps`.
+///
+/// Unknown or malformed names return a [`DlionError::Config`] whose
+/// message says exactly what failed to parse (the CLI surfaces it
+/// verbatim), never a silent absence.
 ///
 /// # Examples
 ///
@@ -250,33 +330,85 @@ pub const EXTENSION_STRATEGIES: [&str; 5] = [
 /// assert_eq!(msync.uplink_bits_per_param(3), 3.0);
 ///
 /// // composite selector names resolve recursively
-/// assert!(by_name("bandwidth-aware(d-lion-mavo,g-lion)", &hp).is_some());
-/// assert!(by_name("no-such-strategy", &hp).is_none());
+/// assert!(by_name("bandwidth-aware(d-lion-mavo,g-lion)", &hp).is_ok());
+///
+/// // local-steps D-Lion: amortized 1/H-bit uplink
+/// let local = by_name("d-lion-local(8)", &hp).unwrap();
+/// assert_eq!(local.local_steps(), 8);
+/// assert_eq!(local.uplink_bits_per_param(3), 0.125);
+///
+/// // failures carry the reason, not a silent None
+/// let err = by_name("no-such-strategy", &hp).err().expect("must fail");
+/// assert!(err.to_string().contains("unknown strategy"));
+/// let err = by_name("bandwidth-aware(d-lion-mavo", &hp).err().expect("must fail");
+/// assert!(err.to_string().contains("bandwidth-aware(<cheap>,<rich>)"));
 /// ```
-pub fn by_name(name: &str, hp: &StrategyHyper) -> Option<Box<dyn Strategy>> {
+pub fn by_name(name: &str, hp: &StrategyHyper) -> Result<Box<dyn Strategy>> {
     let lion = LionParams {
         beta1: hp.beta1,
         beta2: hp.beta2,
         weight_decay: hp.weight_decay,
     };
     if let Some(rest) = name.strip_prefix("bandwidth-aware") {
+        let malformed = || {
+            DlionError::Config(format!(
+                "malformed composite strategy '{name}': expected \
+                 bandwidth-aware(<cheap>,<rich>) with two registered names"
+            ))
+        };
         let (cheap_name, rich_name) = if rest.is_empty() {
             ("d-lion-mavo", "g-lion")
         } else {
-            rest.strip_prefix('(')?.strip_suffix(')')?.split_once(',')?
+            rest.strip_prefix('(')
+                .and_then(|r| r.strip_suffix(')'))
+                .and_then(|r| r.split_once(','))
+                .ok_or_else(malformed)?
         };
         let (cheap_name, rich_name) = (cheap_name.trim(), rich_name.trim());
         // one level of composition only: a nested selector's name would
         // carry its own comma and could never round-trip through this
         // parser, so reject selector arms outright
         if cheap_name.starts_with("bandwidth-aware") || rich_name.starts_with("bandwidth-aware") {
-            return None;
+            return Err(DlionError::Config(format!(
+                "selector arms cannot be composite in '{name}': \
+                 bandwidth-aware nests one level only"
+            )));
         }
         let cheap = by_name(cheap_name, hp)?;
         let rich = by_name(rich_name, hp)?;
-        return Some(Box::new(BandwidthAware::new(cheap, rich, hp.link_budget as f64)));
+        // the selector replays one schedule per wire round; an arm that
+        // skips rounds would desynchronize worker and server schedules
+        if cheap.local_steps() != 1 || rich.local_steps() != 1 {
+            return Err(DlionError::Config(format!(
+                "selector arms must communicate every step in '{name}': \
+                 local-steps strategies cannot be wrapped"
+            )));
+        }
+        return Ok(Box::new(BandwidthAware::new(cheap, rich, hp.link_budget as f64)));
     }
-    Some(match name {
+    if let Some(rest) = name.strip_prefix("d-lion-local") {
+        let h = if rest.is_empty() {
+            hp.local_steps
+        } else {
+            rest.strip_prefix('(')
+                .and_then(|r| r.strip_suffix(')'))
+                .and_then(|r| r.trim().parse::<usize>().ok())
+                .ok_or_else(|| {
+                    DlionError::Config(format!(
+                        "malformed local-steps strategy '{name}': expected \
+                         d-lion-local(<H>) with an integer H >= 1"
+                    ))
+                })?
+        };
+        if h == 0 {
+            return Err(DlionError::Config(format!(
+                "local-steps strategy '{name}' needs H >= 1 (H = 1 \
+                 degenerates to d-lion-mavo)"
+            )));
+        }
+        return Ok(Box::new(DLionLocal::new(lion, h)));
+    }
+    Ok(match name {
         "d-lion-mavo" => Box::new(DLion::new(lion, Aggregation::MajorityVote)),
         "d-lion-avg" => Box::new(DLion::new(lion, Aggregation::Average)),
         "d-lion-ef" => Box::new(DLionEf::new(lion, Aggregation::MajorityVote)),
@@ -297,7 +429,11 @@ pub fn by_name(name: &str, hp: &StrategyHyper) -> Option<Box<dyn Strategy>> {
         "dgc" => Box::new(SparseTopK::new(*hp, true)),
         "qsgd" => Box::new(Qsgd::new(*hp)),
         "ef-signsgd" => Box::new(EfSignSgd::new(*hp)),
-        _ => return None,
+        _ => {
+            return Err(DlionError::Config(format!(
+                "unknown strategy '{name}' (run `dlion strategies` for the registry)"
+            )))
+        }
     })
 }
 
@@ -339,6 +475,38 @@ pub(crate) fn frame(tag: u8, payload: &[u8]) -> Vec<u8> {
     msg.push(tag);
     msg.extend_from_slice(payload);
     msg
+}
+
+/// Pack member frames into a relay partial (tag 13): the universal —
+/// exact but uncompressed — aggregator→root fallback for codecs with
+/// no mergeable partial aggregate.
+/// Layout: `[13][count: u16 LE][(len: u32 LE, frame bytes)*count]`.
+pub(crate) fn relay_pack(uplinks: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize = uplinks.iter().map(|m| 4 + m.len()).sum();
+    let mut msg = Vec::with_capacity(3 + total);
+    msg.push(TAG_RELAY);
+    msg.extend_from_slice(&(uplinks.len() as u16).to_le_bytes());
+    for up in uplinks {
+        msg.extend_from_slice(&(up.len() as u32).to_le_bytes());
+        msg.extend_from_slice(up);
+    }
+    msg
+}
+
+/// Unpack a relay partial, appending the member frames to `out` in
+/// worker order. Panics on any other tag (mixed partial kinds cannot
+/// occur: one `ServerLogic` type produces both sides).
+pub(crate) fn relay_unpack(msg: &[u8], out: &mut Vec<Vec<u8>>) {
+    assert_eq!(msg[0], TAG_RELAY, "relay fold expects tag-13 partials, got {}", msg[0]);
+    let count = read_u16(msg, 1) as usize;
+    let mut off = 3usize;
+    for _ in 0..count {
+        let len = u32::from_le_bytes([msg[off], msg[off + 1], msg[off + 2], msg[off + 3]]) as usize;
+        off += 4;
+        out.push(msg[off..off + len].to_vec());
+        off += len;
+    }
+    assert_eq!(off, msg.len(), "relay partial has trailing bytes");
 }
 
 pub(crate) fn read_u16(msg: &[u8], off: usize) -> u16 {
@@ -399,26 +567,36 @@ impl UpdateDecoder {
 /// Shared server for the 1-bit sign-update family (D-Lion, D-SIGNUM):
 /// accumulate worker votes, then either majority-vote or integer-average
 /// the result (the two downlink columns of Table 1).
+///
+/// Partially aggregates exactly: a group instance ships its integer
+/// vote sums as a tag-3 `intavg` partial, and the root instance sums
+/// the partials — the total votes (and hence the downlink bytes) are
+/// identical to the flat star for any grouping.
 pub(crate) struct SignVoteServer {
     nworkers: usize,
     agg: Aggregation,
     votes: Vec<i32>,
+    /// scratch for decoding one group partial during `fold`
+    scratch: Vec<i32>,
 }
 
 impl SignVoteServer {
     pub(crate) fn new(nworkers: usize, dim: usize, agg: Aggregation) -> Self {
-        SignVoteServer { nworkers, agg, votes: vec![0; dim] }
+        SignVoteServer { nworkers, agg, votes: vec![0; dim], scratch: Vec::new() }
     }
-}
 
-impl ServerLogic for SignVoteServer {
-    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
-        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+    /// Zero the vote buffer and accumulate the 1-bit uplinks into it.
+    fn accumulate_uplinks(&mut self, uplinks: &[Vec<u8>]) {
         self.votes.iter_mut().for_each(|v| *v = 0);
         for up in uplinks {
             assert_eq!(up[0], TAG_SIGN, "sign-vote server expects 1-bit uplinks");
             sign::accumulate_votes(&up[1..], &mut self.votes);
         }
+    }
+
+    /// Encode the accumulated votes as the downlink frame (the shared
+    /// tail of `aggregate` and `fold`).
+    fn finish(&mut self) -> Vec<u8> {
         match self.agg {
             Aggregation::MajorityVote => {
                 if self.nworkers % 2 == 1 {
@@ -447,6 +625,48 @@ impl ServerLogic for SignVoteServer {
     }
 }
 
+impl ServerLogic for SignVoteServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.accumulate_uplinks(uplinks);
+        self.finish()
+    }
+
+    /// Group hop: ship the group's exact vote sums, log₂(g+1)-bit
+    /// packed — `[TAG_INTAVG][g: u16 LE][intavg payload]` (votes over g
+    /// binary uplinks satisfy the codec's parity invariant).
+    fn partial(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
+        self.accumulate_uplinks(uplinks);
+        let payload = intavg::pack(&self.votes, self.nworkers);
+        let mut msg = Vec::with_capacity(3 + payload.len());
+        msg.push(TAG_INTAVG);
+        msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
+        msg.extend_from_slice(&payload);
+        msg
+    }
+
+    /// Root hop: sum the group vote sums — integer addition regroups
+    /// exactly, so the downlink equals the flat star's bit-for-bit.
+    fn fold(&mut self, partials: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        let d = self.votes.len();
+        self.votes.iter_mut().for_each(|v| *v = 0);
+        self.scratch.resize(d, 0);
+        let mut total = 0usize;
+        for p in partials {
+            assert_eq!(p[0], TAG_INTAVG, "sign-vote fold expects intavg partials");
+            let group_n = read_u16(p, 1) as usize;
+            intavg::unpack_into(&p[3..], group_n, &mut self.scratch);
+            for (v, &s) in self.votes.iter_mut().zip(&self.scratch) {
+                *v += s;
+            }
+            total += group_n;
+        }
+        assert_eq!(total, self.nworkers, "group partials must cover all workers");
+        self.finish()
+    }
+}
+
 /// Downlink bits/param for the sign-update family.
 pub(crate) fn sign_family_downlink_bits(agg: Aggregation, nworkers: usize) -> f64 {
     match agg {
@@ -470,18 +690,71 @@ mod tests {
     fn registry_resolves_all_names() {
         let hp = StrategyHyper::default();
         for &name in ALL_STRATEGIES.iter().chain(EXTENSION_STRATEGIES.iter()) {
-            let s = by_name(name, &hp).unwrap_or_else(|| panic!("unregistered: {name}"));
+            let s = by_name(name, &hp).unwrap_or_else(|e| panic!("unregistered: {name}: {e}"));
             assert_eq!(s.name(), name, "name round-trip");
         }
-        // the bare selector alias resolves to the default pair
+        // the bare aliases resolve through the hyper-parameters
         let ba = by_name("bandwidth-aware", &hp).unwrap();
         assert_eq!(ba.name(), "bandwidth-aware(d-lion-mavo,g-lion)");
-        assert!(by_name("no-such-strategy", &hp).is_none());
-        assert!(by_name("bandwidth-aware(nope,g-lion)", &hp).is_none());
-        assert!(by_name("bandwidth-aware(", &hp).is_none());
+        let local = by_name("d-lion-local", &hp).unwrap();
+        assert_eq!(local.name(), format!("d-lion-local({})", hp.local_steps));
+        assert!(by_name("no-such-strategy", &hp).is_err());
+        assert!(by_name("bandwidth-aware(nope,g-lion)", &hp).is_err());
+        assert!(by_name("bandwidth-aware(", &hp).is_err());
         // nested selectors are rejected (their names cannot round-trip)
-        assert!(by_name("bandwidth-aware(bandwidth-aware,g-lion)", &hp).is_none());
-        assert!(by_name("bandwidth-aware(d-lion-mavo,bandwidth-aware)", &hp).is_none());
+        assert!(by_name("bandwidth-aware(bandwidth-aware,g-lion)", &hp).is_err());
+        assert!(by_name("bandwidth-aware(d-lion-mavo,bandwidth-aware)", &hp).is_err());
+    }
+
+    #[test]
+    fn parse_failures_name_the_problem() {
+        // Satellite contract: malformed names produce a message the CLI
+        // can surface verbatim, never a silent absence.
+        let hp = StrategyHyper::default();
+        let msg = |name: &str| by_name(name, &hp).err().expect(name).to_string();
+        assert!(msg("frobnicate").contains("unknown strategy 'frobnicate'"));
+        assert!(msg("bandwidth-aware(d-lion-mavo)").contains("bandwidth-aware(<cheap>,<rich>)"));
+        assert!(msg("bandwidth-aware(a,b,c)").contains("unknown strategy"), "inner arm error");
+        assert!(msg("bandwidth-aware(bandwidth-aware,g-lion)").contains("one level only"));
+        assert!(msg("d-lion-local(x)").contains("d-lion-local(<H>)"));
+        assert!(msg("d-lion-local(0)").contains("H >= 1"));
+        // local-steps strategies cannot ride inside the selector
+        assert!(msg("bandwidth-aware(d-lion-local(2),g-lion)").contains("every step"));
+    }
+
+    #[test]
+    fn relay_partials_round_trip_and_fold_matches_flat() {
+        // The default partial/fold path (relay) must reproduce the flat
+        // aggregate bit-for-bit for a codec with no mergeable partial.
+        let hp = StrategyHyper::default();
+        let (d, n) = (97, 4);
+        let strat = by_name("terngrad", &hp).unwrap();
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut rng = Rng::new(0xD17);
+        let ups: Vec<Vec<u8>> = workers
+            .iter_mut()
+            .map(|w| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                w.encode(&g, 1e-3, 0)
+            })
+            .collect();
+        // relay codec round-trip
+        let packed = relay_pack(&ups[..2]);
+        assert_eq!(packed[0], TAG_RELAY);
+        let mut back = Vec::new();
+        relay_unpack(&packed, &mut back);
+        assert_eq!(back, &ups[..2]);
+        // grouped fold == flat aggregate (TernGrad's server is
+        // deterministic given the uplinks, so frames must match)
+        let mut flat_server = strat.make_server(n, d);
+        let flat = flat_server.aggregate(&ups, 1e-3, 0);
+        let mut g0 = strat.make_server(2, d);
+        let mut g1 = strat.make_server(2, d);
+        let partials =
+            vec![g0.partial(&ups[..2], 1e-3, 0), g1.partial(&ups[2..], 1e-3, 0)];
+        let mut root = strat.make_server(n, d);
+        assert_eq!(root.fold(&partials, 1e-3, 0), flat);
     }
 
     #[test]

@@ -107,6 +107,10 @@ impl WorkerLogic for MsyncWorker {
             Lion::apply_aggregated(params, update, lr, self.weight_decay);
         }
     }
+
+    fn momentum(&self) -> Option<&[f32]> {
+        Some(&self.lion.momentum)
+    }
 }
 
 struct MsyncServer {

@@ -137,6 +137,21 @@ fn msync_amortized_bits_account_for_the_momentum_frame() {
 }
 
 #[test]
+fn dlion_local_amortized_bits_divide_by_the_window() {
+    // d-lion-local(2) with STEPS = 4 holds exactly 2 sync rounds: the
+    // measured average must equal the amortized model, 1/H bits each way
+    // on the odd-N majority-vote channels.
+    let hp = StrategyHyper::default();
+    let n = 3;
+    let (up, down) = measured_bits("d-lion-local(2)", n);
+    assert_close(up, 0.5, "local(2) amortized uplink");
+    assert_close(down, 0.5, "local(2) amortized downlink");
+    let strat = by_name("d-lion-local(2)", &hp).unwrap();
+    assert_close(up, strat.uplink_bits_per_param(n), "local model uplink");
+    assert_close(down, strat.downlink_bits_per_param(n), "local model downlink");
+}
+
+#[test]
 fn bandwidth_aware_selector_matches_its_amortized_model() {
     // Budget 33 against cheap d-lion-mavo (2 bits total, odd N) and rich
     // g-lion (64): the bucket alternates cheap/rich, so 4 steps hold

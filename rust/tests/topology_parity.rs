@@ -1,0 +1,216 @@
+//! Topology parity: the acceptance contract of the topology-aware round
+//! engine.
+//!
+//! * Degenerate configs reproduce today's flat star **bit-for-bit**:
+//!   `Hierarchical { group_size >= nworkers }` (one group) and
+//!   `d-lion-local(1)` must match flat every-step `d-lion-mavo` in
+//!   parameters and in the per-step worker-edge byte history.
+//! * For the sign-vote family *any* grouping is trajectory-identical
+//!   (integer vote partials regroup exactly); relayed codecs are exact
+//!   for any grouping too.
+//! * `run_sequential` and `run_threaded` agree bit-exactly — params and
+//!   the full per-hop byte history — for a hierarchical topology with
+//!   ≥ 2 groups and for `d-lion-local(4)`.
+
+use dlion::cluster::topology::Topology;
+use dlion::cluster::{run_sequential, run_threaded, TrainConfig};
+use dlion::comm::intavg;
+use dlion::optim::dist::{by_name, StrategyHyper};
+use dlion::tasks::quadratic::Quadratic;
+use dlion::tasks::GradTask;
+use std::sync::Arc;
+
+const D: usize = 96;
+
+fn cfg(steps: usize, topology: Topology) -> TrainConfig {
+    TrainConfig {
+        steps,
+        batch_per_worker: 4,
+        base_lr: 0.01,
+        eval_every: 0,
+        seed: 13,
+        check_replicas: true,
+        topology,
+        ..Default::default()
+    }
+}
+
+fn task() -> Quadratic {
+    Quadratic::new(D, 6.0, 0.4, 17)
+}
+
+fn task_arc() -> Arc<dyn GradTask + Send + Sync> {
+    Arc::new(task())
+}
+
+#[test]
+fn one_group_hierarchy_is_bitwise_flat_star() {
+    let n = 4;
+    let hp = StrategyHyper::default();
+    let strat = by_name("d-lion-mavo", &hp).unwrap();
+    let flat = run_sequential(&task(), strat.as_ref(), n, &cfg(30, Topology::Star));
+    let hier = run_sequential(
+        &task(),
+        strat.as_ref(),
+        n,
+        &cfg(30, Topology::Hierarchical { group_size: n }),
+    );
+    assert_eq!(flat.final_params, hier.final_params, "one group must not change the math");
+    for (f, h) in flat.history.iter().zip(&hier.history) {
+        assert_eq!(f.uplink_bytes, h.uplink_bytes, "step {} worker-edge uplink", f.step);
+        assert_eq!(f.downlink_bytes, h.downlink_bytes, "step {} worker-edge downlink", f.step);
+        // the star has no aggregator hop; the one-group tree pays one
+        // intavg vote partial up and one broadcast copy down
+        assert_eq!(f.agg_uplink_bytes, 0);
+        assert_eq!(h.agg_uplink_bytes, (3 + intavg::packed_len(D, n)) as u64);
+        assert_eq!(h.agg_downlink_bytes, f.downlink_bytes / n as u64);
+    }
+}
+
+#[test]
+fn vote_partials_keep_any_grouping_on_the_flat_trajectory() {
+    let n = 6;
+    let hp = StrategyHyper::default();
+    for name in ["d-lion-mavo", "d-lion-avg", "d-signum-mavo"] {
+        let strat = by_name(name, &hp).unwrap();
+        let flat = run_sequential(&task(), strat.as_ref(), n, &cfg(25, Topology::Star));
+        for gs in [1usize, 2, 3, 4] {
+            let hier = run_sequential(
+                &task(),
+                strat.as_ref(),
+                n,
+                &cfg(25, Topology::Hierarchical { group_size: gs }),
+            );
+            assert_eq!(
+                flat.final_params, hier.final_params,
+                "{name}: group_size={gs} changed the trajectory"
+            );
+        }
+    }
+}
+
+#[test]
+fn relayed_and_dense_sum_partials_are_exact_end_to_end() {
+    let n = 6;
+    let hp = StrategyHyper::default();
+    // terngrad relays (no mergeable partial): exact for any grouping
+    let strat = by_name("terngrad", &hp).unwrap();
+    let flat = run_sequential(&task(), strat.as_ref(), n, &cfg(20, Topology::Star));
+    let hier = run_sequential(
+        &task(),
+        strat.as_ref(),
+        n,
+        &cfg(20, Topology::Hierarchical { group_size: 2 }),
+    );
+    assert_eq!(flat.final_params, hier.final_params, "relay partials must be exact");
+    // relaying g members costs more than the members themselves (length
+    // headers) — the honest price of a codec with no partial aggregate
+    assert!(hier.total_agg_uplink() > hier.total_uplink());
+    // g-lion's dense-sum partial: one full group is bitwise the flat sum
+    let strat = by_name("g-lion", &hp).unwrap();
+    let flat = run_sequential(&task(), strat.as_ref(), n, &cfg(20, Topology::Star));
+    let hier = run_sequential(
+        &task(),
+        strat.as_ref(),
+        n,
+        &cfg(20, Topology::Hierarchical { group_size: n }),
+    );
+    assert_eq!(flat.final_params, hier.final_params, "dense-sum partial must be exact");
+    // ...and the root link carries one 32-bit frame per group, not per
+    // worker: 6 dense uplinks on the worker edge, 1 dense sum above
+    let per_round_worker_edge = flat.history[0].uplink_bytes;
+    let per_round_root_link = hier.history[0].agg_uplink_bytes;
+    assert!(per_round_root_link * 5 < per_round_worker_edge);
+}
+
+#[test]
+fn local_steps_one_is_bitwise_flat_dlion_mavo() {
+    let n = 4;
+    let hp = StrategyHyper::default();
+    let mavo = by_name("d-lion-mavo", &hp).unwrap();
+    let local1 = by_name("d-lion-local(1)", &hp).unwrap();
+    let a = run_sequential(&task(), mavo.as_ref(), n, &cfg(30, Topology::Star));
+    let b = run_sequential(&task(), local1.as_ref(), n, &cfg(30, Topology::Star));
+    assert_eq!(a.final_params, b.final_params, "H=1 must reproduce d-lion-mavo");
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "step {}", x.step);
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "step {}", x.step);
+    }
+}
+
+#[test]
+fn hierarchical_sequential_and_threaded_agree_bit_exactly() {
+    // Acceptance: ≥ 2 groups, params + per-step per-hop byte history.
+    let n = 4;
+    let topo = Topology::Hierarchical { group_size: 2 };
+    let hp = StrategyHyper::default();
+    let strat = by_name("d-lion-mavo", &hp).unwrap();
+    let c = cfg(40, topo);
+    let seq = run_sequential(&task(), strat.as_ref(), n, &c);
+    let (thr, stats) = run_threaded(task_arc(), strat.as_ref(), n, &c);
+    assert_eq!(seq.final_params, thr.final_params);
+    assert_eq!(seq.history.len(), thr.history.len());
+    for (s, t) in seq.history.iter().zip(&thr.history) {
+        assert_eq!(s.uplink_bytes, t.uplink_bytes, "step {} uplink", s.step);
+        assert_eq!(s.downlink_bytes, t.downlink_bytes, "step {} downlink", s.step);
+        assert_eq!(s.agg_uplink_bytes, t.agg_uplink_bytes, "step {} agg uplink", s.step);
+        assert_eq!(s.agg_downlink_bytes, t.agg_downlink_bytes, "step {} agg downlink", s.step);
+    }
+    // the transport counters cover every hop and match the history sums
+    assert_eq!(stats.uplink(), seq.total_uplink());
+    assert_eq!(stats.downlink(), seq.total_downlink());
+    assert_eq!(stats.agg_uplink(), seq.total_agg_uplink());
+    assert_eq!(stats.agg_downlink(), seq.total_agg_downlink());
+    assert!(stats.agg_uplink() > 0, "two groups must move aggregator bytes");
+}
+
+#[test]
+fn local_steps_sequential_and_threaded_agree_bit_exactly() {
+    // Acceptance: d-lion-local(4), params + per-step byte history.
+    let n = 4;
+    let hp = StrategyHyper::default();
+    let strat = by_name("d-lion-local(4)", &hp).unwrap();
+    let c = cfg(40, Topology::Star); // 40 % 4 == 0: ends on a sync point
+    let seq = run_sequential(&task(), strat.as_ref(), n, &c);
+    let (thr, stats) = run_threaded(task_arc(), strat.as_ref(), n, &c);
+    assert_eq!(seq.final_params, thr.final_params);
+    for (s, t) in seq.history.iter().zip(&thr.history) {
+        assert_eq!(s.uplink_bytes, t.uplink_bytes, "step {} uplink", s.step);
+        assert_eq!(s.downlink_bytes, t.downlink_bytes, "step {} downlink", s.step);
+        let sync = (s.step + 1) % 4 == 0;
+        assert_eq!(s.uplink_bytes > 0, sync, "bytes only on sync steps (step {})", s.step);
+    }
+    // amortization on the wire: 10 sync rounds × n × (1 bit/param + tag)
+    let expect_up = 10 * n as u64 * (1 + D.div_ceil(8) as u64);
+    assert_eq!(stats.uplink(), expect_up);
+}
+
+#[test]
+fn local_steps_compose_with_hierarchy() {
+    // d-lion-local(4) over two groups: both drivers, bit-exact, and the
+    // aggregator hop only moves bytes on sync steps.
+    let n = 4;
+    let topo = Topology::Hierarchical { group_size: 2 };
+    let hp = StrategyHyper::default();
+    let strat = by_name("d-lion-local(4)", &hp).unwrap();
+    let c = cfg(24, topo);
+    let seq = run_sequential(&task(), strat.as_ref(), n, &c);
+    let (thr, stats) = run_threaded(task_arc(), strat.as_ref(), n, &c);
+    assert_eq!(seq.final_params, thr.final_params);
+    for (s, t) in seq.history.iter().zip(&thr.history) {
+        assert_eq!(
+            (s.uplink_bytes, s.downlink_bytes, s.agg_uplink_bytes, s.agg_downlink_bytes),
+            (t.uplink_bytes, t.downlink_bytes, t.agg_uplink_bytes, t.agg_downlink_bytes),
+            "step {}",
+            s.step
+        );
+        if (s.step + 1) % 4 != 0 {
+            assert_eq!(s.agg_uplink_bytes, 0, "local step {} moved aggregator bytes", s.step);
+        }
+    }
+    assert_eq!(stats.agg_uplink(), seq.total_agg_uplink());
+    // the local(4) trajectory under hier:2 equals local(4) under star
+    // (vote partials are exact regardless of cadence)
+    let star = run_sequential(&task(), strat.as_ref(), n, &cfg(24, Topology::Star));
+    assert_eq!(star.final_params, seq.final_params);
+}

@@ -5,7 +5,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test docs fmt fmt-check clippy bench-quick topology clean
+.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json topology clean
 
 ## tier-1 verify: what CI runs (ROADMAP.md)
 verify:
@@ -35,6 +35,14 @@ clippy:
 bench-quick:
 	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench table1_bandwidth -- --quick
 	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench hotpath -- --quick
+
+## perf trajectory snapshot: runs hotpath + table1_bandwidth and writes
+## BENCH_hotpath.json at the repo root (monolithic vs chunked round
+## throughput at d=1M) so speedups are comparable across PRs
+bench-json:
+	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench hotpath -- --quick
+	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench table1_bandwidth -- --quick
+	@echo "--- BENCH_hotpath.json ---" && cat BENCH_hotpath.json
 
 ## quick pass over the topology × local-steps extension bench
 topology:

@@ -63,6 +63,87 @@ fn strategy_round(d: usize, n: usize) {
     t.write_csv(common::out_dir().join(format!("hotpath_round_d{d}_n{n}.csv"))).unwrap();
 }
 
+/// The chunked-redesign headline: encode+aggregate throughput of the
+/// pre-redesign monolithic round (sequential worker loop + one
+/// whole-model aggregate — exactly what `run_round` does) vs the
+/// chunked round engine (worker-parallel encode, chunk-parallel
+/// aggregate). Writes BENCH_<name>.json at the repo root so the perf
+/// trajectory is tracked across PRs (`make bench-json`).
+fn chunked_round(d: usize, n: usize) {
+    use dlion::cluster::topology::{RoundEngine, Topology};
+    let mut t = Table::new(
+        &format!("Chunked round engine vs monolithic (d-lion-mavo), d={d}, n={n}"),
+        &["path", "median encode+aggregate", "params GB/s", "speedup"],
+    );
+    let hp = StrategyHyper::default();
+    let mut rng = Rng::new(7);
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect();
+    // pre-redesign baseline: sequential encode loop + monolithic aggregate
+    let strat = by_name("d-lion-mavo", &hp).unwrap();
+    let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+    let mut server = strat.make_server(n, d);
+    let mut step = 0usize;
+    let base = bench_auto(0.8, || {
+        let ups: Vec<_> = workers
+            .iter_mut()
+            .zip(&grads)
+            .map(|(w, g)| w.encode(black_box(g), 1e-3, step))
+            .collect();
+        black_box(server.aggregate(&ups, 1e-3, step));
+        step += 1;
+    });
+    // chunked path: 256 KiB chunks, worker-/chunk-parallel via the engine
+    let chunk_size = 1 << 16;
+    let mut workers2: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+    let mut engine = RoundEngine::new(strat.as_ref(), n, d, Topology::Star, chunk_size);
+    let mut step2 = 0usize;
+    let chunked = bench_auto(0.8, || {
+        let ups = engine.encode_all(&mut workers2, &grads, 1e-3, step2);
+        black_box(engine.aggregate(black_box(&ups), 1e-3, step2));
+        step2 += 1;
+    });
+    let speedup = base.median / chunked.median;
+    let gbs = |m: f64| (4.0 * d as f64 * n as f64) / m / 1e9;
+    t.row(vec![
+        "monolithic (pre-redesign)".into(),
+        fmt_secs(base.median),
+        format!("{:.2}", gbs(base.median)),
+        "1.0x".into(),
+    ]);
+    t.row(vec![
+        format!("chunked engine (chunk_size={chunk_size})"),
+        fmt_secs(chunked.median),
+        format!("{:.2}", gbs(chunked.median)),
+        format!("{speedup:.2}x"),
+    ]);
+    t.print();
+    t.write_csv(common::out_dir().join(format!("hotpath_chunked_d{d}_n{n}.csv"))).unwrap();
+    // machine-readable perf trajectory (repo root, committed by `make bench-json` users)
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath_chunked_round\",\n  \"strategy\": \"d-lion-mavo\",\n  \
+         \"d\": {d},\n  \"n\": {n},\n  \"chunk_size\": {chunk_size},\n  \
+         \"threads\": {},\n  \"monolithic_s\": {:.6},\n  \"chunked_s\": {:.6},\n  \
+         \"speedup\": {:.3}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        base.median,
+        chunked.median,
+        speedup
+    );
+    if d == 1_000_000 {
+        // the acceptance point tracked across PRs
+        std::fs::write("../BENCH_hotpath.json", json).unwrap();
+        println!("chunked round speedup: {speedup:.2}x (wrote ../BENCH_hotpath.json)");
+    } else {
+        println!("chunked round speedup: {speedup:.2}x");
+    }
+}
+
 fn lion_kernels(d: usize) {
     let mut t = Table::new(
         &format!("Lion update micro-ops, d={d}"),
@@ -220,6 +301,10 @@ fn main() {
     let quick = dlion::bench_utils::quick_mode();
     let d = if quick { 1_000_000 } else { 4_000_000 };
     strategy_round(d, 4);
+    chunked_round(1_000_000, 4); // acceptance point: d = 1M
+    if !quick {
+        chunked_round(d, 4);
+    }
     lion_kernels(d);
     perf_ablation(d);
     pjrt_path();

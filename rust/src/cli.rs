@@ -76,7 +76,11 @@ COMMANDS:
 Overrides use dotted keys, e.g.: train.steps=500 hyper.weight_decay=0.01
 topology=hier:4 routes rounds worker→group-aggregator→root (default
 star); hyper.local_steps=<H> sets the window for the bare d-lion-local
-alias.
+alias; hyper.chunk_size=<elems> splits every wire message into
+per-chunk frames for the native-chunked families (sign-vote, dense,
+sparse) — bit-exact and byte-identical to the whole-model path, with
+chunk-parallel encode/aggregate/apply on large models (0 = monolithic,
+the default).
 ";
 
 /// Entry point used by main.rs (kept here so it is unit-testable).
@@ -187,6 +191,8 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
             "downlink_bytes",
             "agg_uplink_bytes",
             "agg_downlink_bytes",
+            "agg_uplink_msgs",
+            "agg_downlink_msgs",
             "bits_per_param_iter",
             "wall_secs",
         ],
@@ -210,6 +216,8 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
                     result.total_downlink().to_string(),
                     result.total_agg_uplink().to_string(),
                     result.total_agg_downlink().to_string(),
+                    result.total_agg_uplink_msgs().to_string(),
+                    result.total_agg_downlink_msgs().to_string(),
                     format!("{:.3}", result.bits_per_param_per_iter(task.dim())),
                     format!("{:.2}", result.wall_secs),
                 ])?;
@@ -337,6 +345,19 @@ mod tests {
             "train task=quadratic strategies=d-lion-ef,d-lion-msync,bandwidth-aware,d-lion-local \
              workers=2 seeds=1 train.steps=12 train.eval_every=0 task.dim=16 \
              hyper.msync_every=4 hyper.link_budget=8 hyper.local_steps=3",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn quick_train_runs_chunked_wire_format() {
+        // hyper.chunk_size drives the chunked wire path end-to-end for
+        // a native family (d-lion-mavo, g-lion) and is silently a
+        // single-chunk plan for monolithic strategies (terngrad).
+        let code = run(&argv(
+            "train task=quadratic strategies=d-lion-mavo,g-lion,terngrad workers=2 seeds=1 \
+             train.steps=10 train.eval_every=0 task.dim=64 hyper.chunk_size=16",
         ))
         .unwrap();
         assert_eq!(code, 0);

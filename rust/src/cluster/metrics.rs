@@ -22,6 +22,10 @@ pub struct StepRecord {
     pub agg_uplink_bytes: u64,
     /// root → aggregator (hierarchical only)
     pub agg_downlink_bytes: u64,
+    /// aggregator → root messages this step (hierarchical only)
+    pub agg_uplink_msgs: u64,
+    /// root → aggregator messages this step (hierarchical only)
+    pub agg_downlink_msgs: u64,
 }
 
 /// Full run result.
@@ -75,6 +79,17 @@ impl RunResult {
         self.history.iter().map(|r| r.agg_downlink_bytes).sum()
     }
 
+    /// Total aggregator→root messages across the run (hierarchical
+    /// topologies; 0 on the flat star).
+    pub fn total_agg_uplink_msgs(&self) -> u64 {
+        self.history.iter().map(|r| r.agg_uplink_msgs).sum()
+    }
+
+    /// Total root→aggregator messages across the run.
+    pub fn total_agg_downlink_msgs(&self) -> u64 {
+        self.history.iter().map(|r| r.agg_downlink_msgs).sum()
+    }
+
     /// Best held-out accuracy observed (periodic evals + final).
     pub fn best_accuracy(&self) -> Option<f64> {
         let peri = self
@@ -122,6 +137,8 @@ impl RunResult {
                 "downlink_bytes",
                 "agg_uplink_bytes",
                 "agg_downlink_bytes",
+                "agg_uplink_msgs",
+                "agg_downlink_msgs",
             ],
         )?;
         for r in &self.history {
@@ -142,6 +159,8 @@ impl RunResult {
                 r.downlink_bytes.to_string(),
                 r.agg_uplink_bytes.to_string(),
                 r.agg_downlink_bytes.to_string(),
+                r.agg_uplink_msgs.to_string(),
+                r.agg_downlink_msgs.to_string(),
             ])?;
         }
         w.flush()
@@ -168,6 +187,8 @@ mod tests {
                 downlink_bytes: 50,
                 agg_uplink_bytes: 25,
                 agg_downlink_bytes: 10,
+                agg_uplink_msgs: 2,
+                agg_downlink_msgs: 2,
             });
         }
         r
@@ -180,6 +201,8 @@ mod tests {
         assert_eq!(r.total_downlink(), 500);
         assert_eq!(r.total_agg_uplink(), 250);
         assert_eq!(r.total_agg_downlink(), 100);
+        assert_eq!(r.total_agg_uplink_msgs(), 20);
+        assert_eq!(r.total_agg_downlink_msgs(), 20);
         assert!((r.best_accuracy().unwrap() - 0.8).abs() < 1e-12);
         assert!(r.tail_loss(3) < r.tail_loss(10));
         // 150 bytes/iter over dim 100, 4 workers -> 3 bits/param/worker

@@ -51,6 +51,13 @@ pub struct TrainConfig {
     pub check_replicas: bool,
     /// communication layout (config syntax: `star` / `hier:<group_size>`)
     pub topology: Topology,
+    /// wire chunk size in parameters (TOML `hyper.chunk_size`; 0 =
+    /// whole-model frames). Strategies with a native chunked codec
+    /// split every message into `ceil(dim / chunk_size)` per-chunk
+    /// frames — bit-exact and byte-identical to the monolithic path —
+    /// and the round engine processes the chunks in parallel on large
+    /// models; monolithic strategies ignore it.
+    pub chunk_size: usize,
 }
 
 impl Default for TrainConfig {
@@ -65,6 +72,7 @@ impl Default for TrainConfig {
             seed: 42,
             check_replicas: false,
             topology: Topology::Star,
+            chunk_size: 0,
         }
     }
 }
@@ -77,7 +85,7 @@ pub fn run_sequential(
     cfg: &TrainConfig,
 ) -> RunResult {
     let d = task.dim();
-    let mut engine = RoundEngine::new(strategy, nworkers, d, cfg.topology);
+    let mut engine = RoundEngine::new(strategy, nworkers, d, cfg.topology, cfg.chunk_size);
     let mut root = Rng::new(cfg.seed);
     let params0 = task.init_params(&mut root);
     let mut params: Vec<Vec<f32>> = vec![params0; nworkers];
@@ -97,15 +105,9 @@ pub fn run_sequential(
         }
         train_loss /= nworkers as f64;
         let hops = if engine.is_sync_step(step) {
-            let uplinks: Vec<Vec<u8>> = workers
-                .iter_mut()
-                .zip(&grads)
-                .map(|(w, g)| w.encode(g, lr, step))
-                .collect();
+            let uplinks = engine.encode_all(&mut workers, &grads, lr, step);
             let (downlink, hops) = engine.aggregate(&uplinks, lr, step);
-            for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
-                w.apply(p, &downlink, lr, step);
-            }
+            engine.apply_all(&mut workers, &mut params, &downlink, lr, step);
             if cfg.check_replicas {
                 for w in 1..nworkers {
                     assert_eq!(params[0], params[w], "replica divergence at sync step {step}");
@@ -133,6 +135,8 @@ pub fn run_sequential(
             downlink_bytes: hops.downlink as u64,
             agg_uplink_bytes: hops.agg_uplink as u64,
             agg_downlink_bytes: hops.agg_downlink as u64,
+            agg_uplink_msgs: hops.agg_uplink_msgs as u64,
+            agg_downlink_msgs: hops.agg_downlink_msgs as u64,
         });
     }
     result.final_eval = Some(task.evaluate(&params[0]));
@@ -157,6 +161,9 @@ pub fn run_threaded(
 ) -> (RunResult, Arc<CommStats>) {
     let d = task.dim();
     let local_steps = strategy.local_steps().max(1);
+    // the same deterministic plan the engine derives — workers and
+    // engine can never disagree about the wire geometry
+    let plan = strategy.plan(d, cfg.chunk_size);
     let stats = CommStats::new();
     let (mut server_tx, worker_txs) = inproc_fabric(nworkers, stats.clone());
     let mut root = Rng::new(cfg.seed);
@@ -197,10 +204,10 @@ pub fn run_threaded(
                     );
                     let _ = loss_tx.send((step, loss as f64));
                     if (step + 1) % local_steps == 0 {
-                        let uplink = logic.encode(&grad, lr, step);
+                        let uplink = logic.encode_planned(&grad, &plan, lr, step);
                         wt.send(uplink)?;
                         let downlink = wt.recv()?;
-                        logic.apply(&mut params, &downlink, lr, step);
+                        logic.apply_planned(&mut params, &downlink, &plan, lr, step);
                     } else {
                         logic.local_step(&mut params, &grad, lr, step);
                     }
@@ -226,29 +233,24 @@ pub fn run_threaded(
     // are race-free and equal the sequential-mode accounting exactly.
     // Aggregator-hop bytes come straight from the engine (they never
     // race: the engine runs on this thread).
-    let mut engine = RoundEngine::new(strategy, nworkers, d, cfg.topology);
-    let mut step_bytes: Vec<(u64, u64, u64, u64)> = Vec::with_capacity(cfg.steps);
+    let mut engine = RoundEngine::new(strategy, nworkers, d, cfg.topology, cfg.chunk_size);
+    let mut step_bytes: Vec<(u64, u64, HopBytes)> = Vec::with_capacity(cfg.steps);
     let (mut prev_up, mut prev_down) = (0u64, 0u64);
     let t0 = std::time::Instant::now();
     for step in 0..cfg.steps {
         if !engine.is_sync_step(step) {
-            step_bytes.push((0, 0, 0, 0));
+            step_bytes.push((0, 0, HopBytes::default()));
             continue;
         }
         let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
         let uplinks = server_tx.gather().expect("gather failed");
         let up_now = stats.uplink();
         let (downlink, hops) = engine.aggregate(&uplinks, lr, step);
-        stats.record_agg_uplink(hops.agg_uplink);
-        stats.record_agg_downlink(hops.agg_downlink);
+        stats.record_agg_uplink(hops.agg_uplink, hops.agg_uplink_msgs);
+        stats.record_agg_downlink(hops.agg_downlink, hops.agg_downlink_msgs);
         server_tx.broadcast(&downlink).expect("broadcast failed");
         let down_now = stats.downlink();
-        step_bytes.push((
-            up_now - prev_up,
-            down_now - prev_down,
-            hops.agg_uplink as u64,
-            hops.agg_downlink as u64,
-        ));
+        step_bytes.push((up_now - prev_up, down_now - prev_down, hops));
         prev_up = up_now;
         prev_down = down_now;
     }
@@ -261,8 +263,7 @@ pub fn run_threaded(
         per_step[step].1 += 1;
     }
     for (step, (sum, count)) in per_step.into_iter().enumerate() {
-        let (uplink_bytes, downlink_bytes, agg_uplink_bytes, agg_downlink_bytes) =
-            step_bytes[step];
+        let (uplink_bytes, downlink_bytes, hops) = step_bytes[step];
         // round through f32 exactly as the sequential recorder does, so
         // the two modes' histories stay comparable field-for-field
         let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
@@ -273,8 +274,10 @@ pub fn run_threaded(
             eval: None,
             uplink_bytes,
             downlink_bytes,
-            agg_uplink_bytes,
-            agg_downlink_bytes,
+            agg_uplink_bytes: hops.agg_uplink as u64,
+            agg_downlink_bytes: hops.agg_downlink as u64,
+            agg_uplink_msgs: hops.agg_uplink_msgs as u64,
+            agg_downlink_msgs: hops.agg_downlink_msgs as u64,
         });
     }
     // merge worker-0's periodic evals into the per-step history
@@ -380,6 +383,31 @@ mod tests {
             .collect();
         assert_eq!(seq_evals.len(), 3, "steps 9, 19, 29");
         assert_eq!(seq_evals, thr_evals, "threaded eval cadence/values diverged");
+    }
+
+    #[test]
+    fn chunked_sequential_and_threaded_agree_bit_exactly() {
+        // chunk_size 7 → two 40-aligned chunks at d=64: both drivers
+        // must stay bit-exact with each other *and* with the
+        // whole-model run, and the payload accounting must not move.
+        let task = Quadratic::new(64, 10.0, 0.5, 3);
+        let hp = StrategyHyper::default();
+        let strat = by_name("d-lion-mavo", &hp).unwrap();
+        let mono = run_sequential(&task, strat.as_ref(), 4, &quick_cfg(40));
+        let cfg = TrainConfig { chunk_size: 7, ..quick_cfg(40) };
+        let seq = run_sequential(&task, strat.as_ref(), 4, &cfg);
+        assert_eq!(seq.final_params, mono.final_params, "chunking changed the math");
+        assert_eq!(seq.total_uplink(), mono.total_uplink());
+        assert_eq!(seq.total_downlink(), mono.total_downlink());
+        let task_arc: Arc<dyn GradTask + Send + Sync> = Arc::new(Quadratic::new(64, 10.0, 0.5, 3));
+        let (thr, stats) = run_threaded(task_arc, strat.as_ref(), 4, &cfg);
+        assert_eq!(seq.final_params, thr.final_params);
+        assert_eq!(stats.uplink(), seq.total_uplink(), "transport counts payload bytes");
+        assert_eq!(stats.downlink(), seq.total_downlink());
+        for (s, t) in seq.history.iter().zip(&thr.history) {
+            assert_eq!(s.uplink_bytes, t.uplink_bytes, "step {} uplink", s.step);
+            assert_eq!(s.downlink_bytes, t.downlink_bytes, "step {} downlink", s.step);
+        }
     }
 
     #[test]

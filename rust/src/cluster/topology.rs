@@ -37,8 +37,10 @@
 //! * Sequential and threaded drivers agree bit-exactly on parameters
 //!   and on the full per-hop byte history, for every topology.
 
+use crate::comm::chunked;
 use crate::error::{DlionError, Result};
-use crate::optim::dist::{ServerLogic, Strategy};
+use crate::optim::dist::{ChunkPlan, ServerLogic, Strategy, WorkerLogic};
+use crate::util::parallel;
 use std::fmt;
 use std::ops::Range;
 
@@ -109,9 +111,12 @@ impl fmt::Display for Topology {
     }
 }
 
-/// Per-hop byte accounting for one communication round. Worker-edge
-/// hops (`uplink`/`downlink`) are what Table 1 counts; the aggregator
-/// hops are zero for the flat star.
+/// Per-hop byte and message accounting for one communication round.
+/// Worker-edge hops (`uplink`/`downlink`) are what Table 1 counts; the
+/// aggregator hops are zero for the flat star. Bytes are *payload*
+/// bytes ([`crate::comm::chunked::payload_len`]): identical to physical
+/// frame sizes for monolithic messages, chunking-invariant for chunked
+/// ones.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct HopBytes {
     /// worker → aggregator (star: worker → server), summed over workers
@@ -122,17 +127,32 @@ pub struct HopBytes {
     pub agg_downlink: usize,
     /// aggregator → worker (star: server → worker), broadcast × workers
     pub downlink: usize,
+    /// aggregator → root messages this round (= groups; 0 for the star)
+    pub agg_uplink_msgs: usize,
+    /// root → aggregator messages this round (= groups; 0 for the star)
+    pub agg_downlink_msgs: usize,
 }
 
 /// The round choreography shared by the sequential and threaded cluster
 /// drivers: routes the gathered worker uplinks through the configured
-/// [`Topology`] and returns the broadcast downlink plus the per-hop
-/// byte counts.
+/// [`Topology`], one [`crate::optim::dist::Chunk`] at a time, and
+/// returns the broadcast downlink plus the per-hop accounting.
+///
+/// The engine owns one `ServerLogic` instance **per chunk** (and per
+/// group aggregator under a hierarchical topology): each instance is
+/// built for its chunk's dimension via `make_server(n, chunk.len())`,
+/// so a chunk's aggregate is exactly a whole-model aggregate over a
+/// smaller model — which is what makes any chunking bit-exact. On
+/// multi-chunk plans over large models, encode, aggregate, and apply
+/// all run chunk-/worker-parallel ([`crate::util::parallel`]); results
+/// are collected in index order so parallelism never changes a byte.
 pub struct RoundEngine {
+    plan: ChunkPlan,
     groups: Vec<Range<usize>>,
-    /// one `ServerLogic` per group aggregator (empty for the star)
-    group_servers: Vec<Box<dyn ServerLogic>>,
-    root: Box<dyn ServerLogic>,
+    /// `[group][chunk]` aggregator servers (empty for the star)
+    group_servers: Vec<Vec<Box<dyn ServerLogic>>>,
+    /// `[chunk]` root servers
+    root: Vec<Box<dyn ServerLogic>>,
     nworkers: usize,
     local_steps: usize,
 }
@@ -140,31 +160,36 @@ pub struct RoundEngine {
 impl RoundEngine {
     /// Build the engine for `strategy` over `nworkers` workers of a
     /// `dim`-parameter model. The communication cadence comes from the
-    /// strategy itself ([`Strategy::local_steps`]), so the engine and
-    /// the worker logic can never disagree about which steps sync.
+    /// strategy itself ([`Strategy::local_steps`]), and the chunk plan
+    /// from [`Strategy::plan`] — monolithic strategies collapse any
+    /// `chunk_size` to a single chunk, so the engine and the worker
+    /// logic can never disagree about geometry or cadence.
     pub fn new(
         strategy: &dyn Strategy,
         nworkers: usize,
         dim: usize,
         topology: Topology,
+        chunk_size: usize,
     ) -> RoundEngine {
+        let plan = strategy.plan(dim, chunk_size);
         let local_steps = strategy.local_steps().max(1);
-        let (groups, group_servers) = match topology {
-            Topology::Star => (topology.groups(nworkers), Vec::new()),
-            Topology::Hierarchical { .. } => {
-                let groups = topology.groups(nworkers);
-                let servers: Vec<_> =
-                    groups.iter().map(|g| strategy.make_server(g.len(), dim)).collect();
-                (groups, servers)
-            }
+        let groups = topology.groups(nworkers);
+        let group_servers = match topology {
+            Topology::Star => Vec::new(),
+            Topology::Hierarchical { .. } => groups
+                .iter()
+                .map(|g| {
+                    plan.chunks().map(|c| strategy.make_server(g.len(), c.len())).collect()
+                })
+                .collect(),
         };
-        RoundEngine {
-            groups,
-            group_servers,
-            root: strategy.make_server(nworkers, dim),
-            nworkers,
-            local_steps,
-        }
+        let root = plan.chunks().map(|c| strategy.make_server(nworkers, c.len())).collect();
+        RoundEngine { plan, groups, group_servers, root, nworkers, local_steps }
+    }
+
+    /// The chunk plan every message of this engine follows.
+    pub fn plan(&self) -> ChunkPlan {
+        self.plan
     }
 
     /// Communication cadence: a frame crosses the wire every
@@ -179,39 +204,154 @@ impl RoundEngine {
         (step + 1) % self.local_steps == 0
     }
 
+    /// Encode every worker's uplink message under the engine's plan,
+    /// worker-parallel on large models (deterministic: outputs are
+    /// collected in worker order and workers are independent).
+    pub fn encode_all(
+        &self,
+        workers: &mut [Box<dyn WorkerLogic>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        step: usize,
+    ) -> Vec<Vec<u8>> {
+        let plan = self.plan;
+        let nthreads = parallel::auto_threads(plan.dim());
+        parallel::par_zip_map(workers, grads, nthreads, |w, g, _| {
+            w.encode_planned(g, &plan, lr, step)
+        })
+    }
+
+    /// Apply the broadcast downlink on every worker's replica,
+    /// worker-parallel on large models.
+    pub fn apply_all(
+        &self,
+        workers: &mut [Box<dyn WorkerLogic>],
+        params: &mut [Vec<f32>],
+        downlink: &[u8],
+        lr: f32,
+        step: usize,
+    ) {
+        let plan = self.plan;
+        let nthreads = parallel::auto_threads(plan.dim());
+        parallel::par_zip2_mut(workers, params, nthreads, |w, p, _| {
+            w.apply_planned(p, downlink, &plan, lr, step)
+        });
+    }
+
     /// Route one round: fold the index-aligned worker uplinks through
     /// the topology into the broadcast downlink. Returns the downlink
-    /// frame (identical for every worker — the replicated-parameter
-    /// invariant rides on this) and the per-hop byte accounting.
+    /// message (identical for every worker — the replicated-parameter
+    /// invariant rides on this) and the per-hop accounting.
     pub fn aggregate(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> (Vec<u8>, HopBytes) {
         assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
-        let uplink_bytes: usize = uplinks.iter().map(|m| m.len()).sum();
+        let uplink_bytes: usize = uplinks.iter().map(|m| chunked::payload_len(m)).sum();
+        let ngroups = self.groups.len();
+        if self.plan.is_single() {
+            return self.aggregate_single(uplinks, lr, step, uplink_bytes);
+        }
+        // Chunked: split each worker's envelope into per-chunk frame
+        // views, transpose to per-chunk worker lists, and aggregate the
+        // chunks in parallel (each chunk has its own server state).
+        let k = self.plan.num_chunks();
+        let per_worker: Vec<Vec<&[u8]>> = uplinks
+            .iter()
+            .map(|m| {
+                let frames = chunked::unpack(m).expect("malformed chunked uplink");
+                assert_eq!(frames.len(), k, "uplink chunk count mismatch");
+                frames
+            })
+            .collect();
+        let plan = self.plan;
+        let nthreads = parallel::auto_threads(plan.dim());
         if self.group_servers.is_empty() {
-            // Flat star: the root aggregates all workers directly.
-            let downlink = self.root.aggregate(uplinks, lr, step);
+            // Flat star, chunked.
+            let per_chunk: Vec<Vec<&[u8]>> = (0..k)
+                .map(|c| per_worker.iter().map(|w| w[c]).collect())
+                .collect();
+            let downlinks = parallel::par_zip_map(
+                &mut self.root,
+                &per_chunk,
+                nthreads,
+                |srv, frames, c| srv.aggregate_chunk(frames, plan.chunk(c), lr, step),
+            );
+            let downlink = chunked::pack(&downlinks);
+            let down = chunked::payload_len(&downlink);
             let hops = HopBytes {
                 uplink: uplink_bytes,
-                agg_uplink: 0,
-                agg_downlink: 0,
-                downlink: downlink.len() * self.nworkers,
+                downlink: down * self.nworkers,
+                ..HopBytes::default()
             };
             return (downlink, hops);
         }
-        // Two-level: group partials up, root fold, broadcast retraces
-        // the tree (root → G aggregators → nworkers workers).
+        // Hierarchical, chunked: per-(group, chunk) partials up, per-
+        // chunk fold at the root, broadcast retraces the tree.
+        let mut partials: Vec<Vec<Vec<u8>>> = Vec::with_capacity(ngroups);
+        for (gs, range) in self.group_servers.iter_mut().zip(&self.groups) {
+            let group_frames: Vec<Vec<&[u8]>> = (0..k)
+                .map(|c| per_worker[range.clone()].iter().map(|w| w[c]).collect())
+                .collect();
+            let p = parallel::par_zip_map(gs, &group_frames, nthreads, |srv, frames, c| {
+                srv.partial_chunk(frames, plan.chunk(c), lr, step)
+            });
+            partials.push(p);
+        }
+        let agg_uplink: usize =
+            partials.iter().map(|p| chunked::frames_payload_len(p)).sum();
+        let per_chunk_partials: Vec<Vec<&[u8]>> = (0..k)
+            .map(|c| partials.iter().map(|g| g[c].as_slice()).collect())
+            .collect();
+        let downlinks = parallel::par_zip_map(
+            &mut self.root,
+            &per_chunk_partials,
+            nthreads,
+            |srv, ps, c| srv.fold_chunk(ps, plan.chunk(c), lr, step),
+        );
+        let downlink = chunked::pack(&downlinks);
+        let down = chunked::payload_len(&downlink);
+        let hops = HopBytes {
+            uplink: uplink_bytes,
+            agg_uplink,
+            agg_downlink: down * ngroups,
+            downlink: down * self.nworkers,
+            agg_uplink_msgs: ngroups,
+            agg_downlink_msgs: ngroups,
+        };
+        (downlink, hops)
+    }
+
+    /// The single-chunk (whole-model) round — byte-for-byte the
+    /// pre-chunking wire path: bare frames, no envelope.
+    fn aggregate_single(
+        &mut self,
+        uplinks: &[Vec<u8>],
+        lr: f32,
+        step: usize,
+        uplink_bytes: usize,
+    ) -> (Vec<u8>, HopBytes) {
+        if self.group_servers.is_empty() {
+            let downlink = self.root[0].aggregate(uplinks, lr, step);
+            let hops = HopBytes {
+                uplink: uplink_bytes,
+                downlink: downlink.len() * self.nworkers,
+                ..HopBytes::default()
+            };
+            return (downlink, hops);
+        }
         let partials: Vec<Vec<u8>> = self
             .group_servers
             .iter_mut()
             .zip(&self.groups)
-            .map(|(gs, range)| gs.partial(&uplinks[range.clone()], lr, step))
+            .map(|(gs, range)| gs[0].partial(&uplinks[range.clone()], lr, step))
             .collect();
         let agg_uplink: usize = partials.iter().map(|m| m.len()).sum();
-        let downlink = self.root.fold(&partials, lr, step);
+        let downlink = self.root[0].fold(&partials, lr, step);
         let hops = HopBytes {
             uplink: uplink_bytes,
             agg_uplink,
             agg_downlink: downlink.len() * self.groups.len(),
             downlink: downlink.len() * self.nworkers,
+            agg_uplink_msgs: self.groups.len(),
+            agg_downlink_msgs: self.groups.len(),
         };
         (downlink, hops)
     }
@@ -255,7 +395,7 @@ mod tests {
         let hp = StrategyHyper::default();
         let strat = by_name("d-lion-mavo", &hp).unwrap();
         let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
-        let mut engine = RoundEngine::new(strat.as_ref(), n, d, Topology::Star);
+        let mut engine = RoundEngine::new(strat.as_ref(), n, d, Topology::Star, 0);
         let mut rng = Rng::new(0x70);
         let ups: Vec<Vec<u8>> = workers
             .iter_mut()
@@ -289,7 +429,7 @@ mod tests {
         let frames = |topology: Topology| -> Vec<u8> {
             let strat = by_name("d-lion-mavo", &hp).unwrap();
             let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
-            let mut engine = RoundEngine::new(strat.as_ref(), n, d, topology);
+            let mut engine = RoundEngine::new(strat.as_ref(), n, d, topology, 0);
             let ups: Vec<Vec<u8>> = workers
                 .iter_mut()
                 .zip(&grads)
@@ -308,6 +448,51 @@ mod tests {
     }
 
     #[test]
+    fn chunked_engine_matches_monolithic_for_star_and_hier() {
+        // One engine-level round: any chunk_size must yield the same
+        // parameters and the same per-hop payload accounting as the
+        // whole-model path, for both topologies.
+        let (n, d) = (4usize, 200usize);
+        let hp = StrategyHyper::default();
+        let mut rng = Rng::new(0x74);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect();
+        for topology in [Topology::Star, Topology::Hierarchical { group_size: 2 }] {
+            let round = |chunk_size: usize| {
+                let strat = by_name("d-lion-mavo", &hp).unwrap();
+                let mut workers: Vec<_> =
+                    (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+                let mut engine = RoundEngine::new(strat.as_ref(), n, d, topology, chunk_size);
+                let mut params: Vec<Vec<f32>> = vec![vec![0.3f32; d]; n];
+                let ups = engine.encode_all(&mut workers, &grads, 1e-2, 0);
+                let (down, hops) = engine.aggregate(&ups, 1e-2, 0);
+                engine.apply_all(&mut workers, &mut params, &down, 1e-2, 0);
+                (params, hops)
+            };
+            let (p_mono, h_mono) = round(0);
+            for chunk_size in [1usize, 41, 199] {
+                let (p, h) = round(chunk_size);
+                assert_eq!(p, p_mono, "{topology}: chunk_size={chunk_size} changed params");
+                assert_eq!(
+                    (h.uplink, h.downlink),
+                    (h_mono.uplink, h_mono.downlink),
+                    "{topology}: chunk_size={chunk_size} changed worker-edge accounting"
+                );
+                assert_eq!(
+                    (h.agg_uplink, h.agg_downlink),
+                    (h_mono.agg_uplink, h_mono.agg_downlink),
+                    "{topology}: chunk_size={chunk_size} changed aggregator accounting"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn hierarchical_agg_hop_is_cheaper_than_relaying_for_votes() {
         // The intavg vote partial must beat forwarding the member sign
         // frames verbatim once groups are large enough (log2(g+1) < g).
@@ -316,7 +501,7 @@ mod tests {
         let strat = by_name("d-lion-mavo", &hp).unwrap();
         let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
         let mut engine =
-            RoundEngine::new(strat.as_ref(), n, d, Topology::Hierarchical { group_size: 4 });
+            RoundEngine::new(strat.as_ref(), n, d, Topology::Hierarchical { group_size: 4 }, 0);
         let mut rng = Rng::new(0x72);
         let ups: Vec<Vec<u8>> = workers
             .iter_mut()

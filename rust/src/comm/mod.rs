@@ -12,6 +12,7 @@
 //! | GradDrop/DGC worker→server      | [`sparse`]     | 64·(1−η)          |
 //! | Global (and DGC down) channels  | [`dense`]      | 32                |
 
+pub mod chunked;
 pub mod dense;
 pub mod half;
 pub mod intavg;

@@ -64,6 +64,62 @@ pub fn step_time(compute_s: f64, comm: CommTime, overlap: bool) -> f64 {
     }
 }
 
+/// Per-step communication time when the round is split into `nchunks`
+/// chunk messages and the two directions pipeline (chunk i's downlink
+/// overlaps chunk i+1's uplink — what the chunked wire format enables):
+///
+/// ```text
+/// t_up_c   = latency + up_bytes  / nchunks / bw · N
+/// t_down_c = latency + down_bytes/ nchunks / bw · N
+/// T        = t_up_c + (nchunks − 1)·max(t_up_c, t_down_c) + t_down_c
+/// ```
+///
+/// `nchunks = 1` is exactly [`estimate`]`.total()` (serialized up then
+/// down). More chunks hide the smaller direction under the larger one
+/// but pay the per-message latency `nchunks` times — the sweet spot the
+/// `ext_netsim` bench sweeps.
+pub fn estimate_pipelined(
+    strategy: &dyn Strategy,
+    d: usize,
+    n: usize,
+    link: Link,
+    nchunks: usize,
+) -> f64 {
+    let nchunks = nchunks.max(1);
+    let full = estimate(strategy, d, n, link);
+    let up_c = link.latency_s + (full.uplink_s - link.latency_s) / nchunks as f64;
+    let down_c = link.latency_s + (full.downlink_s - link.latency_s) / nchunks as f64;
+    up_c + (nchunks - 1) as f64 * up_c.max(down_c) + down_c
+}
+
+/// Per-step communication time on a two-level hierarchy: workers reach
+/// their group aggregator over `edge`, aggregators exchange partial /
+/// broadcast frames with the root over `agg` (the ROADMAP's
+/// "aggregator-hop latency model"). Groups run in parallel, so the edge
+/// hop carries `group_size` frames and the agg hop `G = ⌈n/g⌉` partials
+/// ([`Strategy::partial_bits_per_param`] — exact vote sums for the sign
+/// family, f32 sums for the dense family, relayed members otherwise).
+pub fn estimate_hier(
+    strategy: &dyn Strategy,
+    d: usize,
+    n: usize,
+    group_size: usize,
+    edge: Link,
+    agg: Link,
+) -> CommTime {
+    let g = group_size.clamp(1, n.max(1));
+    let ngroups = n.div_ceil(g);
+    let up_bytes = strategy.uplink_bits_per_param(n) * d as f64 / 8.0;
+    let down_bytes = strategy.downlink_bits_per_param(n) * d as f64 / 8.0;
+    let partial_bytes = strategy.partial_bits_per_param(g) * d as f64 / 8.0;
+    CommTime {
+        uplink_s: (edge.latency_s + up_bytes * g as f64 / edge.bandwidth_bps)
+            + (agg.latency_s + partial_bytes * ngroups as f64 / agg.bandwidth_bps),
+        downlink_s: (agg.latency_s + down_bytes * ngroups as f64 / agg.bandwidth_bps)
+            + (edge.latency_s + down_bytes * g as f64 / edge.bandwidth_bps),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +157,53 @@ mod tests {
         let comm = CommTime { uplink_s: 0.1, downlink_s: 0.1 };
         assert_eq!(step_time(1.0, comm, true), 1.0);
         assert!((step_time(1.0, comm, false) - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_one_chunk_is_the_serial_estimate() {
+        let hp = StrategyHyper::default();
+        let s = by_name("g-lion", &hp).unwrap();
+        let link = Link::gbit(10.0);
+        let serial = estimate(s.as_ref(), 10_000_000, 8, link).total();
+        let one = estimate_pipelined(s.as_ref(), 10_000_000, 8, link, 1);
+        assert!((serial - one).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelining_hides_the_smaller_direction() {
+        // g-lion moves 32 bits each way: with k chunks the downlink of
+        // chunk i overlaps the uplink of chunk i+1, approaching half
+        // the serial time for bandwidth-dominated links.
+        let hp = StrategyHyper::default();
+        let s = by_name("g-lion", &hp).unwrap();
+        let link = Link::gbit(10.0);
+        let (d, n) = (1_000_000_000usize, 8);
+        let serial = estimate_pipelined(s.as_ref(), d, n, link, 1);
+        let k64 = estimate_pipelined(s.as_ref(), d, n, link, 64);
+        assert!(k64 < serial * 0.6, "k=64 {k64:.3}s vs serial {serial:.3}s");
+        // ...but latency eventually wins: absurd chunk counts regress
+        let k = 5_000_000;
+        assert!(estimate_pipelined(s.as_ref(), d, n, link, k) > k64);
+    }
+
+    #[test]
+    fn hier_estimate_uses_the_partial_bits_model() {
+        // With a narrow aggregator link, the sign family's log2(g+1)-bit
+        // vote partials must beat g-lion's 32-bit dense sums on the agg
+        // hop, and one full group over identical links degenerates to
+        // roughly the flat estimate shape (same order of magnitude).
+        let hp = StrategyHyper::default();
+        let mavo = by_name("d-lion-mavo", &hp).unwrap();
+        let glion = by_name("g-lion", &hp).unwrap();
+        let edge = Link::gbit(100.0);
+        let agg = Link::gbit(1.0);
+        let (d, n, g) = (100_000_000usize, 32, 8);
+        let t_mavo = estimate_hier(mavo.as_ref(), d, n, g, edge, agg).total();
+        let t_glion = estimate_hier(glion.as_ref(), d, n, g, edge, agg).total();
+        assert!(t_mavo * 4.0 < t_glion, "vote partials must dominate: {t_mavo} vs {t_glion}");
+        // relay fallback (terngrad) pays g× its uplink on the agg hop
+        let tern = by_name("terngrad", &hp).unwrap();
+        assert!(tern.partial_bits_per_param(g) > tern.uplink_bits_per_param(g) * (g - 1) as f64);
     }
 
     #[test]

@@ -10,16 +10,23 @@
 //! * `comm::tcp::TcpTransport` — real loopback TCP sockets, proving the
 //!   wire format is self-describing.
 
+use super::chunked;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-/// Byte counters shared by all endpoints of one cluster. The worker-edge
-/// pair (`uplink`/`downlink`) is recorded by the transports themselves;
-/// the aggregator pair covers the group↔root hops of a hierarchical
-/// topology ([`crate::cluster::topology`]), recorded by the round engine
-/// (in-process aggregators are co-located with the root, so that hop is
-/// simulated — its byte accounting is exact, its latency is not).
+/// Byte and message counters shared by all endpoints of one cluster.
+/// The worker-edge pair (`uplink`/`downlink`) is recorded by the
+/// transports themselves; the aggregator pair covers the group↔root
+/// hops of a hierarchical topology ([`crate::cluster::topology`]),
+/// recorded by the round engine (in-process aggregators are co-located
+/// with the root, so that hop is simulated — its byte accounting is
+/// exact, its latency is not).
+///
+/// Bytes are *codec payload* bytes ([`chunked::payload_len`]): for the
+/// monolithic frames every pre-chunking path moves they equal the
+/// physical message size; for chunked multi-frame messages the envelope
+/// overhead is excluded so the Table-1 accounting is chunking-invariant.
 #[derive(Default, Debug)]
 pub struct CommStats {
     /// bytes moved worker → server/aggregator (sum over workers)
@@ -34,6 +41,10 @@ pub struct CommStats {
     pub uplink_msgs: AtomicU64,
     /// number of downlink messages
     pub downlink_msgs: AtomicU64,
+    /// number of aggregator → root messages (hierarchical only)
+    pub agg_uplink_msgs: AtomicU64,
+    /// number of root → aggregator messages (hierarchical only)
+    pub agg_downlink_msgs: AtomicU64,
 }
 
 impl CommStats {
@@ -49,12 +60,14 @@ impl CommStats {
         self.downlink_msgs.fetch_add(1, Ordering::Relaxed);
     }
     /// Record one round's aggregator→root traffic (all groups).
-    pub fn record_agg_uplink(&self, bytes: usize) {
+    pub fn record_agg_uplink(&self, bytes: usize, msgs: usize) {
         self.agg_uplink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.agg_uplink_msgs.fetch_add(msgs as u64, Ordering::Relaxed);
     }
     /// Record one round's root→aggregator traffic (broadcast × groups).
-    pub fn record_agg_downlink(&self, bytes: usize) {
+    pub fn record_agg_downlink(&self, bytes: usize, msgs: usize) {
         self.agg_downlink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.agg_downlink_msgs.fetch_add(msgs as u64, Ordering::Relaxed);
     }
     pub fn uplink(&self) -> u64 {
         self.uplink_bytes.load(Ordering::Relaxed)
@@ -68,6 +81,15 @@ impl CommStats {
     pub fn agg_downlink(&self) -> u64 {
         self.agg_downlink_bytes.load(Ordering::Relaxed)
     }
+    /// Aggregator→root message count (hierarchical message-count
+    /// observability; 0 on the flat star).
+    pub fn agg_uplink_msg_count(&self) -> u64 {
+        self.agg_uplink_msgs.load(Ordering::Relaxed)
+    }
+    /// Root→aggregator message count.
+    pub fn agg_downlink_msg_count(&self) -> u64 {
+        self.agg_downlink_msgs.load(Ordering::Relaxed)
+    }
     /// All bytes that crossed any link (worker edge + aggregator hops).
     pub fn total(&self) -> u64 {
         self.uplink() + self.downlink() + self.agg_uplink() + self.agg_downlink()
@@ -79,11 +101,18 @@ impl CommStats {
         self.agg_downlink_bytes.store(0, Ordering::Relaxed);
         self.uplink_msgs.store(0, Ordering::Relaxed);
         self.downlink_msgs.store(0, Ordering::Relaxed);
+        self.agg_uplink_msgs.store(0, Ordering::Relaxed);
+        self.agg_downlink_msgs.store(0, Ordering::Relaxed);
     }
 }
 
 /// A message on the fabric.
 pub type Message = Vec<u8>;
+
+/// A broadcast downlink message: one shared allocation handed to every
+/// worker (the server clones the `Arc`, not the bytes, so an N-worker
+/// broadcast is O(d), not O(N·d)).
+pub type SharedMessage = Arc<[u8]>;
 
 /// Server side of a transport: receive one uplink from each worker,
 /// broadcast one downlink to all.
@@ -100,8 +129,11 @@ pub trait WorkerTransport: Send {
     fn worker_id(&self) -> usize;
     /// Send an uplink message to the server.
     fn send(&mut self, msg: Message) -> std::io::Result<()>;
-    /// Block for the next downlink broadcast.
-    fn recv(&mut self) -> std::io::Result<Message>;
+    /// Block for the next downlink broadcast. The broadcast frame is
+    /// shared — workers only read it ([`SharedMessage`] derefs to
+    /// `&[u8]`), which is what lets the in-process fabric ship one
+    /// allocation to all N workers.
+    fn recv(&mut self) -> std::io::Result<SharedMessage>;
 }
 
 // ---------------------------------------------------------------------------
@@ -110,14 +142,14 @@ pub trait WorkerTransport: Send {
 
 pub struct InProcServer {
     uplinks: Vec<Receiver<Message>>,
-    downlinks: Vec<Sender<Message>>,
+    downlinks: Vec<Sender<SharedMessage>>,
     stats: Arc<CommStats>,
 }
 
 pub struct InProcWorker {
     id: usize,
     uplink: Sender<Message>,
-    downlink: Receiver<Message>,
+    downlink: Receiver<SharedMessage>,
     stats: Arc<CommStats>,
 }
 
@@ -158,9 +190,13 @@ impl ServerTransport for InProcServer {
     }
 
     fn broadcast(&mut self, msg: &[u8]) -> std::io::Result<()> {
+        // One shared copy of the frame; every send clones the Arc (a
+        // refcount bump), so the broadcast is O(d) + O(N), not O(N·d).
+        let shared: SharedMessage = Arc::from(msg);
+        let logical = chunked::payload_len(msg);
         for tx in &self.downlinks {
-            self.stats.record_downlink(msg.len());
-            tx.send(msg.to_vec()).map_err(|e| {
+            self.stats.record_downlink(logical);
+            tx.send(shared.clone()).map_err(|e| {
                 std::io::Error::new(std::io::ErrorKind::BrokenPipe, format!("broadcast: {e}"))
             })?;
         }
@@ -174,13 +210,13 @@ impl WorkerTransport for InProcWorker {
     }
 
     fn send(&mut self, msg: Message) -> std::io::Result<()> {
-        self.stats.record_uplink(msg.len());
+        self.stats.record_uplink(chunked::payload_len(&msg));
         self.uplink.send(msg).map_err(|e| {
             std::io::Error::new(std::io::ErrorKind::BrokenPipe, format!("send: {e}"))
         })
     }
 
-    fn recv(&mut self) -> std::io::Result<Message> {
+    fn recv(&mut self) -> std::io::Result<SharedMessage> {
         self.downlink.recv().map_err(|e| {
             std::io::Error::new(std::io::ErrorKind::BrokenPipe, format!("recv: {e}"))
         })
@@ -202,7 +238,7 @@ mod tests {
                 thread::spawn(move || {
                     w.send(vec![w.worker_id() as u8; 10]).unwrap();
                     let d = w.recv().unwrap();
-                    assert_eq!(d, vec![9u8; 4]);
+                    assert_eq!(&d[..], [9u8; 4]);
                 })
             })
             .collect();
@@ -226,12 +262,45 @@ mod tests {
         stats.record_uplink(100);
         stats.record_downlink(50);
         assert_eq!(stats.total(), 150);
-        stats.record_agg_uplink(30);
-        stats.record_agg_downlink(20);
+        stats.record_agg_uplink(30, 2);
+        stats.record_agg_downlink(20, 2);
         assert_eq!(stats.agg_uplink(), 30);
         assert_eq!(stats.agg_downlink(), 20);
+        assert_eq!(stats.agg_uplink_msg_count(), 2);
+        assert_eq!(stats.agg_downlink_msg_count(), 2);
         assert_eq!(stats.total(), 200, "total covers every hop");
         stats.reset();
         assert_eq!(stats.total(), 0);
+        assert_eq!(stats.agg_uplink_msg_count(), 0);
+    }
+
+    #[test]
+    fn broadcast_shares_one_allocation_across_workers() {
+        // Satellite contract: the downlink broadcast must not clone the
+        // frame per worker — every receiver sees the very same buffer.
+        let stats = CommStats::new();
+        let (mut server, mut workers) = inproc_fabric(3, stats.clone());
+        server.broadcast(&[42u8; 8]).unwrap();
+        let received: Vec<_> = workers.iter_mut().map(|w| w.recv().unwrap()).collect();
+        for r in &received {
+            assert_eq!(&r[..], [42u8; 8]);
+            assert!(Arc::ptr_eq(r, &received[0]), "broadcast must share one Arc");
+        }
+        assert_eq!(stats.downlink(), 24, "accounting still counts per-worker bytes");
+    }
+
+    #[test]
+    fn transport_counts_payload_bytes_for_chunked_messages() {
+        // Two sign chunk frames: physical envelope = 3 + 2·(4 + 2) = 15
+        // bytes, logical payload = 1 tag + 2 payload bytes = 3.
+        let stats = CommStats::new();
+        let (mut server, mut workers) = inproc_fabric(1, stats.clone());
+        let msg = crate::comm::chunked::pack(&[vec![1u8, 0xAA], vec![1u8, 0xBB]]);
+        workers[0].send(msg.clone()).unwrap();
+        let got = server.gather().unwrap();
+        assert_eq!(got[0], msg, "the physical message moves verbatim");
+        assert_eq!(stats.uplink(), 3, "counters see the monolithic-equivalent bytes");
+        server.broadcast(&msg).unwrap();
+        assert_eq!(stats.downlink(), 3);
     }
 }

@@ -84,8 +84,13 @@ impl Experiment {
         exp.train.min_lr_frac = t.f64_or("min_lr_frac", exp.train.min_lr_frac);
         exp.train.eval_every = t.usize_or("eval_every", exp.train.eval_every);
         exp.train.check_replicas = t.bool_or("check_replicas", exp.train.check_replicas);
+        exp.train.chunk_size = t.usize_or("chunk_size", exp.train.chunk_size);
 
         let h = toml::section(&doc, "hyper");
+        // `chunk_size` is a wire-format knob shared by the strategy and
+        // cluster layers; it is accepted under [hyper] (the canonical
+        // spelling) and [train], with the [hyper] value winning.
+        exp.train.chunk_size = h.usize_or("chunk_size", exp.train.chunk_size);
         exp.hyper.beta1 = h.f64_or("beta1", exp.hyper.beta1 as f64) as f32;
         exp.hyper.beta2 = h.f64_or("beta2", exp.hyper.beta2 as f64) as f32;
         exp.hyper.weight_decay = h.f64_or("weight_decay", exp.hyper.weight_decay as f64) as f32;
@@ -139,6 +144,9 @@ impl Experiment {
             }
             "topology" | "train.topology" => {
                 self.train.topology = crate::cluster::topology::Topology::parse(val)?
+            }
+            "hyper.chunk_size" | "train.chunk_size" => {
+                self.train.chunk_size = parse_usize(val)?
             }
             "train.steps" => self.train.steps = parse_usize(val)?,
             "train.batch_per_worker" => self.train.batch_per_worker = parse_usize(val)?,
@@ -227,6 +235,7 @@ msync_every = 8
 compact_sparse = true
 link_budget = 6.0
 local_steps = 8
+chunk_size = 4096
 
 [task]
 dim = 128
@@ -246,7 +255,13 @@ dim = 128
         assert!(exp.hyper.compact_sparse);
         assert!((exp.hyper.link_budget - 6.0).abs() < 1e-7);
         assert_eq!(exp.hyper.local_steps, 8);
+        assert_eq!(exp.train.chunk_size, 4096);
         assert_eq!(exp.task_dim, 128);
+        exp.apply_override("hyper.chunk_size=128").unwrap();
+        assert_eq!(exp.train.chunk_size, 128);
+        exp.apply_override("train.chunk_size=0").unwrap();
+        assert_eq!(exp.train.chunk_size, 0);
+        assert!(exp.apply_override("hyper.chunk_size=x").is_err());
         exp.apply_override("train.steps=99").unwrap();
         assert_eq!(exp.train.steps, 99);
         exp.apply_override("workers=2,4").unwrap();

@@ -18,14 +18,23 @@ impl AdamW {
 
 impl Optimizer for AdamW {
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), self.m.len());
+        self.step_range(params, grads, lr, 0);
+    }
+
+    fn step_range(&mut self, params: &mut [f32], grads: &[f32], lr: f32, offset: usize) {
         debug_assert_eq!(params.len(), grads.len());
-        self.t += 1;
+        if offset == 0 {
+            // per-step scalar state advances once, on the first chunk
+            self.t += 1;
+        }
         let AdamWParams { beta1, beta2, eps, weight_decay } = self.hp;
         let bc1 = 1.0 - beta1.powi(self.t as i32);
         let bc2 = 1.0 - beta2.powi(self.t as i32);
+        let end = offset + grads.len();
         for ((p, (m, v)), &g) in params
             .iter_mut()
-            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+            .zip(self.m[offset..end].iter_mut().zip(self.v[offset..end].iter_mut()))
             .zip(grads)
         {
             *m = beta1 * *m + (1.0 - beta1) * g;

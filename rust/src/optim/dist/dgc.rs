@@ -15,8 +15,8 @@
 //! compression (velocity accumulation before top-k), not in the apply.
 
 use super::{
-    frame, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE, TAG_SPARSE,
-    TAG_SPARSE_COMPACT,
+    frame, Chunk, Chunking, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE,
+    TAG_SPARSE, TAG_SPARSE_COMPACT,
 };
 use crate::comm::{dense, sparse};
 use crate::optim::lion::Lion;
@@ -45,6 +45,10 @@ struct SparseWorker {
     velocity: Vec<f32>,
     clipped: Vec<f32>,
     mean_grad: Vec<f32>,
+    /// this round's selected entries (computed once on the first chunk
+    /// of a chunked round — selection is *global* top-k, so it cannot
+    /// run per chunk)
+    round_entries: Vec<sparse::Entry>,
 }
 
 impl SparseWorker {
@@ -61,8 +65,11 @@ impl SparseWorker {
     }
 }
 
-impl WorkerLogic for SparseWorker {
-    fn encode(&mut self, grads: &[f32], _lr: f32, step: usize) -> Vec<u8> {
+impl SparseWorker {
+    /// One round's worth of state update + global top-k selection +
+    /// masking (the whole-model half of `encode`, shared with the
+    /// chunked path which then splits the entries by chunk range).
+    fn select_round(&mut self, grads: &[f32], step: usize) -> Vec<sparse::Entry> {
         let d = grads.len();
         // DGC clips the local gradient to an RMS-element bound before
         // accumulation (clip_norm·√d on the L2 norm).
@@ -105,6 +112,14 @@ impl WorkerLogic for SparseWorker {
                 self.momentum[i] = 0.0;
             }
         }
+        entries
+    }
+}
+
+impl WorkerLogic for SparseWorker {
+    fn encode(&mut self, grads: &[f32], _lr: f32, step: usize) -> Vec<u8> {
+        let d = grads.len();
+        let entries = self.select_round(grads, step);
         if self.hp.compact_sparse {
             frame(TAG_SPARSE_COMPACT, &sparse::pack_compact(d, &entries))
         } else {
@@ -118,6 +133,39 @@ impl WorkerLogic for SparseWorker {
         // x ← x − lr·(ĝ + λx): plain step; compression carries the momentum.
         Lion::apply_aggregated(params, &self.mean_grad, lr, self.hp.weight_decay);
     }
+
+    /// Native chunked encode: the *global* top-k selection runs once
+    /// per round (on chunk 0), then each chunk ships its own entries
+    /// with chunk-local indices. Entry count — and hence payload bytes
+    /// — is preserved exactly across any chunking. Only the classic
+    /// 64-bit entry format chunks natively; the compact delta-varint
+    /// format declares [`Chunking::Monolithic`].
+    fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, _lr: f32, step: usize) -> Vec<u8> {
+        debug_assert!(!self.hp.compact_sparse, "compact sparse is monolithic-only");
+        if chunk.index == 0 {
+            self.round_entries = self.select_round(grads, step);
+        }
+        // entries are sorted by index: binary-search the chunk's span
+        let lo = self.round_entries.partition_point(|e| (e.index as usize) < chunk.start);
+        let hi = self.round_entries.partition_point(|e| (e.index as usize) < chunk.end);
+        let rebased: Vec<sparse::Entry> = self.round_entries[lo..hi]
+            .iter()
+            .map(|e| sparse::Entry { index: e.index - chunk.start as u32, value: e.value })
+            .collect();
+        frame(TAG_SPARSE, &sparse::pack(chunk.len(), &rebased))
+    }
+
+    fn apply_chunk(&mut self, params: &mut [f32], msg: &[u8], chunk: Chunk, lr: f32, _step: usize) {
+        assert_eq!(msg[0], TAG_DENSE, "sparse strategies expect dense downlinks");
+        let len = chunk.len();
+        dense::unpack_into(&msg[1..], &mut self.mean_grad[..len]);
+        Lion::apply_aggregated(
+            &mut params[chunk.range()],
+            &self.mean_grad[..len],
+            lr,
+            self.hp.weight_decay,
+        );
+    }
 }
 
 /// Scatter-add server: decode each sparse uplink into a dense
@@ -127,9 +175,8 @@ struct SparseAvgServer {
     acc: Vec<f32>,
 }
 
-impl ServerLogic for SparseAvgServer {
-    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
-        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+impl SparseAvgServer {
+    fn aggregate_iter<'a>(&mut self, uplinks: impl Iterator<Item = &'a [u8]>) -> Vec<u8> {
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         for up in uplinks {
             match up[0] {
@@ -143,6 +190,20 @@ impl ServerLogic for SparseAvgServer {
             *a *= inv;
         }
         frame(TAG_DENSE, &dense::pack(&self.acc))
+    }
+}
+
+impl ServerLogic for SparseAvgServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.aggregate_iter(uplinks.iter().map(|u| u.as_slice()))
+    }
+
+    /// Chunked hot path: a per-chunk instance scatter-adds its chunk's
+    /// (chunk-local-indexed) sparse frames — no copies.
+    fn aggregate_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.aggregate_iter(uplinks.iter().copied())
     }
 }
 
@@ -163,6 +224,7 @@ impl Strategy for SparseTopK {
             velocity: vec![0.0; dim],
             clipped: vec![0.0; dim],
             mean_grad: vec![0.0; dim],
+            round_entries: Vec::new(),
         })
     }
 
@@ -181,6 +243,18 @@ impl Strategy for SparseTopK {
 
     fn downlink_bits_per_param(&self, _nworkers: usize) -> f64 {
         32.0
+    }
+
+    /// Classic 64-bit entries split exactly at any element boundary;
+    /// the compact delta-varint index stream does not (a restart at the
+    /// chunk edge changes the gap widths), so it stays monolithic to
+    /// keep the payload-byte accounting exact.
+    fn chunking(&self) -> Chunking {
+        if self.hp.compact_sparse {
+            Chunking::Monolithic
+        } else {
+            Chunking::Native { align: 1 }
+        }
     }
 }
 

@@ -13,13 +13,14 @@
 //! (Bernstein et al. 2018), the paper's Figure-4 ablation.
 
 use super::{
-    frame, sign_family_downlink_bits, ServerLogic, SignVoteServer, Strategy, UpdateDecoder,
-    WorkerLogic, TAG_SIGN,
+    frame, sign_family_downlink_bits, Chunk, Chunking, ServerLogic, SignVoteServer, Strategy,
+    UpdateDecoder, WorkerLogic, SIGN_FAMILY_ALIGN, TAG_SIGN,
 };
 use crate::comm::sign;
 use crate::optim::lion::Lion;
 use crate::optim::signum::Signum;
 use crate::optim::LionParams;
+use crate::util::math::bits_for_count;
 
 /// Server-side aggregation rule for 1-bit worker updates (Table 1's two
 /// Distributed-Lion rows).
@@ -60,6 +61,16 @@ impl WorkerLogic for DLionWorker {
         Lion::apply_aggregated(params, update, lr, self.weight_decay);
     }
 
+    /// Native chunked encode: the fused pass over just `chunk.range()`.
+    fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        frame(TAG_SIGN, &self.lion.encode_fused_range(grads, chunk.range()))
+    }
+
+    fn apply_chunk(&mut self, params: &mut [f32], msg: &[u8], chunk: Chunk, lr: f32, _step: usize) {
+        let update = self.decoder.decode_len(msg, chunk.len());
+        Lion::apply_aggregated(&mut params[chunk.range()], update, lr, self.weight_decay);
+    }
+
     fn momentum(&self) -> Option<&[f32]> {
         Some(&self.lion.momentum)
     }
@@ -91,6 +102,18 @@ impl Strategy for DLion {
 
     fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
         sign_family_downlink_bits(self.agg, nworkers)
+    }
+
+    /// Sign/tern/intavg payloads all hit byte boundaries every 40
+    /// elements, so 40-aligned chunks splice bit-exactly.
+    fn chunking(&self) -> Chunking {
+        Chunking::Native { align: SIGN_FAMILY_ALIGN }
+    }
+
+    /// Aggregator→root hop ships exact integer vote sums:
+    /// ⌈log₂(g+1)⌉ bits/param per group.
+    fn partial_bits_per_param(&self, group_size: usize) -> f64 {
+        bits_for_count(group_size) as f64
     }
 }
 
@@ -126,6 +149,17 @@ impl WorkerLogic for DSignumWorker {
         Lion::apply_aggregated(params, update, lr, self.weight_decay);
     }
 
+    fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        let len = chunk.len();
+        self.signum.update_and_peek_range(grads, chunk.range(), &mut self.blend[..len]);
+        frame(TAG_SIGN, &sign::pack_f32(&self.blend[..len]))
+    }
+
+    fn apply_chunk(&mut self, params: &mut [f32], msg: &[u8], chunk: Chunk, lr: f32, _step: usize) {
+        let update = self.decoder.decode_len(msg, chunk.len());
+        Lion::apply_aggregated(&mut params[chunk.range()], update, lr, self.weight_decay);
+    }
+
     fn momentum(&self) -> Option<&[f32]> {
         Some(&self.signum.momentum)
     }
@@ -158,6 +192,14 @@ impl Strategy for DSignum {
 
     fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
         sign_family_downlink_bits(self.agg, nworkers)
+    }
+
+    fn chunking(&self) -> Chunking {
+        Chunking::Native { align: SIGN_FAMILY_ALIGN }
+    }
+
+    fn partial_bits_per_param(&self, group_size: usize) -> f64 {
+        bits_for_count(group_size) as f64
     }
 }
 

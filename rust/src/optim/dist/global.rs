@@ -8,7 +8,8 @@
 //! [`crate::optim`] implementations unchanged.
 
 use super::{
-    frame, read_u16, ServerLogic, Strategy, StrategyHyper, WorkerLogic, TAG_DENSE, TAG_DENSE_SUM,
+    frame, read_u16, Chunk, Chunking, ServerLogic, Strategy, StrategyHyper, WorkerLogic,
+    TAG_DENSE, TAG_DENSE_SUM,
 };
 use crate::comm::dense;
 use crate::optim::adamw::AdamW;
@@ -76,6 +77,21 @@ impl WorkerLogic for GlobalWorker {
         dense::unpack_into(&downlink[1..], &mut self.mean_grad);
         self.opt.step(params, &self.mean_grad, lr);
     }
+
+    fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        frame(TAG_DENSE, &dense::pack(&grads[chunk.range()]))
+    }
+
+    /// Ranged apply: decode the chunk's dense mean and advance the
+    /// replicated optimizer over just that slice
+    /// ([`crate::optim::Optimizer::step_range`] keeps per-step scalar
+    /// state — AdamW's bias-correction counter — exact across chunks).
+    fn apply_chunk(&mut self, params: &mut [f32], msg: &[u8], chunk: Chunk, lr: f32, _step: usize) {
+        assert_eq!(msg[0], TAG_DENSE, "global strategies expect dense downlinks");
+        let len = chunk.len();
+        dense::unpack_into(&msg[1..], &mut self.mean_grad[..len]);
+        self.opt.step_range(&mut params[chunk.range()], &self.mean_grad[..len], lr, chunk.start);
+    }
 }
 
 /// Stateless dense averager over dense f32 uplinks.
@@ -88,16 +104,19 @@ impl DenseAvgServer {
     pub(crate) fn new(nworkers: usize, dim: usize) -> Self {
         DenseAvgServer { nworkers, acc: vec![0.0; dim] }
     }
-}
 
-impl ServerLogic for DenseAvgServer {
-    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
-        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+    /// Zero the accumulator and sum the dense uplinks into it (worker
+    /// order — the f32 accumulation order every path shares).
+    fn accumulate_uplinks<'a>(&mut self, uplinks: impl Iterator<Item = &'a [u8]>) {
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         for up in uplinks {
             assert_eq!(up[0], TAG_DENSE, "dense server expects dense uplinks");
             dense::accumulate(&up[1..], &mut self.acc);
         }
+    }
+
+    /// Scale the accumulated sum to the mean and frame it.
+    fn finish_mean(&mut self) -> Vec<u8> {
         let inv = 1.0 / self.nworkers as f32;
         for a in self.acc.iter_mut() {
             *a *= inv;
@@ -105,17 +124,8 @@ impl ServerLogic for DenseAvgServer {
         frame(TAG_DENSE, &dense::pack(&self.acc))
     }
 
-    /// Group hop: ship the group's f32 partial gradient sum (tag 14) —
-    /// 32 bits/param per *group* instead of per worker, which is where
-    /// hierarchical aggregation pays off for the dense family.
-    /// Layout: `[TAG_DENSE_SUM][g: u16 LE][dense f32 payload]`.
-    fn partial(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
-        assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
-        self.acc.iter_mut().for_each(|a| *a = 0.0);
-        for up in uplinks {
-            assert_eq!(up[0], TAG_DENSE, "dense server expects dense uplinks");
-            dense::accumulate(&up[1..], &mut self.acc);
-        }
+    /// Frame the accumulated sum as a tag-14 partial.
+    fn sum_partial(&self) -> Vec<u8> {
         let payload = dense::pack(&self.acc);
         let mut msg = Vec::with_capacity(3 + payload.len());
         msg.push(TAG_DENSE_SUM);
@@ -124,10 +134,8 @@ impl ServerLogic for DenseAvgServer {
         msg
     }
 
-    /// Root hop: add the group sums (left-to-right, the same f32
-    /// accumulation order the flat server uses within a group) and
-    /// broadcast the mean over the full worker count.
-    fn fold(&mut self, partials: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+    /// Sum tag-14 group partials into the accumulator and finish.
+    fn fold_partials<'a>(&mut self, partials: impl Iterator<Item = &'a [u8]>) -> Vec<u8> {
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         let mut total = 0usize;
         for p in partials {
@@ -136,11 +144,50 @@ impl ServerLogic for DenseAvgServer {
             dense::accumulate(&p[3..], &mut self.acc);
         }
         assert_eq!(total, self.nworkers, "group partials must cover all workers");
-        let inv = 1.0 / self.nworkers as f32;
-        for a in self.acc.iter_mut() {
-            *a *= inv;
-        }
-        frame(TAG_DENSE, &dense::pack(&self.acc))
+        self.finish_mean()
+    }
+}
+
+impl ServerLogic for DenseAvgServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
+        self.finish_mean()
+    }
+
+    /// Chunked hot path: per-chunk instances average their chunk's
+    /// dense frames straight from the envelope views.
+    fn aggregate_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.accumulate_uplinks(uplinks.iter().copied());
+        self.finish_mean()
+    }
+
+    /// Group hop: ship the group's f32 partial gradient sum (tag 14) —
+    /// 32 bits/param per *group* instead of per worker, which is where
+    /// hierarchical aggregation pays off for the dense family.
+    /// Layout: `[TAG_DENSE_SUM][g: u16 LE][dense f32 payload]`.
+    fn partial(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
+        self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
+        self.sum_partial()
+    }
+
+    fn partial_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
+        self.accumulate_uplinks(uplinks.iter().copied());
+        self.sum_partial()
+    }
+
+    /// Root hop: add the group sums (left-to-right, the same f32
+    /// accumulation order the flat server uses within a group) and
+    /// broadcast the mean over the full worker count.
+    fn fold(&mut self, partials: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
+        self.fold_partials(partials.iter().map(|p| p.as_slice()))
+    }
+
+    fn fold_chunk(&mut self, partials: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        self.fold_partials(partials.iter().copied())
     }
 }
 
@@ -169,6 +216,16 @@ impl Strategy for Global {
     }
 
     fn downlink_bits_per_param(&self, _nworkers: usize) -> f64 {
+        32.0
+    }
+
+    /// Dense f32 payloads split at any element boundary.
+    fn chunking(&self) -> Chunking {
+        Chunking::Native { align: 1 }
+    }
+
+    /// Aggregator→root hop ships one f32 partial sum per group.
+    fn partial_bits_per_param(&self, _group_size: usize) -> f64 {
         32.0
     }
 }

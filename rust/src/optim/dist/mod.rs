@@ -31,12 +31,41 @@
 //! | 12  | `[12][vote frame][bf16 mean momentum]`   | msync downlink    |
 //! | 13  | `[13][count: u16 LE][(len: u32 LE, frame)*]` | relay partial (aggregator→root fallback) |
 //! | 14  | `[14][count: u16 LE][dense f32 payload]` | dense-sum partial (global family) |
+//! | 15  | `[15][count: u16 LE][(len: u32 LE, frame)*]` | chunked envelope ([`crate::comm::chunked`]) |
 //!
 //! The bandwidth-aware selector ([`select`]) adds no framing of its own:
 //! its rounds are the wrapped strategies' frames verbatim. Tags 13/14
 //! and the tag-3 vote partial only ever cross the aggregator→root hop
 //! of a hierarchical topology ([`crate::cluster::topology`]); workers
 //! never see them.
+//!
+//! ## Chunked wire surface
+//!
+//! The round API is chunk-oriented: a [`ChunkPlan`] deterministically
+//! partitions the `dim`-parameter model into fixed-size contiguous
+//! [`Chunk`]s, and the per-chunk halves of the round are
+//! [`WorkerLogic::encode_chunk`] / [`WorkerLogic::apply_chunk`] and
+//! [`ServerLogic::aggregate_chunk`] / [`ServerLogic::partial_chunk`] /
+//! [`ServerLogic::fold_chunk`]. Multi-chunk messages ride the tag-15
+//! envelope; a single-chunk plan moves exactly the pre-chunking
+//! monolithic frames (no envelope), which is how the whole-model
+//! methods remain the degenerate case rather than a separate code path.
+//!
+//! A strategy opts in via [`Strategy::chunking`]: the sign-vote family
+//! (D-Lion, D-SIGNUM — sign/tern/intavg codecs, alignment
+//! [`SIGN_FAMILY_ALIGN`]), the dense family (g-lion/g-adamw/g-sgd), and
+//! the classic sparse top-k family (graddrop/dgc) encode, aggregate,
+//! and apply natively per chunk — bit-exact against the monolithic path
+//! for *any* `chunk_size`, with identical worker-edge payload-byte
+//! accounting ([`crate::comm::chunked::payload_len`]; aggregator-hop
+//! invariance additionally holds for the mergeable-partial families,
+//! while relay-fallback partials repeat their tag-13 framing per chunk
+//! and are priced honestly). Every other strategy keeps
+//! the default [`Chunking::Monolithic`] and collapses to a single-chunk
+//! plan, so the full registry works unchanged under any configured
+//! `chunk_size`. The cluster layer's round engine iterates the plan and
+//! runs encode/aggregate/apply chunk-parallel on large models
+//! ([`crate::util::parallel`]).
 
 pub mod dgc;
 pub mod dlion;
@@ -48,10 +77,11 @@ pub mod msync;
 pub mod select;
 pub mod terngrad;
 
-use crate::comm::{intavg, sign, tern};
+use crate::comm::{chunked, intavg, sign, tern};
 use crate::error::{DlionError, Result};
 use crate::optim::LionParams;
 use crate::util::math::bits_for_count;
+use std::ops::Range;
 
 pub use self::dgc::SparseTopK;
 pub use self::dlion::{Aggregation, DLion, DSignum};
@@ -78,6 +108,159 @@ pub const TAG_SIGN_MOM: u8 = 11;
 pub const TAG_MSYNC_DOWN: u8 = 12;
 pub const TAG_RELAY: u8 = 13;
 pub const TAG_DENSE_SUM: u8 = 14;
+/// Chunked multi-frame envelope (re-export of [`crate::comm::chunked::TAG_CHUNKED`]).
+pub const TAG_CHUNKED: u8 = chunked::TAG_CHUNKED;
+
+/// Chunk alignment for the sign-vote family: the lcm of the sign codec's
+/// 8-elements-per-byte, the ternary codec's 5-per-byte, and the intavg
+/// codec's byte period — any multiple-of-40 chunk boundary falls on a
+/// byte boundary in all three payloads, so chunk payloads concatenate
+/// bit-exactly into the monolithic payload.
+pub const SIGN_FAMILY_ALIGN: usize = 40;
+
+/// One contiguous parameter range of a [`ChunkPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    /// position in the plan (0-based)
+    pub index: usize,
+    /// total chunks in the plan
+    pub count: usize,
+    /// first parameter index (inclusive)
+    pub start: usize,
+    /// one past the last parameter index
+    pub end: usize,
+}
+
+impl Chunk {
+    /// The single chunk of a whole-model (monolithic) plan.
+    pub fn whole(dim: usize) -> Chunk {
+        Chunk { index: 0, count: 1, start: 0, end: dim }
+    }
+
+    /// Number of parameters in this chunk.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// The parameter index range this chunk covers.
+    pub fn range(&self) -> Range<usize> {
+        self.start..self.end
+    }
+
+    /// Is this the only chunk of its plan?
+    pub fn is_whole(&self) -> bool {
+        self.count == 1
+    }
+}
+
+/// Deterministic fixed-size partition of a `dim`-parameter model —
+/// the geometry both ends of the wire derive from `(dim, chunk_size)`
+/// without any on-wire negotiation. All chunks have the same element
+/// count (rounded up to the strategy's codec alignment) except the
+/// last, which takes the remainder.
+///
+/// # Examples
+///
+/// ```
+/// use dlion::optim::dist::ChunkPlan;
+///
+/// let plan = ChunkPlan::new(100, 30, 8); // 30 rounds up to 32
+/// assert_eq!(plan.num_chunks(), 4);
+/// assert_eq!(plan.chunk(0).range(), 0..32);
+/// assert_eq!(plan.chunk(3).range(), 96..100);
+/// // chunk_size 0 (or >= dim) degenerates to the whole-model plan
+/// assert!(ChunkPlan::new(100, 0, 8).is_single());
+/// assert!(ChunkPlan::new(100, 100, 8).is_single());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkPlan {
+    dim: usize,
+    chunk: usize,
+}
+
+impl ChunkPlan {
+    /// The whole-model plan: one chunk covering `0..dim`.
+    pub fn single(dim: usize) -> ChunkPlan {
+        ChunkPlan { dim, chunk: dim.max(1) }
+    }
+
+    /// Build a plan with `chunk_size` elements per chunk, rounded up to
+    /// `align` (the codec's bit-packing period). `chunk_size == 0` or
+    /// `chunk_size >= dim` yields the whole-model plan. The tag-15
+    /// envelope carries a u16 chunk count, so the chunk size is also
+    /// raised as needed to keep `num_chunks() <= u16::MAX` — a tiny
+    /// configured chunk_size on a huge model coarsens instead of
+    /// panicking mid-round.
+    pub fn new(dim: usize, chunk_size: usize, align: usize) -> ChunkPlan {
+        let align = align.max(1);
+        if chunk_size == 0 || chunk_size >= dim {
+            return ChunkPlan::single(dim);
+        }
+        let chunk = chunk_size.div_ceil(align) * align;
+        let min_chunk = dim.div_ceil(u16::MAX as usize).div_ceil(align) * align;
+        let chunk = chunk.max(min_chunk);
+        if chunk >= dim {
+            ChunkPlan::single(dim)
+        } else {
+            ChunkPlan { dim, chunk }
+        }
+    }
+
+    /// Model dimension this plan partitions.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Elements per chunk (after alignment; the last chunk may be smaller).
+    pub fn chunk_elems(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        if self.dim == 0 {
+            1
+        } else {
+            self.dim.div_ceil(self.chunk)
+        }
+    }
+
+    /// Whole-model plan (the monolithic wire format, no envelope)?
+    pub fn is_single(&self) -> bool {
+        self.num_chunks() == 1
+    }
+
+    /// The `index`-th chunk's geometry.
+    pub fn chunk(&self, index: usize) -> Chunk {
+        let count = self.num_chunks();
+        debug_assert!(index < count, "chunk index out of range");
+        let start = index * self.chunk;
+        Chunk { index, count, start, end: (start + self.chunk).min(self.dim) }
+    }
+
+    /// Iterate the chunks in index order.
+    pub fn chunks(&self) -> impl Iterator<Item = Chunk> + '_ {
+        (0..self.num_chunks()).map(|i| self.chunk(i))
+    }
+}
+
+/// How a strategy's wire format partitions ([`Strategy::chunking`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Chunking {
+    /// No native chunked codec: any configured `chunk_size` collapses to
+    /// the single-chunk (whole-model) plan. The default.
+    Monolithic,
+    /// Native per-chunk encode/aggregate/apply; chunk sizes are rounded
+    /// up to `align` so chunk payloads splice bit-exactly into the
+    /// monolithic payload (payload-byte accounting is chunking-invariant).
+    Native {
+        /// element alignment (the codec's bit-packing period)
+        align: usize,
+    },
+}
 
 /// Worker-side half of one synchronous round (Algorithm 1 lines 4–6, 9).
 ///
@@ -101,6 +284,61 @@ pub const TAG_DENSE_SUM: u8 = 14;
 pub trait WorkerLogic: Send {
     fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8>;
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize);
+
+    /// Encode one chunk's uplink frame. `grads` is the full gradient
+    /// slice; the frame covers `chunk.range()`. Called in ascending
+    /// chunk order within a round. Strategies without a native chunked
+    /// codec ([`Chunking::Monolithic`]) only ever see the whole-model
+    /// chunk and fall through to [`WorkerLogic::encode`].
+    fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        assert!(
+            chunk.is_whole(),
+            "strategy has no native chunked encode; the plan must be single-chunk"
+        );
+        self.encode(grads, lr, step)
+    }
+
+    /// Apply one chunk's downlink frame to `params[chunk.range()]`.
+    fn apply_chunk(&mut self, params: &mut [f32], frame: &[u8], chunk: Chunk, lr: f32, step: usize) {
+        assert!(
+            chunk.is_whole(),
+            "strategy has no native chunked apply; the plan must be single-chunk"
+        );
+        self.apply(params, frame, lr, step);
+    }
+
+    /// Encode the full uplink message under `plan`: the bare monolithic
+    /// frame for a single-chunk plan, a tag-15 chunked envelope
+    /// otherwise. This is what the cluster drivers call.
+    fn encode_planned(&mut self, grads: &[f32], plan: &ChunkPlan, lr: f32, step: usize) -> Vec<u8> {
+        if plan.is_single() {
+            return self.encode(grads, lr, step);
+        }
+        let frames: Vec<Vec<u8>> =
+            plan.chunks().map(|c| self.encode_chunk(grads, c, lr, step)).collect();
+        chunked::pack(&frames)
+    }
+
+    /// Apply the full downlink message under `plan` (counterpart of
+    /// [`WorkerLogic::encode_planned`]).
+    fn apply_planned(
+        &mut self,
+        params: &mut [f32],
+        downlink: &[u8],
+        plan: &ChunkPlan,
+        lr: f32,
+        step: usize,
+    ) {
+        if plan.is_single() {
+            self.apply(params, downlink, lr, step);
+            return;
+        }
+        let frames = chunked::unpack(downlink).expect("malformed chunked downlink");
+        assert_eq!(frames.len(), plan.num_chunks(), "downlink chunk count mismatch");
+        for (frame, c) in frames.iter().zip(plan.chunks()) {
+            self.apply_chunk(params, frame, c, lr, step);
+        }
+    }
 
     /// Take one purely local optimizer step (no communication). Called
     /// by the cluster drivers on the non-sync steps of a local-steps
@@ -170,6 +408,29 @@ pub trait ServerLogic: Send {
         }
         self.aggregate(&flat, lr, step)
     }
+
+    /// Per-chunk [`ServerLogic::aggregate`]: fold the workers' frames
+    /// for one chunk into that chunk's downlink frame. The round engine
+    /// builds one `ServerLogic` instance per chunk (via
+    /// `make_server(nworkers, chunk.len())`), so the default — delegate
+    /// to the whole-model `aggregate` — is already correct; native
+    /// servers override it to skip the defensive copy.
+    fn aggregate_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        let owned: Vec<Vec<u8>> = uplinks.iter().map(|m| m.to_vec()).collect();
+        self.aggregate(&owned, lr, step)
+    }
+
+    /// Per-chunk [`ServerLogic::partial`] (group-aggregator hop).
+    fn partial_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        let owned: Vec<Vec<u8>> = uplinks.iter().map(|m| m.to_vec()).collect();
+        self.partial(&owned, lr, step)
+    }
+
+    /// Per-chunk [`ServerLogic::fold`] (root hop).
+    fn fold_chunk(&mut self, partials: &[&[u8]], _chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        let owned: Vec<Vec<u8>> = partials.iter().map(|m| m.to_vec()).collect();
+        self.fold(&owned, lr, step)
+    }
 }
 
 /// A distributed training strategy: a factory for worker/server logic
@@ -216,6 +477,32 @@ pub trait Strategy: Send + Sync {
     /// default) is Algorithm 1's every-step round.
     fn local_steps(&self) -> usize {
         1
+    }
+
+    /// How this strategy's wire format partitions. The default —
+    /// [`Chunking::Monolithic`] — collapses any configured `chunk_size`
+    /// to the whole-model plan, so strategies without native chunked
+    /// codecs keep working unchanged.
+    fn chunking(&self) -> Chunking {
+        Chunking::Monolithic
+    }
+
+    /// The chunk plan this strategy uses for a `dim`-parameter model
+    /// under the configured `chunk_size` (0 = whole-model).
+    fn plan(&self, dim: usize, chunk_size: usize) -> ChunkPlan {
+        match self.chunking() {
+            Chunking::Monolithic => ChunkPlan::single(dim),
+            Chunking::Native { align } => ChunkPlan::new(dim, chunk_size, align),
+        }
+    }
+
+    /// Analytic aggregator→root partial-frame bits per parameter for a
+    /// `group_size`-worker group (the hierarchical topology's middle
+    /// hop, used by [`crate::comm::simnet`]'s latency model). The
+    /// default is the relay fallback — member uplinks forwarded
+    /// verbatim; strategies with a mergeable partial override it.
+    fn partial_bits_per_param(&self, group_size: usize) -> f64 {
+        group_size as f64 * self.uplink_bits_per_param(group_size)
     }
 }
 
@@ -537,30 +824,38 @@ impl UpdateDecoder {
 
     /// Decode a downlink frame into the aggregated update Δ ∈ [−1, 1]^d.
     pub(crate) fn decode(&mut self, msg: &[u8]) -> &[f32] {
+        let d = self.update.len();
+        self.decode_len(msg, d)
+    }
+
+    /// Decode a frame covering the first `len` elements (a chunk's
+    /// worth) — the chunked apply path; `decode` is the `len == dim`
+    /// special case.
+    pub(crate) fn decode_len(&mut self, msg: &[u8], len: usize) -> &[f32] {
         match msg[0] {
             TAG_SIGN => {
-                sign::unpack_into(&msg[1..], &mut self.trits);
-                for (u, &t) in self.update.iter_mut().zip(&self.trits) {
+                sign::unpack_into(&msg[1..], &mut self.trits[..len]);
+                for (u, &t) in self.update[..len].iter_mut().zip(&self.trits[..len]) {
                     *u = t as f32;
                 }
             }
             TAG_TERN => {
-                tern::unpack_into(&msg[1..], &mut self.trits);
-                for (u, &t) in self.update.iter_mut().zip(&self.trits) {
+                tern::unpack_into(&msg[1..], &mut self.trits[..len]);
+                for (u, &t) in self.update[..len].iter_mut().zip(&self.trits[..len]) {
                     *u = t as f32;
                 }
             }
             TAG_INTAVG => {
                 let n = read_u16(msg, 1) as usize;
-                intavg::unpack_into(&msg[3..], n, &mut self.votes);
+                intavg::unpack_into(&msg[3..], n, &mut self.votes[..len]);
                 let inv = 1.0 / n as f32;
-                for (u, &s) in self.update.iter_mut().zip(&self.votes) {
+                for (u, &s) in self.update[..len].iter_mut().zip(&self.votes[..len]) {
                     *u = s as f32 * inv;
                 }
             }
             t => panic!("unexpected downlink tag {t}"),
         }
-        &self.update
+        &self.update[..len]
     }
 }
 
@@ -586,12 +881,41 @@ impl SignVoteServer {
     }
 
     /// Zero the vote buffer and accumulate the 1-bit uplinks into it.
-    fn accumulate_uplinks(&mut self, uplinks: &[Vec<u8>]) {
+    fn accumulate_uplinks<'a>(&mut self, uplinks: impl Iterator<Item = &'a [u8]>) {
         self.votes.iter_mut().for_each(|v| *v = 0);
         for up in uplinks {
             assert_eq!(up[0], TAG_SIGN, "sign-vote server expects 1-bit uplinks");
             sign::accumulate_votes(&up[1..], &mut self.votes);
         }
+    }
+
+    /// Encode the accumulated votes as a tag-3 intavg partial frame.
+    fn votes_partial(&self) -> Vec<u8> {
+        let payload = intavg::pack(&self.votes, self.nworkers);
+        let mut msg = Vec::with_capacity(3 + payload.len());
+        msg.push(TAG_INTAVG);
+        msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
+        msg.extend_from_slice(&payload);
+        msg
+    }
+
+    /// Sum intavg vote partials into the vote buffer, then finish.
+    fn fold_partials<'a>(&mut self, partials: impl Iterator<Item = &'a [u8]>) -> Vec<u8> {
+        let d = self.votes.len();
+        self.votes.iter_mut().for_each(|v| *v = 0);
+        self.scratch.resize(d, 0);
+        let mut total = 0usize;
+        for p in partials {
+            assert_eq!(p[0], TAG_INTAVG, "sign-vote fold expects intavg partials");
+            let group_n = read_u16(p, 1) as usize;
+            intavg::unpack_into(&p[3..], group_n, &mut self.scratch);
+            for (v, &s) in self.votes.iter_mut().zip(&self.scratch) {
+                *v += s;
+            }
+            total += group_n;
+        }
+        assert_eq!(total, self.nworkers, "group partials must cover all workers");
+        self.finish()
     }
 
     /// Encode the accumulated votes as the downlink frame (the shared
@@ -628,7 +952,7 @@ impl SignVoteServer {
 impl ServerLogic for SignVoteServer {
     fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
-        self.accumulate_uplinks(uplinks);
+        self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
         self.finish()
     }
 
@@ -637,33 +961,33 @@ impl ServerLogic for SignVoteServer {
     /// binary uplinks satisfy the codec's parity invariant).
     fn partial(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
-        self.accumulate_uplinks(uplinks);
-        let payload = intavg::pack(&self.votes, self.nworkers);
-        let mut msg = Vec::with_capacity(3 + payload.len());
-        msg.push(TAG_INTAVG);
-        msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
-        msg.extend_from_slice(&payload);
-        msg
+        self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
+        self.votes_partial()
     }
 
     /// Root hop: sum the group vote sums — integer addition regroups
     /// exactly, so the downlink equals the flat star's bit-for-bit.
     fn fold(&mut self, partials: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
-        let d = self.votes.len();
-        self.votes.iter_mut().for_each(|v| *v = 0);
-        self.scratch.resize(d, 0);
-        let mut total = 0usize;
-        for p in partials {
-            assert_eq!(p[0], TAG_INTAVG, "sign-vote fold expects intavg partials");
-            let group_n = read_u16(p, 1) as usize;
-            intavg::unpack_into(&p[3..], group_n, &mut self.scratch);
-            for (v, &s) in self.votes.iter_mut().zip(&self.scratch) {
-                *v += s;
-            }
-            total += group_n;
-        }
-        assert_eq!(total, self.nworkers, "group partials must cover all workers");
+        self.fold_partials(partials.iter().map(|p| p.as_slice()))
+    }
+
+    /// Chunked hot path: a per-chunk instance accumulates its chunk's
+    /// sign frames directly from the envelope views — no copies, and
+    /// integer votes make every chunking bit-exact vs the flat frame.
+    fn aggregate_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        self.accumulate_uplinks(uplinks.iter().copied());
         self.finish()
+    }
+
+    fn partial_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
+        self.accumulate_uplinks(uplinks.iter().copied());
+        self.votes_partial()
+    }
+
+    fn fold_chunk(&mut self, partials: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
+        self.fold_partials(partials.iter().copied())
     }
 }
 
@@ -809,6 +1133,143 @@ mod tests {
             .iter()
             .zip(&sums)
             .all(|(&u, &s)| (u - s as f32 / n as f32).abs() < 1e-7));
+    }
+
+    #[test]
+    fn chunk_plan_geometry() {
+        let p = ChunkPlan::new(96, 1, 40); // 1 rounds up to the 40-elem alignment
+        assert_eq!(p.num_chunks(), 3);
+        assert_eq!(p.chunk(0).range(), 0..40);
+        assert_eq!(p.chunk(2).range(), 80..96);
+        assert_eq!(p.chunk(2).count, 3);
+        assert!(!p.chunk(1).is_whole());
+        let chunks: Vec<Chunk> = p.chunks().collect();
+        assert!(chunks.windows(2).all(|w| w[0].end == w[1].start), "chunks must tile");
+        assert_eq!(chunks.last().unwrap().end, 96);
+        // degenerate plans collapse to the whole model
+        assert!(ChunkPlan::new(96, 0, 40).is_single());
+        assert!(ChunkPlan::new(96, 96, 40).is_single());
+        assert!(ChunkPlan::new(96, 99, 40).is_single());
+        assert!(ChunkPlan::new(40, 39, 40).is_single(), "aligned size reaches dim");
+        assert_eq!(ChunkPlan::single(7).chunk(0), Chunk::whole(7));
+        // the u16 chunk count of the tag-15 envelope is never exceeded:
+        // a tiny chunk_size on a huge model coarsens instead of panicking
+        let big = ChunkPlan::new(10_000_000, 100, 1);
+        assert!(big.num_chunks() <= u16::MAX as usize, "{}", big.num_chunks());
+        let big = ChunkPlan::new(100_000_000, 1, 40);
+        assert!(big.num_chunks() <= u16::MAX as usize);
+        assert_eq!(big.chunk_elems() % 40, 0, "clamp keeps the alignment");
+    }
+
+    #[test]
+    fn registry_chunking_declarations() {
+        let hp = StrategyHyper::default();
+        for name in ["d-lion-mavo", "d-lion-avg", "d-signum-mavo", "d-signum-avg"] {
+            let s = by_name(name, &hp).unwrap();
+            assert_eq!(s.chunking(), Chunking::Native { align: SIGN_FAMILY_ALIGN }, "{name}");
+        }
+        for name in ["g-lion", "g-adamw", "g-sgd", "graddrop", "dgc"] {
+            let s = by_name(name, &hp).unwrap();
+            assert_eq!(s.chunking(), Chunking::Native { align: 1 }, "{name}");
+        }
+        // compact sparse has delta-coded indices that cannot splice: it
+        // must stay monolithic so the byte accounting stays exact
+        let hp_c = StrategyHyper { compact_sparse: true, ..hp };
+        assert_eq!(by_name("dgc", &hp_c).unwrap().chunking(), Chunking::Monolithic);
+        // everything else defaults to monolithic and must still plan
+        for name in ["terngrad", "qsgd", "ef-signsgd", "d-lion-ef", "d-lion-msync"] {
+            let s = by_name(name, &hp).unwrap();
+            assert!(s.plan(1000, 64).is_single(), "{name} must collapse to one chunk");
+        }
+    }
+
+    #[test]
+    fn chunked_envelope_splices_to_the_monolithic_frame() {
+        let hp = StrategyHyper::default();
+        let (d, n) = (96, 3);
+        let strat = by_name("d-lion-mavo", &hp).unwrap();
+        let plan = strat.plan(d, 7); // rounds up to 40-elem chunks
+        assert_eq!(plan.num_chunks(), 3);
+        let mut rng = Rng::new(0xC4);
+        let mut g = vec![0.0f32; d];
+        rng.fill_normal(&mut g, 1.0);
+        let mut wa = strat.make_worker(0, n, d);
+        let mut wb = strat.make_worker(0, n, d);
+        let mono = wa.encode(&g, 1e-3, 0);
+        let msg = wb.encode_planned(&g, &plan, 1e-3, 0);
+        assert_eq!(msg[0], TAG_CHUNKED);
+        // payload accounting is chunking-invariant...
+        assert_eq!(chunked::payload_len(&msg), mono.len());
+        // ...because the aligned chunk payloads splice bit-exactly
+        let frames = chunked::unpack(&msg).unwrap();
+        let spliced: Vec<u8> = std::iter::once(TAG_SIGN)
+            .chain(frames.iter().flat_map(|f| f[1..].iter().copied()))
+            .collect();
+        assert_eq!(spliced, mono);
+    }
+
+    #[test]
+    fn per_chunk_servers_reproduce_the_monolithic_round() {
+        // The full chunked round (encode_planned → per-chunk
+        // aggregate_chunk → apply_planned) must match run_round
+        // bit-for-bit in params and payload bytes for every native
+        // family, across steps (stateful workers included).
+        let hp = StrategyHyper::default();
+        let (d, n) = (96, 4);
+        let mut rng = Rng::new(0xC5);
+        let all_grads: Vec<Vec<Vec<f32>>> = (0..3)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let mut g = vec![0.0f32; d];
+                        rng.fill_normal(&mut g, 1.0);
+                        g
+                    })
+                    .collect()
+            })
+            .collect();
+        for name in ["d-lion-mavo", "d-lion-avg", "d-signum-mavo", "g-lion", "g-adamw", "dgc"] {
+            let strat = by_name(name, &hp).unwrap();
+            let plan = strat.plan(d, 8);
+            assert!(!plan.is_single(), "{name}: expected a multi-chunk plan");
+            let mut wa: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+            let mut sa = strat.make_server(n, d);
+            let mut pa: Vec<Vec<f32>> = vec![vec![0.2f32; d]; n];
+            let mut wb: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+            let mut sb: Vec<_> = plan.chunks().map(|c| strat.make_server(n, c.len())).collect();
+            let mut pb = pa.clone();
+            for (step, grads) in all_grads.iter().enumerate() {
+                let (mono_up, mono_down) =
+                    run_round(&mut wa, sa.as_mut(), &mut pa, grads, 1e-2, step);
+                let ups: Vec<Vec<u8>> = wb
+                    .iter_mut()
+                    .zip(grads)
+                    .map(|(w, g)| w.encode_planned(g, &plan, 1e-2, step))
+                    .collect();
+                let up_bytes: usize = ups.iter().map(|m| chunked::payload_len(m)).sum();
+                assert_eq!(up_bytes, mono_up, "{name} step {step}: uplink payload bytes");
+                let per_worker: Vec<Vec<&[u8]>> =
+                    ups.iter().map(|m| chunked::unpack(m).unwrap()).collect();
+                let downs: Vec<Vec<u8>> = plan
+                    .chunks()
+                    .map(|c| {
+                        let frames: Vec<&[u8]> =
+                            per_worker.iter().map(|w| w[c.index]).collect();
+                        sb[c.index].aggregate_chunk(&frames, c, 1e-2, step)
+                    })
+                    .collect();
+                let down = chunked::pack(&downs);
+                assert_eq!(
+                    chunked::payload_len(&down) * n,
+                    mono_down,
+                    "{name} step {step}: downlink payload bytes"
+                );
+                for (w, p) in wb.iter_mut().zip(pb.iter_mut()) {
+                    w.apply_planned(p, &down, &plan, 1e-2, step);
+                }
+                assert_eq!(pa, pb, "{name} step {step}: chunked params diverged");
+            }
+        }
     }
 
     #[test]

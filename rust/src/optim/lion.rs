@@ -65,13 +65,24 @@ impl Lion {
     /// scratch store disappears. Bit-exact with the decomposed path
     /// (tested below).
     pub fn encode_fused(&mut self, grads: &[f32]) -> Vec<u8> {
-        let d = grads.len();
-        debug_assert_eq!(d, self.momentum.len());
+        debug_assert_eq!(grads.len(), self.momentum.len());
+        self.encode_fused_range(grads, 0..grads.len())
+    }
+
+    /// Ranged variant of [`Lion::encode_fused`] for the chunked wire
+    /// path: pack the blend signs of `range` (bits start at the chunk's
+    /// own bit 0) and advance only `momentum[range]`. `grads` is the
+    /// full gradient slice. The whole-range call is `encode_fused`
+    /// itself, and disjoint ranges compose to it bit-exactly.
+    pub fn encode_fused_range(&mut self, grads: &[f32], range: std::ops::Range<usize>) -> Vec<u8> {
         let b1 = self.hp.beta1;
         let b2 = self.hp.beta2;
+        let gs = &grads[range.clone()];
+        let ms = &mut self.momentum[range];
+        let d = gs.len();
         let mut out = vec![0u8; crate::comm::sign::packed_len(d)];
-        let m_chunks = self.momentum.chunks_exact_mut(8);
-        let g_chunks = grads.chunks_exact(8);
+        let m_chunks = ms.chunks_exact_mut(8);
+        let g_chunks = gs.chunks_exact(8);
         let full = g_chunks.len();
         for (ci, (mc, gc)) in m_chunks.zip(g_chunks).enumerate() {
             let mut byte = 0u8;
@@ -85,13 +96,13 @@ impl Lion {
             out[ci] = byte;
         }
         for i in full * 8..d {
-            let m = self.momentum[i];
-            let g = grads[i];
+            let m = ms[i];
+            let g = gs[i];
             let blend = b1 * m + (1.0 - b1) * g;
             if blend.to_bits() >> 31 == 0 {
                 out[i >> 3] |= 1 << (i & 7);
             }
-            self.momentum[i] = b2 * m + (1.0 - b2) * g;
+            ms[i] = b2 * m + (1.0 - b2) * g;
         }
         out
     }
@@ -99,10 +110,15 @@ impl Lion {
 
 impl Optimizer for Lion {
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
-        debug_assert_eq!(params.len(), grads.len());
         debug_assert_eq!(params.len(), self.momentum.len());
+        self.step_range(params, grads, lr, 0);
+    }
+
+    fn step_range(&mut self, params: &mut [f32], grads: &[f32], lr: f32, offset: usize) {
+        debug_assert_eq!(params.len(), grads.len());
         let LionParams { beta1, beta2, weight_decay } = self.hp;
-        for ((p, m), &g) in params.iter_mut().zip(&mut self.momentum).zip(grads) {
+        let m = &mut self.momentum[offset..offset + grads.len()];
+        for ((p, m), &g) in params.iter_mut().zip(m).zip(grads) {
             let u = bsign(beta1 * *m + (1.0 - beta1) * g);
             *p -= lr * (u + weight_decay * *p);
             *m = beta2 * *m + (1.0 - beta2) * g;
@@ -217,6 +233,56 @@ mod tests {
                 assert_eq!(a.momentum, b.momentum, "d={d}");
             }
         }
+    }
+
+    #[test]
+    fn encode_fused_range_composes_to_encode_fused() {
+        // Disjoint ranged calls must update the same momentum and emit
+        // payloads that splice into the whole-model payload when range
+        // starts are byte-aligned (multiples of 8).
+        let hp = LionParams::default();
+        let mut rng = crate::util::Rng::new(0xA4);
+        for d in [96usize, 101, 1003] {
+            let mut a = Lion::new(d, hp);
+            let mut b = Lion::new(d, hp);
+            rng.fill_normal(&mut a.momentum, 0.3);
+            b.momentum.copy_from_slice(&a.momentum);
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            let whole = a.encode_fused(&g);
+            let mut spliced = Vec::new();
+            let chunk = 40; // multiple of 8: chunk payloads are byte-aligned
+            let mut start = 0;
+            while start < d {
+                let end = (start + chunk).min(d);
+                spliced.extend_from_slice(&b.encode_fused_range(&g, start..end));
+                start = end;
+            }
+            assert_eq!(spliced, whole, "d={d}");
+            assert_eq!(a.momentum, b.momentum, "d={d}");
+        }
+    }
+
+    #[test]
+    fn step_range_composes_to_step() {
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.01 };
+        let d = 70;
+        let mut a = Lion::new(d, hp);
+        let mut b = Lion::new(d, hp);
+        let mut pa = vec![0.4f32; d];
+        let mut pb = pa.clone();
+        let mut rng = crate::util::Rng::new(0xA5);
+        for _ in 0..20 {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            a.step(&mut pa, &g, 0.01);
+            for start in (0..d).step_by(32) {
+                let end = (start + 32).min(d);
+                b.step_range(&mut pb[start..end], &g[start..end], 0.01, start);
+            }
+        }
+        assert_eq!(pa, pb);
+        assert_eq!(a.momentum, b.momentum);
     }
 
     #[test]

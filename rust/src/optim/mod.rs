@@ -21,6 +21,22 @@ pub trait Optimizer: Send {
     /// One update: params ← params − lr·(update(grads) + decoupled wd term).
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
 
+    /// Ranged update for the chunked wire path: apply one step's update
+    /// to the parameter slice that starts at global index `offset`
+    /// (`params`/`grads` are the chunk's views; optimizer state is
+    /// indexed at `offset..offset + grads.len()`).
+    ///
+    /// Contract: within one logical step the caller covers the full
+    /// vector exactly once, in ascending ranges starting at offset 0 —
+    /// per-step scalar state (e.g. AdamW's bias-correction counter)
+    /// advances on the `offset == 0` call. The default is only valid
+    /// for whole-vector calls and exists so optimizers never used
+    /// through the chunked path need no override.
+    fn step_range(&mut self, params: &mut [f32], grads: &[f32], lr: f32, offset: usize) {
+        assert_eq!(offset, 0, "{}: no ranged step support", self.name());
+        self.step(params, grads, lr);
+    }
+
     /// Human-readable name for logs/benches.
     fn name(&self) -> &'static str;
 

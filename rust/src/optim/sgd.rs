@@ -31,6 +31,15 @@ impl Optimizer for SgdMomentum {
         self.apply_gradient(params, grads, lr);
     }
 
+    fn step_range(&mut self, params: &mut [f32], grads: &[f32], lr: f32, offset: usize) {
+        debug_assert_eq!(params.len(), grads.len());
+        let v = &mut self.velocity[offset..offset + grads.len()];
+        for ((p, v), &g) in params.iter_mut().zip(v).zip(grads) {
+            *v = self.momentum * *v + g;
+            *p -= lr * (*v + self.weight_decay * *p);
+        }
+    }
+
     fn name(&self) -> &'static str {
         "sgd-momentum"
     }

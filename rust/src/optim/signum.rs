@@ -21,8 +21,22 @@ impl Signum {
     /// Worker-side: compute binary update into `out` *after* advancing
     /// momentum (Signum signs the freshly-updated momentum).
     pub fn update_and_peek(&mut self, grads: &[f32], out: &mut [f32]) {
-        for ((m, &g), o) in self.momentum.iter_mut().zip(grads).zip(out.iter_mut()) {
-            *m = self.beta * *m + (1.0 - self.beta) * g;
+        self.update_and_peek_range(grads, 0..grads.len(), out);
+    }
+
+    /// Ranged variant for the chunked wire path: advance and sign only
+    /// `momentum[range]`; `grads` is the full slice, `out` holds
+    /// `range.len()` elements.
+    pub fn update_and_peek_range(
+        &mut self,
+        grads: &[f32],
+        range: std::ops::Range<usize>,
+        out: &mut [f32],
+    ) {
+        let beta = self.beta;
+        let gs = &grads[range.clone()];
+        for ((m, &g), o) in self.momentum[range].iter_mut().zip(gs).zip(out.iter_mut()) {
+            *m = beta * *m + (1.0 - beta) * g;
             *o = bsign(*m);
         }
     }

@@ -8,6 +8,7 @@
 pub mod csv;
 pub mod json;
 pub mod math;
+pub mod parallel;
 pub mod rng;
 
 pub use rng::Rng;

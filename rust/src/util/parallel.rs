@@ -1,0 +1,139 @@
+//! Deterministic scoped-thread parallelism for the chunked round hot
+//! path (no external thread-pool crates in the offline build).
+//!
+//! The helpers split index-aligned slices into contiguous per-thread
+//! blocks and run a pure-per-item closure on each block; results are
+//! collected back in index order, so the output is bit-identical to the
+//! sequential loop regardless of scheduling. Callers gate on
+//! [`auto_threads`] so small models (the sweep benches run thousands of
+//! tiny rounds) never pay thread-spawn overhead.
+
+/// Work sizes below this many elements run single-threaded: at ~1 ns per
+/// element, spawn/join overhead would dominate the round.
+pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Thread count for a hot-path operation over `elems` elements: 1 below
+/// [`PAR_MIN_ELEMS`], otherwise the machine's available parallelism.
+pub fn auto_threads(elems: usize) -> usize {
+    if elems < PAR_MIN_ELEMS {
+        1
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Map `f` over the zipped slices in parallel, returning the results in
+/// index order. `f(&mut a[i], &b[i], i)` must be pure per index (no
+/// cross-item dependence) for the output to be deterministic.
+pub fn par_zip_map<A, B, T, F>(a: &mut [A], b: &[B], nthreads: usize, f: F) -> Vec<T>
+where
+    A: Send,
+    B: Sync,
+    T: Send,
+    F: Fn(&mut A, &B, usize) -> T + Sync,
+{
+    let n = a.len();
+    assert_eq!(n, b.len(), "par_zip_map slices must be index-aligned");
+    let nthreads = nthreads.min(n).max(1);
+    if nthreads <= 1 {
+        return a.iter_mut().zip(b).enumerate().map(|(i, (x, y))| f(x, y, i)).collect();
+    }
+    let block = n.div_ceil(nthreads);
+    let mut out: Vec<Vec<T>> = Vec::with_capacity(nthreads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(nthreads);
+        for (bi, (ac, bc)) in a.chunks_mut(block).zip(b.chunks(block)).enumerate() {
+            let f = &f;
+            handles.push(s.spawn(move || {
+                ac.iter_mut()
+                    .zip(bc)
+                    .enumerate()
+                    .map(|(j, (x, y))| f(x, y, bi * block + j))
+                    .collect::<Vec<T>>()
+            }));
+        }
+        for h in handles {
+            out.push(h.join().expect("parallel block panicked"));
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// Run `f` over two mutably zipped slices in parallel (e.g. each
+/// worker's logic applying the broadcast to its own replica).
+pub fn par_zip2_mut<A, B, F>(a: &mut [A], b: &mut [B], nthreads: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(&mut A, &mut B, usize) + Sync,
+{
+    let n = a.len();
+    assert_eq!(n, b.len(), "par_zip2_mut slices must be index-aligned");
+    let nthreads = nthreads.min(n).max(1);
+    if nthreads <= 1 {
+        for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+            f(x, y, i);
+        }
+        return;
+    }
+    let block = n.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for (bi, (ac, bc)) in a.chunks_mut(block).zip(b.chunks_mut(block)).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, (x, y)) in ac.iter_mut().zip(bc.iter_mut()).enumerate() {
+                    f(x, y, bi * block + j);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_sequential_for_any_thread_count() {
+        let b: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = (0..37).map(|i| i * 3 + i).collect();
+        for t in [1usize, 2, 3, 8, 64] {
+            let mut a: Vec<usize> = (0..37).map(|i| i * 3).collect();
+            let got = par_zip_map(&mut a, &b, t, |x, y, i| {
+                *x += y;
+                assert_eq!(*y, i, "index alignment");
+                *x
+            });
+            assert_eq!(got, expect, "nthreads={t}");
+        }
+    }
+
+    #[test]
+    fn par_zip2_mutates_both_sides() {
+        let mut a = vec![1i64; 10];
+        let mut b: Vec<i64> = (0..10).collect();
+        par_zip2_mut(&mut a, &mut b, 4, |x, y, i| {
+            *x += *y;
+            *y = i as i64 * 10;
+        });
+        assert_eq!(a, (0..10).map(|i| 1 + i).collect::<Vec<i64>>());
+        assert_eq!(b, (0..10).map(|i| i * 10).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut a: Vec<u8> = Vec::new();
+        let b: Vec<u8> = Vec::new();
+        let got: Vec<u8> = par_zip_map(&mut a, &b, 8, |x, _, _| *x);
+        assert!(got.is_empty());
+        let mut a = vec![5u8];
+        let got = par_zip_map(&mut a, &[2u8], 8, |x, y, _| *x + *y);
+        assert_eq!(got, vec![7]);
+    }
+
+    #[test]
+    fn auto_threads_gates_small_work() {
+        assert_eq!(auto_threads(10), 1);
+        assert!(auto_threads(PAR_MIN_ELEMS) >= 1);
+    }
+}

@@ -44,6 +44,94 @@ fn task_arc() -> Arc<dyn GradTask + Send + Sync> {
 }
 
 #[test]
+fn chunked_wire_is_bit_exact_and_payload_identical() {
+    // Acceptance contract of the chunked redesign: for the native
+    // families, any chunk_size yields parameters and a per-step payload
+    // byte history identical to the monolithic path. chunk_size 1 and 7
+    // exercise codec alignment (the sign family rounds both up to 40);
+    // D and D+3 collapse to the single-chunk plan.
+    let n = 4;
+    let hp = StrategyHyper::default();
+    for name in ["d-lion-mavo", "g-lion", "dgc"] {
+        let strat = by_name(name, &hp).unwrap();
+        let mono = run_sequential(&task(), strat.as_ref(), n, &cfg(25, Topology::Star));
+        for chunk_size in [1usize, 7, D, D + 3] {
+            let c = TrainConfig { chunk_size, ..cfg(25, Topology::Star) };
+            let res = run_sequential(&task(), strat.as_ref(), n, &c);
+            assert_eq!(
+                res.final_params, mono.final_params,
+                "{name}: chunk_size={chunk_size} changed the trajectory"
+            );
+            assert_eq!(res.total_uplink(), mono.total_uplink(), "{name} cs={chunk_size}");
+            assert_eq!(res.total_downlink(), mono.total_downlink(), "{name} cs={chunk_size}");
+            for (a, b) in mono.history.iter().zip(&res.history) {
+                assert_eq!(
+                    (a.uplink_bytes, a.downlink_bytes),
+                    (b.uplink_bytes, b.downlink_bytes),
+                    "{name} cs={chunk_size} step {}: per-step payload bytes moved",
+                    a.step
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_hierarchy_threaded_matches_sequential() {
+    // Chunked frames over a two-group tree, both drivers: params, the
+    // full per-hop byte history, and the transport counters must agree
+    // — and match the monolithic hierarchical run.
+    let n = 4;
+    let topo = Topology::Hierarchical { group_size: 2 };
+    let hp = StrategyHyper::default();
+    let strat = by_name("d-lion-mavo", &hp).unwrap();
+    let mono = run_sequential(&task(), strat.as_ref(), n, &cfg(30, topo));
+    let c = TrainConfig { chunk_size: 7, ..cfg(30, topo) };
+    let seq = run_sequential(&task(), strat.as_ref(), n, &c);
+    assert_eq!(seq.final_params, mono.final_params, "chunking changed the hier trajectory");
+    assert_eq!(seq.total_agg_uplink(), mono.total_agg_uplink(), "agg-hop payload moved");
+    assert_eq!(seq.total_agg_downlink(), mono.total_agg_downlink());
+    let (thr, stats) = run_threaded(task_arc(), strat.as_ref(), n, &c);
+    assert_eq!(seq.final_params, thr.final_params);
+    for (s, t) in seq.history.iter().zip(&thr.history) {
+        assert_eq!(
+            (s.uplink_bytes, s.downlink_bytes, s.agg_uplink_bytes, s.agg_downlink_bytes),
+            (t.uplink_bytes, t.downlink_bytes, t.agg_uplink_bytes, t.agg_downlink_bytes),
+            "step {}",
+            s.step
+        );
+    }
+    assert_eq!(stats.uplink(), seq.total_uplink());
+    assert_eq!(stats.downlink(), seq.total_downlink());
+    assert_eq!(stats.agg_uplink(), seq.total_agg_uplink());
+    // hierarchical message counts are observable end-to-end: 2 groups ×
+    // 30 sync rounds on each aggregator hop
+    assert_eq!(stats.agg_uplink_msg_count(), 60);
+    assert_eq!(stats.agg_downlink_msg_count(), 60);
+    assert_eq!(seq.total_agg_uplink_msgs(), 60);
+    assert_eq!(seq.total_agg_downlink_msgs(), 60);
+}
+
+#[test]
+fn every_strategy_trains_under_a_configured_chunk_size() {
+    // The full registry keeps working under any chunk_size: native
+    // families chunk, everything else collapses to a single-chunk plan.
+    // check_replicas (on in cfg()) pins the replicated-param invariant.
+    let n = 4;
+    let hp = StrategyHyper::default();
+    for &name in dlion::optim::dist::ALL_STRATEGIES
+        .iter()
+        .chain(dlion::optim::dist::EXTENSION_STRATEGIES.iter())
+    {
+        let strat = by_name(name, &hp).unwrap();
+        let c = TrainConfig { chunk_size: 5, ..cfg(12, Topology::Star) };
+        let res = run_sequential(&task(), strat.as_ref(), n, &c);
+        assert!(res.total_uplink() > 0, "{name}: no uplink bytes under chunking");
+        assert!(res.total_downlink() > 0, "{name}: no downlink bytes under chunking");
+    }
+}
+
+#[test]
 fn one_group_hierarchy_is_bitwise_flat_star() {
     let n = 4;
     let hp = StrategyHyper::default();

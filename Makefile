@@ -5,7 +5,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json topology clean
+.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json topology mixed clean
 
 ## tier-1 verify: what CI runs (ROADMAP.md)
 verify:
@@ -47,6 +47,11 @@ bench-json:
 ## quick pass over the topology × local-steps extension bench
 topology:
 	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench ext_topology -- --quick
+
+## quick pass over the mixed-wires extension bench (assignment ratios ×
+## chunk sizes × topologies + the per-link @cheap/@rich selector)
+mixed:
+	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench ext_mixed -- --quick
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

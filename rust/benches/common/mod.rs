@@ -26,7 +26,10 @@ pub fn table2_hparams(method: &str) -> (f64, StrategyHyper) {
             hp.weight_decay = 0.005;
             5e-4
         }
-        name if name.starts_with("bandwidth-aware") || name.starts_with("d-lion-local") => {
+        name if name.starts_with("bandwidth-aware")
+            || name.starts_with("d-lion-local")
+            || name.starts_with("mixed") =>
+        {
             hp.weight_decay = 0.005;
             5e-4
         }

@@ -1,0 +1,141 @@
+//! Extension — mixed wires: per-chunk arm-assignment ratios × chunk
+//! sizes × topologies, next to the per-link budget-driven selector.
+//!
+//! The paper's trade-off, made per parameter range: each chunk of the
+//! tag-15 envelope rides its own arm's native frames, so a
+//! `mixed(d-lion-mavo*r,g-lion)` round ships r/(r+1) of the model as
+//! 1-bit majority votes and the rest dense — on every hop (the
+//! agg→root link carries intavg vote partials next to tag-14 dense
+//! sums in the same round). The `@cheap/@rich` row lets the per-hop
+//! token bucket spend `hyper.link_budget` instead of a fixed ratio.
+//!
+//! Worker-edge columns are bits/param/step per worker (Table-1
+//! normalization); `agg up` is per group on the root link; `model` is
+//! the strategy's own weighted analytic rate (up + down), which the
+//! measured columns must track within frame-header slack whenever the
+//! cycle divides the chunk count; `pipe ms` projects one round of a
+//! 100M-param model over a 10 Gbit/s link with chunk-level up/down
+//! pipelining ([`dlion::comm::simnet::estimate_pipelined_costs`]).
+//!
+//! Run: `cargo bench --bench ext_mixed [-- --quick]`
+
+mod common;
+
+use dlion::bench_utils::Table;
+use dlion::cluster::run_sequential;
+use dlion::cluster::topology::Topology;
+use dlion::comm::simnet::{estimate_pipelined_costs, Link};
+use dlion::optim::dist::{by_name, MixedStrategy, StrategyHyper};
+use dlion::tasks::GradTask;
+
+fn mixed_ratio(r: usize) -> String {
+    if r == 1 {
+        "mixed(d-lion-mavo,g-lion)".to_string()
+    } else {
+        format!("mixed(d-lion-mavo*{r},g-lion)")
+    }
+}
+
+/// Pipelined one-round projection for a static ratio at scale: 100M
+/// params, 10 Gbit/s server NIC, chunked to the bench's chunk count.
+fn pipelined_ms(hp: &StrategyHyper, ratio: usize, nchunks: usize, n: usize) -> f64 {
+    let d = 100_000_000usize;
+    let arms = vec![
+        by_name("d-lion-mavo", hp).unwrap(),
+        by_name("g-lion", hp).unwrap(),
+    ];
+    let mixed = MixedStrategy::per_chunk(arms, vec![ratio, 1]).unwrap();
+    let costs = mixed.chunk_costs(d, d / nchunks, n);
+    estimate_pipelined_costs(&costs, n, Link::gbit(10.0)) * 1e3
+}
+
+fn main() {
+    let quick = dlion::bench_utils::quick_mode();
+    let k = 8; // workers
+    let steps = if quick { 120 } else { 800 };
+    // (strategy, chunk_size, topology): assignment ratios × chunk sizes
+    // × topologies, plus the plain arms as anchors and one per-link row
+    let mut cases: Vec<(String, usize, Topology)> = vec![
+        ("d-lion-mavo".into(), 200, Topology::Star),
+        ("g-lion".into(), 200, Topology::Star),
+    ];
+    let ratios: &[usize] = if quick { &[1, 7] } else { &[1, 3, 7] };
+    let chunk_sizes: &[usize] = if quick { &[200] } else { &[40, 200] };
+    for &r in ratios {
+        for &cs in chunk_sizes {
+            for topo in [Topology::Star, Topology::Hierarchical { group_size: 4 }] {
+                cases.push((mixed_ratio(r), cs, topo));
+            }
+        }
+    }
+    cases.push((
+        "mixed(d-lion-mavo@cheap,g-lion@rich)".into(),
+        200,
+        Topology::Hierarchical { group_size: 4 },
+    ));
+    let mut t = Table::new(
+        &format!("Extension — mixed wires (k={k} workers, {steps} steps)"),
+        &[
+            "method",
+            "chunk",
+            "topology",
+            "final acc",
+            "up b/p/step",
+            "down b/p/step",
+            "agg up b/p/step",
+            "model up+down",
+            "pipe ms@100M",
+        ],
+    );
+    for (method, chunk_size, topo) in &cases {
+        let (lr, mut hp) = common::table2_hparams(method);
+        hp.link_budget = 8.0; // the @cheap/@rich row's per-hop budget
+        let strategy = by_name(method, &hp).unwrap();
+        let task = common::vision_task(42);
+        let mut cfg = common::train_cfg(steps, 42);
+        cfg.base_lr = lr;
+        cfg.topology = *topo;
+        cfg.chunk_size = *chunk_size;
+        let d = task.dim();
+        let res = run_sequential(&task, strategy.as_ref(), k, &cfg);
+        let ngroups = match topo {
+            Topology::Star => 1,
+            Topology::Hierarchical { group_size } => k.div_ceil(*group_size),
+        };
+        let denom_worker = (d * k * res.history.len()) as f64;
+        let denom_group = (d * ngroups * res.history.len()) as f64;
+        let acc = res.final_eval.as_ref().unwrap().accuracy.unwrap_or(0.0);
+        let model =
+            strategy.uplink_bits_per_param(k) + strategy.downlink_bits_per_param(k);
+        // static ratio rows get a 64-chunk pipelined projection at
+        // 100M params; the anchors and the per-link row print '-'
+        let pipe = if *method == mixed_ratio(1) {
+            Some(pipelined_ms(&hp, 1, 64, k))
+        } else if let Some(rest) = method.strip_prefix("mixed(d-lion-mavo*") {
+            rest.split(',')
+                .next()
+                .and_then(|s| s.parse::<usize>().ok())
+                .map(|r| pipelined_ms(&hp, r, 64, k))
+        } else {
+            None
+        };
+        t.row(vec![
+            method.clone(),
+            chunk_size.to_string(),
+            topo.to_string(),
+            format!("{acc:.3}"),
+            format!("{:.3}", res.total_uplink() as f64 * 8.0 / denom_worker),
+            format!("{:.3}", res.total_downlink() as f64 * 8.0 / denom_worker),
+            format!("{:.3}", res.total_agg_uplink() as f64 * 8.0 / denom_group),
+            format!("{model:.3}"),
+            pipe.map_or("-".into(), |p| format!("{p:.2}")),
+        ]);
+        eprintln!("mixed: {method} cs={chunk_size} @ {topo} -> acc {acc:.3}");
+    }
+    t.print();
+    t.write_csv(common::out_dir().join("ext_mixed.csv")).unwrap();
+    println!("Checks: measured up/down track the weighted model (heads aside) when");
+    println!("the cycle divides the chunk count; hier rows pay vote partials + dense");
+    println!("sums on the agg link; the @cheap/@rich row's spend stays under");
+    println!("hyper.link_budget on both hops (pinned in tests/property_invariants.rs)");
+}

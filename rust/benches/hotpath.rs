@@ -109,6 +109,18 @@ fn chunked_round(d: usize, n: usize) {
         step2 += 1;
     });
     let speedup = base.median / chunked.median;
+    // mixed-wire path: the same engine round with a per-chunk arm
+    // assignment (7/8 sign-vote + 1/8 dense) — tracks the heterogeneous
+    // envelope's encode+aggregate throughput across PRs
+    let mstrat = by_name("mixed(d-lion-mavo*7,g-lion)", &hp).unwrap();
+    let mut workers3: Vec<_> = (0..n).map(|i| mstrat.make_worker(i, n, d)).collect();
+    let mut mengine = RoundEngine::new(mstrat.as_ref(), n, d, Topology::Star, chunk_size);
+    let mut step3 = 0usize;
+    let mixed = bench_auto(0.8, || {
+        let ups = mengine.encode_all(&mut workers3, &grads, 1e-3, step3);
+        black_box(mengine.aggregate(black_box(&ups), 1e-3, step3));
+        step3 += 1;
+    });
     let gbs = |m: f64| (4.0 * d as f64 * n as f64) / m / 1e9;
     t.row(vec![
         "monolithic (pre-redesign)".into(),
@@ -122,6 +134,12 @@ fn chunked_round(d: usize, n: usize) {
         format!("{:.2}", gbs(chunked.median)),
         format!("{speedup:.2}x"),
     ]);
+    t.row(vec![
+        "mixed(d-lion-mavo*7,g-lion) engine round".into(),
+        fmt_secs(mixed.median),
+        format!("{:.2}", gbs(mixed.median)),
+        format!("{:.2}x", base.median / mixed.median),
+    ]);
     t.print();
     t.write_csv(common::out_dir().join(format!("hotpath_chunked_d{d}_n{n}.csv"))).unwrap();
     // machine-readable perf trajectory (repo root, committed by `make bench-json` users)
@@ -129,11 +147,14 @@ fn chunked_round(d: usize, n: usize) {
         "{{\n  \"bench\": \"hotpath_chunked_round\",\n  \"strategy\": \"d-lion-mavo\",\n  \
          \"d\": {d},\n  \"n\": {n},\n  \"chunk_size\": {chunk_size},\n  \
          \"threads\": {},\n  \"monolithic_s\": {:.6},\n  \"chunked_s\": {:.6},\n  \
-         \"speedup\": {:.3}\n}}\n",
+         \"speedup\": {:.3},\n  \"mixed_strategy\": \"mixed(d-lion-mavo*7,g-lion)\",\n  \
+         \"mixed_s\": {:.6},\n  \"mixed_vs_monolithic\": {:.3}\n}}\n",
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
         base.median,
         chunked.median,
-        speedup
+        speedup,
+        mixed.median,
+        base.median / mixed.median
     );
     if d == 1_000_000 {
         // the acceptance point tracked across PRs

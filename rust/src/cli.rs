@@ -68,7 +68,8 @@ COMMANDS:
   bandwidth   print the Table-1 bandwidth matrix (--dim, --workers)
   strategies  list registered distributed strategies (core + extensions:
               d-lion-ef, d-lion-msync, d-lion-local(<H>),
-              bandwidth-aware(<cheap>,<rich>))
+              bandwidth-aware(<cheap>,<rich>),
+              mixed(<arm>[*<weight>], ...) / mixed(<a>@cheap,<b>@rich))
   lm          train the AOT transformer (--artifacts artifacts/,
               --strategy d-lion-mavo, --workers 4, --steps 200)
   help        this text
@@ -80,7 +81,10 @@ alias; hyper.chunk_size=<elems> splits every wire message into
 per-chunk frames for the native-chunked families (sign-vote, dense,
 sparse) — bit-exact and byte-identical to the whole-model path, with
 chunk-parallel encode/aggregate/apply on large models (0 = monolithic,
-the default).
+the default). mixed(...) assigns a different arm per chunk (weighted
+cycle) or per link (@cheap/@rich under hyper.link_budget, one token
+bucket per hop); weighted names carry commas, so pass them via a TOML
+strategies list (see configs/mixed.toml).
 ";
 
 /// Entry point used by main.rs (kept here so it is unit-testable).
@@ -371,6 +375,51 @@ mod tests {
         ))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn quick_train_runs_mixed_wires_from_a_config() {
+        // The mixed composite names carry commas, so they ship via a
+        // TOML strategies list; this drives the per-chunk and per-link
+        // forms end-to-end from the CLI surface (config + overrides),
+        // hierarchical + chunked.
+        let dir = std::env::temp_dir().join("dlion_mixed_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mixed.toml");
+        std::fs::write(
+            &path,
+            "task = \"quadratic\"\n\
+             strategies = [\"mixed(d-lion-mavo*3,g-lion)\", \"mixed(d-lion-mavo@cheap,g-lion@rich)\"]\n\
+             topology = \"hier:2\"\n\
+             [train]\nsteps = 8\neval_every = 0\n\
+             [hyper]\nchunk_size = 40\nlink_budget = 8.0\n\
+             [task]\ndim = 200\n",
+        )
+        .unwrap();
+        let code = run(&[
+            "train".into(),
+            "--config".into(),
+            path.to_str().unwrap().into(),
+            "workers=4".into(),
+            "seeds=1".into(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn malformed_mixed_name_surfaces_the_parse_error() {
+        // mixed() has no comma, so it survives the CLI strategies split
+        // and must reach the user as the parser's named failure.
+        let err = run(&argv(
+            "train task=quadratic strategies=mixed() workers=1 seeds=1 train.steps=2",
+        ))
+        .err()
+        .expect("empty mixed arm list must fail");
+        assert!(
+            err.to_string().contains("empty arm list"),
+            "error should name the empty arm list: {err}"
+        );
     }
 
     #[test]

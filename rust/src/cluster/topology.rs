@@ -140,9 +140,12 @@ pub struct HopBytes {
 ///
 /// The engine owns one `ServerLogic` instance **per chunk** (and per
 /// group aggregator under a hierarchical topology): each instance is
-/// built for its chunk's dimension via `make_server(n, chunk.len())`,
-/// so a chunk's aggregate is exactly a whole-model aggregate over a
-/// smaller model — which is what makes any chunking bit-exact. On
+/// built for its chunk's dimension via
+/// [`crate::optim::dist::Strategy::make_server_for_chunk`], so a
+/// chunk's aggregate is exactly a whole-model aggregate over a smaller
+/// model — which is what makes any chunking bit-exact — and a mixed
+/// per-chunk assignment resolves to per-(group, chunk, arm) servers
+/// with no engine-side special casing. On
 /// multi-chunk plans over large models, encode, aggregate, and apply
 /// all run chunk-/worker-parallel ([`crate::util::parallel`]); results
 /// are collected in index order so parallelism never changes a byte.
@@ -174,16 +177,24 @@ impl RoundEngine {
         let plan = strategy.plan(dim, chunk_size);
         let local_steps = strategy.local_steps().max(1);
         let groups = topology.groups(nworkers);
+        // per-(group, chunk) — and, through make_server_for_chunk, per-
+        // (group, chunk, arm): a mixed assignment routes each chunk to
+        // its arm's native server, and deterministic per-link schedules
+        // are seeded from the full cluster size so every instance
+        // replays the workers' selection exactly.
         let group_servers = match topology {
             Topology::Star => Vec::new(),
             Topology::Hierarchical { .. } => groups
                 .iter()
                 .map(|g| {
-                    plan.chunks().map(|c| strategy.make_server(g.len(), c.len())).collect()
+                    plan.chunks()
+                        .map(|c| strategy.make_server_for_chunk(g.len(), nworkers, c))
+                        .collect()
                 })
                 .collect(),
         };
-        let root = plan.chunks().map(|c| strategy.make_server(nworkers, c.len())).collect();
+        let root =
+            plan.chunks().map(|c| strategy.make_server_for_chunk(nworkers, nworkers, c)).collect();
         RoundEngine { plan, groups, group_servers, root, nworkers, local_steps }
     }
 

@@ -10,23 +10,97 @@
 //! is derived deterministically on both ends from `(dim, chunk_size)`,
 //! exactly like the codec payload shapes.
 //!
+//! Under a mixed per-chunk arm assignment
+//! ([`crate::optim::dist::mixed`]) the inner frames of one envelope may
+//! carry *different* codec tags — e.g. seven 1-bit sign chunks and one
+//! dense f32 chunk. The decoder does not care (each frame is
+//! self-describing); the payload accounting below does.
+//!
+//! ## Decode errors
+//!
+//! [`try_unpack`] names exactly what is malformed ([`ChunkedError`]):
+//! truncated headers or length prefixes, inner lengths that overrun the
+//! buffer, trailing bytes, empty inner frames, and inner tags outside
+//! the codec range 1–14 (envelopes do not nest). It never panics on any
+//! input. [`unpack`] is the `Option` convenience wrapper.
+//!
 //! ## Payload accounting
 //!
 //! The repo's byte counters exist to validate the paper's Table-1
 //! *communication volume* claims, so they count **codec payload
 //! volume**: [`payload_len`] charges a chunked message as if its chunks
-//! were spliced back into one monolithic frame — the outer envelope
+//! were spliced back into monolithic frames — the outer envelope
 //! (3-byte header + 4-byte length prefixes) and the per-chunk copies of
-//! the frame head (tag + fixed fields, see [`head_len`]) are excluded.
-//! Because native chunk plans are aligned to the codec's bit-packing
-//! period (`Chunking::Native { align }`), the chunk payloads concatenate
+//! each frame head (tag + fixed fields, see [`head_len`]) are excluded;
+//! one head is charged **per distinct inner tag**, because chunks that
+//! share a codec splice into one monolithic frame while chunks of
+//! different arms are separate frames however you cut them. Because
+//! native chunk plans are aligned to the codec's bit-packing period
+//! (`Chunking::Native { align }`), same-tag chunk payloads concatenate
 //! bit-exactly into the monolithic payload and this accounting is
-//! *chunking-invariant*: any `chunk_size` reports the same bytes as the
-//! whole-model path. For a non-chunked message `payload_len` is simply
-//! `msg.len()`, so all pre-existing accounting is unchanged.
+//! *chunking-invariant*: any `chunk_size` — and any per-chunk arm
+//! assignment with the same per-arm coverage — reports the same bytes
+//! as the whole-model path. For a non-chunked message `payload_len` is
+//! simply `msg.len()`, so all pre-existing accounting is unchanged.
+
+use std::fmt;
 
 /// First byte of a chunked multi-frame message.
 pub const TAG_CHUNKED: u8 = 15;
+
+/// Why a buffer failed to parse as chunked framing ([`try_unpack`]).
+/// Every variant names the offending chunk/byte so transport and test
+/// layers can surface the exact failure instead of a silent `None`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkedError {
+    /// The first byte is not [`TAG_CHUNKED`] (or the buffer is empty):
+    /// this is a monolithic frame, not an envelope.
+    NotChunked,
+    /// The buffer ends inside the 3-byte `[tag][count: u16]` header.
+    TruncatedHeader,
+    /// The buffer ends inside chunk `chunk`'s 4-byte length prefix.
+    TruncatedLength { chunk: usize },
+    /// Chunk `chunk` declares `need` payload bytes but only `have`
+    /// remain in the buffer.
+    Truncated { chunk: usize, need: usize, have: usize },
+    /// Chunk `chunk` is empty — every inner frame must carry a codec tag.
+    EmptyFrame { chunk: usize },
+    /// Chunk `chunk` leads with `tag`, which is not a codec frame tag
+    /// (1..=14; envelopes do not nest, so 15 is also rejected).
+    UnknownTag { chunk: usize, tag: u8 },
+    /// All `count` chunks parsed but `extra` trailing bytes remain.
+    TrailingBytes { extra: usize },
+}
+
+impl fmt::Display for ChunkedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ChunkedError::NotChunked => write!(f, "not a chunked message (tag != 15)"),
+            ChunkedError::TruncatedHeader => {
+                write!(f, "chunked message truncated inside the [tag][count] header")
+            }
+            ChunkedError::TruncatedLength { chunk } => {
+                write!(f, "chunked message truncated inside chunk {chunk}'s length prefix")
+            }
+            ChunkedError::Truncated { chunk, need, have } => write!(
+                f,
+                "chunk {chunk} declares {need} payload bytes but only {have} remain"
+            ),
+            ChunkedError::EmptyFrame { chunk } => {
+                write!(f, "chunk {chunk} is empty (inner frames must carry a codec tag)")
+            }
+            ChunkedError::UnknownTag { chunk, tag } => write!(
+                f,
+                "chunk {chunk} leads with unknown inner tag {tag} (codec tags are 1..=14)"
+            ),
+            ChunkedError::TrailingBytes { extra } => {
+                write!(f, "chunked message has {extra} trailing bytes after the last chunk")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ChunkedError {}
 
 /// Does this message carry the chunked outer framing?
 #[inline]
@@ -48,32 +122,50 @@ pub fn pack(frames: &[Vec<u8>]) -> Vec<u8> {
     msg
 }
 
-/// Unpack a chunked message into per-chunk frame views (no copies).
-/// Returns `None` if the message is not well-formed chunked framing.
-pub fn unpack(msg: &[u8]) -> Option<Vec<&[u8]>> {
-    if msg.len() < 3 || msg[0] != TAG_CHUNKED {
-        return None;
+/// Unpack a chunked message into per-chunk frame views (no copies),
+/// naming exactly what is malformed otherwise. Never panics.
+pub fn try_unpack(msg: &[u8]) -> Result<Vec<&[u8]>, ChunkedError> {
+    if msg.is_empty() || msg[0] != TAG_CHUNKED {
+        return Err(ChunkedError::NotChunked);
+    }
+    if msg.len() < 3 {
+        return Err(ChunkedError::TruncatedHeader);
     }
     let count = u16::from_le_bytes([msg[1], msg[2]]) as usize;
     let mut out = Vec::with_capacity(count);
     let mut off = 3usize;
-    for _ in 0..count {
+    for chunk in 0..count {
         if off + 4 > msg.len() {
-            return None;
+            return Err(ChunkedError::TruncatedLength { chunk });
         }
         let len =
             u32::from_le_bytes([msg[off], msg[off + 1], msg[off + 2], msg[off + 3]]) as usize;
         off += 4;
-        if off + len > msg.len() {
-            return None;
+        if len > msg.len() - off {
+            return Err(ChunkedError::Truncated { chunk, need: len, have: msg.len() - off });
         }
-        out.push(&msg[off..off + len]);
+        let frame = &msg[off..off + len];
+        match frame.first() {
+            None => return Err(ChunkedError::EmptyFrame { chunk }),
+            Some(&tag) if tag == 0 || tag >= TAG_CHUNKED => {
+                return Err(ChunkedError::UnknownTag { chunk, tag })
+            }
+            Some(_) => {}
+        }
+        out.push(frame);
         off += len;
     }
     if off != msg.len() {
-        return None;
+        return Err(ChunkedError::TrailingBytes { extra: msg.len() - off });
     }
-    Some(out)
+    Ok(out)
+}
+
+/// Unpack a chunked message into per-chunk frame views (no copies).
+/// Returns `None` if the message is not well-formed chunked framing;
+/// [`try_unpack`] names the failure.
+pub fn unpack(msg: &[u8]) -> Option<Vec<&[u8]>> {
+    try_unpack(msg).ok()
 }
 
 /// Fixed per-frame head bytes (tag + fixed-width fields that precede the
@@ -102,32 +194,30 @@ pub fn head_len(tag: u8) -> usize {
 }
 
 /// Logical (payload-accounting) length of a set of per-chunk frames:
-/// the length of the equivalent monolithic frame — one copy of the
-/// frame head plus the concatenated chunk payloads. A single frame is
-/// charged at face value.
+/// the length of the equivalent monolithic frames — one copy of each
+/// **distinct** frame head plus the concatenated chunk payloads. With a
+/// single arm every chunk shares one tag and this is the pre-mixed
+/// accounting (one head total); under a mixed per-chunk assignment each
+/// arm's chunks splice into that arm's monolithic frame, so each arm
+/// pays its head exactly once. A single frame is charged at face value;
+/// empty frames (never produced by the encoders) charge nothing.
 pub fn frames_payload_len<B: AsRef<[u8]>>(frames: &[B]) -> usize {
-    match frames {
-        [] => 0,
-        [only] => only.as_ref().len(),
-        [first, ..] => {
-            let first = first.as_ref();
-            if first.is_empty() {
-                return frames.iter().map(|f| f.as_ref().len()).sum();
-            }
-            let head = head_len(first[0]);
-            head + frames
-                .iter()
-                .map(|f| {
-                    let f = f.as_ref();
-                    if f.is_empty() {
-                        0
-                    } else {
-                        f.len().saturating_sub(head_len(f[0]))
-                    }
-                })
-                .sum::<usize>()
-        }
+    if frames.len() <= 1 {
+        return frames.first().map(|f| f.as_ref().len()).unwrap_or(0);
     }
+    let mut seen = [false; 256];
+    let mut total = 0usize;
+    for f in frames {
+        let f = f.as_ref();
+        let Some(&tag) = f.first() else { continue };
+        let head = head_len(tag);
+        if !seen[tag as usize] {
+            seen[tag as usize] = true;
+            total += head.min(f.len());
+        }
+        total += f.len().saturating_sub(head);
+    }
+    total
 }
 
 /// Logical (payload-accounting) length of a wire message: `msg.len()`
@@ -138,8 +228,8 @@ pub fn payload_len(msg: &[u8]) -> usize {
     if !is_chunked(msg) {
         return msg.len();
     }
-    match unpack(msg) {
-        Some(frames) if !frames.is_empty() => frames_payload_len(&frames),
+    match try_unpack(msg) {
+        Ok(frames) if !frames.is_empty() => frames_payload_len(&frames),
         _ => msg.len(),
     }
 }
@@ -175,6 +265,37 @@ mod tests {
     }
 
     #[test]
+    fn try_unpack_names_every_failure() {
+        assert_eq!(try_unpack(&[]), Err(ChunkedError::NotChunked));
+        assert_eq!(try_unpack(&[4u8, 1, 2]), Err(ChunkedError::NotChunked));
+        assert_eq!(try_unpack(&[TAG_CHUNKED]), Err(ChunkedError::TruncatedHeader));
+        assert_eq!(
+            try_unpack(&[TAG_CHUNKED, 1, 0, 5, 0]),
+            Err(ChunkedError::TruncatedLength { chunk: 0 })
+        );
+        assert_eq!(
+            try_unpack(&[TAG_CHUNKED, 1, 0, 9, 0, 0, 0, 1]),
+            Err(ChunkedError::Truncated { chunk: 0, need: 9, have: 1 })
+        );
+        let mut msg = pack(&[vec![1u8, 2]]);
+        msg.push(0);
+        assert_eq!(try_unpack(&msg), Err(ChunkedError::TrailingBytes { extra: 1 }));
+        // empty inner frame and non-codec inner tags are named too
+        assert_eq!(try_unpack(&pack(&[vec![]])), Err(ChunkedError::EmptyFrame { chunk: 0 }));
+        assert_eq!(
+            try_unpack(&pack(&[vec![1u8, 2], vec![TAG_CHUNKED, 0, 0]])),
+            Err(ChunkedError::UnknownTag { chunk: 1, tag: TAG_CHUNKED })
+        );
+        assert_eq!(
+            try_unpack(&pack(&[vec![0u8]])),
+            Err(ChunkedError::UnknownTag { chunk: 0, tag: 0 })
+        );
+        // the error text carries the specifics for the CLI/test layers
+        let err = try_unpack(&pack(&[vec![200u8, 1]])).unwrap_err();
+        assert!(err.to_string().contains("unknown inner tag 200"), "{err}");
+    }
+
+    #[test]
     fn payload_len_is_monolithic_equivalent() {
         // three sign chunks: heads de-duplicate to one tag byte
         let frames = vec![vec![1u8, 0x11, 0x22], vec![1u8, 0x33], vec![1u8, 0x44]];
@@ -185,6 +306,29 @@ mod tests {
         // intavg chunks repeat a 3-byte head
         let frames = vec![vec![3u8, 4, 0, 0xAA], vec![3u8, 4, 0, 0xBB, 0xCC]];
         assert_eq!(payload_len(&pack(&frames)), 3 + 3);
+    }
+
+    #[test]
+    fn payload_len_charges_one_head_per_distinct_tag() {
+        // a mixed-assignment envelope: two sign chunks + one dense chunk
+        // = the sign monolithic frame spliced (1 head + payloads) plus a
+        // separate dense frame (1 head + payload)
+        let frames = vec![
+            vec![1u8, 0xAA, 0xBB],
+            vec![4u8, 1, 2, 3, 4],
+            vec![1u8, 0xCC],
+        ];
+        assert_eq!(payload_len(&pack(&frames)), (1 + 3) + (1 + 4));
+        // interleaving does not change the charge (order-independent)
+        let frames = vec![
+            vec![4u8, 1, 2, 3, 4],
+            vec![1u8, 0xAA, 0xBB],
+            vec![1u8, 0xCC],
+        ];
+        assert_eq!(payload_len(&pack(&frames)), (1 + 3) + (1 + 4));
+        // sign + intavg mixes charge each head once
+        let frames = vec![vec![1u8, 0x11], vec![3u8, 4, 0, 0xAA], vec![3u8, 4, 0, 0xBB]];
+        assert_eq!(payload_len(&pack(&frames)), (1 + 1) + (3 + 2));
     }
 
     #[test]

@@ -92,6 +92,32 @@ pub fn estimate_pipelined(
     up_c + (nchunks - 1) as f64 * up_c.max(down_c) + down_c
 }
 
+/// [`estimate_pipelined`] generalized to heterogeneous per-chunk costs
+/// — the mixed-assignment projection. `chunks` holds each chunk's
+/// (uplink_bytes, downlink_bytes) per worker
+/// ([`crate::optim::dist::mixed::MixedStrategy::chunk_costs`] produces
+/// it); chunk i's downlink overlaps chunk i+1's uplink, so a cheap
+/// sign chunk hides under a dense neighbour's transfer:
+///
+/// ```text
+/// T = t_up(0) + Σ_{i≥1} max(t_up(i), t_down(i−1)) + t_down(k−1)
+/// t_dir(i) = latency + bytes_dir(i) · N / bw
+/// ```
+///
+/// With uniform per-chunk costs this reduces exactly to
+/// [`estimate_pipelined`]; a single chunk is the serial estimate.
+pub fn estimate_pipelined_costs(chunks: &[(f64, f64)], n: usize, link: Link) -> f64 {
+    if chunks.is_empty() {
+        return 0.0;
+    }
+    let t = |bytes: f64| link.latency_s + bytes * n as f64 / link.bandwidth_bps;
+    let mut total = t(chunks[0].0);
+    for i in 1..chunks.len() {
+        total += t(chunks[i].0).max(t(chunks[i - 1].1));
+    }
+    total + t(chunks[chunks.len() - 1].1)
+}
+
 /// Per-step communication time on a two-level hierarchy: workers reach
 /// their group aggregator over `edge`, aggregators exchange partial /
 /// broadcast frames with the root over `agg` (the ROADMAP's
@@ -184,6 +210,36 @@ mod tests {
         // ...but latency eventually wins: absurd chunk counts regress
         let k = 5_000_000;
         assert!(estimate_pipelined(s.as_ref(), d, n, link, k) > k64);
+    }
+
+    #[test]
+    fn pipelined_costs_generalize_the_uniform_estimate() {
+        let hp = StrategyHyper::default();
+        let s = by_name("g-lion", &hp).unwrap();
+        let link = Link::gbit(10.0);
+        let (d, n, k) = (10_000_000usize, 8, 16);
+        // uniform per-chunk costs reduce exactly to estimate_pipelined
+        let per_chunk = 32.0 * (d / k) as f64 / 8.0;
+        let chunks = vec![(per_chunk, per_chunk); k];
+        let uniform = estimate_pipelined_costs(&chunks, n, link);
+        let reference = estimate_pipelined(s.as_ref(), d, n, link, k);
+        assert!((uniform - reference).abs() < 1e-9, "{uniform} vs {reference}");
+        // a mixed 7/8-sign + 1/8-dense assignment moves fewer bytes than
+        // all-dense, so its pipelined projection must be strictly faster
+        let mixed = crate::optim::dist::MixedStrategy::per_chunk(
+            vec![by_name("d-lion-mavo", &hp).unwrap(), by_name("g-lion", &hp).unwrap()],
+            vec![7, 1],
+        )
+        .unwrap();
+        let costs = mixed.chunk_costs(d, d / 8, n);
+        assert_eq!(costs.len(), 8);
+        let t_mixed = estimate_pipelined_costs(&costs, n, link);
+        assert!(t_mixed < reference, "{t_mixed} vs all-dense {reference}");
+        // ...and slower than all-sign (the cheap floor)
+        let sign_chunks = vec![(1.0 * (d / 8) as f64 / 8.0, 1.0 * (d / 8) as f64 / 8.0); 8];
+        assert!(t_mixed > estimate_pipelined_costs(&sign_chunks, n, link));
+        // degenerate: no chunks, no time
+        assert_eq!(estimate_pipelined_costs(&[], n, link), 0.0);
     }
 
     #[test]

@@ -310,8 +310,12 @@ dim = 128
         // keep configs/*.toml honest: every listed strategy must resolve
         // (including the composite bandwidth-aware name, which exercises
         // the quote-aware TOML array splitting)
-        for path in ["../configs/fig2.toml", "../configs/lioncub.toml", "../configs/topology.toml"]
-        {
+        for path in [
+            "../configs/fig2.toml",
+            "../configs/lioncub.toml",
+            "../configs/topology.toml",
+            "../configs/mixed.toml",
+        ] {
             let exp = Experiment::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
             assert!(!exp.strategies.is_empty(), "{path}: empty strategies");
             for s in &exp.strategies {

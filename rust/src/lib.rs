@@ -44,6 +44,8 @@
 //! | `d-lion-msync`  | ext. (Lion Cub) | `sign`+bf16, 1 + 16/k   | as d-lion-mavo + 16/k         |
 //! | `d-lion-local(H)` | ext. (local steps) | `sign`, 1/H        | as d-lion-mavo ÷ H            |
 //! | `bandwidth-aware(a,b)` | ext. (Lion Cub) | wrapped frames    | budget-weighted mix           |
+//! | `mixed(a*w,b,…)` | ext. (mixed wires) | arms' frames per chunk | chunk-share weighted mix  |
+//! | `mixed(a@cheap,b@rich)` | ext. (mixed wires) | arm per round/link | per-hop budget mix     |
 //!
 //! ¹ with `StrategyHyper::compact_sparse`, the sparse uplinks switch to
 //! delta-varint indices at ≈40·keep bits/param.

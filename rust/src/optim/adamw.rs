@@ -19,15 +19,19 @@ impl AdamW {
 impl Optimizer for AdamW {
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
         debug_assert_eq!(params.len(), self.m.len());
+        self.begin_step();
         self.step_range(params, grads, lr, 0);
+    }
+
+    /// Bias correction advances per logical step, not per chunk — the
+    /// chunked caller announces the step boundary (its first owned
+    /// chunk, which under a mixed assignment may not sit at offset 0).
+    fn begin_step(&mut self) {
+        self.t += 1;
     }
 
     fn step_range(&mut self, params: &mut [f32], grads: &[f32], lr: f32, offset: usize) {
         debug_assert_eq!(params.len(), grads.len());
-        if offset == 0 {
-            // per-step scalar state advances once, on the first chunk
-            self.t += 1;
-        }
         let AdamWParams { beta1, beta2, eps, weight_decay } = self.hp;
         let bc1 = 1.0 - beta1.powi(self.t as i32);
         let bc2 = 1.0 - beta2.powi(self.t as i32);

@@ -256,6 +256,14 @@ impl Strategy for SparseTopK {
             Chunking::Native { align: 1 }
         }
     }
+
+    /// The top-k selection is whole-model and clears selected residual
+    /// mass regardless of which chunk ships it — only safe when one
+    /// worker logic covers every chunk (see
+    /// [`Strategy::chunk_local_encode`]).
+    fn chunk_local_encode(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

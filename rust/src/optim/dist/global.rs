@@ -83,11 +83,16 @@ impl WorkerLogic for GlobalWorker {
     }
 
     /// Ranged apply: decode the chunk's dense mean and advance the
-    /// replicated optimizer over just that slice
-    /// ([`crate::optim::Optimizer::step_range`] keeps per-step scalar
-    /// state — AdamW's bias-correction counter — exact across chunks).
+    /// replicated optimizer over just that slice. Per-step scalar state
+    /// (AdamW's bias-correction counter) advances on the first chunk
+    /// *this worker logic* serves each round — `chunk.index == 0` is
+    /// arm-local under a mixed per-chunk assignment, so a dense arm
+    /// that owns no range starting at offset 0 still counts its steps.
     fn apply_chunk(&mut self, params: &mut [f32], msg: &[u8], chunk: Chunk, lr: f32, _step: usize) {
         assert_eq!(msg[0], TAG_DENSE, "global strategies expect dense downlinks");
+        if chunk.index == 0 {
+            self.opt.begin_step();
+        }
         let len = chunk.len();
         dense::unpack_into(&msg[1..], &mut self.mean_grad[..len]);
         self.opt.step_range(&mut params[chunk.range()], &self.mean_grad[..len], lr, chunk.start);

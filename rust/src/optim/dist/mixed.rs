@@ -1,0 +1,1014 @@
+//! Mixed-wire strategy: a different registry arm per chunk and per
+//! link, over the tag-15 chunked wire surface.
+//!
+//! The paper's core claim is a performance-vs-bandwidth trade-off:
+//! binary D-Lion votes where bits are scarce, richer frames where they
+//! are not. The chunked wire API already lets every native family
+//! encode, aggregate, and apply one contiguous parameter range at a
+//! time — so heterogeneous wires need no format surgery, only a
+//! *selector* that assigns arms. [`MixedStrategy`] is that selector, in
+//! two modes sharing one registry syntax:
+//!
+//! * **Per-chunk (static)** — `mixed(<arm>[*<weight>], ...)`: the
+//!   [`super::ChunkPlan`] chunks are dealt to the arms in a weighted
+//!   cycle (weights `7,1` ⇒ chunks `0..7 → arm0`, chunk `7 → arm1`,
+//!   repeating). Chunk *i* is served by its arm on **every** hop: the
+//!   worker edge ships the arm's native frame, and under a hierarchical
+//!   topology the aggregator→root hop ships the arm's partial — so one
+//!   round's agg hop can carry `intavg` vote partials for seven chunks
+//!   and a dense f32 sum for the eighth.
+//! * **Per-link (dynamic)** — `mixed(<cheap>@cheap,<rich>@rich)`: the
+//!   token bucket of [`super::select`] decides per round whether the
+//!   rich arm serves, but with one bucket **per hop**, each accounting
+//!   its own traffic against [`super::StrategyHyper::link_budget`]: the
+//!   worker-edge bucket pays `uplink + downlink` bits/param per worker,
+//!   the aggregator bucket pays `partial + broadcast` bits/param per
+//!   group. A rich round fires only when *both* hops afford it, so
+//!   neither hop's long-run spend ever exceeds the budget (when the
+//!   budget affords that hop's cheap cost at all). Workers and every
+//!   server instance replay the identical schedule — a pure function of
+//!   the budget, the arms' analytic models, and the cluster size — so
+//!   no selection bit crosses the wire.
+//!
+//! Arms must communicate every step (`local_steps() == 1`) and have a
+//! native chunked wire format ([`super::Chunking::Native`]); the shared
+//! plan aligns to the lcm of the arms' codec alignments, so every arm's
+//! chunk payloads still splice bit-exactly into its monolithic frames
+//! and the payload-byte accounting stays chunking-invariant
+//! ([`crate::comm::chunked::frames_payload_len`] charges one frame head
+//! per distinct inner tag).
+//!
+//! ## Arm-local chunk views
+//!
+//! Each arm's [`super::WorkerLogic`] holds whole-model state but only
+//! ever sees the chunks it owns. The worker wrapper re-indexes each
+//! chunk to the arm's local ordinal (`index`/`count` become "k-th of my
+//! m chunks"; `start..end` stay global so state and frames keep real
+//! parameter coordinates). That is what makes round-start hooks fire
+//! per arm — a sparse arm runs its *global* top-k selection on its
+//! first owned chunk of the round, a dense arm advances AdamW's
+//! bias-correction counter there — and it is why `mixed(a,a)` is
+//! bit-exact and payload-byte-identical to plain `a`: with one arm the
+//! re-indexing is the identity. Classic-sparse arms (whole-model top-k
+//! whose selection clears residual mass wherever it lands —
+//! [`Strategy::chunk_local_encode`] is false) are only accepted when
+//! **all** arms are identical: `mixed(dgc,dgc)` ships every selected
+//! coordinate through some arm and stays exact, while a heterogeneous
+//! mix would silently destroy the mass selected in other arms' ranges,
+//! so the parser rejects it by name.
+//!
+//! ## Invariants (pinned in `tests/`)
+//!
+//! * `mixed(a,a)` ≡ plain `a`: parameters and per-hop payload bytes,
+//!   for any chunk size, topology, and driver (`topology_parity.rs`).
+//! * Measured bits/param on every hop match the weighted analytic
+//!   model when the cycle divides the chunk count
+//!   (`table1_regression.rs`).
+//! * The per-link selector never exceeds either hop's budget over a
+//!   long run, and worker/server schedule replicas stay bitwise in
+//!   sync (`property_invariants.rs`).
+
+use super::select::{BucketSchedule, AMORTIZE_HORIZON};
+use super::{Chunk, ChunkPlan, Chunking, ServerLogic, Strategy, StrategyHyper, WorkerLogic};
+use crate::error::{DlionError, Result};
+
+// ---------------------------------------------------------------------------
+// Chunk → arm assignment (static mode)
+// ---------------------------------------------------------------------------
+
+/// Deterministic weighted-cyclic map from chunk index to arm index:
+/// with weights `w_0..w_{k-1}` (cycle length `W = Σ w_j`), cycle
+/// position `p` belongs to the arm whose weight block contains `p` —
+/// e.g. weights `[7, 1]` give the "7/8 chunks cheap, 1/8 rich" split.
+/// Both ends of the wire derive it from the registry name alone.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    /// arm index per cycle position (length = Σ weights)
+    cycle: Vec<usize>,
+}
+
+impl Assignment {
+    /// Build from per-arm weights (all ≥ 1).
+    pub fn new(weights: &[usize]) -> Assignment {
+        debug_assert!(!weights.is_empty() && weights.iter().all(|&w| w >= 1));
+        let mut cycle = Vec::with_capacity(weights.iter().sum());
+        for (arm, &w) in weights.iter().enumerate() {
+            for _ in 0..w {
+                cycle.push(arm);
+            }
+        }
+        Assignment { cycle }
+    }
+
+    /// Cycle length `W = Σ weights`.
+    pub fn cycle_len(&self) -> usize {
+        self.cycle.len()
+    }
+
+    /// The arm serving chunk `chunk_index`.
+    pub fn arm(&self, chunk_index: usize) -> usize {
+        self.cycle[chunk_index % self.cycle.len()]
+    }
+
+    /// 0-based ordinal of `chunk_index` among the chunks its arm owns.
+    pub fn local_index(&self, chunk_index: usize) -> usize {
+        let w = self.cycle.len();
+        let arm = self.arm(chunk_index);
+        let per_cycle = self.cycle.iter().filter(|&&a| a == arm).count();
+        (chunk_index / w) * per_cycle
+            + self.cycle[..chunk_index % w].iter().filter(|&&a| a == arm).count()
+    }
+
+    /// Number of chunks `arm` owns in a `total_chunks`-chunk plan.
+    pub fn owned(&self, arm: usize, total_chunks: usize) -> usize {
+        let w = self.cycle.len();
+        let per_cycle = self.cycle.iter().filter(|&&a| a == arm).count();
+        (total_chunks / w) * per_cycle
+            + self.cycle[..total_chunks % w].iter().filter(|&&a| a == arm).count()
+    }
+
+    /// Model-level share of parameters `arm` serves (exact whenever the
+    /// cycle length divides the number of equal-size chunks; the
+    /// analytic bits/param formulas weight by this).
+    pub fn fraction(&self, arm: usize) -> f64 {
+        self.cycle.iter().filter(|&&a| a == arm).count() as f64 / self.cycle.len() as f64
+    }
+
+    /// Re-index `chunk` to its arm's local view: same global parameter
+    /// range, arm-local ordinal and count (so arms see their owned
+    /// chunks as a dense 0..m sequence and fire their per-round hooks
+    /// on local index 0).
+    fn rebase(&self, chunk: Chunk) -> Chunk {
+        Chunk {
+            index: self.local_index(chunk.index),
+            count: self.owned(self.arm(chunk.index), chunk.count).max(1),
+            ..chunk
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-link dual token bucket (dynamic mode)
+// ---------------------------------------------------------------------------
+
+/// Worker-edge round cost of an arm: uplink + downlink bits/param per
+/// worker (the same accounting [`super::select::BandwidthAware`] uses).
+fn edge_cost(s: &dyn Strategy, nworkers: usize) -> f64 {
+    s.uplink_bits_per_param(nworkers) + s.downlink_bits_per_param(nworkers)
+}
+
+/// Aggregator-hop round cost of an arm: one partial up + one broadcast
+/// down, bits/param per group. `partial_bits_per_param(nworkers)` is the
+/// full-cluster partial — an upper bound on any group's partial for the
+/// mixable families (⌈log₂(g+1)⌉ and 32-bit sums are monotone in g), so
+/// the bucket can be replayed from the cluster size alone and never
+/// under-prices the hop.
+fn agg_cost(s: &dyn Strategy, nworkers: usize) -> f64 {
+    s.partial_bits_per_param(nworkers) + s.downlink_bits_per_param(nworkers)
+}
+
+/// Two [`BucketSchedule`]s — one per hop — that fire the rich arm only
+/// when *both* hops afford it. Each hop accrues `budget − cheap_cost`
+/// net credit per round against its own `rich − cheap` surcharge, so
+/// the true-cap argument of [`super::select`] holds per hop: every rich
+/// surcharge is fully funded from that hop's banked credit.
+#[derive(Clone, Copy, Debug)]
+pub struct DualBucket {
+    edge: BucketSchedule,
+    agg: BucketSchedule,
+}
+
+impl DualBucket {
+    /// Build the schedule both ends replay: a pure function of the
+    /// budget, the two arms' analytic models, and the cluster size.
+    pub fn new(budget: f64, cheap: &dyn Strategy, rich: &dyn Strategy, nworkers: usize) -> Self {
+        DualBucket {
+            edge: BucketSchedule::new(budget, edge_cost(cheap, nworkers), edge_cost(rich, nworkers)),
+            agg: BucketSchedule::new(budget, agg_cost(cheap, nworkers), agg_cost(rich, nworkers)),
+        }
+    }
+
+    /// Advance one round; true when the rich arm serves it.
+    pub fn next(&mut self) -> bool {
+        self.edge.accrue();
+        self.agg.accrue();
+        let rich = self.edge.affords() && self.agg.affords();
+        self.edge.settle(rich);
+        self.agg.settle(rich);
+        rich
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The strategy
+// ---------------------------------------------------------------------------
+
+enum Mode {
+    /// chunk `i` → `arms[assign.arm(i)]`, fixed for the whole run
+    PerChunk { weights: Vec<usize>, assign: Assignment },
+    /// `arms[cheap]` / `arms[1 - cheap]` selected per round by the
+    /// per-hop dual bucket under `budget` bits/param/round
+    PerLink { cheap: usize, budget: f64 },
+}
+
+/// Mixed-wire meta-strategy (factory). Registry syntax:
+/// `mixed(<arm>[*<weight>], ...)` (per-chunk) or
+/// `mixed(<cheap>@cheap,<rich>@rich)` (per-link, budget-driven).
+pub struct MixedStrategy {
+    arms: Vec<Box<dyn Strategy>>,
+    mode: Mode,
+}
+
+/// An arm must be mixable: every-step cadence and a native chunked
+/// codec (monolithic wire formats cannot be assigned per chunk).
+fn validate_arm(s: &dyn Strategy) -> Result<()> {
+    if s.local_steps() != 1 {
+        return Err(DlionError::Config(format!(
+            "mixed arm '{}' must communicate every step: \
+             local-steps strategies cannot be mixed",
+            s.name()
+        )));
+    }
+    if !matches!(s.chunking(), Chunking::Native { .. }) {
+        return Err(DlionError::Config(format!(
+            "mixed arm '{}' has no native chunked wire format: \
+             monolithic strategies cannot be assigned per chunk",
+            s.name()
+        )));
+    }
+    Ok(())
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+impl MixedStrategy {
+    /// Static per-chunk assignment: `weights[j]` cycle slots per arm.
+    pub fn per_chunk(arms: Vec<Box<dyn Strategy>>, weights: Vec<usize>) -> Result<MixedStrategy> {
+        if arms.is_empty() {
+            return Err(DlionError::Config(
+                "mixed strategy has an empty arm list: name at least one registered arm".into(),
+            ));
+        }
+        if weights.len() != arms.len() || weights.iter().any(|&w| w == 0) {
+            return Err(DlionError::Config(
+                "mixed strategy needs one positive weight per arm".into(),
+            ));
+        }
+        for a in &arms {
+            validate_arm(a.as_ref())?;
+        }
+        // whole-model encoders (classic sparse top-k) destroy residual
+        // mass in ranges they do not ship; with identical arms every
+        // range ships through *some* arm (mixed(dgc,dgc) is bit-exact
+        // to plain dgc), but a heterogeneous assignment would leak it
+        let homogeneous = arms.windows(2).all(|w| w[0].name() == w[1].name());
+        if !homogeneous {
+            if let Some(a) = arms.iter().find(|a| !a.chunk_local_encode()) {
+                return Err(DlionError::Config(format!(
+                    "mixed arm '{}' selects whole-model (non-chunk-local) state and \
+                     can only be mixed with identical arms",
+                    a.name()
+                )));
+            }
+        }
+        let assign = Assignment::new(&weights);
+        Ok(MixedStrategy { arms, mode: Mode::PerChunk { weights, assign } })
+    }
+
+    /// Dynamic per-link selection under `budget` bits/param/round per
+    /// hop. `arms` keep the caller's order; `cheap` indexes into it.
+    pub fn per_link(
+        arms: Vec<Box<dyn Strategy>>,
+        cheap: usize,
+        budget: f64,
+    ) -> Result<MixedStrategy> {
+        if arms.len() != 2 || cheap > 1 {
+            return Err(DlionError::Config(
+                "per-link mixed needs exactly two arms (one @cheap, one @rich)".into(),
+            ));
+        }
+        for a in &arms {
+            validate_arm(a.as_ref())?;
+        }
+        Ok(MixedStrategy { arms, mode: Mode::PerLink { cheap, budget } })
+    }
+
+    fn cheap_rich(&self, cheap: usize) -> (&dyn Strategy, &dyn Strategy) {
+        (self.arms[cheap].as_ref(), self.arms[1 - cheap].as_ref())
+    }
+
+    /// The rich-round fraction the dual bucket settles into (what the
+    /// analytic bits/param model amortizes over).
+    fn rich_fraction(&self, nworkers: usize) -> f64 {
+        match self.mode {
+            Mode::PerChunk { .. } => 0.0,
+            Mode::PerLink { cheap, budget } => {
+                let (c, r) = self.cheap_rich(cheap);
+                let mut sched = DualBucket::new(budget, c, r, nworkers);
+                let rich = (0..AMORTIZE_HORIZON).filter(|_| sched.next()).count();
+                rich as f64 / AMORTIZE_HORIZON as f64
+            }
+        }
+    }
+
+    /// Blend a per-arm analytic rate into the mixed rate: weighted by
+    /// chunk share (static) or by the amortized rich fraction at
+    /// `nworkers` (dynamic).
+    fn blend(&self, nworkers: usize, rate: impl Fn(&dyn Strategy) -> f64) -> f64 {
+        match &self.mode {
+            Mode::PerChunk { assign, .. } => self
+                .arms
+                .iter()
+                .enumerate()
+                .map(|(j, a)| assign.fraction(j) * rate(a.as_ref()))
+                .sum(),
+            Mode::PerLink { cheap, .. } => {
+                let f = self.rich_fraction(nworkers);
+                let (c, r) = self.cheap_rich(*cheap);
+                f * rate(r) + (1.0 - f) * rate(c)
+            }
+        }
+    }
+
+    /// Per-chunk (uplink, downlink) payload bytes per worker per round
+    /// under this strategy's plan for `(dim, chunk_size)` — the
+    /// heterogeneous cost vector [`crate::comm::simnet`]'s pipelined
+    /// estimate consumes. Static assignments price each chunk at its
+    /// arm's rate; the per-link mode prices every chunk at the
+    /// amortized mix.
+    pub fn chunk_costs(&self, dim: usize, chunk_size: usize, nworkers: usize) -> Vec<(f64, f64)> {
+        let plan = self.plan(dim, chunk_size);
+        // the per-link mix is chunk-independent: amortize the schedule
+        // once, not once per chunk (it replays 10⁴ bucket rounds)
+        let link_mix = match &self.mode {
+            Mode::PerChunk { .. } => None,
+            Mode::PerLink { .. } => Some((
+                self.uplink_bits_per_param(nworkers),
+                self.downlink_bits_per_param(nworkers),
+            )),
+        };
+        plan.chunks()
+            .map(|c| {
+                let (up, down) = match &self.mode {
+                    Mode::PerChunk { assign, .. } => {
+                        let a = self.arms[assign.arm(c.index)].as_ref();
+                        (a.uplink_bits_per_param(nworkers), a.downlink_bits_per_param(nworkers))
+                    }
+                    Mode::PerLink { .. } => link_mix.expect("computed above"),
+                };
+                (up * c.len() as f64 / 8.0, down * c.len() as f64 / 8.0)
+            })
+            .collect()
+    }
+}
+
+impl Strategy for MixedStrategy {
+    fn name(&self) -> String {
+        let arms: Vec<String> = match &self.mode {
+            Mode::PerChunk { weights, .. } => self
+                .arms
+                .iter()
+                .zip(weights)
+                .map(|(a, &w)| if w == 1 { a.name() } else { format!("{}*{w}", a.name()) })
+                .collect(),
+            Mode::PerLink { cheap, .. } => self
+                .arms
+                .iter()
+                .enumerate()
+                .map(|(j, a)| {
+                    format!("{}@{}", a.name(), if j == *cheap { "cheap" } else { "rich" })
+                })
+                .collect(),
+        };
+        format!("mixed({})", arms.join(","))
+    }
+
+    fn make_worker(&self, worker: usize, nworkers: usize, dim: usize) -> Box<dyn WorkerLogic> {
+        match &self.mode {
+            Mode::PerChunk { assign, .. } => Box::new(MixedChunkWorker {
+                arms: self.arms.iter().map(|a| a.make_worker(worker, nworkers, dim)).collect(),
+                assign: assign.clone(),
+            }),
+            Mode::PerLink { cheap, budget } => {
+                let (c, r) = self.cheap_rich(*cheap);
+                Box::new(MixedLinkWorker {
+                    cheap: c.make_worker(worker, nworkers, dim),
+                    rich: r.make_worker(worker, nworkers, dim),
+                    sched: DualBucket::new(*budget, c, r, nworkers),
+                    rich_now: false,
+                })
+            }
+        }
+    }
+
+    fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic> {
+        self.make_server_for_chunk(nworkers, nworkers, Chunk::whole(dim))
+    }
+
+    /// The per-(chunk, arm) routing point: each chunk's server is its
+    /// arm's native server, built for the chunk's dimension — so the
+    /// round engine's per-(group, chunk) instances become
+    /// per-(group, chunk, arm) with no engine-side special casing. The
+    /// per-link mode wraps both arms' servers behind the replayed
+    /// schedule, seeded from `cluster_workers` (a group aggregator
+    /// folds `nworkers < cluster_workers` uplinks but must pick the
+    /// same arm as every worker and the root).
+    fn make_server_for_chunk(
+        &self,
+        nworkers: usize,
+        cluster_workers: usize,
+        chunk: Chunk,
+    ) -> Box<dyn ServerLogic> {
+        match &self.mode {
+            Mode::PerChunk { assign, .. } => {
+                self.arms[assign.arm(chunk.index)].make_server(nworkers, chunk.len())
+            }
+            Mode::PerLink { cheap, budget } => {
+                let (c, r) = self.cheap_rich(*cheap);
+                Box::new(MixedLinkServer {
+                    cheap: c.make_server(nworkers, chunk.len()),
+                    rich: r.make_server(nworkers, chunk.len()),
+                    sched: DualBucket::new(*budget, c, r, cluster_workers),
+                })
+            }
+        }
+    }
+
+    fn uplink_bits_per_param(&self, nworkers: usize) -> f64 {
+        self.blend(nworkers, |a| a.uplink_bits_per_param(nworkers))
+    }
+
+    fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
+        self.blend(nworkers, |a| a.downlink_bits_per_param(nworkers))
+    }
+
+    /// Aggregator→root hop: each chunk ships its arm's partial, so the
+    /// hop rate is the same blend over the arms' partial models.
+    ///
+    /// Caveat (per-link mode only): the trait signature exposes the
+    /// group size but not the cluster size, so the rich-round fraction
+    /// here is amortized at `group_size` while the *runtime* schedule
+    /// is seeded from the cluster size — the two can differ when the
+    /// arms' cost models differ between those worker counts (e.g. the
+    /// even-/odd-N majority-vote downlink). Treat the per-link partial
+    /// model as an approximation; the static blend is exact.
+    fn partial_bits_per_param(&self, group_size: usize) -> f64 {
+        self.blend(group_size, |a| a.partial_bits_per_param(group_size))
+    }
+
+    /// The whole-model default is re-pointed for multi-arm static
+    /// assignments: `chunk_size == 0` partitions the model into exactly
+    /// one weight cycle (`Σ weights` chunks) instead of collapsing to a
+    /// single chunk — a single-chunk plan would silently route the
+    /// entire model to arm 0 while the analytic models still reported
+    /// the weighted blend. Explicit chunk sizes (and the per-link mode,
+    /// whose arms serve whole rounds anyway) keep the standard
+    /// [`ChunkPlan::new`] behavior; a model smaller than one aligned
+    /// chunk still degenerates honestly.
+    fn plan(&self, dim: usize, chunk_size: usize) -> ChunkPlan {
+        let align = match self.chunking() {
+            Chunking::Native { align } => align,
+            Chunking::Monolithic => return ChunkPlan::single(dim),
+        };
+        let chunk_size = match &self.mode {
+            Mode::PerChunk { assign, .. } if chunk_size == 0 && assign.cycle_len() > 1 => {
+                // round the per-slot size DOWN to the alignment: rounding
+                // up could shrink the chunk count below the cycle length
+                // and starve the tail arms. Whenever dim ≥ cycle · align,
+                // every cycle slot (hence every arm) serves at least one
+                // chunk; below that the leading slots win — the honest
+                // degenerate for models smaller than one aligned cycle.
+                (dim / assign.cycle_len() / align * align).max(align)
+            }
+            _ => chunk_size,
+        };
+        ChunkPlan::new(dim, chunk_size, align)
+    }
+
+    /// The shared plan aligns to the lcm of the arms' codec alignments,
+    /// so every arm's chunks splice bit-exactly into its own monolithic
+    /// payload.
+    fn chunking(&self) -> Chunking {
+        let mut align = 1usize;
+        for a in &self.arms {
+            match a.chunking() {
+                Chunking::Native { align: x } => align = lcm(align, x),
+                // unreachable after constructor validation; collapsing
+                // to a single-chunk plan is the safe fallback
+                Chunking::Monolithic => return Chunking::Monolithic,
+            }
+        }
+        Chunking::Native { align }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker / server wrappers
+// ---------------------------------------------------------------------------
+
+/// Static mode: route each chunk to its arm's worker logic, re-indexed
+/// to the arm-local view.
+struct MixedChunkWorker {
+    arms: Vec<Box<dyn WorkerLogic>>,
+    assign: Assignment,
+}
+
+impl WorkerLogic for MixedChunkWorker {
+    fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8> {
+        // single-chunk plan: the whole model is chunk 0's arm
+        self.arms[self.assign.arm(0)].encode(grads, lr, step)
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize) {
+        self.arms[self.assign.arm(0)].apply(params, downlink, lr, step);
+    }
+
+    fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        let arm = self.assign.arm(chunk.index);
+        let local = self.assign.rebase(chunk);
+        self.arms[arm].encode_chunk(grads, local, lr, step)
+    }
+
+    fn apply_chunk(&mut self, params: &mut [f32], frame: &[u8], chunk: Chunk, lr: f32, step: usize) {
+        let arm = self.assign.arm(chunk.index);
+        let local = self.assign.rebase(chunk);
+        self.arms[arm].apply_chunk(params, frame, local, lr, step);
+    }
+}
+
+/// Dynamic mode: advance the dual bucket once per round (on the first
+/// chunk of the encode half) and hand the whole round to the chosen arm.
+struct MixedLinkWorker {
+    cheap: Box<dyn WorkerLogic>,
+    rich: Box<dyn WorkerLogic>,
+    sched: DualBucket,
+    rich_now: bool,
+}
+
+impl MixedLinkWorker {
+    fn current(&mut self) -> &mut dyn WorkerLogic {
+        if self.rich_now {
+            self.rich.as_mut()
+        } else {
+            self.cheap.as_mut()
+        }
+    }
+}
+
+impl WorkerLogic for MixedLinkWorker {
+    fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8> {
+        self.rich_now = self.sched.next();
+        self.current().encode(grads, lr, step)
+    }
+
+    fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize) {
+        self.current().apply(params, downlink, lr, step);
+    }
+
+    fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        if chunk.index == 0 {
+            self.rich_now = self.sched.next();
+        }
+        self.current().encode_chunk(grads, chunk, lr, step)
+    }
+
+    fn apply_chunk(&mut self, params: &mut [f32], frame: &[u8], chunk: Chunk, lr: f32, step: usize) {
+        self.current().apply_chunk(params, frame, chunk, lr, step);
+    }
+}
+
+/// Dynamic mode, server side: every engine instance (root or group
+/// aggregator, per chunk) holds both arms' servers plus its own replica
+/// of the schedule, advanced exactly once per round — each instance
+/// receives exactly one aggregate/partial/fold(-chunk) call per wire
+/// round, so all replicas stay in lockstep with the workers.
+struct MixedLinkServer {
+    cheap: Box<dyn ServerLogic>,
+    rich: Box<dyn ServerLogic>,
+    sched: DualBucket,
+}
+
+impl MixedLinkServer {
+    fn pick(&mut self) -> &mut dyn ServerLogic {
+        if self.sched.next() {
+            self.rich.as_mut()
+        } else {
+            self.cheap.as_mut()
+        }
+    }
+}
+
+impl ServerLogic for MixedLinkServer {
+    fn aggregate(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8> {
+        self.pick().aggregate(uplinks, lr, step)
+    }
+
+    fn partial(&mut self, uplinks: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8> {
+        self.pick().partial(uplinks, lr, step)
+    }
+
+    fn fold(&mut self, partials: &[Vec<u8>], lr: f32, step: usize) -> Vec<u8> {
+        self.pick().fold(partials, lr, step)
+    }
+
+    fn aggregate_chunk(&mut self, uplinks: &[&[u8]], chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        self.pick().aggregate_chunk(uplinks, chunk, lr, step)
+    }
+
+    fn partial_chunk(&mut self, uplinks: &[&[u8]], chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        self.pick().partial_chunk(uplinks, chunk, lr, step)
+    }
+
+    fn fold_chunk(&mut self, partials: &[&[u8]], chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        self.pick().fold_chunk(partials, chunk, lr, step)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry parsing
+// ---------------------------------------------------------------------------
+
+/// Parse the `mixed(...)` registry syntax. `name` is the full composite
+/// name (for error messages); `rest` is everything after the `mixed`
+/// prefix. Every failure names exactly what is malformed.
+pub(crate) fn parse(name: &str, rest: &str, hp: &StrategyHyper) -> Result<Box<dyn Strategy>> {
+    let malformed = || {
+        DlionError::Config(format!(
+            "malformed mixed strategy '{name}': expected \
+             mixed(<arm>[*<weight>], ...) or mixed(<cheap>@cheap,<rich>@rich)"
+        ))
+    };
+    let inner = rest
+        .strip_prefix('(')
+        .and_then(|r| r.strip_suffix(')'))
+        .ok_or_else(malformed)?;
+    if inner.trim().is_empty() {
+        return Err(DlionError::Config(format!(
+            "mixed strategy '{name}' has an empty arm list: \
+             name at least one registered arm"
+        )));
+    }
+    // split on top-level commas only, so an arm like d-lion-local(2) —
+    // or a (rejected) nested composite — reaches its own named error
+    // instead of being mangled mid-parens
+    let mut tokens: Vec<&str> = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                tokens.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    tokens.push(&inner[start..]);
+
+    enum Role {
+        Cheap,
+        Rich,
+    }
+    let mut arms: Vec<Box<dyn Strategy>> = Vec::new();
+    let mut weights: Vec<usize> = Vec::new();
+    let mut roles: Vec<Option<Role>> = Vec::new();
+    for tok in tokens {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            return Err(DlionError::Config(format!(
+                "mixed strategy '{name}' has an empty arm \
+                 (trailing or doubled comma)"
+            )));
+        }
+        let (tok, role) = if let Some(t) = tok.strip_suffix("@cheap") {
+            (t.trim(), Some(Role::Cheap))
+        } else if let Some(t) = tok.strip_suffix("@rich") {
+            (t.trim(), Some(Role::Rich))
+        } else {
+            (tok, None)
+        };
+        let (arm_name, weight) = match tok.rsplit_once('*') {
+            Some((a, w)) => {
+                let w: usize = w.trim().parse().map_err(|_| {
+                    DlionError::Config(format!(
+                        "arm weight in '{name}' must be a positive integer, got '{w}'"
+                    ))
+                })?;
+                if w == 0 {
+                    return Err(DlionError::Config(format!(
+                        "arm weight in '{name}' must be a positive integer, got '0'"
+                    )));
+                }
+                (a.trim(), w)
+            }
+            None => (tok, 1),
+        };
+        // one level of composition only: nested selectors' names carry
+        // their own commas and could never round-trip through this parser
+        if arm_name.starts_with("mixed") || arm_name.starts_with("bandwidth-aware") {
+            return Err(DlionError::Config(format!(
+                "mixed arms cannot be composite in '{name}': \
+                 selectors nest one level only"
+            )));
+        }
+        arms.push(super::by_name(arm_name, hp)?);
+        weights.push(weight);
+        roles.push(role);
+    }
+
+    let tagged = roles.iter().filter(|r| r.is_some()).count();
+    if tagged == 0 {
+        return Ok(Box::new(MixedStrategy::per_chunk(arms, weights)?));
+    }
+    // per-link mode: exactly one @cheap and one @rich, weights default
+    if arms.len() != 2 || tagged != 2 {
+        return Err(DlionError::Config(format!(
+            "per-link mixed strategy '{name}' needs exactly two role-tagged arms: \
+             one @cheap and one @rich"
+        )));
+    }
+    if weights.iter().any(|&w| w != 1) {
+        return Err(DlionError::Config(format!(
+            "role-tagged arms cannot carry weights in '{name}': \
+             the link budget, not a chunk ratio, drives per-link selection"
+        )));
+    }
+    let cheap = match (&roles[0], &roles[1]) {
+        (Some(Role::Cheap), Some(Role::Rich)) => 0,
+        (Some(Role::Rich), Some(Role::Cheap)) => 1,
+        _ => {
+            return Err(DlionError::Config(format!(
+                "per-link mixed strategy '{name}' needs exactly two role-tagged arms: \
+                 one @cheap and one @rich"
+            )))
+        }
+    };
+    Ok(Box::new(MixedStrategy::per_link(arms, cheap, hp.link_budget as f64)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{by_name, StrategyHyper};
+    use super::*;
+
+    #[test]
+    fn assignment_geometry() {
+        // weights [7, 1]: cycle 0..7 → arm0, 7 → arm1
+        let a = Assignment::new(&[7, 1]);
+        assert_eq!(a.cycle_len(), 8);
+        assert_eq!(a.arm(0), 0);
+        assert_eq!(a.arm(6), 0);
+        assert_eq!(a.arm(7), 1);
+        assert_eq!(a.arm(15), 1);
+        assert_eq!(a.local_index(7), 0);
+        assert_eq!(a.local_index(15), 1);
+        assert_eq!(a.local_index(8), 7, "second cycle resumes arm0's ordinals");
+        assert_eq!(a.owned(0, 16), 14);
+        assert_eq!(a.owned(1, 16), 2);
+        assert_eq!(a.owned(1, 7), 0, "short plans may starve late arms");
+        assert!((a.fraction(0) - 0.875).abs() < 1e-12);
+        // rebase: global range kept, ordinal/count arm-local
+        let c = Chunk { index: 7, count: 16, start: 280, end: 320 };
+        let r = a.rebase(c);
+        assert_eq!((r.index, r.count, r.start, r.end), (0, 2, 280, 320));
+        // one-arm assignment: rebase is the identity (the mixed(a,a)
+        // parity contract rides on this)
+        let id = Assignment::new(&[1]);
+        for i in 0..5 {
+            let c = Chunk { index: i, count: 5, start: 10 * i, end: 10 * (i + 1) };
+            assert_eq!(id.rebase(c), c);
+        }
+        // interleaved [1, 1]: arm0 evens, arm1 odds
+        let ab = Assignment::new(&[1, 1]);
+        assert_eq!(ab.local_index(4), 2);
+        assert_eq!(ab.local_index(5), 2);
+    }
+
+    #[test]
+    fn parse_round_trips_names() {
+        let hp = StrategyHyper::default();
+        for name in [
+            "mixed(d-lion-mavo,g-lion)",
+            "mixed(d-lion-mavo*7,g-lion)",
+            "mixed(g-lion,d-signum-mavo,d-lion-avg)",
+            "mixed(dgc,dgc)",
+            "mixed(d-lion-mavo@cheap,g-lion@rich)",
+            "mixed(g-lion@rich,d-lion-mavo@cheap)",
+        ] {
+            let s = by_name(name, &hp).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(s.name(), name, "name must round-trip");
+            let again = by_name(&s.name(), &hp).unwrap();
+            assert_eq!(again.name(), name);
+        }
+    }
+
+    #[test]
+    fn weighted_model_is_the_chunk_share_blend() {
+        let hp = StrategyHyper::default();
+        let s = by_name("mixed(d-lion-mavo*7,g-lion)", &hp).unwrap();
+        let n = 3; // odd: mavo downlink 1 bit
+        assert!((s.uplink_bits_per_param(n) - (7.0 + 32.0) / 8.0).abs() < 1e-12);
+        assert!((s.downlink_bits_per_param(n) - (7.0 + 32.0) / 8.0).abs() < 1e-12);
+        // agg hop: 7/8 vote partials (⌈log2(g+1)⌉) + 1/8 dense sums
+        let g = 2;
+        assert!((s.partial_bits_per_param(g) - (7.0 * 2.0 + 32.0) / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_alignment_is_the_arm_lcm() {
+        let hp = StrategyHyper::default();
+        let s = by_name("mixed(d-lion-mavo,g-lion)", &hp).unwrap();
+        assert_eq!(s.chunking(), Chunking::Native { align: 40 });
+        let s = by_name("mixed(dgc,dgc)", &hp).unwrap();
+        assert_eq!(s.chunking(), Chunking::Native { align: 1 });
+        // the shared plan rounds chunk sizes to the mixed alignment
+        let s = by_name("mixed(d-lion-mavo,g-lion)", &hp).unwrap();
+        let plan = s.plan(96, 7);
+        assert_eq!(plan.num_chunks(), 3);
+        assert_eq!(plan.chunk(0).range(), 0..40);
+    }
+
+    #[test]
+    fn default_chunk_size_partitions_one_weight_cycle() {
+        // chunk_size 0 (the config default) on a multi-arm static
+        // assignment must not collapse to a single chunk — that would
+        // silently route the whole model to arm 0 while the analytic
+        // models still reported the weighted blend. One weight cycle is
+        // the smallest plan on which the named mix is exact.
+        let hp = StrategyHyper::default();
+        let s = by_name("mixed(d-lion-mavo*7,g-lion)", &hp).unwrap();
+        let plan = s.plan(3200, 0);
+        assert_eq!(plan.num_chunks(), 8, "one chunk per cycle slot");
+        assert_eq!(plan.chunk(0).len(), 400);
+        // explicit chunk sizes are untouched
+        assert_eq!(s.plan(3200, 400).num_chunks(), 8);
+        // the per-slot size rounds DOWN to the alignment, so every arm
+        // still serves whenever the model fits one full aligned cycle
+        // (rounding up would drop the chunk count below the cycle and
+        // starve the tail arms — dim 400 must not become 40-chunk-less)
+        let plan = s.plan(400, 0);
+        assert_eq!(plan.num_chunks(), 10);
+        assert_eq!(plan.chunk(7).len(), 40, "the g-lion slot serves");
+        // below one aligned cycle (dim < 8·40) the leading slots win
+        assert_eq!(s.plan(240, 0).num_chunks(), 6, "honest degenerate");
+        // a model smaller than one aligned chunk still degenerates
+        assert!(s.plan(30, 0).is_single());
+        // the per-link mode keeps the monolithic default (its arms
+        // serve whole rounds regardless of chunking)
+        let s = by_name("mixed(d-lion-mavo@cheap,g-lion@rich)", &hp).unwrap();
+        assert!(s.plan(3200, 0).is_single());
+        // same-arm mixes split too — harmless by chunking invariance
+        let s = by_name("mixed(g-lion,g-lion)", &hp).unwrap();
+        assert_eq!(s.plan(100, 0).num_chunks(), 2);
+    }
+
+    #[test]
+    fn dual_bucket_fires_only_when_both_hops_afford() {
+        let hp = StrategyHyper::default();
+        let cheap = by_name("d-lion-mavo", &hp).unwrap();
+        let rich = by_name("g-lion", &hp).unwrap();
+        let n = 3; // edge cheap 2, rich 64; agg cheap 2+1=3, rich 64
+        // a budget that affords the edge alternation (33 = (2+64)/2)
+        // but sits below the agg-hop average ((3+64)/2 = 33.5) fires
+        // strictly less often than the edge bucket alone would
+        let mut dual = DualBucket::new(33.0, cheap.as_ref(), rich.as_ref(), n);
+        let mut edge_only = BucketSchedule::new(33.0, 2.0, 64.0);
+        let rounds = 1000;
+        let dual_fired = (0..rounds).filter(|_| dual.next()).count();
+        let edge_fired = (0..rounds).filter(|_| edge_only.next()).count();
+        assert!(dual_fired < edge_fired, "{dual_fired} vs {edge_fired}");
+        assert!(dual_fired > 0, "a feasible budget must fire sometimes");
+        // generous budget: both hops afford every round
+        let mut dual = DualBucket::new(128.0, cheap.as_ref(), rich.as_ref(), n);
+        assert!((0..32).all(|_| dual.next()));
+        // infeasible budget: never
+        let mut dual = DualBucket::new(1.0, cheap.as_ref(), rich.as_ref(), n);
+        assert!((0..128).all(|_| !dual.next()));
+    }
+
+    #[test]
+    fn per_link_model_respects_the_budget() {
+        let n = 3;
+        for budget in [3.0f32, 10.0, 33.0, 50.0, 100.0] {
+            let hp = StrategyHyper { link_budget: budget, ..Default::default() };
+            let s = by_name("mixed(d-lion-mavo@cheap,g-lion@rich)", &hp).unwrap();
+            let edge = s.uplink_bits_per_param(n) + s.downlink_bits_per_param(n);
+            let cap = (budget as f64).max(2.0); // cheap edge floor
+            assert!(edge <= cap + 1e-9, "budget {budget}: edge model {edge:.3}");
+            assert!(edge >= 2.0 - 1e-9);
+        }
+        // at/above the rich cost the model is pure rich
+        let hp = StrategyHyper { link_budget: 128.0, ..Default::default() };
+        let s = by_name("mixed(d-lion-mavo@cheap,g-lion@rich)", &hp).unwrap();
+        assert_eq!(s.uplink_bits_per_param(n), 32.0);
+    }
+
+    #[test]
+    fn chunk_costs_price_each_chunk_at_its_arm() {
+        let hp = StrategyHyper::default();
+        let arms = vec![by_name("d-lion-mavo", &hp).unwrap(), by_name("g-lion", &hp).unwrap()];
+        let s = MixedStrategy::per_chunk(arms, vec![7, 1]).unwrap();
+        let costs = s.chunk_costs(320, 40, 3);
+        assert_eq!(costs.len(), 8);
+        for c in &costs[..7] {
+            assert!((c.0 - 40.0 / 8.0).abs() < 1e-9, "sign chunks are 1 bit/param");
+        }
+        assert!((costs[7].0 - 40.0 * 4.0).abs() < 1e-9, "dense chunk is 32 bits/param");
+    }
+
+    #[test]
+    fn parse_failures_are_named() {
+        let hp = StrategyHyper::default();
+        let msg = |name: &str| by_name(name, &hp).err().expect(name).to_string();
+        assert!(msg("mixed").contains("mixed(<arm>"), "bare name: {}", msg("mixed"));
+        assert!(msg("mixed(d-lion-mavo").contains("mixed(<arm>"));
+        assert!(msg("mixed()").contains("empty arm list"));
+        assert!(msg("mixed( )").contains("empty arm list"));
+        assert!(msg("mixed(d-lion-mavo,)").contains("empty arm"));
+        assert!(msg("mixed(d-lion-mavo,,g-lion)").contains("empty arm"));
+        assert!(msg("mixed(mixed(d-lion-mavo,g-lion),dgc)").contains("one level only"));
+        assert!(msg("mixed(bandwidth-aware(d-lion-mavo,g-lion),dgc)").contains("one level only"));
+        assert!(msg("mixed(d-lion-local(2),g-lion)").contains("every step"));
+        assert!(msg("mixed(terngrad,g-lion)").contains("native chunked"));
+        // classic sparse selects whole-model top-k: heterogeneous mixes
+        // would destroy residual mass in other arms' ranges
+        assert!(msg("mixed(dgc,g-lion)").contains("identical arms"));
+        assert!(msg("mixed(graddrop,d-lion-mavo)").contains("identical arms"));
+        assert!(by_name("mixed(dgc,dgc)", &hp).is_ok(), "homogeneous sparse is exact");
+        assert!(msg("mixed(nope,g-lion)").contains("unknown strategy"));
+        assert!(msg("mixed(d-lion-mavo*0,g-lion)").contains("positive integer"));
+        assert!(msg("mixed(d-lion-mavo*x,g-lion)").contains("positive integer"));
+        assert!(msg("mixed(d-lion-mavo@cheap,g-lion)").contains("@rich"));
+        assert!(msg("mixed(d-lion-mavo@cheap,g-lion@cheap)").contains("@rich"));
+        assert!(msg("mixed(d-lion-mavo@cheap,g-lion@rich,dgc)").contains("exactly two"));
+        assert!(msg("mixed(d-lion-mavo*2@cheap,g-lion@rich)").contains("cannot carry weights"));
+        // compact sparse flips dgc to a monolithic wire format: not mixable
+        let hp_c = StrategyHyper { compact_sparse: true, ..hp };
+        let err = by_name("mixed(dgc,g-lion)", &hp_c).err().expect("compact dgc");
+        assert!(err.to_string().contains("native chunked"), "{err}");
+    }
+
+    #[test]
+    fn heterogeneous_static_round_is_consistent() {
+        // One full multi-chunk round by hand (what the engine does):
+        // sign and dense frames in the same envelope, replicas identical.
+        use crate::comm::chunked;
+        use crate::util::Rng;
+        let hp = StrategyHyper::default();
+        let strat = by_name("mixed(d-lion-mavo,g-lion)", &hp).unwrap();
+        let (n, d) = (3usize, 120usize);
+        let plan = strat.plan(d, 40);
+        assert_eq!(plan.num_chunks(), 3);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut servers: Vec<_> =
+            plan.chunks().map(|c| strat.make_server_for_chunk(n, n, c)).collect();
+        let mut params: Vec<Vec<f32>> = vec![vec![0.2f32; d]; n];
+        let mut rng = Rng::new(0x1A17);
+        for step in 0..5 {
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut g = vec![0.0f32; d];
+                    rng.fill_normal(&mut g, 1.0);
+                    g
+                })
+                .collect();
+            let ups: Vec<Vec<u8>> = workers
+                .iter_mut()
+                .zip(&grads)
+                .map(|(w, g)| w.encode_planned(g, &plan, 1e-2, step))
+                .collect();
+            // chunks 0, 2 are 1-bit sign frames; chunk 1 is dense f32
+            let frames = chunked::unpack(&ups[0]).unwrap();
+            assert_eq!(frames[0][0], super::super::TAG_SIGN);
+            assert_eq!(frames[1][0], super::super::TAG_DENSE);
+            assert_eq!(frames[2][0], super::super::TAG_SIGN);
+            let downs: Vec<Vec<u8>> = plan
+                .chunks()
+                .map(|c| {
+                    let per_chunk: Vec<&[u8]> =
+                        ups.iter().map(|m| chunked::unpack(m).unwrap()[c.index]).collect();
+                    servers[c.index].aggregate_chunk(&per_chunk, c, 1e-2, step)
+                })
+                .collect();
+            let down = chunked::pack(&downs);
+            for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+                w.apply_planned(p, &down, &plan, 1e-2, step);
+            }
+            for w in 1..n {
+                assert_eq!(params[0], params[w], "step {step}: replica divergence");
+            }
+        }
+    }
+}

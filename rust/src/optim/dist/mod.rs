@@ -33,11 +33,13 @@
 //! | 14  | `[14][count: u16 LE][dense f32 payload]` | dense-sum partial (global family) |
 //! | 15  | `[15][count: u16 LE][(len: u32 LE, frame)*]` | chunked envelope ([`crate::comm::chunked`]) |
 //!
-//! The bandwidth-aware selector ([`select`]) adds no framing of its own:
-//! its rounds are the wrapped strategies' frames verbatim. Tags 13/14
-//! and the tag-3 vote partial only ever cross the aggregator→root hop
-//! of a hierarchical topology ([`crate::cluster::topology`]); workers
-//! never see them.
+//! The bandwidth-aware selector ([`select`]) and the mixed-wire
+//! selector ([`mixed`]) add no framing of their own: their rounds are
+//! the wrapped arms' frames verbatim (per round for the former, per
+//! chunk and per link for the latter — a mixed envelope simply carries
+//! different inner tags per chunk). Tags 13/14 and the tag-3 vote
+//! partial only ever cross the aggregator→root hop of a hierarchical
+//! topology ([`crate::cluster::topology`]); workers never see them.
 //!
 //! ## Chunked wire surface
 //!
@@ -73,6 +75,7 @@ pub mod ef;
 pub mod faulty;
 pub mod global;
 pub mod local;
+pub mod mixed;
 pub mod msync;
 pub mod select;
 pub mod terngrad;
@@ -89,6 +92,7 @@ pub use self::ef::DLionEf;
 pub use self::faulty::{Fault, FaultyWorker};
 pub use self::global::{Global, GlobalOpt};
 pub use self::local::DLionLocal;
+pub use self::mixed::MixedStrategy;
 pub use self::msync::DLionMsync;
 pub use self::select::BandwidthAware;
 pub use self::terngrad::{EfSignSgd, Qsgd, TernGrad};
@@ -465,6 +469,28 @@ pub trait Strategy: Send + Sync {
     /// Build the server logic for `nworkers` workers.
     fn make_server(&self, nworkers: usize, dim: usize) -> Box<dyn ServerLogic>;
 
+    /// Build the server logic for one chunk of the plan — the round
+    /// engine's per-(group, chunk) instantiation point. `nworkers` is
+    /// the number of uplinks this instance folds (the group size when
+    /// it serves a group-aggregator hop); `cluster_workers` is the full
+    /// cluster size, which deterministic schedules that must replay
+    /// identically on every node (the mixed per-link selector) derive
+    /// from — never from the local fold width. The default ignores the
+    /// chunk geometry beyond its length, which is correct for every
+    /// single-arm strategy; [`mixed::MixedStrategy`] overrides it to
+    /// route each chunk to its assigned arm's server, turning the
+    /// engine's instances into per-(group, chunk, arm) servers with no
+    /// engine-side special casing.
+    fn make_server_for_chunk(
+        &self,
+        nworkers: usize,
+        cluster_workers: usize,
+        chunk: Chunk,
+    ) -> Box<dyn ServerLogic> {
+        let _ = cluster_workers;
+        self.make_server(nworkers, chunk.len())
+    }
+
     /// Analytic worker→server payload bits per parameter (Table 1).
     fn uplink_bits_per_param(&self, nworkers: usize) -> f64;
 
@@ -485,6 +511,20 @@ pub trait Strategy: Send + Sync {
     /// codecs keep working unchanged.
     fn chunking(&self) -> Chunking {
         Chunking::Monolithic
+    }
+
+    /// Does this strategy's chunked encode touch strictly chunk-local
+    /// state? The sign-vote and dense families do (their per-chunk
+    /// frames are pure functions of the chunk's range). Classic sparse
+    /// top-k does **not**: its per-round selection is whole-model, and
+    /// selected coordinates are cleared from the residual whether or
+    /// not their chunk ships — correct when one logic instance covers
+    /// every chunk (plain runs, `mixed(dgc,dgc)`), but a heterogeneous
+    /// mixed assignment would silently destroy the residual mass that
+    /// lands in other arms' ranges. [`mixed::MixedStrategy`] therefore
+    /// only accepts non-chunk-local arms when all arms are identical.
+    fn chunk_local_encode(&self) -> bool {
+        true
     }
 
     /// The chunk plan this strategy uses for a `dim`-parameter model
@@ -576,15 +616,16 @@ pub const ALL_STRATEGIES: [&str; 10] = [
 
 /// Extension strategies `by_name` resolves beyond the Section-5.1 matrix:
 /// the network-projection baselines plus the Lion Cub-style variants
-/// (error feedback, momentum sync, bandwidth-aware selection) and the
-/// local-steps D-Lion family.
-pub const EXTENSION_STRATEGIES: [&str; 6] = [
+/// (error feedback, momentum sync, bandwidth-aware selection), the
+/// local-steps D-Lion family, and the mixed-wire selector ([`mixed`]).
+pub const EXTENSION_STRATEGIES: [&str; 7] = [
     "qsgd",
     "ef-signsgd",
     "d-lion-ef",
     "d-lion-msync",
     "d-lion-local(4)",
     "bandwidth-aware(d-lion-mavo,g-lion)",
+    "mixed(d-lion-mavo,g-lion)",
 ];
 
 /// Look up a strategy by registry name.
@@ -595,7 +636,11 @@ pub const EXTENSION_STRATEGIES: [&str; 6] = [
 /// registered (non-composite) names, and the bare alias
 /// `bandwidth-aware` for the default `(d-lion-mavo,g-lion)` pair. The
 /// local-steps family accepts `d-lion-local(<H>)` for any H ≥ 1, and
-/// the bare alias `d-lion-local` for `StrategyHyper::local_steps`.
+/// the bare alias `d-lion-local` for `StrategyHyper::local_steps`. The
+/// mixed-wire selector accepts `mixed(<arm>[*<weight>], ...)` (static
+/// per-chunk assignment) and `mixed(<cheap>@cheap,<rich>@rich)`
+/// (per-link selection under `StrategyHyper::link_budget`) over any
+/// natively-chunkable, every-step arms — see [`mixed`].
 ///
 /// Unknown or malformed names return a [`DlionError::Config`] whose
 /// message says exactly what failed to parse (the CLI surfaces it
@@ -618,6 +663,8 @@ pub const EXTENSION_STRATEGIES: [&str; 6] = [
 ///
 /// // composite selector names resolve recursively
 /// assert!(by_name("bandwidth-aware(d-lion-mavo,g-lion)", &hp).is_ok());
+/// assert!(by_name("mixed(d-lion-mavo*7,g-lion)", &hp).is_ok());
+/// assert!(by_name("mixed(d-lion-mavo@cheap,g-lion@rich)", &hp).is_ok());
 ///
 /// // local-steps D-Lion: amortized 1/H-bit uplink
 /// let local = by_name("d-lion-local(8)", &hp).unwrap();
@@ -655,7 +702,10 @@ pub fn by_name(name: &str, hp: &StrategyHyper) -> Result<Box<dyn Strategy>> {
         // one level of composition only: a nested selector's name would
         // carry its own comma and could never round-trip through this
         // parser, so reject selector arms outright
-        if cheap_name.starts_with("bandwidth-aware") || rich_name.starts_with("bandwidth-aware") {
+        if [cheap_name, rich_name]
+            .iter()
+            .any(|a| a.starts_with("bandwidth-aware") || a.starts_with("mixed"))
+        {
             return Err(DlionError::Config(format!(
                 "selector arms cannot be composite in '{name}': \
                  bandwidth-aware nests one level only"
@@ -672,6 +722,9 @@ pub fn by_name(name: &str, hp: &StrategyHyper) -> Result<Box<dyn Strategy>> {
             )));
         }
         return Ok(Box::new(BandwidthAware::new(cheap, rich, hp.link_budget as f64)));
+    }
+    if let Some(rest) = name.strip_prefix("mixed") {
+        return mixed::parse(name, rest, hp);
     }
     if let Some(rest) = name.strip_prefix("d-lion-local") {
         let h = if rest.is_empty() {
@@ -1044,6 +1097,13 @@ mod tests {
         assert!(msg("d-lion-local(0)").contains("H >= 1"));
         // local-steps strategies cannot ride inside the selector
         assert!(msg("bandwidth-aware(d-lion-local(2),g-lion)").contains("every step"));
+        // mixed composites fail with the same named-error contract
+        // (the full matrix lives in mixed::tests::parse_failures_are_named)
+        assert!(msg("mixed()").contains("empty arm list"));
+        assert!(msg("mixed(d-lion-mavo,)").contains("empty arm"));
+        assert!(msg("mixed(d-lion-local(2),g-lion)").contains("every step"));
+        assert!(msg("mixed(terngrad,g-lion)").contains("native chunked"));
+        assert!(msg("bandwidth-aware(mixed(d-lion-mavo,g-lion),g-lion)").contains("one level"));
     }
 
     #[test]
@@ -1176,6 +1236,11 @@ mod tests {
         // must stay monolithic so the byte accounting stays exact
         let hp_c = StrategyHyper { compact_sparse: true, ..hp };
         assert_eq!(by_name("dgc", &hp_c).unwrap().chunking(), Chunking::Monolithic);
+        // mixed plans align to the lcm of the arms' alignments
+        let s = by_name("mixed(d-lion-mavo,g-lion)", &hp).unwrap();
+        assert_eq!(s.chunking(), Chunking::Native { align: SIGN_FAMILY_ALIGN });
+        let s = by_name("mixed(dgc,dgc)", &hp).unwrap();
+        assert_eq!(s.chunking(), Chunking::Native { align: 1 });
         // everything else defaults to monolithic and must still plan
         for name in ["terngrad", "qsgd", "ef-signsgd", "d-lion-ef", "d-lion-msync"] {
             let s = by_name(name, &hp).unwrap();

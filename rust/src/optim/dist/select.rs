@@ -61,14 +61,32 @@ impl BucketSchedule {
     /// non-positive surcharge (the "rich" arm is no costlier than the
     /// cheap one) always runs rich.
     pub fn next(&mut self) -> bool {
-        let cap = self.surcharge.max(0.0);
+        self.accrue();
+        let rich = self.affords();
+        self.settle(rich);
+        rich
+    }
+
+    /// Accrue one round's net credit (the first phase of
+    /// [`BucketSchedule::next`], split out so composite schedules — the
+    /// mixed per-link selector runs one bucket per hop — can gate the
+    /// fire decision on several buckets at once).
+    pub fn accrue(&mut self) {
         self.credit += self.gain;
-        let rich = self.credit >= self.surcharge;
-        if rich {
+    }
+
+    /// Does the banked credit cover the rich surcharge right now?
+    pub fn affords(&self) -> bool {
+        self.credit >= self.surcharge
+    }
+
+    /// Deduct the surcharge if the rich round `fired`, then clamp the
+    /// leftover (the closing phase of [`BucketSchedule::next`]).
+    pub fn settle(&mut self, fired: bool) {
+        if fired {
             self.credit -= self.surcharge;
         }
-        self.credit = self.credit.clamp(0.0, cap);
-        rich
+        self.credit = self.credit.clamp(0.0, self.surcharge.max(0.0));
     }
 }
 
@@ -192,8 +210,10 @@ impl Strategy for BandwidthAware {
 
 /// Horizon the analytic model amortizes the schedule over. The bucket
 /// schedule is eventually periodic with a short period, so this is far
-/// past mixing for any realistic budget.
-const AMORTIZE_HORIZON: usize = 10_000;
+/// past mixing for any realistic budget. Shared with the mixed per-link
+/// selector ([`super::mixed`]), which amortizes its dual-bucket
+/// schedule the same way.
+pub(crate) const AMORTIZE_HORIZON: usize = 10_000;
 
 #[cfg(test)]
 mod tests {

@@ -21,17 +21,27 @@ pub trait Optimizer: Send {
     /// One update: params ← params − lr·(update(grads) + decoupled wd term).
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
 
+    /// Advance per-step scalar state (e.g. AdamW's bias-correction
+    /// counter) once at the start of a logical step. [`Optimizer::step`]
+    /// implementations call it themselves; chunked callers invoke it
+    /// once before their first [`Optimizer::step_range`] call of each
+    /// step. That first chunk need not start at global offset 0: under
+    /// a mixed per-chunk arm assignment an optimizer may own only a
+    /// subset of the parameter ranges, so the trigger is "first chunk I
+    /// serve this step", not "offset == 0". Stateless-per-step
+    /// optimizers keep the no-op default.
+    fn begin_step(&mut self) {}
+
     /// Ranged update for the chunked wire path: apply one step's update
     /// to the parameter slice that starts at global index `offset`
     /// (`params`/`grads` are the chunk's views; optimizer state is
     /// indexed at `offset..offset + grads.len()`).
     ///
-    /// Contract: within one logical step the caller covers the full
-    /// vector exactly once, in ascending ranges starting at offset 0 —
-    /// per-step scalar state (e.g. AdamW's bias-correction counter)
-    /// advances on the `offset == 0` call. The default is only valid
-    /// for whole-vector calls and exists so optimizers never used
-    /// through the chunked path need no override.
+    /// Contract: within one logical step the caller covers each of its
+    /// ranges exactly once, in ascending order, and calls
+    /// [`Optimizer::begin_step`] before the first of them. The default
+    /// is only valid for whole-vector calls and exists so optimizers
+    /// never used through the chunked path need no override.
     fn step_range(&mut self, params: &mut [f32], grads: &[f32], lr: f32, offset: usize) {
         assert_eq!(offset, 0, "{}: no ranged step support", self.name());
         self.step(params, grads, lr);

@@ -431,6 +431,75 @@ fn invariant10_bandwidth_selector_never_exceeds_the_budget() {
 }
 
 #[test]
+fn invariant11_per_link_mixed_selector_respects_both_hop_budgets() {
+    // mixed(<cheap>@cheap,<rich>@rich): one token bucket per hop, both
+    // fed by hyper.link_budget. Over a 200-round hierarchical run,
+    // neither the worker edge (per worker) nor the agg→root hop (per
+    // group) may spend more than max(budget, that hop's cheap floor)
+    // bits/param/round, up to frame-header slack — and the worker-side
+    // schedule replica must stay bitwise in sync with every server
+    // replica (a desync flips one end to the other arm's frames, which
+    // the servers' tag asserts and the replica check would catch).
+    use dlion::cluster::topology::{RoundEngine, Topology};
+    forall_explain(0xB04, 6, |r| {
+        let d = 400 + 40 * r.below(16); // 40-aligned, 400..1000
+        let budget = 3.0 + r.uniform() * 67.0; // [3, 70): spans cheap..rich
+        (d, budget)
+    }, |&(d, budget)| {
+        let (n, group_size, rounds) = (4usize, 2usize, 200usize);
+        let ngroups = n / group_size;
+        let hp = StrategyHyper { link_budget: budget as f32, ..Default::default() };
+        let strat = by_name("mixed(d-lion-mavo@cheap,g-lion@rich)", &hp)
+            .map_err(|e| e.to_string())?;
+        let topo = Topology::Hierarchical { group_size };
+        let mut engine = RoundEngine::new(strat.as_ref(), n, d, topo, 40);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut params: Vec<Vec<f32>> = vec![vec![0.1f32; d]; n];
+        let mut rng = Rng::new(d as u64 ^ 0xB04);
+        let (mut edge_bytes, mut agg_bytes) = (0u64, 0u64);
+        for step in 0..rounds {
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut g = vec![0.0f32; d];
+                    rng.fill_normal(&mut g, 1.0);
+                    g
+                })
+                .collect();
+            let ups = engine.encode_all(&mut workers, &grads, 1e-2, step);
+            let (down, hops) = engine.aggregate(&ups, 1e-2, step);
+            engine.apply_all(&mut workers, &mut params, &down, 1e-2, step);
+            edge_bytes += (hops.uplink + hops.downlink) as u64;
+            agg_bytes += (hops.agg_uplink + hops.agg_downlink) as u64;
+            for w in 1..n {
+                if params[0] != params[w] {
+                    return Err(format!(
+                        "budget {budget:.2} d={d}: replica divergence at round {step} \
+                         (worker/server schedules out of sync)"
+                    ));
+                }
+            }
+        }
+        let edge_spent = edge_bytes as f64 * 8.0 / (n * rounds * d) as f64;
+        let agg_spent = agg_bytes as f64 * 8.0 / (ngroups * rounds * d) as f64;
+        // hop floors: even-N mavo edge = 1 + 1.6; agg = ⌈log2(3)⌉-bit
+        // vote partial for a 2-worker group + the 1.6-bit broadcast
+        let edge_cap = budget.max(1.0 + 1.6) + 0.5;
+        let agg_cap = budget.max(2.0 + 1.6) + 0.5;
+        if edge_spent > edge_cap {
+            return Err(format!(
+                "budget {budget:.2} d={d}: worker edge spent {edge_spent:.3} bits/param/round"
+            ));
+        }
+        if agg_spent > agg_cap {
+            return Err(format!(
+                "budget {budget:.2} d={d}: agg hop spent {agg_spent:.3} bits/param/round"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn bsign_never_zero() {
     forall(0xA0B, 500, |r| r.normal_f32(0.0, 1e-20), |&x| {
         let s = bsign(x);

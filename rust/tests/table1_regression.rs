@@ -192,6 +192,88 @@ fn compact_sparse_uplink_is_40_bits_per_entry() {
     }
 }
 
+/// Measured per-hop bits/param for a mixed assignment: run a chunked
+/// hierarchical round loop and normalize each hop's payload bytes the
+/// way its analytic model is stated — worker edge per worker, agg hop
+/// per group.
+fn measured_mixed_bits(
+    name: &str,
+    n: usize,
+    group_size: usize,
+    dim: usize,
+    chunk_size: usize,
+    hp: &StrategyHyper,
+) -> (f64, f64, f64, f64) {
+    use dlion::cluster::topology::Topology;
+    let task = Quadratic::new(dim, 5.0, 0.3, 9);
+    let strat = by_name(name, hp).unwrap();
+    let cfg = TrainConfig {
+        steps: STEPS,
+        batch_per_worker: 2,
+        base_lr: 1e-3,
+        eval_every: 0,
+        seed: 3,
+        chunk_size,
+        topology: Topology::Hierarchical { group_size },
+        ..Default::default()
+    };
+    let res = run_sequential(&task, strat.as_ref(), n, &cfg);
+    let ngroups = n.div_ceil(group_size);
+    let worker_denom = (dim * n * STEPS) as f64;
+    let group_denom = (dim * ngroups * STEPS) as f64;
+    (
+        res.total_uplink() as f64 * 8.0 / worker_denom,
+        res.total_downlink() as f64 * 8.0 / worker_denom,
+        res.total_agg_uplink() as f64 * 8.0 / group_denom,
+        res.total_agg_downlink() as f64 * 8.0 / group_denom,
+    )
+}
+
+#[test]
+fn mixed_seven_eighths_sign_assignment_matches_the_weighted_model() {
+    // 7/8 of the chunks ride 1-bit majority votes, 1/8 dense f32: with
+    // D = 1600 and 200-element chunks the 8-slot cycle divides the
+    // chunk count exactly, so the measured rate must equal the
+    // chunk-share weighted model on *both* hops — worker edge and the
+    // aggregator→root link (7/8 intavg vote partials + 1/8 dense sums).
+    let hp = StrategyHyper::default();
+    let name = "mixed(d-lion-mavo*7,g-lion)";
+    let (n, g, dim, chunk) = (4usize, 2usize, 1600usize, 200usize);
+    let (up, down, agg_up, agg_down) = measured_mixed_bits(name, n, g, dim, chunk, &hp);
+    let up_model = (7.0 * 1.0 + 32.0) / 8.0; // 4.875
+    let down_model = (7.0 * 1.6 + 32.0) / 8.0; // even N: ternary tie frames
+    let partial_model = (7.0 * 2.0 + 32.0) / 8.0; // ⌈log2(3)⌉-bit votes + f32 sums
+    assert_close(up, up_model, "mixed 7:1 uplink");
+    assert_close(down, down_model, "mixed 7:1 downlink");
+    assert_close(agg_up, partial_model, "mixed 7:1 agg-hop partials");
+    assert_close(agg_down, down_model, "mixed 7:1 agg-hop broadcast");
+    // ...and the strategy's own Table-1 model states these very rates
+    // (up/partial blends are dyadic and exact; the 1.6-bit ternary term
+    // gets an ulp of slack)
+    let strat = by_name(name, &hp).unwrap();
+    assert_eq!(strat.uplink_bits_per_param(n), up_model);
+    assert!((strat.downlink_bits_per_param(n) - down_model).abs() < 1e-12);
+    assert_eq!(strat.partial_bits_per_param(g), partial_model);
+}
+
+#[test]
+fn mixed_half_and_half_assignment_matches_the_weighted_model() {
+    // The 1:1 cycle alternates sign and dense chunks — the second
+    // pinned assignment of the regression matrix.
+    let hp = StrategyHyper::default();
+    let name = "mixed(d-lion-mavo,g-lion)";
+    let (n, g, dim, chunk) = (4usize, 2usize, 1600usize, 200usize);
+    let (up, down, agg_up, agg_down) = measured_mixed_bits(name, n, g, dim, chunk, &hp);
+    assert_close(up, (1.0 + 32.0) / 2.0, "mixed 1:1 uplink");
+    assert_close(down, (1.6 + 32.0) / 2.0, "mixed 1:1 downlink");
+    assert_close(agg_up, (2.0 + 32.0) / 2.0, "mixed 1:1 agg-hop partials");
+    assert_close(agg_down, (1.6 + 32.0) / 2.0, "mixed 1:1 agg-hop broadcast");
+    let strat = by_name(name, &hp).unwrap();
+    assert_close(up, strat.uplink_bits_per_param(n), "mixed model uplink");
+    assert_close(down, strat.downlink_bits_per_param(n), "mixed model downlink");
+    assert_close(agg_up, strat.partial_bits_per_param(g), "mixed model partials");
+}
+
 #[test]
 fn analytic_model_agrees_with_measurement_for_fixed_rate_strategies() {
     // The strategy's own Table-1 model (what the netsim bench projects

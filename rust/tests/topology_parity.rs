@@ -113,6 +113,95 @@ fn chunked_hierarchy_threaded_matches_sequential() {
 }
 
 #[test]
+fn mixed_same_arm_everywhere_is_bit_exact_with_the_plain_arm() {
+    // Acceptance contract of the mixed-wire selector: mixed(a,a) puts
+    // the same arm on every chunk and every link, so it must reproduce
+    // plain `a` bit-for-bit — parameters and the full per-hop payload
+    // byte history — for every (chunk_size, topology, driver) cell.
+    let n = 4;
+    let hp = StrategyHyper::default();
+    for arm in ["d-lion-mavo", "g-lion", "dgc"] {
+        let plain = by_name(arm, &hp).unwrap();
+        let mixed = by_name(&format!("mixed({arm},{arm})"), &hp).unwrap();
+        assert_eq!(mixed.name(), format!("mixed({arm},{arm})"));
+        for topo in [Topology::Star, Topology::Hierarchical { group_size: 4 }] {
+            for chunk_size in [1usize, 7, D, D + 3] {
+                let ctx = format!("mixed({arm},{arm}) cs={chunk_size} topo={topo}");
+                let c = TrainConfig { chunk_size, ..cfg(20, topo) };
+                let a = run_sequential(&task(), plain.as_ref(), n, &c);
+                let b = run_sequential(&task(), mixed.as_ref(), n, &c);
+                assert_eq!(a.final_params, b.final_params, "{ctx}: trajectory moved");
+                assert_eq!(a.history.len(), b.history.len());
+                for (x, y) in a.history.iter().zip(&b.history) {
+                    assert_eq!(
+                        (x.uplink_bytes, x.downlink_bytes, x.agg_uplink_bytes, x.agg_downlink_bytes),
+                        (y.uplink_bytes, y.downlink_bytes, y.agg_uplink_bytes, y.agg_downlink_bytes),
+                        "{ctx} step {}: per-hop payload bytes moved",
+                        x.step
+                    );
+                }
+                // threaded driver: same params, and the transport
+                // counters equal the sequential payload accounting
+                let (thr, stats) = run_threaded(task_arc(), mixed.as_ref(), n, &c);
+                assert_eq!(a.final_params, thr.final_params, "{ctx}: threaded diverged");
+                assert_eq!(stats.uplink(), a.total_uplink(), "{ctx}: uplink counter");
+                assert_eq!(stats.downlink(), a.total_downlink(), "{ctx}: downlink counter");
+                assert_eq!(stats.agg_uplink(), a.total_agg_uplink(), "{ctx}: agg counter");
+            }
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_mixed_round_runs_end_to_end_with_per_hop_accounting() {
+    // Genuinely heterogeneous wires: 1-bit sign votes and dense f32
+    // frames in the same round, with *different arms on the agg→root
+    // hop* (intavg vote partials next to tag-14 dense sums). Both
+    // drivers agree bit-exactly, and the per-hop payload bytes match
+    // the weighted analytic model exactly (D = 240 splits into 6
+    // 40-element chunks; the 1:1 cycle gives each arm exactly half).
+    let n = 4;
+    let hp = StrategyHyper::default();
+    let strat = by_name("mixed(d-lion-mavo,g-lion)", &hp).unwrap();
+    let topo = Topology::Hierarchical { group_size: 2 };
+    let d = 240;
+    let steps = 24;
+    let task = Quadratic::new(d, 6.0, 0.4, 17);
+    let c = TrainConfig { chunk_size: 40, ..cfg(steps, topo) };
+    let seq = run_sequential(&task, strat.as_ref(), n, &c);
+    let task_arc: Arc<dyn GradTask + Send + Sync> = Arc::new(Quadratic::new(d, 6.0, 0.4, 17));
+    let (thr, stats) = run_threaded(task_arc, strat.as_ref(), n, &c);
+    assert_eq!(seq.final_params, thr.final_params, "drivers diverged on mixed wires");
+    for (s, t) in seq.history.iter().zip(&thr.history) {
+        assert_eq!(
+            (s.uplink_bytes, s.downlink_bytes, s.agg_uplink_bytes, s.agg_downlink_bytes),
+            (t.uplink_bytes, t.downlink_bytes, t.agg_uplink_bytes, t.agg_downlink_bytes),
+            "step {}",
+            s.step
+        );
+    }
+    assert_eq!(stats.uplink(), seq.total_uplink());
+    assert_eq!(stats.agg_uplink(), seq.total_agg_uplink());
+    // exact per-hop payload bytes per round, straight from the frame
+    // layouts (3 sign chunks + 3 dense chunks of 40 params each):
+    let sign_up = 1 + 3 * 5; // one sign head + 3×40 bits
+    let dense = 1 + 3 * 160; // one dense head + 3×40 f32
+    let per_worker_up = (sign_up + dense) as u64;
+    assert_eq!(seq.history[0].uplink_bytes, per_worker_up * n as u64, "uplink payload");
+    // even N: majority-vote downlink pays the 1.6-bit ternary frame
+    let tern_down = 1 + 3 * 8; // one tern head + 3×40 trits
+    let per_worker_down = (tern_down + dense) as u64;
+    assert_eq!(seq.history[0].downlink_bytes, per_worker_down * n as u64, "downlink payload");
+    // agg hop, per group: 3 intavg vote partials (2 bits/param for
+    // g = 2) + 3 dense f32 sums, heads charged once per tag
+    let intavg_part = 3 + 3 * 10; // [3][n:u16] head + 3×40×2 bits
+    let dense_part = 3 + 3 * 160; // [14][n:u16] head + 3×40 f32
+    let per_group_up = (intavg_part + dense_part) as u64;
+    assert_eq!(seq.history[0].agg_uplink_bytes, per_group_up * 2, "agg-hop partials");
+    assert_eq!(seq.history[0].agg_downlink_bytes, per_worker_down * 2, "agg-hop broadcast");
+}
+
+#[test]
 fn every_strategy_trains_under_a_configured_chunk_size() {
     // The full registry keeps working under any chunk_size: native
     // families chunk, everything else collapses to a single-chunk plan.

@@ -5,7 +5,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json topology mixed clean
+.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json bench-diff topology mixed clean
 
 ## tier-1 verify: what CI runs (ROADMAP.md)
 verify:
@@ -31,18 +31,31 @@ fmt-check:
 clippy:
 	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
 
-## CI-speed smoke pass over the paper-table benches
+## CI-speed smoke pass over the paper-table benches (hotpath's JSON is
+## routed to target/ so a smoke run never touches the committed baseline)
 bench-quick:
 	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench table1_bandwidth -- --quick
-	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench hotpath -- --quick
+	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 DLION_BENCH_JSON=target/BENCH_fresh.json \
+		cargo bench --bench hotpath -- --quick
 
-## perf trajectory snapshot: runs hotpath + table1_bandwidth and writes
-## BENCH_hotpath.json at the repo root (monolithic vs chunked round
-## throughput at d=1M) so speedups are comparable across PRs
+## perf trajectory snapshot: runs the hotpath bench and refreshes
+## BENCH_hotpath.json at the repo root (SWAR kernel micro-rows +
+## monolithic-vs-chunked rounds at d=1M and d=4M) so speedups are
+## comparable across PRs. Run WITHOUT quick mode when committing a new
+## baseline so the numbers are stable.
 bench-json:
-	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench hotpath -- --quick
-	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench table1_bandwidth -- --quick
+	cd $(CARGO_DIR) && cargo bench --bench hotpath
 	@echo "--- BENCH_hotpath.json ---" && cat BENCH_hotpath.json
+
+## perf delta vs the committed baseline: re-measure the hotpath rows
+## into target/BENCH_fresh.json (quick mode) and print the per-row
+## delta table. Exits nonzero only on structural regressions (a
+## baseline row missing from the fresh run); timing noise is soft.
+bench-diff:
+	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 DLION_BENCH_JSON=target/BENCH_fresh.json \
+		cargo bench --bench hotpath -- --quick
+	cd $(CARGO_DIR) && cargo run --release -q -- bench-diff \
+		--baseline ../BENCH_hotpath.json --fresh target/BENCH_fresh.json
 
 ## quick pass over the topology × local-steps extension bench
 topology:

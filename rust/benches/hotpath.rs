@@ -3,6 +3,12 @@
 //! headroom), plus the PJRT train_step/lion_update artifact latencies
 //! when artifacts exist. Feeds EXPERIMENTS.md §Perf before/after.
 //!
+//! The SWAR kernel micro-rows and the monolithic-vs-chunked round rows
+//! are collected into one machine-readable trajectory file written once
+//! at the end of the run — `BENCH_hotpath.json` at the repo root (path
+//! override: `DLION_BENCH_JSON`) — which `dlion bench-diff` compares
+//! against the committed baseline (`make bench-diff`).
+//!
 //! Run: `cargo bench --bench hotpath [-- --quick]`
 
 mod common;
@@ -12,6 +18,181 @@ use dlion::optim::dist::{by_name, StrategyHyper};
 use dlion::optim::lion::Lion;
 use dlion::optim::{LionParams, Optimizer};
 use dlion::util::Rng;
+
+/// `d1M`-style dimension tag for trajectory row names.
+fn dim_tag(d: usize) -> String {
+    if d % 1_000_000 == 0 {
+        format!("d{}M", d / 1_000_000)
+    } else {
+        format!("d{d}")
+    }
+}
+
+/// Collected §Perf trajectory rows (name, baseline_s, optimized_s),
+/// written once at the end of `main` as the `BENCH_hotpath.json`
+/// trajectory file consumed by `dlion bench-diff`.
+struct PerfRows {
+    rows: Vec<(String, f64, f64)>,
+}
+
+impl PerfRows {
+    fn new() -> Self {
+        PerfRows { rows: Vec::new() }
+    }
+
+    fn push(&mut self, name: &str, baseline_s: f64, optimized_s: f64) {
+        self.rows.push((name.to_string(), baseline_s, optimized_s));
+    }
+
+    fn write_json(&self, quick: bool) {
+        use dlion::util::json::{emit, Json};
+        use std::collections::BTreeMap;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(name, b, o)| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(name.clone()));
+                m.insert("baseline_s".to_string(), Json::Num(*b));
+                m.insert("optimized_s".to_string(), Json::Num(*o));
+                m.insert("speedup".to_string(), Json::Num(*b / *o));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str("hotpath".into()));
+        let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        top.insert("threads".to_string(), Json::Num(threads as f64));
+        top.insert("quick".to_string(), Json::Bool(quick));
+        // A freshly measured file is never provisional; the committed
+        // baseline may carry `"provisional": true` + null timings when
+        // it was authored on a machine that could not run the bench.
+        top.insert("provisional".to_string(), Json::Bool(false));
+        top.insert("rows".to_string(), Json::Arr(rows));
+        let path = std::env::var("DLION_BENCH_JSON")
+            .unwrap_or_else(|_| "../BENCH_hotpath.json".into());
+        std::fs::write(&path, emit(&Json::Obj(top)) + "\n").unwrap();
+        println!("wrote {} ({} rows)", path, self.rows.len());
+    }
+}
+
+/// §Perf kernel micro-rows: the SWAR hot kernels vs the scalar paths
+/// they replaced, at d = 1M. Each optimized path is asserted bit-exact
+/// against its baseline before timing, then both land as a trajectory
+/// row so `make bench-diff` tracks them across PRs.
+fn kernel_micro(d: usize, tgt: f64, rows: &mut PerfRows) {
+    use dlion::comm::{sign, swar};
+    use dlion::optim::lion::fused_encode_slice;
+    let mut t = Table::new(
+        &format!("SWAR kernels vs scalar baselines, d={d}"),
+        &["kernel", "baseline", "optimized", "speedup"],
+    );
+    let mut rng = Rng::new(11);
+    let mut blend = vec![0.0f32; d];
+    rng.fill_normal(&mut blend, 1.0);
+
+    // 1. sign pack: per-lane bit loop -> 8-lane SWAR sign gather
+    assert_eq!(sign::pack_f32_scalar(&blend), sign::pack_f32(&blend));
+    let base = bench_auto(tgt, || {
+        black_box(sign::pack_f32_scalar(black_box(&blend)));
+    });
+    let opt = bench_auto(tgt, || {
+        black_box(sign::pack_f32(black_box(&blend)));
+    });
+    t.row(vec![
+        "pack_f32 (SWAR gather)".into(),
+        fmt_secs(base.median),
+        fmt_secs(opt.median),
+        format!("{:.2}x", base.median / opt.median),
+    ]);
+    rows.push(&format!("kernel/pack_f32/{}", dim_tag(d)), base.median, opt.median);
+
+    // 2. server vote: N × i32-LUT accumulate + sign emit -> bit-sliced
+    //    carry-save planes + threshold carry-out (the pure-MaVo downlink)
+    for n in [8usize, 32] {
+        let payloads: Vec<Vec<u8>> = (0..n)
+            .map(|_| {
+                let mut w = vec![0.0f32; d];
+                rng.fill_normal(&mut w, 1.0);
+                sign::pack_f32(&w)
+            })
+            .collect();
+        let mut votes = vec![0i32; d];
+        let plen = sign::packed_len(d);
+        let mut out_base = vec![0u8; plen];
+        let mut out_opt = vec![0u8; plen];
+        let mut planes = swar::VotePlanes::new(d, n);
+        // strict majority: count(+1) >= n/2 + 1, i.e. vote sum > 0 for
+        // odd AND even n (the sum has n's parity, so > 0 <=> >= 2 - n%2)
+        let threshold = n / 2 + 1;
+        let base = bench_auto(tgt, || {
+            votes.fill(0);
+            for p in &payloads {
+                sign::accumulate_votes(black_box(p), &mut votes);
+            }
+            for (ci, chunk) in votes.chunks(8).enumerate() {
+                let mut byte = 0u8;
+                for (j, &v) in chunk.iter().enumerate() {
+                    byte |= u8::from(v > 0) << j;
+                }
+                out_base[ci] = byte;
+            }
+            black_box(&out_base);
+        });
+        let opt = bench_auto(tgt, || {
+            planes.reset();
+            for p in &payloads {
+                planes.add(black_box(p));
+            }
+            planes.threshold_into(threshold, &mut out_opt);
+            black_box(&out_opt);
+        });
+        assert_eq!(out_base, out_opt, "SWAR vote plane != i32 LUT majority (n={n})");
+        t.row(vec![
+            format!("vote_accumulate n={n} (bit-planes)"),
+            fmt_secs(base.median),
+            fmt_secs(opt.median),
+            format!("{:.2}x", base.median / opt.median),
+        ]);
+        rows.push(
+            &format!("kernel/vote_accumulate/{}/n{n}", dim_tag(d)),
+            base.median,
+            opt.median,
+        );
+    }
+
+    // 3. D-Lion worker encode: 3-pass decomposed (blend store, scalar
+    //    pack, momentum pass) -> single fused pass with SWAR sign gather
+    let mut g = vec![0.0f32; d];
+    rng.fill_normal(&mut g, 1.0);
+    let mut lion = Lion::new(d, LionParams::default());
+    let mut scratch = vec![0.0f32; d];
+    let base = bench_auto(tgt, || {
+        let b1 = lion.hp.beta1;
+        for ((s, &m), &gg) in scratch.iter_mut().zip(&lion.momentum).zip(&g) {
+            *s = b1 * m + (1.0 - b1) * gg;
+        }
+        black_box(sign::pack_f32_scalar(&scratch));
+        lion.advance_momentum(black_box(&g));
+    });
+    let hp = LionParams::default();
+    let mut momentum = vec![0.0f32; d];
+    let mut out = vec![0u8; sign::packed_len(d)];
+    let opt = bench_auto(tgt, || {
+        fused_encode_slice(hp.beta1, hp.beta2, &mut momentum, black_box(&g), &mut out);
+        black_box(&out);
+    });
+    t.row(vec![
+        "fused_encode_slice (SWAR)".into(),
+        fmt_secs(base.median),
+        fmt_secs(opt.median),
+        format!("{:.2}x", base.median / opt.median),
+    ]);
+    rows.push(&format!("kernel/fused_encode/{}", dim_tag(d)), base.median, opt.median);
+
+    t.print();
+    t.write_csv(common::out_dir().join(format!("hotpath_kernels_d{d}.csv"))).unwrap();
+}
 
 fn strategy_round(d: usize, n: usize) {
     let mut t = Table::new(
@@ -66,10 +247,10 @@ fn strategy_round(d: usize, n: usize) {
 /// The chunked-redesign headline: encode+aggregate throughput of the
 /// pre-redesign monolithic round (sequential worker loop + one
 /// whole-model aggregate — exactly what `run_round` does) vs the
-/// chunked round engine (worker-parallel encode, chunk-parallel
-/// aggregate). Writes BENCH_<name>.json at the repo root so the perf
-/// trajectory is tracked across PRs (`make bench-json`).
-fn chunked_round(d: usize, n: usize) {
+/// chunked round engine (split-borrow worker-/chunk-parallel encode
+/// into recycled zero-copy frames, SWAR bit-plane vote aggregate).
+/// Emits `round/chunked/*` and `round/mixed/*` trajectory rows.
+fn chunked_round(d: usize, n: usize, tgt: f64, rows: &mut PerfRows) {
     use dlion::cluster::topology::{RoundEngine, Topology};
     let mut t = Table::new(
         &format!("Chunked round engine vs monolithic (d-lion-mavo), d={d}, n={n}"),
@@ -89,7 +270,7 @@ fn chunked_round(d: usize, n: usize) {
     let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
     let mut server = strat.make_server(n, d);
     let mut step = 0usize;
-    let base = bench_auto(0.8, || {
+    let base = bench_auto(tgt, || {
         let ups: Vec<_> = workers
             .iter_mut()
             .zip(&grads)
@@ -98,14 +279,16 @@ fn chunked_round(d: usize, n: usize) {
         black_box(server.aggregate(&ups, 1e-3, step));
         step += 1;
     });
-    // chunked path: 256 KiB chunks, worker-/chunk-parallel via the engine
+    // chunked path: 256 KiB chunks, worker-/chunk-parallel via the
+    // engine; uplink buffers are recycled round-to-round as in training
     let chunk_size = 1 << 16;
     let mut workers2: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
     let mut engine = RoundEngine::new(strat.as_ref(), n, d, Topology::Star, chunk_size);
     let mut step2 = 0usize;
-    let chunked = bench_auto(0.8, || {
+    let chunked = bench_auto(tgt, || {
         let ups = engine.encode_all(&mut workers2, &grads, 1e-3, step2);
         black_box(engine.aggregate(black_box(&ups), 1e-3, step2));
+        engine.recycle_uplinks(ups);
         step2 += 1;
     });
     let speedup = base.median / chunked.median;
@@ -116,9 +299,10 @@ fn chunked_round(d: usize, n: usize) {
     let mut workers3: Vec<_> = (0..n).map(|i| mstrat.make_worker(i, n, d)).collect();
     let mut mengine = RoundEngine::new(mstrat.as_ref(), n, d, Topology::Star, chunk_size);
     let mut step3 = 0usize;
-    let mixed = bench_auto(0.8, || {
+    let mixed = bench_auto(tgt, || {
         let ups = mengine.encode_all(&mut workers3, &grads, 1e-3, step3);
         black_box(mengine.aggregate(black_box(&ups), 1e-3, step3));
+        mengine.recycle_uplinks(ups);
         step3 += 1;
     });
     let gbs = |m: f64| (4.0 * d as f64 * n as f64) / m / 1e9;
@@ -142,27 +326,9 @@ fn chunked_round(d: usize, n: usize) {
     ]);
     t.print();
     t.write_csv(common::out_dir().join(format!("hotpath_chunked_d{d}_n{n}.csv"))).unwrap();
-    // machine-readable perf trajectory (repo root, committed by `make bench-json` users)
-    let json = format!(
-        "{{\n  \"bench\": \"hotpath_chunked_round\",\n  \"strategy\": \"d-lion-mavo\",\n  \
-         \"d\": {d},\n  \"n\": {n},\n  \"chunk_size\": {chunk_size},\n  \
-         \"threads\": {},\n  \"monolithic_s\": {:.6},\n  \"chunked_s\": {:.6},\n  \
-         \"speedup\": {:.3},\n  \"mixed_strategy\": \"mixed(d-lion-mavo*7,g-lion)\",\n  \
-         \"mixed_s\": {:.6},\n  \"mixed_vs_monolithic\": {:.3}\n}}\n",
-        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
-        base.median,
-        chunked.median,
-        speedup,
-        mixed.median,
-        base.median / mixed.median
-    );
-    if d == 1_000_000 {
-        // the acceptance point tracked across PRs
-        std::fs::write("../BENCH_hotpath.json", json).unwrap();
-        println!("chunked round speedup: {speedup:.2}x (wrote ../BENCH_hotpath.json)");
-    } else {
-        println!("chunked round speedup: {speedup:.2}x");
-    }
+    rows.push(&format!("round/chunked/{}/n{n}", dim_tag(d)), base.median, chunked.median);
+    rows.push(&format!("round/mixed/{}/n{n}", dim_tag(d)), base.median, mixed.median);
+    println!("chunked round speedup at d={d}: {speedup:.2}x");
 }
 
 fn lion_kernels(d: usize) {
@@ -321,12 +487,16 @@ fn perf_ablation(d: usize) {
 fn main() {
     let quick = dlion::bench_utils::quick_mode();
     let d = if quick { 1_000_000 } else { 4_000_000 };
+    // quick mode keeps the full row schema (bench-diff hard-fails on
+    // missing rows) but shrinks per-row measurement time for CI
+    let tgt = if quick { 0.12 } else { 0.8 };
+    let mut rows = PerfRows::new();
+    kernel_micro(1_000_000, tgt, &mut rows);
     strategy_round(d, 4);
-    chunked_round(1_000_000, 4); // acceptance point: d = 1M
-    if !quick {
-        chunked_round(d, 4);
-    }
+    chunked_round(1_000_000, 4, tgt, &mut rows); // acceptance point: d = 1M
+    chunked_round(4_000_000, 4, tgt, &mut rows); // second model size
     lion_kernels(d);
     perf_ablation(d);
     pjrt_path();
+    rows.write_json(quick);
 }

@@ -6,6 +6,8 @@
 //! * `bandwidth`  — print the Table-1 bandwidth matrix
 //! * `strategies` — list registered strategies
 //! * `lm`         — train the AOT transformer (requires `make artifacts`)
+//! * `bench-diff` — compare a fresh BENCH_hotpath.json against the
+//!   committed baseline (structural regressions exit nonzero)
 
 use crate::cluster::{run_sequential, run_threaded, TrainConfig};
 use crate::config::Experiment;
@@ -72,6 +74,11 @@ COMMANDS:
               mixed(<arm>[*<weight>], ...) / mixed(<a>@cheap,<b>@rich))
   lm          train the AOT transformer (--artifacts artifacts/,
               --strategy d-lion-mavo, --workers 4, --steps 200)
+  bench-diff  print the perf delta table: a fresh hotpath trajectory
+              (--fresh target/BENCH_fresh.json) vs the committed
+              baseline (--baseline BENCH_hotpath.json). Slowdowns past
+              --tolerance (default 0.25) are reported but soft; a
+              baseline row missing from the fresh run exits nonzero.
   help        this text
 
 Overrides use dotted keys, e.g.: train.steps=500 hyper.weight_decay=0.01
@@ -108,6 +115,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "lm" => cmd_lm(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         other => Err(DlionError::Config(format!("unknown command '{other}' (try help)"))),
     }
 }
@@ -296,6 +304,107 @@ fn cmd_lm(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Row name → (optimized_s, speedup); either value may be absent (null
+/// timings in a provisional baseline).
+type BenchRows = std::collections::BTreeMap<String, (Option<f64>, Option<f64>)>;
+
+fn load_bench_rows(path: &str) -> Result<BenchRows> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| DlionError::Config(format!("bench-diff: cannot read {path}: {e}")))?;
+    let doc = crate::util::json::parse(&text)
+        .map_err(|e| DlionError::Config(format!("bench-diff: {path}: {e}")))?;
+    let rows = doc
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| DlionError::Config(format!("bench-diff: {path}: no \"rows\" array")))?;
+    let mut map = BenchRows::new();
+    for row in rows {
+        let name = row
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| DlionError::Config(format!("bench-diff: {path}: row without name")))?;
+        let opt = row.get("optimized_s").and_then(|v| v.as_f64());
+        let spd = row.get("speedup").and_then(|v| v.as_f64());
+        map.insert(name.to_string(), (opt, spd));
+    }
+    Ok(map)
+}
+
+/// Compare a fresh hotpath trajectory file against the committed
+/// baseline. Always prints the full per-row delta table. The exit code
+/// is nonzero only for STRUCTURAL regressions — a row present in the
+/// baseline but missing from the fresh run (a kernel or round path
+/// dropped out of the bench), or an unreadable/malformed file. Timing
+/// slowdowns are reported but soft: bench noise on shared CI runners
+/// must not gate merges. A baseline row with null timings (a
+/// `"provisional": true` file authored where the bench could not run)
+/// compares as informational until measured numbers land.
+fn cmd_bench_diff(args: &Args) -> Result<i32> {
+    let base_path = args.flag("baseline").unwrap_or("BENCH_hotpath.json");
+    let fresh_path = args.flag("fresh").unwrap_or("target/BENCH_fresh.json");
+    let tol: f64 = args.flag("tolerance").and_then(|s| s.parse().ok()).unwrap_or(0.25);
+    let base = load_bench_rows(base_path)?;
+    let fresh = load_bench_rows(fresh_path)?;
+    let fmt = crate::bench_utils::fmt_secs;
+    println!("perf delta: {fresh_path} vs {base_path} (soft tolerance +{:.0}%)", tol * 100.0);
+    println!("{:<42} {:>10} {:>10} {:>8} {:>8}", "row", "baseline", "fresh", "delta", "speedup");
+    let mut missing: Vec<&String> = Vec::new();
+    let mut slower = 0usize;
+    for (name, (b_opt, _)) in &base {
+        let Some((f_opt, f_spd)) = fresh.get(name) else {
+            missing.push(name);
+            continue;
+        };
+        let spd = f_spd.map_or_else(|| "-".to_string(), |s| format!("{s:.2}x"));
+        match (b_opt, f_opt) {
+            (Some(b), Some(f)) => {
+                let delta = (f - b) / b;
+                let mark = if delta > tol {
+                    slower += 1;
+                    "  <-- slower"
+                } else {
+                    ""
+                };
+                println!(
+                    "{name:<42} {:>10} {:>10} {:>+7.1}% {spd:>8}{mark}",
+                    fmt(*b),
+                    fmt(*f),
+                    delta * 100.0
+                );
+            }
+            (None, Some(f)) => {
+                println!(
+                    "{name:<42} {:>10} {:>10} {:>8} {spd:>8}  (no committed timing)",
+                    "-",
+                    fmt(*f),
+                    "-"
+                );
+            }
+            (_, None) => {
+                let b = b_opt.map_or_else(|| "-".to_string(), fmt);
+                println!("{name:<42} {b:>10} {:>10} {:>8} {:>8}  (fresh timing null)", "-", "-", "-");
+            }
+        }
+    }
+    for name in fresh.keys() {
+        if !base.contains_key(name) {
+            println!("{name:<42} (new row — not in baseline)");
+        }
+    }
+    if slower > 0 {
+        println!("note: {slower} row(s) slower than baseline beyond +{:.0}% (soft; not gating)", tol * 100.0);
+    }
+    if !missing.is_empty() {
+        for name in &missing {
+            println!("MISSING row in fresh run: {name}");
+        }
+        println!("bench-diff: structural regression — {} baseline row(s) missing", missing.len());
+        return Ok(1);
+    }
+    println!("bench-diff: ok ({} rows compared)", base.len());
+    Ok(0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,5 +544,72 @@ mod tests {
             err.to_string().contains("d-lion-local(<H>)"),
             "error should explain the expected form: {err}"
         );
+    }
+
+    fn write_bench_json(path: &std::path::Path, rows: &[(&str, Option<f64>)]) {
+        let rows_json: Vec<String> = rows
+            .iter()
+            .map(|(name, opt)| {
+                let (o, s) = match opt {
+                    Some(v) => (format!("{v}"), "2.0".to_string()),
+                    None => ("null".into(), "null".into()),
+                };
+                format!(
+                    "{{\"name\": \"{name}\", \"baseline_s\": {o}, \"optimized_s\": {o}, \"speedup\": {s}}}"
+                )
+            })
+            .collect();
+        std::fs::write(
+            path,
+            format!(
+                "{{\"bench\": \"hotpath\", \"threads\": 4, \"quick\": true, \
+                 \"provisional\": false, \"rows\": [{}]}}\n",
+                rows_json.join(", ")
+            ),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn bench_diff_passes_on_matching_rows_and_null_baselines() {
+        let dir = std::env::temp_dir().join("dlion_bench_diff_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let fresh = dir.join("fresh.json");
+        // one measured row, one provisional (null) row: both soft-pass
+        write_bench_json(&base, &[("kernel/a", Some(0.5)), ("kernel/b", None)]);
+        write_bench_json(&fresh, &[("kernel/a", Some(5.0)), ("kernel/b", Some(1.0))]);
+        let code = run(&[
+            "bench-diff".into(),
+            format!("--baseline={}", base.display()),
+            format!("--fresh={}", fresh.display()),
+        ])
+        .unwrap();
+        assert_eq!(code, 0, "slowdowns and null baselines must not gate");
+    }
+
+    #[test]
+    fn bench_diff_fails_on_missing_baseline_row() {
+        let dir = std::env::temp_dir().join("dlion_bench_diff_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let fresh = dir.join("fresh.json");
+        write_bench_json(&base, &[("kernel/a", Some(0.5)), ("kernel/gone", Some(0.5))]);
+        write_bench_json(&fresh, &[("kernel/a", Some(0.5)), ("kernel/new", Some(0.1))]);
+        let code = run(&[
+            "bench-diff".into(),
+            format!("--baseline={}", base.display()),
+            format!("--fresh={}", fresh.display()),
+        ])
+        .unwrap();
+        assert_eq!(code, 1, "a dropped row is a structural regression");
+        // malformed fresh file is an error, not a soft pass
+        std::fs::write(&fresh, "{not json").unwrap();
+        assert!(run(&[
+            "bench-diff".into(),
+            format!("--baseline={}", base.display()),
+            format!("--fresh={}", fresh.display()),
+        ])
+        .is_err());
     }
 }

@@ -108,6 +108,9 @@ pub fn run_sequential(
             let uplinks = engine.encode_all(&mut workers, &grads, lr, step);
             let (downlink, hops) = engine.aggregate(&uplinks, lr, step);
             engine.apply_all(&mut workers, &mut params, &downlink, lr, step);
+            // hand the round buffers back so the next sync step's
+            // envelopes reuse their allocations
+            engine.recycle_uplinks(uplinks);
             if cfg.check_replicas {
                 for w in 1..nworkers {
                     assert_eq!(params[0], params[w], "replica divergence at sync step {step}");

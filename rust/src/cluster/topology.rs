@@ -39,7 +39,9 @@
 
 use crate::comm::chunked;
 use crate::error::{DlionError, Result};
-use crate::optim::dist::{ChunkPlan, ServerLogic, Strategy, WorkerLogic};
+use crate::optim::dist::{
+    sign_frame_lens, ChunkPlan, ServerLogic, SignKernel, Strategy, WorkerLogic, TAG_SIGN,
+};
 use crate::util::parallel;
 use std::fmt;
 use std::ops::Range;
@@ -158,6 +160,12 @@ pub struct RoundEngine {
     root: Vec<Box<dyn ServerLogic>>,
     nworkers: usize,
     local_steps: usize,
+    /// Recycled per-worker round buffers: `encode_all` lays each
+    /// worker's tag-15 envelope out in one of these and chunk kernels
+    /// write payloads in place, so steady-state rounds allocate nothing
+    /// for uplinks. Returned to the pool via
+    /// [`RoundEngine::recycle_uplinks`].
+    uplink_bufs: Vec<Vec<u8>>,
 }
 
 impl RoundEngine {
@@ -195,7 +203,15 @@ impl RoundEngine {
         };
         let root =
             plan.chunks().map(|c| strategy.make_server_for_chunk(nworkers, nworkers, c)).collect();
-        RoundEngine { plan, groups, group_servers, root, nworkers, local_steps }
+        RoundEngine {
+            plan,
+            groups,
+            group_servers,
+            root,
+            nworkers,
+            local_steps,
+            uplink_bufs: Vec::new(),
+        }
     }
 
     /// The chunk plan every message of this engine follows.
@@ -216,20 +232,46 @@ impl RoundEngine {
     }
 
     /// Encode every worker's uplink message under the engine's plan,
-    /// worker-parallel on large models (deterministic: outputs are
-    /// collected in worker order and workers are independent).
+    /// parallel on large models (deterministic: every job writes a
+    /// disjoint, index-addressed slice, so scheduling never changes a
+    /// byte).
+    ///
+    /// When every worker exposes [`WorkerLogic::split_encode`] (the
+    /// sign family) and the plan is chunked, the engine runs
+    /// *(worker × chunk)*-parallel: each worker's momentum is carved
+    /// into disjoint `split_at_mut` slices along the plan, its tag-15
+    /// envelope is laid out at analytic offsets in a recycled round
+    /// buffer ([`chunked::pack_into`]), and every chunk kernel writes
+    /// its payload in place — closing the old "one worker's chunks
+    /// encode serially because `encode_planned` borrows the whole
+    /// worker" seam, with zero per-chunk allocation or splice copy.
+    /// Other strategies keep the per-worker parallel path.
     pub fn encode_all(
-        &self,
+        &mut self,
         workers: &mut [Box<dyn WorkerLogic>],
         grads: &[Vec<f32>],
         lr: f32,
         step: usize,
     ) -> Vec<Vec<u8>> {
         let plan = self.plan;
+        let mut bufs = std::mem::take(&mut self.uplink_bufs);
+        bufs.resize_with(workers.len(), Vec::new);
         let nthreads = parallel::auto_threads(plan.dim());
-        parallel::par_zip_map(workers, grads, nthreads, |w, g, _| {
-            w.encode_planned(g, &plan, lr, step)
-        })
+        if !plan.is_single() && workers.iter_mut().all(|w| w.split_encode().is_some()) {
+            encode_all_split(&plan, workers, grads, &mut bufs, nthreads);
+        } else {
+            parallel::par_zip2_mut(workers, &mut bufs, nthreads, |w, buf, i| {
+                *buf = w.encode_planned(&grads[i], &plan, lr, step);
+            });
+        }
+        bufs
+    }
+
+    /// Return a round's uplink messages to the engine's buffer pool so
+    /// the next [`RoundEngine::encode_all`] reuses their allocations.
+    /// Optional — dropping the uplinks instead is always correct.
+    pub fn recycle_uplinks(&mut self, uplinks: Vec<Vec<u8>>) {
+        self.uplink_bufs = uplinks;
     }
 
     /// Apply the broadcast downlink on every worker's replica,
@@ -366,6 +408,46 @@ impl RoundEngine {
         };
         (downlink, hops)
     }
+}
+
+/// The (worker × chunk) encode fan-out behind
+/// [`RoundEngine::encode_all`]: lay out every worker's envelope
+/// skeleton in its recycled buffer, carve each worker's momentum and
+/// envelope into disjoint per-chunk slices, then run all chunk kernels
+/// as one flat parallel job list. Every job owns its slices, so any
+/// schedule writes the same bytes as the sequential
+/// `encode_planned` path (pinned in `tests/swar_kernels.rs`).
+fn encode_all_split(
+    plan: &ChunkPlan,
+    workers: &mut [Box<dyn WorkerLogic>],
+    grads: &[Vec<f32>],
+    bufs: &mut [Vec<u8>],
+    nthreads: usize,
+) {
+    struct Job<'a> {
+        kernel: SignKernel,
+        state: &'a mut [f32],
+        grads: &'a [f32],
+        payload: &'a mut [u8],
+    }
+    let lens = sign_frame_lens(plan);
+    let mut jobs: Vec<Job<'_>> = Vec::with_capacity(workers.len() * plan.num_chunks());
+    for ((w, buf), g) in workers.iter_mut().zip(bufs.iter_mut()).zip(grads) {
+        let ranges = chunked::pack_into(buf, &lens);
+        let se = w.split_encode().expect("encode_all checked every worker splits");
+        debug_assert_eq!(se.state.len(), plan.dim(), "split state must cover the model");
+        let mut rest = se.state;
+        for (frame, c) in chunked::split_ranges_mut(buf, &ranges).into_iter().zip(plan.chunks()) {
+            let (state, r) = std::mem::take(&mut rest).split_at_mut(c.len());
+            rest = r;
+            frame[0] = TAG_SIGN;
+            let (_, payload) = frame.split_at_mut(1);
+            jobs.push(Job { kernel: se.kernel, state, grads: &g[c.range()], payload });
+        }
+    }
+    parallel::par_for_each_mut(&mut jobs, nthreads, |job, _| {
+        job.kernel.encode(job.state, job.grads, job.payload);
+    });
 }
 
 #[cfg(test)]

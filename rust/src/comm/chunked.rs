@@ -122,6 +122,54 @@ pub fn pack(frames: &[Vec<u8>]) -> Vec<u8> {
     msg
 }
 
+/// Lay out the envelope skeleton for frames of *known* lengths directly
+/// into a reused buffer (§Perf optimization #4, the zero-copy frame
+/// assembly path): writes the `[15][count]` header and every 4-byte
+/// length prefix, zeroes the frame bodies, and returns each frame's
+/// byte range within `buf`. Callers fill the frame bodies in place —
+/// sign-family frame sizes are analytic (1 + ⌈len/8⌉), so the whole
+/// uplink is assembled with zero per-chunk allocations and no splice
+/// copy. `pack_into` followed by in-place frame fills is byte-identical
+/// to [`pack`] of the same frames.
+pub fn pack_into(buf: &mut Vec<u8>, frame_lens: &[usize]) -> Vec<std::ops::Range<usize>> {
+    assert!(frame_lens.len() <= u16::MAX as usize, "too many chunks for the u16 count");
+    let total = 3 + frame_lens.iter().map(|l| 4 + l).sum::<usize>();
+    buf.clear();
+    buf.resize(total, 0);
+    buf[0] = TAG_CHUNKED;
+    buf[1..3].copy_from_slice(&(frame_lens.len() as u16).to_le_bytes());
+    let mut ranges = Vec::with_capacity(frame_lens.len());
+    let mut off = 3usize;
+    for &len in frame_lens {
+        buf[off..off + 4].copy_from_slice(&(len as u32).to_le_bytes());
+        off += 4;
+        ranges.push(off..off + len);
+        off += len;
+    }
+    ranges
+}
+
+/// Split disjoint ascending `ranges` of `buf` (as returned by
+/// [`pack_into`]) into independent mutable frame views, so each chunk
+/// encoder can write its frame from its own thread. Panics if the
+/// ranges overlap, run backwards, or overrun `buf`.
+pub fn split_ranges_mut<'a>(
+    mut buf: &'a mut [u8],
+    ranges: &[std::ops::Range<usize>],
+) -> Vec<&'a mut [u8]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut consumed = 0usize;
+    for r in ranges {
+        assert!(r.start >= consumed && r.end >= r.start, "ranges must be disjoint ascending");
+        let (_, rest) = buf.split_at_mut(r.start - consumed);
+        let (frame, rest) = rest.split_at_mut(r.end - r.start);
+        out.push(frame);
+        buf = rest;
+        consumed = r.end;
+    }
+    out
+}
+
 /// Unpack a chunked message into per-chunk frame views (no copies),
 /// naming exactly what is malformed otherwise. Never panics.
 pub fn try_unpack(msg: &[u8]) -> Result<Vec<&[u8]>, ChunkedError> {
@@ -248,6 +296,38 @@ mod tests {
         for (b, f) in back.iter().zip(&frames) {
             assert_eq!(b, &f.as_slice());
         }
+    }
+
+    #[test]
+    fn pack_into_plus_fills_is_byte_identical_to_pack() {
+        let frames = vec![vec![1u8, 0xAB], vec![1u8, 0xCD, 0xEF], vec![1u8]];
+        let lens: Vec<usize> = frames.iter().map(|f| f.len()).collect();
+        let mut buf = vec![0x77u8; 3]; // stale reused buffer
+        let ranges = pack_into(&mut buf, &lens);
+        assert_eq!(ranges.len(), frames.len());
+        let views = split_ranges_mut(&mut buf, &ranges);
+        for (view, f) in views.into_iter().zip(&frames) {
+            view.copy_from_slice(f);
+        }
+        assert_eq!(buf, pack(&frames));
+        // reuse: second layout with different lengths starts clean
+        let frames2 = vec![vec![2u8; 5], vec![2u8; 1]];
+        let lens2: Vec<usize> = frames2.iter().map(|f| f.len()).collect();
+        let ranges2 = pack_into(&mut buf, &lens2);
+        for (view, f) in split_ranges_mut(&mut buf, &ranges2).into_iter().zip(&frames2) {
+            view.copy_from_slice(f);
+        }
+        assert_eq!(buf, pack(&frames2));
+    }
+
+    #[test]
+    fn split_ranges_mut_views_are_disjoint_and_aligned() {
+        let mut buf: Vec<u8> = (0..20).collect();
+        let ranges = vec![2..5, 5..5, 9..12];
+        let views = split_ranges_mut(&mut buf, &ranges);
+        assert_eq!(views[0], &[2, 3, 4]);
+        assert!(views[1].is_empty());
+        assert_eq!(views[2], &[9, 10, 11]);
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod intavg;
 pub mod sign;
 pub mod simnet;
 pub mod sparse;
+pub mod swar;
 pub mod tcp;
 pub mod tern;
 pub mod transport;

@@ -23,8 +23,18 @@ pub fn pack(signs: &[i8]) -> Vec<u8> {
 }
 
 /// Pack from the sign bit of f32 values: v >= 0.0 ⇒ +1. This is the hot-path
-/// variant used by the worker: it never materializes the i8 vector.
+/// variant used by the worker: it never materializes the i8 vector. Routed
+/// through the SWAR word gather (§Perf optimization #4,
+/// [`crate::comm::swar::pack_f32_into`]); [`pack_f32_scalar`] is the oracle.
 pub fn pack_f32(values: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(values.len())];
+    super::swar::pack_f32_into(values, &mut out);
+    out
+}
+
+/// Reference per-lane implementation of [`pack_f32`] (kept as the §Perf
+/// ablation baseline and the property-test oracle for the SWAR gather).
+pub fn pack_f32_scalar(values: &[f32]) -> Vec<u8> {
     let mut out = vec![0u8; packed_len(values.len())];
     // Process 8 at a time: build a byte from the IEEE sign bits.
     let chunks = values.chunks_exact(8);
@@ -54,9 +64,18 @@ pub fn unpack(packed: &[u8], d: usize) -> Vec<i8> {
     out
 }
 
-/// Unpack into a preallocated buffer (hot path, no allocation).
+/// Unpack into a preallocated buffer (hot path, no allocation): full
+/// bytes expand through [`VOTE_LUT`] — one table row copy per 8 lanes
+/// instead of 8 shift/mask selects — with a per-bit loop only for the
+/// final partial byte.
 pub fn unpack_into(packed: &[u8], out: &mut [i8]) {
-    for (i, o) in out.iter_mut().enumerate() {
+    let full = out.len() / 8;
+    let (head, tail) = out.split_at_mut(full * 8);
+    for (ci, chunk) in head.chunks_exact_mut(8).enumerate() {
+        chunk.copy_from_slice(&VOTE_LUT[packed[ci] as usize]);
+    }
+    for (j, o) in tail.iter_mut().enumerate() {
+        let i = full * 8 + j;
         *o = if packed[i >> 3] >> (i & 7) & 1 == 1 { 1 } else { -1 };
     }
 }
@@ -137,6 +156,38 @@ mod tests {
             let v = testing::gen_vec_normal(&mut rng, 0, 200, 1.0);
             let signs: Vec<i8> = v.iter().map(|&x| if x >= 0.0 { 1 } else { -1 }).collect();
             assert_eq!(pack_f32(&v), pack(&signs));
+        }
+    }
+
+    #[test]
+    fn pack_f32_swar_matches_scalar_for_all_remainders() {
+        let mut rng = Rng::new(0x56);
+        for base in [0usize, 8, 64, 320] {
+            for rem in 0..8usize {
+                let d = base + rem;
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 1.0);
+                if d > 0 {
+                    v[rng.below(d)] = -0.0;
+                    v[rng.below(d)] = 0.0;
+                }
+                assert_eq!(pack_f32(&v), pack_f32_scalar(&v), "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_roundtrips_all_remainder_lengths() {
+        // every remainder 0..8 on top of whole-byte spans, so both the
+        // LUT row copy and the partial-byte tail are exercised
+        let mut rng = Rng::new(0x57);
+        for base in [0usize, 8, 56, 128] {
+            for rem in 0..8usize {
+                let d = base + rem;
+                let signs: Vec<i8> =
+                    (0..d).map(|_| if rng.next_u64() & 1 == 0 { 1 } else { -1 }).collect();
+                assert_eq!(unpack(&pack(&signs), d), signs, "d={d}");
+            }
         }
     }
 

@@ -1,0 +1,313 @@
+//! SWAR (SIMD-within-a-register) kernels for the 1-bit sign wire
+//! (§Perf optimization #4).
+//!
+//! Two hot loops dominate a Distributed-Lion round once the wire itself
+//! is 1 bit/param: the worker-side sign gather (blend → packed payload)
+//! and the server-side vote accumulate (N packed payloads → majority
+//! plane). Both are bit-parallel problems, so plain u64 registers can
+//! process 64 lanes per operation with no SIMD intrinsics (the offline
+//! build targets stable scalar Rust):
+//!
+//! * **Sign gather** ([`sign_byte8`] / [`pack_f32_into`]): two f32 bit
+//!   patterns are packed into one u64, whose bits 31 and 63 are the two
+//!   IEEE sign bits. One shift + mask isolates both at once, so a byte
+//!   of payload costs 4 word ops instead of 8 per-lane shift/or chains.
+//! * **Bit-sliced majority vote** ([`VotePlanes`]): per 64-lane word the
+//!   accumulator keeps B = ⌈log2(N+1)⌉ u64 *bit planes* — plane b holds
+//!   bit b of every lane's vote counter. Adding one worker's packed
+//!   payload is a carry-save ripple (`t = plane & carry; plane ^= carry;
+//!   carry = t`), i.e. ≤ B word ops for 64 lanes, versus 64 separate i32
+//!   adds in the scalar [`VOTE_LUT`] path. The majority plane ("count ≥
+//!   threshold") falls out of one more bit-sliced add: adding the
+//!   constant K = 2^B − T makes the per-lane carry-out exactly the
+//!   predicate count ≥ T, and that carry word *is* the packed MaVo
+//!   downlink payload.
+//!
+//! Bit-exactness: a lane's counter is the exact integer count of +1
+//! votes, and integer addition is associative, so any grouping of
+//! payloads (per-round, hierarchical partials, chunked splices) yields
+//! the same planes — the kernel is pinned against the scalar
+//! [`accumulate_votes`] oracle in unit + property tests.
+//!
+//! [`VOTE_LUT`]: super::sign::accumulate_votes
+//! [`accumulate_votes`]: super::sign::accumulate_votes
+
+use super::sign::packed_len;
+use crate::util::math::bits_for_count;
+
+/// Gather the IEEE sign bits of 8 lanes into one payload byte
+/// (bit j = 1 ⇔ `v[j]` is non-negative, i.e. sign bit clear — the
+/// [`super::sign`] codec convention, +0.0 ⇒ +1, −0.0 ⇒ −1).
+#[inline]
+pub fn sign_byte8(v: &[f32; 8]) -> u8 {
+    let mut y = 0u64;
+    for (i, pair) in v.chunks_exact(2).enumerate() {
+        // bits 31 and 63 of w are the two IEEE sign bits
+        let w = (pair[0].to_bits() as u64) | ((pair[1].to_bits() as u64) << 32);
+        y |= ((w >> 31) & 0x0000_0001_0000_0001) << (2 * i);
+    }
+    // low half: even lanes at bits {0,2,4,6}; high half: odd lanes at
+    // bits {32,34,36,38} — `y >> 31` drops them onto the odd bits.
+    !(((y | (y >> 31)) & 0xff) as u8)
+}
+
+/// Build a partial payload byte from fewer than 8 trailing lanes
+/// (unused high bits are 0, matching the codec's zero-fill).
+#[inline]
+pub fn sign_byte_partial(rem: &[f32]) -> u8 {
+    debug_assert!(rem.len() < 8);
+    let mut byte = 0u8;
+    for (j, &v) in rem.iter().enumerate() {
+        byte |= (((v.to_bits() >> 31) ^ 1) as u8) << j;
+    }
+    byte
+}
+
+/// SWAR sign gather into a preallocated payload (the zero-copy frame
+/// assembly path): writes exactly `packed_len(values.len())` bytes of
+/// `out`, overwriting every byte it touches so reused round buffers
+/// never leak stale bits.
+pub fn pack_f32_into(values: &[f32], out: &mut [u8]) {
+    debug_assert!(out.len() >= packed_len(values.len()));
+    let chunks = values.chunks_exact(8);
+    let rem = chunks.remainder();
+    for (ci, chunk) in chunks.enumerate() {
+        out[ci] = sign_byte8(chunk.try_into().expect("chunks_exact(8) yields 8 lanes"));
+    }
+    if !rem.is_empty() {
+        out[values.len() / 8] = sign_byte_partial(rem);
+    }
+}
+
+/// Read 64 payload lanes as one little-endian word, zero-filling past
+/// the end of the payload (payload bit i = word bit i for LE bytes).
+#[inline]
+fn read_word(packed: &[u8], wi: usize) -> u64 {
+    let start = wi * 8;
+    if start + 8 <= packed.len() {
+        u64::from_le_bytes(packed[start..start + 8].try_into().expect("8-byte window"))
+    } else {
+        let mut buf = [0u8; 8];
+        let rem = packed.len() - start;
+        buf[..rem].copy_from_slice(&packed[start..]);
+        u64::from_le_bytes(buf)
+    }
+}
+
+/// Bit-sliced vote accumulator: per 64-lane word, B = ⌈log2(N+1)⌉ u64
+/// bit planes hold every lane's count of +1 votes (see module docs).
+///
+/// The planes are stored interleaved (`planes[word * nbits + bit]`) so
+/// one worker-add touches B contiguous words per input word — a single
+/// forward stream over the buffer.
+pub struct VotePlanes {
+    planes: Vec<u64>,
+    nbits: usize,
+    dim: usize,
+    added: usize,
+}
+
+impl VotePlanes {
+    /// Accumulator for `dim` lanes and up to `nworkers` payloads per
+    /// round (B = ⌈log2(nworkers+1)⌉ planes per word).
+    pub fn new(dim: usize, nworkers: usize) -> Self {
+        assert!(nworkers >= 1, "vote planes need at least one voter");
+        let nbits = bits_for_count(nworkers) as usize;
+        let words = dim.div_ceil(64);
+        VotePlanes { planes: vec![0u64; words * nbits], nbits, dim, added: 0 }
+    }
+
+    /// Number of lanes.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Payloads added since the last [`VotePlanes::reset`].
+    pub fn added(&self) -> usize {
+        self.added
+    }
+
+    /// Clear all counters for the next round (keeps the allocation).
+    pub fn reset(&mut self) {
+        self.planes.fill(0);
+        self.added = 0;
+    }
+
+    /// Carry-save add of one packed sign payload (payload bit 1 ⇒ that
+    /// lane gains a +1 vote; bit 0 leaves its counter unchanged).
+    pub fn add(&mut self, packed: &[u8]) {
+        debug_assert_eq!(packed.len(), packed_len(self.dim), "payload/dim mismatch");
+        debug_assert!(self.added + 1 < (1usize << self.nbits), "vote planes at capacity");
+        let nbits = self.nbits;
+        for (wi, word_planes) in self.planes.chunks_exact_mut(nbits).enumerate() {
+            let mut carry = read_word(packed, wi);
+            for p in word_planes.iter_mut() {
+                if carry == 0 {
+                    break;
+                }
+                let t = *p & carry;
+                *p ^= carry;
+                carry = t;
+            }
+            debug_assert_eq!(carry, 0, "vote plane counter overflow");
+        }
+        self.added += 1;
+    }
+
+    /// Emit the packed `[count ≥ threshold]` plane — for odd N and
+    /// threshold T = (N+1)/2 this is exactly the MaVo downlink payload
+    /// (`sign(Σδ) > 0`). Writes `packed_len(dim)` bytes of `out`; lanes
+    /// past `dim` come out 0, matching the codec's zero-fill.
+    ///
+    /// Implementation: bit-sliced add of the constant K = 2^B − T; the
+    /// per-lane carry-out of `count + K` is `count ≥ T`.
+    pub fn threshold_into(&self, threshold: usize, out: &mut [u8]) {
+        assert!(
+            (1..=(1usize << self.nbits)).contains(&threshold),
+            "threshold {threshold} out of range for {} planes",
+            self.nbits
+        );
+        let plen = packed_len(self.dim);
+        debug_assert!(out.len() >= plen);
+        let k = (1u64 << self.nbits) - threshold as u64;
+        let nbits = self.nbits;
+        for (wi, word_planes) in self.planes.chunks_exact(nbits).enumerate() {
+            let mut carry = 0u64;
+            for (b, &p) in word_planes.iter().enumerate() {
+                let kb = 0u64.wrapping_sub((k >> b) & 1); // broadcast bit b of K
+                carry = (p & kb) | (p & carry) | (kb & carry);
+            }
+            let start = wi * 8;
+            let n = (plen - start).min(8);
+            out[start..start + n].copy_from_slice(&carry.to_le_bytes()[..n]);
+        }
+    }
+
+    /// Extract per-lane +1-vote counts (test oracle / debugging; the
+    /// hot path never materializes these).
+    pub fn counts_into(&self, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let nbits = self.nbits;
+        for (i, o) in out.iter_mut().enumerate() {
+            let (wi, bit) = (i / 64, i % 64);
+            let mut c = 0u64;
+            for b in 0..nbits {
+                c |= ((self.planes[wi * nbits + b] >> bit) & 1) << b;
+            }
+            *o = c as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::sign;
+    use crate::util::Rng;
+
+    fn random_signs(rng: &mut Rng, d: usize) -> Vec<i8> {
+        (0..d).map(|_| if rng.next_u64() & 1 == 0 { 1i8 } else { -1 }).collect()
+    }
+
+    #[test]
+    fn sign_byte8_matches_scalar_gather() {
+        let mut rng = Rng::new(0x5A);
+        for _ in 0..256 {
+            let mut v = [0.0f32; 8];
+            for x in v.iter_mut() {
+                *x = rng.normal_f32(0.0, 1.0);
+            }
+            // inject signed zeros sometimes
+            if rng.next_u64() & 3 == 0 {
+                v[rng.below(8)] = if rng.next_u64() & 1 == 0 { 0.0 } else { -0.0 };
+            }
+            let mut expect = 0u8;
+            for (j, &x) in v.iter().enumerate() {
+                expect |= (((x.to_bits() >> 31) ^ 1) as u8) << j;
+            }
+            assert_eq!(sign_byte8(&v), expect, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn pack_f32_into_matches_codec_for_all_remainders() {
+        let mut rng = Rng::new(0x5B);
+        for d in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 63, 64, 65, 200, 1003] {
+            let mut v = vec![0.0f32; d];
+            for x in v.iter_mut() {
+                *x = rng.normal_f32(0.0, 1.0);
+            }
+            if d > 0 {
+                v[rng.below(d)] = -0.0;
+            }
+            let mut out = vec![0xAAu8; sign::packed_len(d)]; // poisoned buffer
+            pack_f32_into(&v, &mut out);
+            assert_eq!(out, sign::pack_f32(&v), "d={d}");
+        }
+    }
+
+    #[test]
+    fn plane_counts_match_naive_vote_sums() {
+        let mut rng = Rng::new(0x5C);
+        for n in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 32] {
+            for d in [0usize, 1, 7, 8, 63, 64, 65, 200] {
+                let mut planes = VotePlanes::new(d, n);
+                let mut votes = vec![0i32; d];
+                for _ in 0..n {
+                    let packed = sign::pack(&random_signs(&mut rng, d));
+                    sign::accumulate_votes_naive(&packed, &mut votes);
+                    planes.add(&packed);
+                }
+                let mut counts = vec![0i32; d];
+                planes.counts_into(&mut counts);
+                // votes = 2c − n  ⇔  c = (votes + n) / 2
+                let expect: Vec<i32> = votes.iter().map(|&v| (v + n as i32) / 2).collect();
+                assert_eq!(counts, expect, "n={n} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_plane_is_packed_majority_for_odd_n() {
+        let mut rng = Rng::new(0x5D);
+        for n in [1usize, 3, 5, 7, 9] {
+            for d in [1usize, 7, 8, 63, 64, 65, 200] {
+                let mut planes = VotePlanes::new(d, n);
+                let mut votes = vec![0i32; d];
+                for _ in 0..n {
+                    let packed = sign::pack(&random_signs(&mut rng, d));
+                    sign::accumulate_votes(&packed, &mut votes);
+                    planes.add(&packed);
+                }
+                let majority: Vec<i8> =
+                    votes.iter().map(|&v| if v > 0 { 1 } else { -1 }).collect();
+                let expect = sign::pack(&majority);
+                let mut got = vec![0xAAu8; sign::packed_len(d)];
+                planes.threshold_into(n.div_ceil(2), &mut got);
+                assert_eq!(got, expect, "n={n} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears_and_reuses_allocation() {
+        let mut rng = Rng::new(0x5E);
+        let d = 130;
+        let mut planes = VotePlanes::new(d, 5);
+        for _ in 0..5 {
+            planes.add(&sign::pack(&random_signs(&mut rng, d)));
+        }
+        planes.reset();
+        assert_eq!(planes.added(), 0);
+        let mut votes = vec![0i32; d];
+        for _ in 0..3 {
+            let packed = sign::pack(&random_signs(&mut rng, d));
+            sign::accumulate_votes(&packed, &mut votes);
+            planes.add(&packed);
+        }
+        let mut counts = vec![0i32; d];
+        planes.counts_into(&mut counts);
+        let expect: Vec<i32> = votes.iter().map(|&v| (v + 3) / 2).collect();
+        assert_eq!(counts, expect);
+    }
+}

@@ -13,12 +13,12 @@
 //! (Bernstein et al. 2018), the paper's Figure-4 ablation.
 
 use super::{
-    frame, sign_family_downlink_bits, Chunk, Chunking, ServerLogic, SignVoteServer, Strategy,
-    UpdateDecoder, WorkerLogic, SIGN_FAMILY_ALIGN, TAG_SIGN,
+    frame, sign_family_downlink_bits, Chunk, Chunking, ServerLogic, SignKernel, SignVoteServer,
+    SplitEncode, Strategy, UpdateDecoder, WorkerLogic, SIGN_FAMILY_ALIGN, TAG_SIGN,
 };
 use crate::comm::sign;
 use crate::optim::lion::Lion;
-use crate::optim::signum::Signum;
+use crate::optim::signum::{signum_encode_slice, Signum};
 use crate::optim::LionParams;
 use crate::util::math::bits_for_count;
 
@@ -69,6 +69,16 @@ impl WorkerLogic for DLionWorker {
     fn apply_chunk(&mut self, params: &mut [f32], msg: &[u8], chunk: Chunk, lr: f32, _step: usize) {
         let update = self.decoder.decode_len(msg, chunk.len());
         Lion::apply_aggregated(&mut params[chunk.range()], update, lr, self.weight_decay);
+    }
+
+    /// The fused Lion encode is a pure slice kernel over the momentum,
+    /// so the round engine may encode this worker's chunks in parallel.
+    fn split_encode(&mut self) -> Option<SplitEncode<'_>> {
+        let LionParams { beta1, beta2, .. } = self.lion.hp;
+        Some(SplitEncode {
+            state: &mut self.lion.momentum,
+            kernel: SignKernel::LionFused { beta1, beta2 },
+        })
     }
 
     fn momentum(&self) -> Option<&[f32]> {
@@ -133,15 +143,25 @@ impl DSignum {
 struct DSignumWorker {
     signum: Signum,
     weight_decay: f32,
-    blend: Vec<f32>,
     decoder: UpdateDecoder,
+}
+
+impl DSignumWorker {
+    /// Fused advance-and-pack over one momentum range (Signum signs the
+    /// freshly-advanced momentum) — single pass, no blend scratch.
+    fn encode_range(&mut self, grads: &[f32], range: std::ops::Range<usize>) -> Vec<u8> {
+        let gs = &grads[range.clone()];
+        let ms = &mut self.signum.momentum[range];
+        let mut msg = vec![0u8; 1 + sign::packed_len(gs.len())];
+        msg[0] = TAG_SIGN;
+        signum_encode_slice(self.signum.beta, ms, gs, &mut msg[1..]);
+        msg
+    }
 }
 
 impl WorkerLogic for DSignumWorker {
     fn encode(&mut self, grads: &[f32], _lr: f32, _step: usize) -> Vec<u8> {
-        // Signum signs the freshly-advanced momentum.
-        self.signum.update_and_peek(grads, &mut self.blend);
-        frame(TAG_SIGN, &sign::pack_f32(&self.blend))
+        self.encode_range(grads, 0..grads.len())
     }
 
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
@@ -150,14 +170,20 @@ impl WorkerLogic for DSignumWorker {
     }
 
     fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
-        let len = chunk.len();
-        self.signum.update_and_peek_range(grads, chunk.range(), &mut self.blend[..len]);
-        frame(TAG_SIGN, &sign::pack_f32(&self.blend[..len]))
+        self.encode_range(grads, chunk.range())
     }
 
     fn apply_chunk(&mut self, params: &mut [f32], msg: &[u8], chunk: Chunk, lr: f32, _step: usize) {
         let update = self.decoder.decode_len(msg, chunk.len());
         Lion::apply_aggregated(&mut params[chunk.range()], update, lr, self.weight_decay);
+    }
+
+    /// Signum's fused encode is a pure slice kernel over the momentum.
+    fn split_encode(&mut self) -> Option<SplitEncode<'_>> {
+        Some(SplitEncode {
+            state: &mut self.signum.momentum,
+            kernel: SignKernel::Signum { beta: self.signum.beta },
+        })
     }
 
     fn momentum(&self) -> Option<&[f32]> {
@@ -177,7 +203,6 @@ impl Strategy for DSignum {
         Box::new(DSignumWorker {
             signum: Signum::new(dim, self.beta, self.weight_decay),
             weight_decay: self.weight_decay,
-            blend: vec![0.0; dim],
             decoder: UpdateDecoder::new(dim),
         })
     }

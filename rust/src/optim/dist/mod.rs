@@ -80,7 +80,7 @@ pub mod msync;
 pub mod select;
 pub mod terngrad;
 
-use crate::comm::{chunked, intavg, sign, tern};
+use crate::comm::{chunked, intavg, sign, swar, tern};
 use crate::error::{DlionError, Result};
 use crate::optim::LionParams;
 use crate::util::math::bits_for_count;
@@ -266,6 +266,59 @@ pub enum Chunking {
     },
 }
 
+/// Pure per-chunk encode kernel for the sign-family split-borrow path:
+/// a `Copy` recipe that turns a disjoint momentum slice + gradient slice
+/// into a 1-bit `TAG_SIGN` payload, advancing the momentum in the same
+/// pass. Because it borrows nothing, the round engine can run one
+/// worker's chunks on different threads (see
+/// [`WorkerLogic::split_encode`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SignKernel {
+    /// Fused D-Lion worker encode: pack bsign(β1·m + (1−β1)·g), then
+    /// m ← β2·m + (1−β2)·g ([`crate::optim::lion::fused_encode_slice`]).
+    LionFused {
+        /// Lion blend coefficient β1.
+        beta1: f32,
+        /// Lion momentum coefficient β2.
+        beta2: f32,
+    },
+    /// Fused Signum worker encode: m ← β·m + (1−β)·g, then pack
+    /// bsign(m) ([`crate::optim::signum::signum_encode_slice`]).
+    Signum {
+        /// Signum momentum coefficient β.
+        beta: f32,
+    },
+}
+
+impl SignKernel {
+    /// Encode one chunk: `state` and `grads` are the chunk's disjoint
+    /// slices, `out` is the chunk frame's payload (bit 0 = slice lane 0,
+    /// `sign::packed_len(len)` bytes, every byte overwritten).
+    pub fn encode(self, state: &mut [f32], grads: &[f32], out: &mut [u8]) {
+        match self {
+            SignKernel::LionFused { beta1, beta2 } => {
+                crate::optim::lion::fused_encode_slice(beta1, beta2, state, grads, out)
+            }
+            SignKernel::Signum { beta } => {
+                crate::optim::signum::signum_encode_slice(beta, state, grads, out)
+            }
+        }
+    }
+}
+
+/// Split-borrow view of a worker's encode state (returned by
+/// [`WorkerLogic::split_encode`]): the whole-model mutable state slice
+/// plus the kernel that encodes any sub-range of it. The caller carves
+/// `state` into disjoint `split_at_mut` slices along the `ChunkPlan` and
+/// may run the kernel on each from a different thread.
+pub struct SplitEncode<'a> {
+    /// The worker's full mutable per-parameter state (Lion/Signum
+    /// momentum), index-aligned with the model parameters.
+    pub state: &'a mut [f32],
+    /// The pure per-chunk encode recipe.
+    pub kernel: SignKernel,
+}
+
 /// Worker-side half of one synchronous round (Algorithm 1 lines 4–6, 9).
 ///
 /// `encode` consumes the local stochastic gradient and produces the
@@ -311,12 +364,38 @@ pub trait WorkerLogic: Send {
         self.apply(params, frame, lr, step);
     }
 
+    /// Split-borrowable encode surface for chunk-parallel rounds.
+    /// Returning `Some` promises that, for **any** `ChunkPlan`, encoding
+    /// each chunk via [`SignKernel::encode`] on the corresponding
+    /// disjoint `state` slice produces exactly the bytes of
+    /// [`WorkerLogic::encode_chunk`] (a `TAG_SIGN` frame of analytic
+    /// size `1 + sign::packed_len(len)`), independent of chunk order.
+    /// The default `None` keeps strategies whose uplink cannot be built
+    /// from disjoint per-round state slices (monolithic codecs,
+    /// data-dependent frame sizes, step-dependent frames like momentum
+    /// sync) on the per-worker sequential path.
+    fn split_encode(&mut self) -> Option<SplitEncode<'_>> {
+        None
+    }
+
     /// Encode the full uplink message under `plan`: the bare monolithic
     /// frame for a single-chunk plan, a tag-15 chunked envelope
     /// otherwise. This is what the cluster drivers call.
+    ///
+    /// Workers exposing [`WorkerLogic::split_encode`] assemble the
+    /// envelope zero-copy: one exact-size buffer laid out up front
+    /// ([`chunked::pack_into`], sign-family frame sizes are analytic)
+    /// with each chunk kernel writing its payload in place — no
+    /// per-chunk `Vec` churn or splice copy. Other strategies collect
+    /// per-chunk frames and splice.
     fn encode_planned(&mut self, grads: &[f32], plan: &ChunkPlan, lr: f32, step: usize) -> Vec<u8> {
         if plan.is_single() {
             return self.encode(grads, lr, step);
+        }
+        if let Some(se) = self.split_encode() {
+            let mut buf = Vec::new();
+            encode_split_into(se, grads, plan, &mut buf);
+            return buf;
         }
         let frames: Vec<Vec<u8>> =
             plan.chunks().map(|c| self.encode_chunk(grads, c, lr, step)).collect();
@@ -363,6 +442,33 @@ pub trait WorkerLogic: Send {
     /// under non-iid shards; never used on the training path.
     fn momentum(&self) -> Option<&[f32]> {
         None
+    }
+}
+
+/// Analytic frame lengths of a sign-family chunked uplink: each chunk is
+/// a `[TAG_SIGN]` frame over `chunk.len()` 1-bit lanes.
+pub fn sign_frame_lens(plan: &ChunkPlan) -> Vec<usize> {
+    plan.chunks().map(|c| 1 + sign::packed_len(c.len())).collect()
+}
+
+/// Assemble a sign-family chunked uplink into `buf` with zero per-chunk
+/// allocations: lay out the tag-15 envelope at its analytic offsets,
+/// then run the worker's [`SignKernel`] over each chunk's disjoint
+/// state/grad slices, writing payload bytes in place. Byte-identical to
+/// the collect-and-[`chunked::pack`] path. Sequential counterpart of
+/// the round engine's chunk-parallel encode; reuses `buf`'s capacity.
+pub fn encode_split_into(se: SplitEncode<'_>, grads: &[f32], plan: &ChunkPlan, buf: &mut Vec<u8>) {
+    debug_assert_eq!(se.state.len(), plan.dim(), "split state must cover the model");
+    debug_assert_eq!(grads.len(), plan.dim());
+    let lens = sign_frame_lens(plan);
+    let ranges = chunked::pack_into(buf, &lens);
+    let kernel = se.kernel;
+    let mut rest = se.state;
+    for (frame, c) in chunked::split_ranges_mut(buf, &ranges).into_iter().zip(plan.chunks()) {
+        let (state, r) = std::mem::take(&mut rest).split_at_mut(c.len());
+        rest = r;
+        frame[0] = TAG_SIGN;
+        kernel.encode(state, &grads[c.range()], &mut frame[1..]);
     }
 }
 
@@ -926,11 +1032,19 @@ pub(crate) struct SignVoteServer {
     votes: Vec<i32>,
     /// scratch for decoding one group partial during `fold`
     scratch: Vec<i32>,
+    /// §Perf optimization #4 — bit-sliced accumulator for the pure-vote
+    /// downlink (odd-N MajorityVote only; `None` keeps the i32 oracle
+    /// path for averages, even-N ternary ties, and partials).
+    planes: Option<swar::VotePlanes>,
 }
 
 impl SignVoteServer {
     pub(crate) fn new(nworkers: usize, dim: usize, agg: Aggregation) -> Self {
-        SignVoteServer { nworkers, agg, votes: vec![0; dim], scratch: Vec::new() }
+        // Odd-N majority vote never needs the integer sums — only the
+        // [count ≥ (N+1)/2] plane — so it runs on the SWAR accumulator.
+        let planes = (agg == Aggregation::MajorityVote && nworkers % 2 == 1)
+            .then(|| swar::VotePlanes::new(dim, nworkers));
+        SignVoteServer { nworkers, agg, votes: vec![0; dim], scratch: Vec::new(), planes }
     }
 
     /// Zero the vote buffer and accumulate the 1-bit uplinks into it.
@@ -940,6 +1054,28 @@ impl SignVoteServer {
             assert_eq!(up[0], TAG_SIGN, "sign-vote server expects 1-bit uplinks");
             sign::accumulate_votes(&up[1..], &mut self.votes);
         }
+    }
+
+    /// Bit-sliced fast path for the full aggregate (`None` when this
+    /// server's downlink is not a pure odd-N majority plane): carry-save
+    /// accumulate the payload words, then emit the packed
+    /// [count ≥ (N+1)/2] plane straight into the downlink frame — the
+    /// per-lane i32 votes are never materialized. Bit-exact with
+    /// [`SignVoteServer::finish`]'s odd-N arm (`vote sum > 0 ⇔ count ≥
+    /// (N+1)/2`); partials stay on the integer path since plane counters
+    /// sum associatively either way.
+    fn aggregate_swar<'a>(&mut self, uplinks: impl Iterator<Item = &'a [u8]>) -> Option<Vec<u8>> {
+        let planes = self.planes.as_mut()?;
+        planes.reset();
+        for up in uplinks {
+            assert_eq!(up[0], TAG_SIGN, "sign-vote server expects 1-bit uplinks");
+            planes.add(&up[1..]);
+        }
+        debug_assert_eq!(planes.added(), self.nworkers);
+        let mut msg = vec![0u8; 1 + sign::packed_len(planes.dim())];
+        msg[0] = TAG_SIGN;
+        planes.threshold_into(self.nworkers.div_ceil(2), &mut msg[1..]);
+        Some(msg)
     }
 
     /// Encode the accumulated votes as a tag-3 intavg partial frame.
@@ -1005,6 +1141,9 @@ impl SignVoteServer {
 impl ServerLogic for SignVoteServer {
     fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        if let Some(msg) = self.aggregate_swar(uplinks.iter().map(|u| u.as_slice())) {
+            return msg;
+        }
         self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
         self.finish()
     }
@@ -1029,6 +1168,9 @@ impl ServerLogic for SignVoteServer {
     /// integer votes make every chunking bit-exact vs the flat frame.
     fn aggregate_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
+        if let Some(msg) = self.aggregate_swar(uplinks.iter().copied()) {
+            return msg;
+        }
         self.accumulate_uplinks(uplinks.iter().copied());
         self.finish()
     }

@@ -21,6 +21,53 @@ pub fn bsign(x: f32) -> f32 {
     f32::from_bits(0x3F80_0000 | (x.to_bits() & 0x8000_0000))
 }
 
+/// Free-function form of the fused D-Lion worker encode over an
+/// arbitrary *state slice*: blend-sign-pack the payload bits of
+/// `momentum`/`grads` (bit 0 of `out` = lane 0 of the slice) and advance
+/// the momentum, in one pass. Taking disjoint `&mut [f32]` slices
+/// (rather than `&mut Lion`) is what lets `RoundEngine` split one
+/// worker's momentum along the `ChunkPlan` via `split_at_mut` and encode
+/// its chunks in parallel (§Perf optimization #4: the byte assembly is
+/// the SWAR gather, and every output byte is stored whole so reused
+/// round buffers never leak stale bits).
+///
+/// `momentum` and `grads` must be the same length; `out` must hold at
+/// least `packed_len(grads.len())` bytes. Bit-exact with
+/// [`Lion::encode_fused_range`] (which delegates here).
+pub fn fused_encode_slice(
+    beta1: f32,
+    beta2: f32,
+    momentum: &mut [f32],
+    grads: &[f32],
+    out: &mut [u8],
+) {
+    debug_assert_eq!(momentum.len(), grads.len());
+    debug_assert!(out.len() >= crate::comm::sign::packed_len(grads.len()));
+    let d = grads.len();
+    let full = d / 8;
+    let (m_head, m_tail) = momentum.split_at_mut(full * 8);
+    let (g_head, g_tail) = grads.split_at(full * 8);
+    let mut blend = [0.0f32; 8];
+    for (ci, (mc, gc)) in m_head.chunks_exact_mut(8).zip(g_head.chunks_exact(8)).enumerate() {
+        for ((b, m), &g) in blend.iter_mut().zip(mc.iter_mut()).zip(gc) {
+            let m0 = *m;
+            *b = beta1 * m0 + (1.0 - beta1) * g;
+            *m = beta2 * m0 + (1.0 - beta2) * g;
+        }
+        out[ci] = crate::comm::swar::sign_byte8(&blend);
+    }
+    if !m_tail.is_empty() {
+        let mut byte = 0u8;
+        for (j, (m, &g)) in m_tail.iter_mut().zip(g_tail).enumerate() {
+            let m0 = *m;
+            let bl = beta1 * m0 + (1.0 - beta1) * g;
+            byte |= (((bl.to_bits() >> 31) ^ 1) as u8) << j;
+            *m = beta2 * m0 + (1.0 - beta2) * g;
+        }
+        out[full] = byte;
+    }
+}
+
 /// Single-node Lion optimizer.
 pub struct Lion {
     pub hp: LionParams,
@@ -75,35 +122,11 @@ impl Lion {
     /// full gradient slice. The whole-range call is `encode_fused`
     /// itself, and disjoint ranges compose to it bit-exactly.
     pub fn encode_fused_range(&mut self, grads: &[f32], range: std::ops::Range<usize>) -> Vec<u8> {
-        let b1 = self.hp.beta1;
-        let b2 = self.hp.beta2;
+        let (b1, b2) = (self.hp.beta1, self.hp.beta2);
         let gs = &grads[range.clone()];
         let ms = &mut self.momentum[range];
-        let d = gs.len();
-        let mut out = vec![0u8; crate::comm::sign::packed_len(d)];
-        let m_chunks = ms.chunks_exact_mut(8);
-        let g_chunks = gs.chunks_exact(8);
-        let full = g_chunks.len();
-        for (ci, (mc, gc)) in m_chunks.zip(g_chunks).enumerate() {
-            let mut byte = 0u8;
-            for j in 0..8 {
-                let m = mc[j];
-                let g = gc[j];
-                let blend = b1 * m + (1.0 - b1) * g;
-                byte |= (((blend.to_bits() >> 31) ^ 1) as u8) << j;
-                mc[j] = b2 * m + (1.0 - b2) * g;
-            }
-            out[ci] = byte;
-        }
-        for i in full * 8..d {
-            let m = ms[i];
-            let g = gs[i];
-            let blend = b1 * m + (1.0 - b1) * g;
-            if blend.to_bits() >> 31 == 0 {
-                out[i >> 3] |= 1 << (i & 7);
-            }
-            ms[i] = b2 * m + (1.0 - b2) * g;
-        }
+        let mut out = vec![0u8; crate::comm::sign::packed_len(gs.len())];
+        fused_encode_slice(b1, b2, ms, gs, &mut out);
         out
     }
 }

@@ -6,6 +6,40 @@
 use super::lion::bsign;
 use super::Optimizer;
 
+/// Free-function form of the fused Signum worker encode over an
+/// arbitrary *state slice*: advance `momentum` (m ← β·m + (1−β)·g) and
+/// pack the signs of the fresh momentum in the same pass (bit 0 of
+/// `out` = lane 0 of the slice). The split-borrow counterpart of
+/// [`crate::optim::lion::fused_encode_slice`] — `RoundEngine` hands it
+/// disjoint momentum slices along the `ChunkPlan` for intra-worker
+/// chunk-parallel encode. Bit-exact with
+/// [`Signum::update_and_peek_range`] + `sign::pack_f32` of the result
+/// (bsign preserves the IEEE sign bit).
+pub fn signum_encode_slice(beta: f32, momentum: &mut [f32], grads: &[f32], out: &mut [u8]) {
+    debug_assert_eq!(momentum.len(), grads.len());
+    debug_assert!(out.len() >= crate::comm::sign::packed_len(grads.len()));
+    let d = grads.len();
+    let full = d / 8;
+    let (m_head, m_tail) = momentum.split_at_mut(full * 8);
+    let (g_head, g_tail) = grads.split_at(full * 8);
+    let mut fresh = [0.0f32; 8];
+    for (ci, (mc, gc)) in m_head.chunks_exact_mut(8).zip(g_head.chunks_exact(8)).enumerate() {
+        for ((f, m), &g) in fresh.iter_mut().zip(mc.iter_mut()).zip(gc) {
+            *m = beta * *m + (1.0 - beta) * g;
+            *f = *m;
+        }
+        out[ci] = crate::comm::swar::sign_byte8(&fresh);
+    }
+    if !m_tail.is_empty() {
+        let mut byte = 0u8;
+        for (j, (m, &g)) in m_tail.iter_mut().zip(g_tail).enumerate() {
+            *m = beta * *m + (1.0 - beta) * g;
+            byte |= (((m.to_bits() >> 31) ^ 1) as u8) << j;
+        }
+        out[full] = byte;
+    }
+}
+
 /// Signum: m ← β·m + (1−β)·g ; x ← x − lr·(sign(m) + λx).
 pub struct Signum {
     pub beta: f32,

@@ -25,6 +25,11 @@ pub fn auto_threads(elems: usize) -> usize {
 /// Map `f` over the zipped slices in parallel, returning the results in
 /// index order. `f(&mut a[i], &b[i], i)` must be pure per index (no
 /// cross-item dependence) for the output to be deterministic.
+///
+/// Each thread writes its block of results straight into one
+/// preallocated output buffer (`MaybeUninit` slots), so a parallel
+/// round pays zero extra allocation or copy over the sequential loop —
+/// the old per-thread `Vec<Vec<T>>` + flatten is gone.
 pub fn par_zip_map<A, B, T, F>(a: &mut [A], b: &[B], nthreads: usize, f: F) -> Vec<T>
 where
     A: Send,
@@ -32,6 +37,8 @@ where
     T: Send,
     F: Fn(&mut A, &B, usize) -> T + Sync,
 {
+    use std::mem::MaybeUninit;
+
     let n = a.len();
     assert_eq!(n, b.len(), "par_zip_map slices must be index-aligned");
     let nthreads = nthreads.min(n).max(1);
@@ -39,24 +46,59 @@ where
         return a.iter_mut().zip(b).enumerate().map(|(i, (x, y))| f(x, y, i)).collect();
     }
     let block = n.div_ceil(nthreads);
-    let mut out: Vec<Vec<T>> = Vec::with_capacity(nthreads);
+    let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+    // SAFETY: MaybeUninit slots are valid uninitialized; length == capacity.
+    unsafe { out.set_len(n) };
     std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(nthreads);
-        for (bi, (ac, bc)) in a.chunks_mut(block).zip(b.chunks(block)).enumerate() {
+        for (bi, ((ac, bc), oc)) in
+            a.chunks_mut(block).zip(b.chunks(block)).zip(out.chunks_mut(block)).enumerate()
+        {
             let f = &f;
-            handles.push(s.spawn(move || {
-                ac.iter_mut()
-                    .zip(bc)
-                    .enumerate()
-                    .map(|(j, (x, y))| f(x, y, bi * block + j))
-                    .collect::<Vec<T>>()
-            }));
-        }
-        for h in handles {
-            out.push(h.join().expect("parallel block panicked"));
+            s.spawn(move || {
+                for (j, ((x, y), o)) in ac.iter_mut().zip(bc).zip(oc.iter_mut()).enumerate() {
+                    o.write(f(x, y, bi * block + j));
+                }
+            });
         }
     });
-    out.into_iter().flatten().collect()
+    // The blocks tile 0..n exactly, and the scope joined every thread, so
+    // each slot was written once. (If a closure panicked, the scope
+    // re-panics above and the MaybeUninit vec drops without running T
+    // destructors — written results leak, but no uninitialized read.)
+    let mut out = std::mem::ManuallyDrop::new(out);
+    // SAFETY: all n elements initialized; layout of MaybeUninit<T> == T.
+    unsafe { Vec::from_raw_parts(out.as_mut_ptr() as *mut T, out.len(), out.capacity()) }
+}
+
+/// Run `f` over every item in parallel, mutating in place (the round
+/// engine's (worker × chunk) encode jobs: each item owns disjoint
+/// `&mut` state and output slices, so blocks never alias). Items are
+/// processed in contiguous index blocks; `f(&mut items[i], i)` must be
+/// pure per index for determinism.
+pub fn par_for_each_mut<T, F>(items: &mut [T], nthreads: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut T, usize) + Sync,
+{
+    let n = items.len();
+    let nthreads = nthreads.min(n).max(1);
+    if nthreads <= 1 {
+        for (i, it) in items.iter_mut().enumerate() {
+            f(it, i);
+        }
+        return;
+    }
+    let block = n.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for (bi, blk) in items.chunks_mut(block).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, it) in blk.iter_mut().enumerate() {
+                    f(it, bi * block + j);
+                }
+            });
+        }
+    });
 }
 
 /// Run `f` over two mutably zipped slices in parallel (e.g. each
@@ -129,6 +171,31 @@ mod tests {
         let mut a = vec![5u8];
         let got = par_zip_map(&mut a, &[2u8], 8, |x, y, _| *x + *y);
         assert_eq!(got, vec![7]);
+    }
+
+    #[test]
+    fn par_map_handles_nonclone_results_and_uneven_blocks() {
+        // String results exercise the MaybeUninit path with a Drop type;
+        // 37 items across 8 threads leaves a short trailing block.
+        let b: Vec<usize> = (0..37).collect();
+        let mut a: Vec<usize> = (0..37).collect();
+        let got = par_zip_map(&mut a, &b, 8, |x, y, i| format!("{}:{}", *x + *y, i));
+        let expect: Vec<String> = (0..37).map(|i| format!("{}:{}", 2 * i, i)).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn par_for_each_matches_sequential_for_any_thread_count() {
+        for t in [1usize, 2, 3, 8, 64] {
+            let mut items: Vec<(usize, usize)> = (0..29).map(|i| (i, 0)).collect();
+            par_for_each_mut(&mut items, t, |it, i| {
+                assert_eq!(it.0, i, "index alignment");
+                it.1 = it.0 * 7;
+            });
+            assert!(items.iter().all(|&(i, v)| v == i * 7), "nthreads={t}");
+        }
+        let mut empty: Vec<u8> = Vec::new();
+        par_for_each_mut(&mut empty, 4, |_, _| unreachable!());
     }
 
     #[test]

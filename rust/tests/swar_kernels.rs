@@ -1,0 +1,179 @@
+//! Cross-layer property tests pinning the SWAR hot kernels bit-exact
+//! against their scalar oracles, from raw slices up through the round
+//! engine: the 8-lane sign gather vs the per-bit pack, the bit-sliced
+//! majority vote vs i32 LUT vote sums, the fused Lion/Signum slice
+//! kernels vs their decomposed 3-pass forms on misaligned sub-ranges
+//! (±0.0 included), and the engine's (worker × chunk)-parallel
+//! zero-copy envelope assembly vs the sequential per-worker paths.
+
+use dlion::cluster::topology::{RoundEngine, Topology};
+use dlion::comm::{chunked, sign};
+use dlion::optim::dist::{by_name, SignKernel, StrategyHyper, TAG_SIGN};
+use dlion::optim::signum::Signum;
+use dlion::optim::LionParams;
+use dlion::util::parallel::PAR_MIN_ELEMS;
+use dlion::util::Rng;
+
+/// Normal noise with ±0.0 injected (the packed-sign edge case: +0.0
+/// must encode as +1, −0.0 as −1).
+fn noisy_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 1.0);
+    for x in v.iter_mut() {
+        match rng.below(16) {
+            0 => *x = 0.0,
+            1 => *x = -0.0,
+            _ => {}
+        }
+    }
+    v
+}
+
+#[test]
+fn swar_pack_matches_scalar_oracle_across_shapes() {
+    let mut rng = Rng::new(0x51A4);
+    for d in [0usize, 1, 7, 8, 63, 64, 65, 1_000_003] {
+        let v = noisy_vec(&mut rng, d);
+        assert_eq!(sign::pack_f32(&v), sign::pack_f32_scalar(&v), "d={d}");
+    }
+}
+
+#[test]
+fn sign_vote_server_swar_downlink_matches_i32_lut_oracle() {
+    // Odd-N majority vote runs on the bit-plane accumulator; every
+    // downlink bit must equal [i32 vote sum > 0] from the LUT path.
+    let hp = StrategyHyper::default();
+    let strat = by_name("d-lion-mavo", &hp).unwrap();
+    let mut rng = Rng::new(0x5E4);
+    for n in [1usize, 3, 5, 7, 9] {
+        for d in [1usize, 7, 8, 63, 64, 65, 200] {
+            let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+            let mut server = strat.make_server(n, d);
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| noisy_vec(&mut rng, d)).collect();
+            let ups: Vec<_> =
+                workers.iter_mut().zip(&grads).map(|(w, g)| w.encode(g, 1e-3, 0)).collect();
+            let mut votes = vec![0i32; d];
+            for up in &ups {
+                sign::accumulate_votes(&up[1..], &mut votes);
+            }
+            let down = server.aggregate(&ups, 1e-3, 0);
+            assert_eq!(down[0], TAG_SIGN, "odd-N downlink stays binary (n={n}, d={d})");
+            assert_eq!(down.len(), 1 + sign::packed_len(d), "n={n}, d={d}");
+            for (i, &v) in votes.iter().enumerate() {
+                let bit = (down[1 + i / 8] >> (i % 8)) & 1;
+                assert_eq!(bit == 1, v > 0, "lane {i}, n={n}, d={d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_slice_kernels_match_decomposed_oracles_on_subranges() {
+    // The split-borrow kernels run on arbitrary chunk slices whose
+    // starts are not byte-aligned in the original model; each must
+    // reproduce the decomposed blend→scalar-pack→advance oracle (Lion)
+    // and update_and_peek_range→scalar-pack (Signum) bit-for-bit.
+    let mut rng = Rng::new(0xFA3);
+    let d = 203;
+    let hp = LionParams::default();
+    let beta = 0.9f32;
+    for range in [0..d, 0..40, 40..80, 80..d, 3..14, 13..77] {
+        let momentum0 = noisy_vec(&mut rng, d);
+        let grads = noisy_vec(&mut rng, d);
+        let len = range.len();
+
+        // Lion oracle: blend store, scalar pack, separate momentum pass.
+        let mut m_oracle = momentum0.clone();
+        let blend: Vec<f32> = m_oracle[range.clone()]
+            .iter()
+            .zip(&grads[range.clone()])
+            .map(|(&m, &g)| hp.beta1 * m + (1.0 - hp.beta1) * g)
+            .collect();
+        let lion_expect = sign::pack_f32_scalar(&blend);
+        for (m, &g) in m_oracle[range.clone()].iter_mut().zip(&grads[range.clone()]) {
+            *m = hp.beta2 * *m + (1.0 - hp.beta2) * g;
+        }
+        let mut m_kern = momentum0.clone();
+        let mut out = vec![0u8; sign::packed_len(len)];
+        SignKernel::LionFused { beta1: hp.beta1, beta2: hp.beta2 }.encode(
+            &mut m_kern[range.clone()],
+            &grads[range.clone()],
+            &mut out,
+        );
+        assert_eq!(out, lion_expect, "lion payload, range {range:?}");
+        assert_eq!(m_kern, m_oracle, "lion momentum, range {range:?}");
+
+        // Signum oracle: the pre-existing ranged advance-and-peek
+        // (bsign preserves the IEEE sign bit, so packing the peeked
+        // ±1s equals packing the momentum directly — −0.0 included).
+        let mut sig = Signum::new(d, beta, 0.0);
+        sig.momentum.copy_from_slice(&momentum0);
+        let mut peek = vec![0.0f32; len];
+        sig.update_and_peek_range(&grads, range.clone(), &mut peek);
+        let sig_expect = sign::pack_f32_scalar(&peek);
+        let mut m_sig = momentum0.clone();
+        let mut out2 = vec![0u8; sign::packed_len(len)];
+        SignKernel::Signum { beta }.encode(
+            &mut m_sig[range.clone()],
+            &grads[range.clone()],
+            &mut out2,
+        );
+        assert_eq!(out2, sig_expect, "signum payload, range {range:?}");
+        assert_eq!(m_sig, sig.momentum, "signum momentum, range {range:?}");
+    }
+}
+
+#[test]
+fn encode_planned_zero_copy_equals_collect_and_pack() {
+    // The tag-15 envelope assembled in place at analytic offsets must
+    // be byte-identical (headers included) to collecting encode_chunk
+    // frames and splicing them with chunked::pack.
+    let mut rng = Rng::new(0xE0E);
+    let hp = StrategyHyper::default();
+    let (n, d, chunk_size) = (2usize, 200usize, 40usize);
+    for name in ["d-lion-mavo", "d-signum-mavo"] {
+        let strat = by_name(name, &hp).unwrap();
+        let plan = strat.plan(d, chunk_size);
+        assert!(!plan.is_single(), "{name}: test needs a multi-chunk plan");
+        let mut wa = strat.make_worker(0, n, d);
+        let mut wb = strat.make_worker(0, n, d);
+        for step in 0..3 {
+            let g = noisy_vec(&mut rng, d);
+            let zero_copy = wa.encode_planned(&g, &plan, 1e-3, step);
+            let frames: Vec<Vec<u8>> =
+                plan.chunks().map(|c| wb.encode_chunk(&g, c, 1e-3, step)).collect();
+            assert_eq!(zero_copy, chunked::pack(&frames), "{name}, step {step}");
+        }
+    }
+}
+
+#[test]
+fn engine_parallel_split_encode_matches_sequential_bytes() {
+    // Above PAR_MIN_ELEMS the engine runs (worker × chunk)-parallel
+    // split-borrow encode into recycled round buffers; every uplink must
+    // equal the sequential per-worker encode_planned bytes, every round
+    // (buffer reuse across rounds would leak stale bytes if a kernel
+    // OR-ed instead of stored).
+    let d = PAR_MIN_ELEMS + 4_464; // 70_000: forces the parallel path
+    let (n, chunk_size) = (3usize, 4_096usize);
+    let hp = StrategyHyper::default();
+    let strat = by_name("d-lion-mavo", &hp).unwrap();
+    let mut engine = RoundEngine::new(strat.as_ref(), n, d, Topology::Star, chunk_size);
+    let plan = engine.plan();
+    assert!(plan.num_chunks() > 1, "test needs a multi-chunk plan");
+    let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+    let mut oracle: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+    let mut rng = Rng::new(0xE16);
+    for step in 0..3 {
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| noisy_vec(&mut rng, d)).collect();
+        let ups = engine.encode_all(&mut workers, &grads, 1e-3, step);
+        for (i, (up, w)) in ups.iter().zip(oracle.iter_mut()).enumerate() {
+            let expect = w.encode_planned(&grads[i], &plan, 1e-3, step);
+            assert_eq!(up, &expect, "worker {i}, round {step}");
+        }
+        // odd N: the chunked aggregate runs per-chunk SWAR vote planes
+        let (down, _) = engine.aggregate(&ups, 1e-3, step);
+        assert_eq!(down[0], chunked::TAG_CHUNKED);
+        engine.recycle_uplinks(ups);
+    }
+}

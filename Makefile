@@ -5,7 +5,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json bench-diff topology mixed clean
+.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json bench-diff topology mixed chaos clean
 
 ## tier-1 verify: what CI runs (ROADMAP.md)
 verify:
@@ -65,6 +65,12 @@ topology:
 ## chunk sizes × topologies + the per-link @cheap/@rich selector)
 mixed:
 	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 cargo bench --bench ext_mixed -- --quick
+
+## elastic-round chaos suite: the fixed-seed kill/delay/corrupt matrix
+## (strategies × topologies × transports) + the TCP fault/reconnect
+## tests. Deterministic — every fault plan is seeded in the tests.
+chaos:
+	cd $(CARGO_DIR) && cargo test -q --test chaos_rounds --test tcp_faults
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

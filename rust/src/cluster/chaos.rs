@@ -1,0 +1,559 @@
+//! Deterministic fault-injection harness: elastic quorum rounds under a
+//! seeded [`FaultPlan`].
+//!
+//! [`run_chaos`] is the third cluster driver, next to
+//! [`crate::cluster::run_sequential`] and
+//! [`crate::cluster::run_threaded`]: one OS thread per worker over a
+//! real transport (in-process channels or loopback TCP), but the server
+//! closes each round with [`super::topology::RoundEngine::aggregate_quorum`]
+//! under the config's [`super::topology::QuorumPolicy`] instead of
+//! blocking for the full cluster. Faults are *planned*, not random at
+//! run time:
+//!
+//! * **Kill** — the worker exits before round `r`; its socket/channel
+//!   drops, the server marks it dead and every later round closes
+//!   without it.
+//! * **Delay** — the worker skips its uplink for rounds `[r, r+d)`,
+//!   EF-folding the skipped gradients into a [`StragglerFold`] residual
+//!   that rides on its next real uplink (nothing is dropped — the
+//!   sign-of-sum of the folded window is what gets voted). It still
+//!   receives and applies every broadcast, so its replica never forks.
+//! * **Corrupt** — the worker's uplink payloads are corrupted from
+//!   round `r` on via [`FaultyWorker`] (tag and length preserved), the
+//!   same Byzantine model as the `ext_byzantine` bench.
+//!
+//! Because delayed workers deterministically *skip the send* (rather
+//! than send late), frame↔round alignment is exact and the achieved
+//! quorum of every round is a pure function of the plan — which is what
+//! the chaos tests assert. An honest plan (no events) makes every round
+//! a full-arrival round, which [`RoundEngine::aggregate_quorum`] routes
+//! through the lockstep `aggregate` path — bit-exact with
+//! [`crate::cluster::run_sequential`].
+//!
+//! [`RoundEngine::aggregate_quorum`]: super::topology::RoundEngine::aggregate_quorum
+//! [`FaultyWorker`]: crate::optim::dist::faulty::FaultyWorker
+
+use super::metrics::{RunResult, StepRecord};
+use super::topology::{HopBytes, RoundEngine};
+use super::TrainConfig;
+use crate::comm::tcp::{bind_loopback, TcpServer, TcpWorker};
+use crate::comm::transport::{inproc_fabric, CommStats, ServerTransport, WorkerTransport};
+use crate::error::{DlionError, Result};
+use crate::optim::dist::faulty::{Fault, FaultyWorker};
+use crate::optim::dist::{ChunkPlan, Strategy, WorkerLogic};
+use crate::tasks::GradTask;
+use crate::util::math::cosine_lr;
+use crate::util::Rng;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// What happens to one worker at one round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker process dies before this round: no more uplinks, its
+    /// connection drops, it never comes back.
+    Kill,
+    /// The worker misses its uplink for `rounds` consecutive rounds
+    /// (EF-folded, not lost), then resumes.
+    Delay {
+        /// Consecutive rounds the worker stays silent (≥ 1).
+        rounds: usize,
+    },
+    /// The worker turns Byzantine from this round on: every uplink
+    /// payload is corrupted per the [`Fault`] model.
+    Corrupt(Fault),
+}
+
+/// One planned fault: `worker` suffers `kind` starting at `round`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub worker: usize,
+    pub round: usize,
+    pub kind: FaultKind,
+}
+
+/// A seeded, fully deterministic fault schedule. The seed feeds the
+/// corrupt workers' payload rngs; kills and delays need no randomness
+/// at all, so two runs of the same plan see byte-identical faults.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An honest plan (no faults): every round is a full-quorum round.
+    pub fn honest() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, events: Vec::new() }
+    }
+
+    /// Kill `worker` right before round `round`.
+    pub fn kill(mut self, worker: usize, round: usize) -> Self {
+        self.events.push(FaultEvent { worker, round, kind: FaultKind::Kill });
+        self
+    }
+
+    /// Delay `worker` for `rounds` rounds starting at `round`.
+    pub fn delay(mut self, worker: usize, round: usize, rounds: usize) -> Self {
+        self.events.push(FaultEvent { worker, round, kind: FaultKind::Delay { rounds } });
+        self
+    }
+
+    /// Turn `worker` Byzantine (per `fault`) from round `round` on.
+    pub fn corrupt(mut self, worker: usize, round: usize, fault: Fault) -> Self {
+        self.events.push(FaultEvent { worker, round, kind: FaultKind::Corrupt(fault) });
+        self
+    }
+
+    /// Is `worker` dead at (or before) `round`?
+    pub fn dead_at(&self, worker: usize, round: usize) -> bool {
+        self.events.iter().any(|e| {
+            e.worker == worker && e.round <= round && matches!(e.kind, FaultKind::Kill)
+        })
+    }
+
+    /// Is `worker` planned to skip its uplink at `round` (alive but
+    /// inside a delay window)?
+    pub fn delayed_at(&self, worker: usize, round: usize) -> bool {
+        self.events.iter().any(|e| {
+            e.worker == worker
+                && matches!(e.kind, FaultKind::Delay { rounds }
+                    if e.round <= round && round < e.round + rounds)
+        })
+    }
+
+    /// Does `worker`'s uplink arrive at `round`? (Corrupt workers
+    /// arrive — with garbage.)
+    pub fn arrives(&self, worker: usize, round: usize) -> bool {
+        !self.dead_at(worker, round) && !self.delayed_at(worker, round)
+    }
+
+    /// The corruption applied to `worker`, if any: `(from_round, fault)`.
+    pub fn corrupt_from(&self, worker: usize) -> Option<(usize, Fault)> {
+        self.events.iter().find_map(|e| match e.kind {
+            FaultKind::Corrupt(f) if e.worker == worker => Some((e.round, f)),
+            _ => None,
+        })
+    }
+
+    /// Is `worker` ever killed by this plan?
+    pub fn killed(&self, worker: usize) -> bool {
+        self.events.iter().any(|e| e.worker == worker && matches!(e.kind, FaultKind::Kill))
+    }
+
+    /// Workers that survive the whole run (never killed).
+    pub fn survivors(&self, nworkers: usize) -> Vec<usize> {
+        (0..nworkers).filter(|&w| !self.killed(w)).collect()
+    }
+
+    /// Any delay events in the plan? (These require a round deadline —
+    /// a silent-but-alive worker would otherwise block gather forever.)
+    pub fn has_delays(&self) -> bool {
+        self.events.iter().any(|e| matches!(e.kind, FaultKind::Delay { .. }))
+    }
+
+    /// The quorum round `round` must close with under this plan: the
+    /// count of workers whose uplink arrives. This is what the chaos
+    /// tests check the recorded [`StepRecord::quorum`] against.
+    pub fn expected_quorum(&self, nworkers: usize, round: usize) -> usize {
+        (0..nworkers).filter(|&w| self.arrives(w, round)).count()
+    }
+
+    fn validate(&self, nworkers: usize) -> Result<()> {
+        for e in &self.events {
+            if e.worker >= nworkers {
+                return Err(DlionError::Config(format!(
+                    "fault plan names worker {} in a {nworkers}-worker cluster",
+                    e.worker
+                )));
+            }
+            if let FaultKind::Delay { rounds } = e.kind {
+                if rounds == 0 {
+                    return Err(DlionError::Config(
+                        "delay fault needs rounds >= 1".into(),
+                    ));
+                }
+            }
+        }
+        if self.survivors(nworkers).is_empty() {
+            return Err(DlionError::Config(
+                "fault plan kills every worker — nothing left to train".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Error-feedback residual for a straggler: gradients of skipped rounds
+/// accumulate here and ride on the next real uplink, so a delayed
+/// worker's gradient mass is conserved, merely late — the sign-momentum
+/// analogue of error feedback across *rounds* instead of across the
+/// compressor.
+pub struct StragglerFold {
+    residual: Vec<f32>,
+    scratch: Vec<f32>,
+    pending: bool,
+}
+
+impl StragglerFold {
+    pub fn new(dim: usize) -> StragglerFold {
+        StragglerFold { residual: vec![0.0; dim], scratch: Vec::new(), pending: false }
+    }
+
+    /// Fold a skipped round's gradient into the residual.
+    pub fn miss(&mut self, grads: &[f32]) {
+        assert_eq!(grads.len(), self.residual.len(), "gradient dim mismatch");
+        for (r, g) in self.residual.iter_mut().zip(grads) {
+            *r += *g;
+        }
+        self.pending = true;
+    }
+
+    /// The gradient to actually uplink this round: `grads` plus any
+    /// pending residual (which this call clears). With nothing pending
+    /// it returns `grads` itself, bit-for-bit — the honest path never
+    /// touches f32 arithmetic.
+    pub fn take<'a>(&'a mut self, grads: &'a [f32]) -> &'a [f32] {
+        if !self.pending {
+            return grads;
+        }
+        assert_eq!(grads.len(), self.residual.len(), "gradient dim mismatch");
+        self.scratch.clear();
+        self.scratch.extend(self.residual.iter().zip(grads).map(|(r, g)| r + g));
+        self.residual.fill(0.0);
+        self.pending = false;
+        &self.scratch
+    }
+
+    /// Is there un-shipped gradient mass in the residual?
+    pub fn pending(&self) -> bool {
+        self.pending
+    }
+
+    /// L1 mass of the residual (the conserved quantity the property
+    /// test tracks across a missed round).
+    pub fn residual_mass(&self) -> f64 {
+        self.residual.iter().map(|r| r.abs() as f64).sum()
+    }
+}
+
+/// Which fabric the chaos run moves bytes over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosTransport {
+    /// In-process mpsc channels ([`inproc_fabric`]).
+    InProc,
+    /// Loopback TCP sockets ([`crate::comm::tcp`]), with per-connection
+    /// read deadlines doing the straggler detection.
+    Tcp,
+}
+
+/// What a chaos run reports beyond the ordinary [`RunResult`].
+pub struct ChaosReport {
+    pub result: RunResult,
+    /// Achieved quorum per round (index = step).
+    pub quorums: Vec<usize>,
+    /// Workers that were never killed (their final replicas are the
+    /// bit-identical ones; `result.final_params` comes from the first).
+    pub survivors: Vec<usize>,
+    /// Transport byte counters for the run.
+    pub stats: Arc<CommStats>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker<T: WorkerTransport + Send + 'static>(
+    mut wt: T,
+    nworkers: usize,
+    task: Arc<dyn GradTask + Send + Sync>,
+    mut logic: Box<dyn WorkerLogic>,
+    mut rng: Rng,
+    params0: Vec<f32>,
+    cfg: TrainConfig,
+    chunk_plan: ChunkPlan,
+    fplan: FaultPlan,
+    loss_tx: mpsc::Sender<(usize, f64)>,
+) -> JoinHandle<std::io::Result<Vec<f32>>> {
+    std::thread::spawn(move || -> std::io::Result<Vec<f32>> {
+        let d = params0.len();
+        let wid = wt.worker_id();
+        let mut params = params0;
+        let mut grad = vec![0.0f32; d];
+        let mut fold = StragglerFold::new(d);
+        for step in 0..cfg.steps {
+            if fplan.dead_at(wid, step) {
+                // the process "dies": transport drops on return, the
+                // server reads EOF / a closed channel
+                return Ok(params);
+            }
+            let lr =
+                cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
+            let loss = task.minibatch_grad_worker(
+                &params,
+                &mut rng,
+                cfg.batch_per_worker,
+                &mut grad,
+                wid,
+                nworkers,
+            );
+            let _ = loss_tx.send((step, loss as f64));
+            if fplan.delayed_at(wid, step) {
+                // straggler: skip the send (deterministic abstention),
+                // EF-fold the gradient for the comeback round
+                fold.miss(&grad);
+            } else {
+                let g = fold.take(&grad);
+                let uplink = logic.encode_planned(g, &chunk_plan, lr, step);
+                wt.send(uplink)?;
+            }
+            // everyone alive — including stragglers — applies the
+            // broadcast, so replicas never fork
+            let downlink = wt.recv()?;
+            logic.apply_planned(&mut params, &downlink, &chunk_plan, lr, step);
+        }
+        Ok(params)
+    })
+}
+
+/// Run the elastic round loop under a [`FaultPlan`]. The config's
+/// quorum policy ([`TrainConfig::quorum_policy`]) governs when rounds
+/// close: each round aggregates whatever uplinks arrived by the
+/// deadline, errors (named) if fewer than `cfg.quorum` arrive, and
+/// records the achieved quorum in [`StepRecord::quorum`] and on the
+/// transport's [`CommStats`].
+///
+/// Restrictions (all named [`DlionError::Config`] errors, no panics):
+/// the strategy must sync every step (`local_steps == 1` — elastic
+/// rounds and local-step schedules don't compose yet), a plan with
+/// delay events needs `cfg.round_deadline_ms > 0`, and at least one
+/// worker must survive. Periodic eval is skipped (`eval_every` is
+/// ignored); the final eval runs on the first survivor's replica.
+pub fn run_chaos(
+    task: Arc<dyn GradTask + Send + Sync>,
+    strategy: &dyn Strategy,
+    nworkers: usize,
+    cfg: &TrainConfig,
+    fplan: &FaultPlan,
+    transport: ChaosTransport,
+) -> Result<ChaosReport> {
+    if strategy.local_steps().max(1) != 1 {
+        return Err(DlionError::Config(format!(
+            "chaos driver requires a per-step strategy (local_steps == 1), {} has {}",
+            strategy.name(),
+            strategy.local_steps()
+        )));
+    }
+    fplan.validate(nworkers)?;
+    let policy = cfg.quorum_policy();
+    if fplan.has_delays() && policy.deadline().is_none() {
+        return Err(DlionError::Config(
+            "fault plan has delay events but hyper.round_deadline_ms is 0: \
+             a silent-but-alive worker would block gather forever"
+                .into(),
+        ));
+    }
+
+    let d = task.dim();
+    let chunk_plan = strategy.plan(d, cfg.chunk_size);
+    let stats = CommStats::new();
+    let mut root = Rng::new(cfg.seed);
+    let params0 = task.init_params(&mut root);
+    let (loss_tx, loss_rx) = mpsc::channel::<(usize, f64)>();
+
+    // Per-worker logic, wrapped Byzantine where the plan says so. Same
+    // rng forks as the lockstep drivers — honest plans replay their
+    // batches exactly.
+    let mut logics: Vec<Box<dyn WorkerLogic>> = Vec::with_capacity(nworkers);
+    for w in 0..nworkers {
+        let mut logic = strategy.make_worker(w, nworkers, d);
+        if let Some((round, fault)) = fplan.corrupt_from(w) {
+            let seed = fplan.seed ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            logic = Box::new(FaultyWorker::from_step(logic, fault, seed, round));
+        }
+        logics.push(logic);
+    }
+
+    let mut handles: Vec<JoinHandle<std::io::Result<Vec<f32>>>> = Vec::with_capacity(nworkers);
+    let mut server: Box<dyn ServerTransport> = match transport {
+        ChaosTransport::InProc => {
+            let (st, wts) = inproc_fabric(nworkers, stats.clone());
+            for (wt, (w, logic)) in wts.into_iter().zip(logics.into_iter().enumerate()) {
+                handles.push(spawn_worker(
+                    wt,
+                    nworkers,
+                    task.clone(),
+                    logic,
+                    root.fork(w as u64),
+                    params0.clone(),
+                    cfg.clone(),
+                    chunk_plan,
+                    fplan.clone(),
+                    loss_tx.clone(),
+                ));
+            }
+            Box::new(st)
+        }
+        ChaosTransport::Tcp => {
+            let (port, listener) = bind_loopback()?;
+            for (w, logic) in logics.into_iter().enumerate() {
+                let wt = TcpWorker::connect(port, w, stats.clone())?;
+                handles.push(spawn_worker(
+                    wt,
+                    nworkers,
+                    task.clone(),
+                    logic,
+                    root.fork(w as u64),
+                    params0.clone(),
+                    cfg.clone(),
+                    chunk_plan,
+                    fplan.clone(),
+                    loss_tx.clone(),
+                ));
+            }
+            Box::new(TcpServer::accept(&listener, nworkers, stats.clone())?)
+        }
+    };
+    drop(loss_tx);
+
+    // Server loop: deadline gather, quorum-checked aggregate, broadcast.
+    // Byte deltas around the round are race-free for the same reason as
+    // run_threaded: an arriving worker blocks on the downlink, so no
+    // step-(s+1) uplink exists before the step-s broadcast.
+    let mut engine = RoundEngine::new(strategy, nworkers, d, cfg.topology, cfg.chunk_size);
+    let required = policy.required(nworkers).max(1);
+    let mut quorums: Vec<usize> = Vec::with_capacity(cfg.steps);
+    let mut step_bytes: Vec<(u64, u64, HopBytes)> = Vec::with_capacity(cfg.steps);
+    let (mut prev_up, mut prev_down) = (0u64, 0u64);
+    let t0 = std::time::Instant::now();
+    for step in 0..cfg.steps {
+        let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
+        let uplinks = server.gather_quorum(policy.deadline())?;
+        let up_now = stats.uplink();
+        let arrived = uplinks.iter().filter(|u| u.is_some()).count();
+        if arrived < required {
+            return Err(DlionError::Cluster(format!(
+                "round {step}: quorum not met — {arrived}/{nworkers} uplinks arrived, \
+                 policy floor is {required}"
+            )));
+        }
+        let (downlink, hops, quorum) = engine.aggregate_quorum(uplinks, lr, step)?;
+        stats.record_round_quorum(quorum, nworkers);
+        stats.record_agg_uplink(hops.agg_uplink, hops.agg_uplink_msgs);
+        stats.record_agg_downlink(hops.agg_downlink, hops.agg_downlink_msgs);
+        server.broadcast(&downlink)?;
+        let down_now = stats.downlink();
+        quorums.push(quorum);
+        step_bytes.push((up_now - prev_up, down_now - prev_down, hops));
+        prev_up = up_now;
+        prev_down = down_now;
+    }
+
+    let mut result = RunResult::new(task.name(), strategy.name(), nworkers);
+    let mut per_step = vec![(0.0f64, 0usize); cfg.steps];
+    for (step, loss) in loss_rx.iter() {
+        per_step[step].0 += loss;
+        per_step[step].1 += 1;
+    }
+    for (step, (sum, count)) in per_step.into_iter().enumerate() {
+        let (uplink_bytes, downlink_bytes, hops) = step_bytes[step];
+        let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
+        result.push(StepRecord {
+            step,
+            lr: lr as f64,
+            train_loss: sum / count.max(1) as f64,
+            eval: None,
+            uplink_bytes,
+            downlink_bytes,
+            agg_uplink_bytes: hops.agg_uplink as u64,
+            agg_downlink_bytes: hops.agg_downlink as u64,
+            agg_uplink_msgs: hops.agg_uplink_msgs as u64,
+            agg_downlink_msgs: hops.agg_downlink_msgs as u64,
+            quorum: quorums[step] as u64,
+        });
+    }
+
+    let mut final_params: Vec<Vec<f32>> = Vec::with_capacity(nworkers);
+    for h in handles {
+        final_params.push(h.join().expect("chaos worker panicked")?);
+    }
+    let survivors = fplan.survivors(nworkers);
+    if cfg.check_replicas {
+        let first = survivors[0];
+        for &w in &survivors[1..] {
+            assert_eq!(
+                final_params[first], final_params[w],
+                "surviving replicas diverged (workers {first} and {w})"
+            );
+        }
+    }
+    result.final_eval = Some(task.evaluate(&final_params[survivors[0]]));
+    result.wall_secs = t0.elapsed().as_secs_f64();
+    result.final_params = Some(final_params.swap_remove(survivors[0]));
+    Ok(ChaosReport { result, quorums, survivors, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_queries_are_consistent() {
+        let plan = FaultPlan::new(0xC0)
+            .kill(2, 3)
+            .delay(1, 2, 2)
+            .corrupt(0, 1, Fault::BitFlip);
+        assert!(!plan.dead_at(2, 2));
+        assert!(plan.dead_at(2, 3));
+        assert!(plan.dead_at(2, 99), "kills are permanent");
+        assert!(!plan.delayed_at(1, 1));
+        assert!(plan.delayed_at(1, 2));
+        assert!(plan.delayed_at(1, 3));
+        assert!(!plan.delayed_at(1, 4), "delay window is half-open");
+        assert!(plan.arrives(0, 5), "corrupt workers still arrive");
+        assert_eq!(plan.corrupt_from(0), Some((1, Fault::BitFlip)));
+        assert_eq!(plan.corrupt_from(1), None);
+        assert_eq!(plan.survivors(4), vec![0, 1, 3]);
+        // round 0: all 4; round 2: worker 1 delayed; round 3: 1 delayed + 2 dead
+        assert_eq!(plan.expected_quorum(4, 0), 4);
+        assert_eq!(plan.expected_quorum(4, 2), 3);
+        assert_eq!(plan.expected_quorum(4, 3), 2);
+        assert_eq!(plan.expected_quorum(4, 4), 3, "delay over, kill persists");
+        assert!(plan.has_delays());
+        assert!(!FaultPlan::honest().has_delays());
+    }
+
+    #[test]
+    fn fault_plan_validation_rejects_bad_plans() {
+        assert!(FaultPlan::new(1).kill(5, 0).validate(4).is_err(), "worker oob");
+        assert!(FaultPlan::new(1).delay(0, 0, 0).validate(4).is_err(), "zero delay");
+        let all_dead = FaultPlan::new(1).kill(0, 0).kill(1, 0);
+        assert!(all_dead.validate(2).is_err(), "no survivors");
+        assert!(all_dead.validate(3).is_ok());
+    }
+
+    #[test]
+    fn straggler_fold_conserves_mass_and_is_identity_when_empty() {
+        let mut fold = StragglerFold::new(3);
+        let g0 = [1.0f32, -2.0, 0.5];
+        // honest path: take returns the very same slice (no f32 math)
+        assert!(!fold.pending());
+        assert_eq!(fold.take(&g0), &g0[..]);
+        // miss a round, then the next take carries the sum
+        fold.miss(&g0);
+        assert!(fold.pending());
+        assert!((fold.residual_mass() - 3.5).abs() < 1e-12);
+        let g1 = [0.5f32, 1.0, -0.5];
+        let combined: Vec<f32> = fold.take(&g1).to_vec();
+        assert_eq!(combined, vec![1.5, -1.0, 0.0]);
+        assert!(!fold.pending());
+        assert!(fold.residual_mass() < 1e-12, "residual cleared after take");
+        // two consecutive misses accumulate
+        fold.miss(&g0);
+        fold.miss(&g1);
+        let out: Vec<f32> = fold.take(&[0.0, 0.0, 0.0]).to_vec();
+        assert_eq!(out, vec![1.5, -1.0, 0.0]);
+    }
+}

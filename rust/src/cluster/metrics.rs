@@ -26,6 +26,10 @@ pub struct StepRecord {
     pub agg_uplink_msgs: u64,
     /// root → aggregator messages this step (hierarchical only)
     pub agg_downlink_msgs: u64,
+    /// Achieved quorum: uplinks aggregated this step (= nworkers on a
+    /// lockstep sync step, fewer when an elastic round closed early, 0
+    /// on the local steps of a local-steps strategy — no wire round).
+    pub quorum: u64,
 }
 
 /// Full run result.
@@ -90,6 +94,19 @@ impl RunResult {
         self.history.iter().map(|r| r.agg_downlink_msgs).sum()
     }
 
+    /// Smallest achieved quorum over the run's wire rounds (steps with
+    /// `quorum > 0`); `None` if no wire round happened.
+    pub fn min_quorum(&self) -> Option<u64> {
+        self.history.iter().map(|r| r.quorum).filter(|&q| q > 0).min()
+    }
+
+    /// Number of wire rounds that closed with fewer than `nworkers`
+    /// uplinks (elastic rounds that actually dropped someone).
+    pub fn partial_rounds(&self) -> usize {
+        let n = self.nworkers as u64;
+        self.history.iter().filter(|r| r.quorum > 0 && r.quorum < n).count()
+    }
+
     /// Best held-out accuracy observed (periodic evals + final).
     pub fn best_accuracy(&self) -> Option<f64> {
         let peri = self
@@ -139,6 +156,7 @@ impl RunResult {
                 "agg_downlink_bytes",
                 "agg_uplink_msgs",
                 "agg_downlink_msgs",
+                "quorum",
             ],
         )?;
         for r in &self.history {
@@ -161,6 +179,7 @@ impl RunResult {
                 r.agg_downlink_bytes.to_string(),
                 r.agg_uplink_msgs.to_string(),
                 r.agg_downlink_msgs.to_string(),
+                r.quorum.to_string(),
             ])?;
         }
         w.flush()
@@ -189,6 +208,7 @@ mod tests {
                 agg_downlink_bytes: 10,
                 agg_uplink_msgs: 2,
                 agg_downlink_msgs: 2,
+                quorum: if step == 1 { 3 } else { 4 },
             });
         }
         r
@@ -203,6 +223,8 @@ mod tests {
         assert_eq!(r.total_agg_downlink(), 100);
         assert_eq!(r.total_agg_uplink_msgs(), 20);
         assert_eq!(r.total_agg_downlink_msgs(), 20);
+        assert_eq!(r.min_quorum(), Some(3));
+        assert_eq!(r.partial_rounds(), 1);
         assert!((r.best_accuracy().unwrap() - 0.8).abs() < 1e-12);
         assert!(r.tail_loss(3) < r.tail_loss(10));
         // 150 bytes/iter over dim 100, 4 workers -> 3 bits/param/worker

@@ -22,6 +22,7 @@
 //! mutation). Local-steps strategies explore independently between sync
 //! points and reconcile at the next round.
 
+pub mod chaos;
 pub mod metrics;
 pub mod topology;
 
@@ -58,6 +59,20 @@ pub struct TrainConfig {
     /// and the round engine processes the chunks in parallel on large
     /// models; monolithic strategies ignore it.
     pub chunk_size: usize,
+    /// Elastic-round quorum floor (TOML `hyper.quorum`; 0 = all
+    /// workers). Only the chaos/elastic driver ([`chaos::run_chaos`])
+    /// closes rounds early; the lockstep drivers ignore it.
+    pub quorum: usize,
+    /// Elastic-round gather deadline in milliseconds (TOML
+    /// `hyper.round_deadline_ms`; 0 = block forever).
+    pub round_deadline_ms: u64,
+}
+
+impl TrainConfig {
+    /// The [`topology::QuorumPolicy`] this config describes.
+    pub fn quorum_policy(&self) -> topology::QuorumPolicy {
+        topology::QuorumPolicy { min_workers: self.quorum, deadline_ms: self.round_deadline_ms }
+    }
 }
 
 impl Default for TrainConfig {
@@ -73,6 +88,8 @@ impl Default for TrainConfig {
             check_replicas: false,
             topology: Topology::Star,
             chunk_size: 0,
+            quorum: 0,
+            round_deadline_ms: 0,
         }
     }
 }
@@ -104,7 +121,8 @@ pub fn run_sequential(
                 task.minibatch_grad_worker(p, r, cfg.batch_per_worker, g, w, nworkers) as f64;
         }
         train_loss /= nworkers as f64;
-        let hops = if engine.is_sync_step(step) {
+        let sync = engine.is_sync_step(step);
+        let hops = if sync {
             let uplinks = engine.encode_all(&mut workers, &grads, lr, step);
             let (downlink, hops) = engine.aggregate(&uplinks, lr, step);
             engine.apply_all(&mut workers, &mut params, &downlink, lr, step);
@@ -140,6 +158,8 @@ pub fn run_sequential(
             agg_downlink_bytes: hops.agg_downlink as u64,
             agg_uplink_msgs: hops.agg_uplink_msgs as u64,
             agg_downlink_msgs: hops.agg_downlink_msgs as u64,
+            // lockstep: every sync round aggregates the full cluster
+            quorum: if sync { nworkers as u64 } else { 0 },
         });
     }
     result.final_eval = Some(task.evaluate(&params[0]));
@@ -281,6 +301,7 @@ pub fn run_threaded(
             agg_downlink_bytes: hops.agg_downlink as u64,
             agg_uplink_msgs: hops.agg_uplink_msgs as u64,
             agg_downlink_msgs: hops.agg_downlink_msgs as u64,
+            quorum: if (step + 1) % local_steps == 0 { nworkers as u64 } else { 0 },
         });
     }
     // merge worker-0's periodic evals into the per-step history

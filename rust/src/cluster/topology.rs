@@ -40,11 +40,13 @@
 use crate::comm::chunked;
 use crate::error::{DlionError, Result};
 use crate::optim::dist::{
-    sign_frame_lens, ChunkPlan, ServerLogic, SignKernel, Strategy, WorkerLogic, TAG_SIGN,
+    sign_frame_lens, ChunkPlan, QuorumSupport, ServerLogic, SignKernel, Strategy, WorkerLogic,
+    TAG_SIGN,
 };
 use crate::util::parallel;
 use std::fmt;
 use std::ops::Range;
+use std::time::Duration;
 
 /// Cluster communication layout.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -113,6 +115,45 @@ impl fmt::Display for Topology {
     }
 }
 
+/// When an elastic round is allowed to close: wait for the deadline,
+/// then aggregate whatever arrived — provided at least `min_workers`
+/// uplinks made it. The zero value ([`QuorumPolicy::lockstep`]) is the
+/// classic fixed-N round: wait forever, need everyone.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QuorumPolicy {
+    /// Minimum arrived uplinks to close a round (0 = all workers).
+    pub min_workers: usize,
+    /// Per-round gather deadline in milliseconds (0 = block forever).
+    pub deadline_ms: u64,
+}
+
+impl QuorumPolicy {
+    /// The classic fixed-N round: block until every worker reports.
+    pub fn lockstep() -> QuorumPolicy {
+        QuorumPolicy::default()
+    }
+
+    /// Is this the classic wait-for-everyone policy?
+    pub fn is_lockstep(&self) -> bool {
+        *self == QuorumPolicy::default()
+    }
+
+    /// The gather deadline as a [`Duration`] (`None` = block forever).
+    pub fn deadline(&self) -> Option<Duration> {
+        (self.deadline_ms > 0).then(|| Duration::from_millis(self.deadline_ms))
+    }
+
+    /// Arrived-uplink floor for an `nworkers` cluster (0 resolves to
+    /// "all of them").
+    pub fn required(&self, nworkers: usize) -> usize {
+        if self.min_workers == 0 {
+            nworkers
+        } else {
+            self.min_workers.min(nworkers)
+        }
+    }
+}
+
 /// Per-hop byte and message accounting for one communication round.
 /// Worker-edge hops (`uplink`/`downlink`) are what Table 1 counts; the
 /// aggregator hops are zero for the flat star. Bytes are *payload*
@@ -160,6 +201,10 @@ pub struct RoundEngine {
     root: Vec<Box<dyn ServerLogic>>,
     nworkers: usize,
     local_steps: usize,
+    /// The strategy's partial-quorum semantics, captured at build time —
+    /// the gate [`RoundEngine::aggregate_quorum`] checks before it lets
+    /// a round close with missing uplinks.
+    quorum_support: QuorumSupport,
     /// Recycled per-worker round buffers: `encode_all` lays each
     /// worker's tag-15 envelope out in one of these and chunk kernels
     /// write payloads in place, so steady-state rounds allocate nothing
@@ -210,8 +255,14 @@ impl RoundEngine {
             root,
             nworkers,
             local_steps,
+            quorum_support: strategy.quorum(),
             uplink_bufs: Vec::new(),
         }
+    }
+
+    /// The strategy's partial-quorum semantics (see [`QuorumSupport`]).
+    pub fn quorum_support(&self) -> QuorumSupport {
+        self.quorum_support
     }
 
     /// The chunk plan every message of this engine follows.
@@ -407,6 +458,186 @@ impl RoundEngine {
             agg_downlink_msgs: self.groups.len(),
         };
         (downlink, hops)
+    }
+
+    /// Route one **elastic** round: `uplinks[w]` is `Some` iff worker
+    /// `w`'s frame arrived before the deadline, `None` for stragglers
+    /// and crashed workers. Returns the broadcast downlink, the per-hop
+    /// accounting (arrived frames only on the uplink edge), and the
+    /// achieved quorum.
+    ///
+    /// Full arrival routes through [`RoundEngine::aggregate`] — the
+    /// exact lockstep code path, so honest full-quorum rounds stay
+    /// bit-identical to the fixed-N engine. A partial round needs the
+    /// strategy to support it ([`Strategy::quorum`]): sign-vote
+    /// families aggregate the quorum's ballots exactly (missing voters
+    /// abstain), the dense family rescales its mean to the arrived
+    /// count; anything else is a named [`DlionError::Cluster`], as is a
+    /// round with zero arrivals. Under a hierarchical topology, groups
+    /// with no arrivals ship no partial at all.
+    pub fn aggregate_quorum(
+        &mut self,
+        uplinks: Vec<Option<Vec<u8>>>,
+        lr: f32,
+        step: usize,
+    ) -> Result<(Vec<u8>, HopBytes, usize)> {
+        assert_eq!(uplinks.len(), self.nworkers, "uplink slot count mismatch");
+        let arrived = uplinks.iter().filter(|u| u.is_some()).count();
+        if arrived == self.nworkers {
+            let ups: Vec<Vec<u8>> =
+                uplinks.into_iter().map(|u| u.expect("counted as arrived")).collect();
+            let (down, hops) = self.aggregate(&ups, lr, step);
+            return Ok((down, hops, arrived));
+        }
+        if arrived == 0 {
+            return Err(DlionError::Cluster(
+                "elastic round closed with zero arrived uplinks".into(),
+            ));
+        }
+        if self.quorum_support == QuorumSupport::Unsupported {
+            return Err(DlionError::Cluster(format!(
+                "strategy cannot close a partial round ({arrived}/{} uplinks arrived): \
+                 only the sign-vote (exact abstention) and dense (rescaled mean) \
+                 families support elastic quorums",
+                self.nworkers
+            )));
+        }
+        let uplink_bytes: usize =
+            uplinks.iter().flatten().map(|m| chunked::payload_len(m)).sum();
+        if self.plan.is_single() {
+            return self.aggregate_quorum_single(&uplinks, lr, step, uplink_bytes, arrived);
+        }
+        // Chunked: same transpose as the lockstep path, minus the
+        // missing workers' columns.
+        let k = self.plan.num_chunks();
+        let per_worker: Vec<Vec<&[u8]>> = uplinks
+            .iter()
+            .flatten()
+            .map(|m| {
+                let frames = chunked::unpack(m).expect("malformed chunked uplink");
+                assert_eq!(frames.len(), k, "uplink chunk count mismatch");
+                frames
+            })
+            .collect();
+        let plan = self.plan;
+        let nthreads = parallel::auto_threads(plan.dim());
+        if self.group_servers.is_empty() {
+            let per_chunk: Vec<Vec<&[u8]>> =
+                (0..k).map(|c| per_worker.iter().map(|w| w[c]).collect()).collect();
+            let downlinks =
+                parallel::par_zip_map(&mut self.root, &per_chunk, nthreads, |srv, frames, _| {
+                    srv.aggregate_quorum(frames, lr, step)
+                });
+            let downlink = chunked::pack(&downlinks);
+            let down = chunked::payload_len(&downlink);
+            let hops = HopBytes {
+                uplink: uplink_bytes,
+                downlink: down * self.nworkers,
+                ..HopBytes::default()
+            };
+            return Ok((downlink, hops, arrived));
+        }
+        // Hierarchical, chunked: quorum partials from the groups that
+        // have at least one arrival, quorum fold at the root.
+        let arrived_in_group: Vec<Vec<usize>> = self
+            .groups
+            .iter()
+            .map(|range| {
+                uplinks[range.clone()]
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, u)| u.is_some().then_some(range.start + i))
+                    .collect()
+            })
+            .collect();
+        // index of each arrived worker within the flattened `per_worker`
+        let dense_index: Vec<usize> = {
+            let mut map = vec![usize::MAX; self.nworkers];
+            let mut next = 0;
+            for (w, u) in uplinks.iter().enumerate() {
+                if u.is_some() {
+                    map[w] = next;
+                    next += 1;
+                }
+            }
+            map
+        };
+        let mut partials: Vec<Vec<Vec<u8>>> = Vec::with_capacity(self.groups.len());
+        for (gs, members) in self.group_servers.iter_mut().zip(&arrived_in_group) {
+            if members.is_empty() {
+                continue;
+            }
+            let group_frames: Vec<Vec<&[u8]>> = (0..k)
+                .map(|c| members.iter().map(|&w| per_worker[dense_index[w]][c]).collect())
+                .collect();
+            let p = parallel::par_zip_map(gs, &group_frames, nthreads, |srv, frames, _| {
+                srv.partial_quorum(frames, lr, step)
+            });
+            partials.push(p);
+        }
+        let agg_uplink: usize = partials.iter().map(|p| chunked::frames_payload_len(p)).sum();
+        let per_chunk_partials: Vec<Vec<&[u8]>> =
+            (0..k).map(|c| partials.iter().map(|g| g[c].as_slice()).collect()).collect();
+        let downlinks = parallel::par_zip_map(
+            &mut self.root,
+            &per_chunk_partials,
+            nthreads,
+            |srv, ps, _| srv.fold_quorum(ps, lr, step),
+        );
+        let downlink = chunked::pack(&downlinks);
+        let down = chunked::payload_len(&downlink);
+        let hops = HopBytes {
+            uplink: uplink_bytes,
+            agg_uplink,
+            agg_downlink: down * self.groups.len(),
+            downlink: down * self.nworkers,
+            agg_uplink_msgs: partials.len(),
+            agg_downlink_msgs: self.groups.len(),
+        };
+        Ok((downlink, hops, arrived))
+    }
+
+    /// Single-chunk elastic round (bare frames, no envelope).
+    fn aggregate_quorum_single(
+        &mut self,
+        uplinks: &[Option<Vec<u8>>],
+        lr: f32,
+        step: usize,
+        uplink_bytes: usize,
+        arrived: usize,
+    ) -> Result<(Vec<u8>, HopBytes, usize)> {
+        if self.group_servers.is_empty() {
+            let frames: Vec<&[u8]> =
+                uplinks.iter().flatten().map(|m| m.as_slice()).collect();
+            let downlink = self.root[0].aggregate_quorum(&frames, lr, step);
+            let hops = HopBytes {
+                uplink: uplink_bytes,
+                downlink: downlink.len() * self.nworkers,
+                ..HopBytes::default()
+            };
+            return Ok((downlink, hops, arrived));
+        }
+        let mut partials: Vec<Vec<u8>> = Vec::new();
+        for (gs, range) in self.group_servers.iter_mut().zip(&self.groups) {
+            let frames: Vec<&[u8]> =
+                uplinks[range.clone()].iter().flatten().map(|m| m.as_slice()).collect();
+            if frames.is_empty() {
+                continue;
+            }
+            partials.push(gs[0].partial_quorum(&frames, lr, step));
+        }
+        let agg_uplink: usize = partials.iter().map(|m| m.len()).sum();
+        let prefs: Vec<&[u8]> = partials.iter().map(|m| m.as_slice()).collect();
+        let downlink = self.root[0].fold_quorum(&prefs, lr, step);
+        let hops = HopBytes {
+            uplink: uplink_bytes,
+            agg_uplink,
+            agg_downlink: downlink.len() * self.groups.len(),
+            downlink: downlink.len() * self.nworkers,
+            agg_uplink_msgs: prefs.len(),
+            agg_downlink_msgs: self.groups.len(),
+        };
+        Ok((downlink, hops, arrived))
     }
 }
 

@@ -3,13 +3,37 @@
 //! length-prefixed frame format. Proves the codecs' wire formats are
 //! self-describing and lets the cluster span processes if desired.
 //!
-//! Frame: u32 LE payload length, then payload bytes.
+//! Frame: u32 LE payload length (clamped to [`MAX_FRAME_BYTES`] — a
+//! corrupt peer cannot force an arbitrary allocation), then payload
+//! bytes.
+//!
+//! Fault tolerance (the elastic/chaos layer rides on these):
+//! * every read can run under a per-connection deadline
+//!   ([`TcpServer::gather_quorum`]), so a stalled worker yields `None`
+//!   for the round instead of hanging the server in `read_exact`;
+//! * a worker that drops mid-frame surfaces a **named** error (which
+//!   worker, what failed) and is marked dead — later rounds skip it;
+//! * a dead worker can rejoin: the handshake is
+//!   `[id: u32 LE][applied_rounds: u32 LE]`, and the server replays the
+//!   broadcasts the worker missed from a small ring buffer
+//!   ([`TcpServer::accept_reconnect`]), round-id checked, so the
+//!   rejoining replica catches up to the cluster state exactly.
 
 use super::chunked;
 use super::transport::{CommStats, Message, ServerTransport, SharedMessage, WorkerTransport};
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Upper bound on a single frame's payload. Far above any real message
+/// (a dense f32 frame at 16M params is 64 MB), far below what a
+/// corrupt 4-byte prefix can claim (4 GB).
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Broadcast rounds the server keeps for reconnect replay.
+const REPLAY_RING: usize = 8;
 
 fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
     stream.write_all(&(payload.len() as u32).to_le_bytes())?;
@@ -21,20 +45,37 @@ fn read_frame(stream: &mut TcpStream) -> std::io::Result<Message> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})"),
+        ));
+    }
     let mut payload = vec![0u8; len];
     stream.read_exact(&mut payload)?;
     Ok(payload)
 }
 
 pub struct TcpServer {
-    conns: Vec<TcpStream>,
+    /// Index-aligned worker connections; `None` marks a dead worker
+    /// (dropped mid-frame, missed deadline with a broken socket, …) —
+    /// gather/broadcast skip it until [`TcpServer::accept_reconnect`]
+    /// fills the slot again.
+    conns: Vec<Option<TcpStream>>,
     stats: Arc<CommStats>,
+    /// Broadcast rounds completed (the round id of the *next* broadcast).
+    round: u32,
+    /// Last `REPLAY_RING` broadcasts, as `(round_id, frame)`.
+    ring: VecDeque<(u32, Vec<u8>)>,
 }
 
 pub struct TcpWorker {
     id: usize,
     conn: TcpStream,
     stats: Arc<CommStats>,
+    /// Downlink broadcasts received+applied (the `applied_rounds` this
+    /// worker would present in a reconnect handshake).
+    rounds: u32,
 }
 
 /// Bind an ephemeral loopback port and return (server-builder-port, listener).
@@ -44,26 +85,126 @@ pub fn bind_loopback() -> std::io::Result<(u16, TcpListener)> {
     Ok((port, listener))
 }
 
+/// Read and validate the 8-byte `[id][applied_rounds]` handshake.
+/// Truncated or garbage input is a named error, never a panic.
+fn read_handshake(stream: &mut TcpStream, n: usize) -> std::io::Result<(usize, u32)> {
+    let mut buf = [0u8; 8];
+    stream.read_exact(&mut buf).map_err(|e| {
+        std::io::Error::new(e.kind(), format!("truncated handshake (need 8 bytes): {e}"))
+    })?;
+    let id = u32::from_le_bytes(buf[0..4].try_into().expect("4-byte slice")) as usize;
+    let applied = u32::from_le_bytes(buf[4..8].try_into().expect("4-byte slice"));
+    if id >= n {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad worker id {id} (cluster size {n})"),
+        ));
+    }
+    Ok((id, applied))
+}
+
 impl TcpServer {
-    /// Accept exactly `n` worker connections. Workers identify themselves
-    /// with a 4-byte id frame so gather order is index-aligned.
+    /// Accept exactly `n` worker connections. Workers identify
+    /// themselves with the `[id][applied_rounds]` handshake (fresh
+    /// connects present `applied_rounds = 0`) so gather order is
+    /// index-aligned.
     pub fn accept(listener: &TcpListener, n: usize, stats: Arc<CommStats>) -> std::io::Result<Self> {
         let mut conns: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
             let (mut stream, _) = listener.accept()?;
             stream.set_nodelay(true)?;
-            let mut id_buf = [0u8; 4];
-            stream.read_exact(&mut id_buf)?;
-            let id = u32::from_le_bytes(id_buf) as usize;
-            if id >= n || conns[id].is_some() {
+            let (id, _applied) = read_handshake(&mut stream, n)?;
+            if conns[id].is_some() {
                 return Err(std::io::Error::new(
                     std::io::ErrorKind::InvalidData,
-                    format!("bad worker id {id}"),
+                    format!("duplicate worker id {id}"),
                 ));
             }
             conns[id] = Some(stream);
         }
-        Ok(TcpServer { conns: conns.into_iter().map(|c| c.unwrap()).collect(), stats })
+        Ok(TcpServer { conns, stats, round: 0, ring: VecDeque::new() })
+    }
+
+    /// Number of currently connected (live) workers.
+    pub fn live_workers(&self) -> usize {
+        self.conns.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Is worker `id`'s connection currently live?
+    pub fn is_live(&self, id: usize) -> bool {
+        matches!(self.conns.get(id), Some(Some(_)))
+    }
+
+    /// Drop worker `id`'s connection (it will read EOF); subsequent
+    /// gathers treat it as dead until it reconnects.
+    pub fn disconnect(&mut self, id: usize) {
+        if let Some(slot) = self.conns.get_mut(id) {
+            *slot = None;
+        }
+    }
+
+    /// Broadcast rounds completed so far.
+    pub fn round(&self) -> u32 {
+        self.round
+    }
+
+    /// Accept one **reconnecting** worker: validate the handshake (the
+    /// id must name a currently-dead slot), replay every broadcast the
+    /// worker missed from the ring — `[count: u32 LE]` frame, then
+    /// `count` ordinary frames, oldest first — and install the
+    /// connection. A worker that has been gone longer than the ring
+    /// remembers gets a named error (it must rejoin from a checkpoint
+    /// instead); so does an `applied_rounds` from the future.
+    pub fn accept_reconnect(&mut self, listener: &TcpListener) -> std::io::Result<usize> {
+        let (mut stream, _) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        let n = self.conns.len();
+        let (id, applied) = read_handshake(&mut stream, n)?;
+        if self.conns[id].is_some() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("worker {id} reconnected while still live"),
+            ));
+        }
+        if applied > self.round {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "worker {id} claims {applied} applied rounds, server is at {}",
+                    self.round
+                ),
+            ));
+        }
+        let missed = (self.round - applied) as usize;
+        if missed > self.ring.len() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "worker {id} missed {missed} rounds, replay ring holds {} \
+                     (rejoin from a checkpoint)",
+                    self.ring.len()
+                ),
+            ));
+        }
+        stream.write_all(&(missed as u32).to_le_bytes())?;
+        let replay_from = self.ring.len() - missed;
+        for (k, (round_id, frame)) in self.ring.iter().skip(replay_from).enumerate() {
+            debug_assert_eq!(*round_id, applied + k as u32, "ring round ids");
+            write_frame(&mut stream, frame)?;
+            self.stats.record_downlink(chunked::payload_len(frame));
+        }
+        stream.flush()?;
+        self.conns[id] = Some(stream);
+        Ok(id)
+    }
+
+    /// Apply one read deadline to every live connection (`None` clears
+    /// it — reads block forever again).
+    pub fn set_read_deadline(&mut self, deadline: Option<Duration>) -> std::io::Result<()> {
+        for conn in self.conns.iter_mut().flatten() {
+            conn.set_read_timeout(deadline)?;
+        }
+        Ok(())
     }
 }
 
@@ -72,7 +213,49 @@ impl TcpWorker {
         let mut conn = TcpStream::connect(("127.0.0.1", port))?;
         conn.set_nodelay(true)?;
         conn.write_all(&(id as u32).to_le_bytes())?;
-        Ok(TcpWorker { id, conn, stats })
+        conn.write_all(&0u32.to_le_bytes())?; // fresh: 0 applied rounds
+        Ok(TcpWorker { id, conn, stats, rounds: 0 })
+    }
+
+    /// Reconnect after a drop: present `[id][applied_rounds]`, then
+    /// receive the broadcasts this worker missed (round-id checked
+    /// server-side). Returns the worker plus the replayed downlinks,
+    /// oldest first — the caller applies them in order before rejoining
+    /// the round loop. A replay count beyond the server's ring capacity
+    /// is rejected without allocating.
+    pub fn reconnect(
+        port: u16,
+        id: usize,
+        applied_rounds: u32,
+        stats: Arc<CommStats>,
+    ) -> std::io::Result<(Self, Vec<SharedMessage>)> {
+        let mut conn = TcpStream::connect(("127.0.0.1", port))?;
+        conn.set_nodelay(true)?;
+        conn.write_all(&(id as u32).to_le_bytes())?;
+        conn.write_all(&applied_rounds.to_le_bytes())?;
+        let mut count_buf = [0u8; 4];
+        conn.read_exact(&mut count_buf).map_err(|e| {
+            std::io::Error::new(e.kind(), format!("reconnect replay header: {e}"))
+        })?;
+        let count = u32::from_le_bytes(count_buf) as usize;
+        if count > REPLAY_RING {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("server claims {count} replay frames (ring capacity {REPLAY_RING})"),
+            ));
+        }
+        let mut replayed = Vec::with_capacity(count);
+        for _ in 0..count {
+            replayed.push(SharedMessage::from(read_frame(&mut conn)?));
+        }
+        let rounds = applied_rounds + count as u32;
+        Ok((TcpWorker { id, conn, stats, rounds }, replayed))
+    }
+
+    /// Downlink broadcasts received so far (the reconnect handshake's
+    /// `applied_rounds`).
+    pub fn rounds_received(&self) -> u32 {
+        self.rounds
     }
 }
 
@@ -81,21 +264,85 @@ impl ServerTransport for TcpServer {
         self.conns.len()
     }
 
+    /// Lockstep gather: one frame from every worker, in index order. A
+    /// dead or failing worker is a **named** error (`worker {i}: …`) —
+    /// never a silent hang on a half-closed socket.
     fn gather(&mut self) -> std::io::Result<Vec<Message>> {
         let mut msgs = Vec::with_capacity(self.conns.len());
-        for conn in &mut self.conns {
-            msgs.push(read_frame(conn)?);
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            let conn = conn.as_mut().ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::NotConnected,
+                    format!("worker {i}: disconnected"),
+                )
+            })?;
+            let frame = read_frame(conn).map_err(|e| {
+                std::io::Error::new(e.kind(), format!("worker {i}: {e}"))
+            })?;
+            msgs.push(frame);
         }
         Ok(msgs)
     }
 
     fn broadcast(&mut self, msg: &[u8]) -> std::io::Result<()> {
         let logical = chunked::payload_len(msg);
-        for conn in &mut self.conns {
-            self.stats.record_downlink(logical);
-            write_frame(conn, msg)?;
+        for conn in self.conns.iter_mut() {
+            let Some(stream) = conn.as_mut() else { continue };
+            match write_frame(stream, msg) {
+                Ok(()) => self.stats.record_downlink(logical),
+                // a worker that died between gather and broadcast is
+                // marked dead, not fatal — the elastic driver keeps the
+                // survivors moving
+                Err(_) => *conn = None,
+            }
         }
+        self.ring.push_back((self.round, msg.to_vec()));
+        if self.ring.len() > REPLAY_RING {
+            self.ring.pop_front();
+        }
+        self.round += 1;
         Ok(())
+    }
+
+    /// Deadline gather: every live connection gets `deadline` to
+    /// deliver its frame. A timeout yields `None` for the round (the
+    /// connection stays live — the worker is merely late and, by the
+    /// elastic protocol, skips the round rather than sending into the
+    /// next one); EOF / reset / a malformed frame marks the worker dead
+    /// and yields `None`. Dead slots yield `None` immediately.
+    ///
+    /// Note the deadline applies per connection and a partial frame
+    /// followed by a timeout would leave the stream misaligned — the
+    /// chaos protocol avoids this by making delayed workers skip the
+    /// send entirely (frames are small; loopback delivers them whole).
+    fn gather_quorum(
+        &mut self,
+        deadline: Option<Duration>,
+    ) -> std::io::Result<Vec<Option<Message>>> {
+        let mut msgs = Vec::with_capacity(self.conns.len());
+        for conn in self.conns.iter_mut() {
+            let Some(stream) = conn.as_mut() else {
+                msgs.push(None);
+                continue;
+            };
+            stream.set_read_timeout(deadline)?;
+            match read_frame(stream) {
+                Ok(frame) => msgs.push(Some(frame)),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // straggler: no frame this round, connection kept
+                    msgs.push(None);
+                }
+                Err(_) => {
+                    // EOF, reset, oversized frame, …: the worker is gone
+                    *conn = None;
+                    msgs.push(None);
+                }
+            }
+        }
+        Ok(msgs)
     }
 }
 
@@ -110,7 +357,9 @@ impl WorkerTransport for TcpWorker {
     }
 
     fn recv(&mut self) -> std::io::Result<SharedMessage> {
-        read_frame(&mut self.conn).map(Arc::from)
+        let frame = read_frame(&mut self.conn)?;
+        self.rounds += 1;
+        Ok(Arc::from(frame))
     }
 }
 
@@ -132,6 +381,7 @@ mod tests {
                     w.send(vec![id as u8; 5]).unwrap();
                     let d = w.recv().unwrap();
                     assert_eq!(&d[..], [7u8; 3]);
+                    assert_eq!(w.rounds_received(), 1);
                 })
             })
             .collect();
@@ -141,6 +391,7 @@ mod tests {
             assert_eq!(m, &vec![i as u8; 5]);
         }
         server.broadcast(&[7u8; 3]).unwrap();
+        assert_eq!(server.round(), 1);
         for h in worker_handles {
             h.join().unwrap();
         }
@@ -182,5 +433,27 @@ mod tests {
         // dense chunks 4+4 payload bytes + 1 tag
         assert_eq!(stats.uplink(), 5);
         assert_eq!(stats.downlink(), 9);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_a_named_error_not_an_allocation() {
+        // Satellite regression: a corrupt 4-byte prefix claiming 4 GB
+        // must produce InvalidData naming the budget, not vec![0; 4GB].
+        let (port, listener) = bind_loopback().unwrap();
+        let stats = CommStats::new();
+        let attacker = thread::spawn(move || {
+            let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            s.write_all(&0u32.to_le_bytes()).unwrap(); // id 0
+            s.write_all(&0u32.to_le_bytes()).unwrap(); // applied 0
+            s.write_all(&u32::MAX.to_le_bytes()).unwrap(); // "4 GB frame"
+            s
+        });
+        let mut server = TcpServer::accept(&listener, 1, stats).unwrap();
+        let err = server.gather().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        let msg = err.to_string();
+        assert!(msg.contains("MAX_FRAME_BYTES"), "unnamed error: {msg}");
+        assert!(msg.contains("worker 0"), "error must name the worker: {msg}");
+        drop(attacker.join().unwrap());
     }
 }

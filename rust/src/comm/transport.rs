@@ -45,6 +45,12 @@ pub struct CommStats {
     pub agg_uplink_msgs: AtomicU64,
     /// number of root → aggregator messages (hierarchical only)
     pub agg_downlink_msgs: AtomicU64,
+    /// communication rounds closed (elastic driver only)
+    pub rounds: AtomicU64,
+    /// rounds that closed with fewer uplinks than workers
+    pub partial_rounds: AtomicU64,
+    /// sum of achieved quorums over all closed rounds
+    pub quorum_sum: AtomicU64,
 }
 
 impl CommStats {
@@ -69,6 +75,15 @@ impl CommStats {
         self.agg_downlink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.agg_downlink_msgs.fetch_add(msgs as u64, Ordering::Relaxed);
     }
+    /// Record one elastic round closing with `arrived` of `nworkers`
+    /// uplinks (the achieved quorum).
+    pub fn record_round_quorum(&self, arrived: usize, nworkers: usize) {
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        self.quorum_sum.fetch_add(arrived as u64, Ordering::Relaxed);
+        if arrived < nworkers {
+            self.partial_rounds.fetch_add(1, Ordering::Relaxed);
+        }
+    }
     pub fn uplink(&self) -> u64 {
         self.uplink_bytes.load(Ordering::Relaxed)
     }
@@ -90,6 +105,18 @@ impl CommStats {
     pub fn agg_downlink_msg_count(&self) -> u64 {
         self.agg_downlink_msgs.load(Ordering::Relaxed)
     }
+    /// Elastic rounds closed so far.
+    pub fn round_count(&self) -> u64 {
+        self.rounds.load(Ordering::Relaxed)
+    }
+    /// Elastic rounds that closed below full quorum.
+    pub fn partial_round_count(&self) -> u64 {
+        self.partial_rounds.load(Ordering::Relaxed)
+    }
+    /// Sum of achieved quorums (mean quorum = this / [`Self::round_count`]).
+    pub fn quorum_total(&self) -> u64 {
+        self.quorum_sum.load(Ordering::Relaxed)
+    }
     /// All bytes that crossed any link (worker edge + aggregator hops).
     pub fn total(&self) -> u64 {
         self.uplink() + self.downlink() + self.agg_uplink() + self.agg_downlink()
@@ -103,6 +130,9 @@ impl CommStats {
         self.downlink_msgs.store(0, Ordering::Relaxed);
         self.agg_uplink_msgs.store(0, Ordering::Relaxed);
         self.agg_downlink_msgs.store(0, Ordering::Relaxed);
+        self.rounds.store(0, Ordering::Relaxed);
+        self.partial_rounds.store(0, Ordering::Relaxed);
+        self.quorum_sum.store(0, Ordering::Relaxed);
     }
 }
 
@@ -122,6 +152,20 @@ pub trait ServerTransport: Send {
     fn gather(&mut self) -> std::io::Result<Vec<Message>>;
     /// Broadcast one message to every worker.
     fn broadcast(&mut self, msg: &[u8]) -> std::io::Result<()>;
+    /// Elastic gather: wait up to `deadline` per worker (`None` =
+    /// forever) and return `Some(frame)` for each uplink that arrived,
+    /// `None` for stragglers and disconnected workers — the transport
+    /// never fails the whole round because one worker went quiet. The
+    /// default is the lockstep gather (every slot `Some`), so
+    /// transports without deadline support still serve
+    /// lockstep-policy elastic drivers.
+    fn gather_quorum(
+        &mut self,
+        deadline: Option<std::time::Duration>,
+    ) -> std::io::Result<Vec<Option<Message>>> {
+        let _ = deadline;
+        Ok(self.gather()?.into_iter().map(Some).collect())
+    }
 }
 
 /// Worker side of a transport.
@@ -195,12 +239,34 @@ impl ServerTransport for InProcServer {
         let shared: SharedMessage = Arc::from(msg);
         let logical = chunked::payload_len(msg);
         for tx in &self.downlinks {
-            self.stats.record_downlink(logical);
-            tx.send(shared.clone()).map_err(|e| {
-                std::io::Error::new(std::io::ErrorKind::BrokenPipe, format!("broadcast: {e}"))
-            })?;
+            // A hung-up worker (dead receiver) is skipped, not fatal:
+            // the elastic driver keeps broadcasting to the survivors.
+            if tx.send(shared.clone()).is_ok() {
+                self.stats.record_downlink(logical);
+            }
         }
         Ok(())
+    }
+
+    /// Per-worker `recv_timeout` gather: a worker that missed the
+    /// deadline or hung up contributes `None` this round; its frame (if
+    /// merely late) stays queued in the channel for the next round's
+    /// gather — which is why the elastic driver must pair this with
+    /// workers that *skip* sending on delayed rounds, keeping the
+    /// frame↔round alignment deterministic.
+    fn gather_quorum(
+        &mut self,
+        deadline: Option<std::time::Duration>,
+    ) -> std::io::Result<Vec<Option<Message>>> {
+        let mut msgs = Vec::with_capacity(self.uplinks.len());
+        for rx in &self.uplinks {
+            let got = match deadline {
+                None => rx.recv().ok(),
+                Some(d) => rx.recv_timeout(d).ok(),
+            };
+            msgs.push(got);
+        }
+        Ok(msgs)
     }
 }
 

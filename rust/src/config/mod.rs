@@ -89,8 +89,12 @@ impl Experiment {
         let h = toml::section(&doc, "hyper");
         // `chunk_size` is a wire-format knob shared by the strategy and
         // cluster layers; it is accepted under [hyper] (the canonical
-        // spelling) and [train], with the [hyper] value winning.
+        // spelling) and [train], with the [hyper] value winning. The
+        // elastic-round knobs follow the same convention.
         exp.train.chunk_size = h.usize_or("chunk_size", exp.train.chunk_size);
+        exp.train.quorum = h.usize_or("quorum", exp.train.quorum);
+        exp.train.round_deadline_ms =
+            h.usize_or("round_deadline_ms", exp.train.round_deadline_ms as usize) as u64;
         exp.hyper.beta1 = h.f64_or("beta1", exp.hyper.beta1 as f64) as f32;
         exp.hyper.beta2 = h.f64_or("beta2", exp.hyper.beta2 as f64) as f32;
         exp.hyper.weight_decay = h.f64_or("weight_decay", exp.hyper.weight_decay as f64) as f32;
@@ -147,6 +151,10 @@ impl Experiment {
             }
             "hyper.chunk_size" | "train.chunk_size" => {
                 self.train.chunk_size = parse_usize(val)?
+            }
+            "hyper.quorum" | "train.quorum" => self.train.quorum = parse_usize(val)?,
+            "hyper.round_deadline_ms" | "train.round_deadline_ms" => {
+                self.train.round_deadline_ms = parse_usize(val)? as u64
             }
             "train.steps" => self.train.steps = parse_usize(val)?,
             "train.batch_per_worker" => self.train.batch_per_worker = parse_usize(val)?,
@@ -236,6 +244,8 @@ compact_sparse = true
 link_budget = 6.0
 local_steps = 8
 chunk_size = 4096
+quorum = 3
+round_deadline_ms = 250
 
 [task]
 dim = 128
@@ -257,8 +267,18 @@ dim = 128
         assert_eq!(exp.hyper.local_steps, 8);
         assert_eq!(exp.train.chunk_size, 4096);
         assert_eq!(exp.task_dim, 128);
+        assert_eq!(exp.train.quorum, 3);
+        assert_eq!(exp.train.round_deadline_ms, 250);
+        let policy = exp.train.quorum_policy();
+        assert_eq!(policy.min_workers, 3);
+        assert_eq!(policy.deadline_ms, 250);
         exp.apply_override("hyper.chunk_size=128").unwrap();
         assert_eq!(exp.train.chunk_size, 128);
+        exp.apply_override("hyper.quorum=5").unwrap();
+        assert_eq!(exp.train.quorum, 5);
+        exp.apply_override("hyper.round_deadline_ms=1000").unwrap();
+        assert_eq!(exp.train.round_deadline_ms, 1000);
+        assert!(exp.apply_override("hyper.quorum=x").is_err());
         exp.apply_override("train.chunk_size=0").unwrap();
         assert_eq!(exp.train.chunk_size, 0);
         assert!(exp.apply_override("hyper.chunk_size=x").is_err());

@@ -125,6 +125,12 @@ impl Strategy for DLion {
     fn partial_bits_per_param(&self, group_size: usize) -> f64 {
         bits_for_count(group_size) as f64
     }
+
+    /// A missing voter abstains exactly — the vote over the quorum is
+    /// the ground-truth aggregate over the quorum.
+    fn quorum(&self) -> super::QuorumSupport {
+        super::QuorumSupport::Exact
+    }
 }
 
 /// D-SIGNUM: Signum workers behind the same vote/average servers.
@@ -225,6 +231,11 @@ impl Strategy for DSignum {
 
     fn partial_bits_per_param(&self, group_size: usize) -> f64 {
         bits_for_count(group_size) as f64
+    }
+
+    /// Sign votes tolerate any voter count (abstention-exact).
+    fn quorum(&self) -> super::QuorumSupport {
+        super::QuorumSupport::Exact
     }
 }
 

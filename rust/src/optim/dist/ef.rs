@@ -115,6 +115,12 @@ impl Strategy for DLionEf {
     fn downlink_bits_per_param(&self, nworkers: usize) -> f64 {
         sign_family_downlink_bits(self.agg, nworkers)
     }
+
+    /// Sign votes tolerate any voter count, and the EF residual folds a
+    /// straggler's unsent mass into its next frame automatically.
+    fn quorum(&self) -> super::QuorumSupport {
+        super::QuorumSupport::Exact
+    }
 }
 
 #[cfg(test)]

@@ -9,7 +9,7 @@
 //! message — an adversary that keeps the protocol but lies about the
 //! content, the strongest attack the aggregation rule itself can see.
 
-use super::WorkerLogic;
+use super::{Chunk, WorkerLogic};
 use crate::util::Rng;
 
 /// Corruption model applied to each uplink frame.
@@ -30,20 +30,35 @@ pub struct FaultyWorker {
     inner: Box<dyn WorkerLogic>,
     fault: Fault,
     rng: Rng,
+    /// First step the corruption fires on (0 = from the start) — lets
+    /// the chaos harness run honest warmup rounds, then turn Byzantine
+    /// mid-run at a planned round.
+    from_step: usize,
 }
 
 impl FaultyWorker {
     pub fn new(inner: Box<dyn WorkerLogic>, fault: Fault, seed: u64) -> Self {
-        FaultyWorker { inner, fault, rng: Rng::new(seed) }
+        Self::from_step(inner, fault, seed, 0)
     }
-}
 
-impl WorkerLogic for FaultyWorker {
-    fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8> {
-        let mut msg = self.inner.encode(grads, lr, step);
+    /// Like [`FaultyWorker::new`] but honest until `step >= from_step`.
+    pub fn from_step(
+        inner: Box<dyn WorkerLogic>,
+        fault: Fault,
+        seed: u64,
+        from_step: usize,
+    ) -> Self {
+        FaultyWorker { inner, fault, rng: Rng::new(seed), from_step }
+    }
+
+    /// Corrupt the payload of one already-encoded frame in place,
+    /// preserving byte 0 (the frame tag) and the length.
+    fn corrupt(&mut self, msg: &mut [u8], step: usize) {
+        if step < self.from_step {
+            return;
+        }
         match self.fault {
             Fault::RandomBytes => {
-                // keep byte 0 (the frame tag) so the server can decode
                 for b in msg.iter_mut().skip(1) {
                     *b = (self.rng.next_u64() & 0xFF) as u8;
                 }
@@ -55,11 +70,32 @@ impl WorkerLogic for FaultyWorker {
             }
             Fault::Honest => {}
         }
+    }
+}
+
+impl WorkerLogic for FaultyWorker {
+    fn encode(&mut self, grads: &[f32], lr: f32, step: usize) -> Vec<u8> {
+        let mut msg = self.inner.encode(grads, lr, step);
+        self.corrupt(&mut msg, step);
         msg
     }
 
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, step: usize) {
         self.inner.apply(params, downlink, lr, step);
+    }
+
+    // Chunked wire: corrupt each per-chunk frame the same way (tag and
+    // length preserved per chunk), apply honestly — without these
+    // overrides the defaults would route through whole-model
+    // encode/apply and double-corrupt or break multi-chunk plans.
+    fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, lr: f32, step: usize) -> Vec<u8> {
+        let mut msg = self.inner.encode_chunk(grads, chunk, lr, step);
+        self.corrupt(&mut msg, step);
+        msg
+    }
+
+    fn apply_chunk(&mut self, params: &mut [f32], msg: &[u8], chunk: Chunk, lr: f32, step: usize) {
+        self.inner.apply_chunk(params, msg, chunk, lr, step);
     }
 
     // Local steps and the momentum probe are worker-local (nothing on

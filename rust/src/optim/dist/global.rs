@@ -120,27 +120,30 @@ impl DenseAvgServer {
         }
     }
 
-    /// Scale the accumulated sum to the mean and frame it.
-    fn finish_mean(&mut self) -> Vec<u8> {
-        let inv = 1.0 / self.nworkers as f32;
+    /// Scale the accumulated sum to the mean over `voters` contributors
+    /// and frame it. Elastic rounds pass the arrived count — the mean
+    /// rescales to the quorum; lockstep passes `nworkers`.
+    fn finish_mean(&mut self, voters: usize) -> Vec<u8> {
+        let inv = 1.0 / voters as f32;
         for a in self.acc.iter_mut() {
             *a *= inv;
         }
         frame(TAG_DENSE, &dense::pack(&self.acc))
     }
 
-    /// Frame the accumulated sum as a tag-14 partial.
-    fn sum_partial(&self) -> Vec<u8> {
+    /// Frame the accumulated sum as a tag-14 partial covering `voters`.
+    fn sum_partial(&self, voters: usize) -> Vec<u8> {
         let payload = dense::pack(&self.acc);
         let mut msg = Vec::with_capacity(3 + payload.len());
         msg.push(TAG_DENSE_SUM);
-        msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
+        msg.extend_from_slice(&(voters as u16).to_le_bytes());
         msg.extend_from_slice(&payload);
         msg
     }
 
-    /// Sum tag-14 group partials into the accumulator and finish.
-    fn fold_partials<'a>(&mut self, partials: impl Iterator<Item = &'a [u8]>) -> Vec<u8> {
+    /// Sum tag-14 group partials into the accumulator; returns the
+    /// total contributor count the partials self-describe.
+    fn sum_partials<'a>(&mut self, partials: impl Iterator<Item = &'a [u8]>) -> usize {
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         let mut total = 0usize;
         for p in partials {
@@ -148,8 +151,15 @@ impl DenseAvgServer {
             total += read_u16(p, 1) as usize;
             dense::accumulate(&p[3..], &mut self.acc);
         }
+        total
+    }
+
+    /// Sum tag-14 group partials into the accumulator and finish
+    /// (lockstep: partials must cover every worker).
+    fn fold_partials<'a>(&mut self, partials: impl Iterator<Item = &'a [u8]>) -> Vec<u8> {
+        let total = self.sum_partials(partials);
         assert_eq!(total, self.nworkers, "group partials must cover all workers");
-        self.finish_mean()
+        self.finish_mean(total)
     }
 }
 
@@ -157,7 +167,7 @@ impl ServerLogic for DenseAvgServer {
     fn aggregate(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
         self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
-        self.finish_mean()
+        self.finish_mean(self.nworkers)
     }
 
     /// Chunked hot path: per-chunk instances average their chunk's
@@ -165,7 +175,7 @@ impl ServerLogic for DenseAvgServer {
     fn aggregate_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "uplink count mismatch");
         self.accumulate_uplinks(uplinks.iter().copied());
-        self.finish_mean()
+        self.finish_mean(self.nworkers)
     }
 
     /// Group hop: ship the group's f32 partial gradient sum (tag 14) —
@@ -175,13 +185,13 @@ impl ServerLogic for DenseAvgServer {
     fn partial(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
         self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
-        self.sum_partial()
+        self.sum_partial(self.nworkers)
     }
 
     fn partial_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
         self.accumulate_uplinks(uplinks.iter().copied());
-        self.sum_partial()
+        self.sum_partial(self.nworkers)
     }
 
     /// Root hop: add the group sums (left-to-right, the same f32
@@ -193,6 +203,33 @@ impl ServerLogic for DenseAvgServer {
 
     fn fold_chunk(&mut self, partials: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
         self.fold_partials(partials.iter().copied())
+    }
+
+    /// Elastic rounds: the mean rescales to the arrived count — sum
+    /// over Q, divide by Q. At Q == nworkers this is byte-identical to
+    /// the lockstep aggregate.
+    fn aggregate_quorum(&mut self, uplinks: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        let q = uplinks.len();
+        assert!(q >= 1 && q <= self.nworkers, "quorum {q} out of range 1..={}", self.nworkers);
+        self.accumulate_uplinks(uplinks.iter().copied());
+        self.finish_mean(q)
+    }
+
+    fn partial_quorum(&mut self, uplinks: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        let q = uplinks.len();
+        assert!(q >= 1 && q <= self.nworkers, "quorum {q} out of range 1..={}", self.nworkers);
+        self.accumulate_uplinks(uplinks.iter().copied());
+        self.sum_partial(q)
+    }
+
+    fn fold_quorum(&mut self, partials: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        let total = self.sum_partials(partials.iter().copied());
+        assert!(
+            total >= 1 && total <= self.nworkers,
+            "folded quorum {total} out of range 1..={}",
+            self.nworkers
+        );
+        self.finish_mean(total)
     }
 }
 
@@ -232,6 +269,11 @@ impl Strategy for Global {
     /// Aggregator→root hop ships one f32 partial sum per group.
     fn partial_bits_per_param(&self, _group_size: usize) -> f64 {
         32.0
+    }
+
+    /// The dense mean rescales to whatever quorum arrived.
+    fn quorum(&self) -> super::QuorumSupport {
+        super::QuorumSupport::Rescaled
     }
 }
 

@@ -178,6 +178,11 @@ impl Strategy for DLionLocal {
     fn local_steps(&self) -> usize {
         self.h
     }
+
+    /// Sign votes tolerate any voter count (abstention-exact).
+    fn quorum(&self) -> super::QuorumSupport {
+        super::QuorumSupport::Exact
+    }
 }
 
 #[cfg(test)]

@@ -251,6 +251,29 @@ impl ChunkPlan {
     }
 }
 
+/// How a strategy's aggregation behaves when a round closes with fewer
+/// uplinks than the cluster size ([`Strategy::quorum`]) — the contract
+/// the elastic round engine ([`crate::cluster::topology::RoundEngine`])
+/// checks before it accepts a partial quorum.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuorumSupport {
+    /// Missing voters abstain *exactly*: aggregating the arrived
+    /// uplinks is, by definition, the aggregate over that subset. The
+    /// sign-vote family is here — a vote sum over Q ⊆ N binary frames
+    /// is the Q-worker vote sum, and the tag-3 intavg partials already
+    /// carry their voter count on the wire.
+    Exact,
+    /// The aggregate is a mean that rescales by the arrived count
+    /// (dense f32 family: sum over Q, divide by Q).
+    Rescaled,
+    /// No partial-quorum semantics (sparse top-k selections, momentum
+    /// sync frames, per-round selector schedules): rounds must be full,
+    /// and the engine rejects a partial round with a named error. The
+    /// default.
+    #[default]
+    Unsupported,
+}
+
 /// How a strategy's wire format partitions ([`Strategy::chunking`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Chunking {
@@ -541,6 +564,36 @@ pub trait ServerLogic: Send {
         let owned: Vec<Vec<u8>> = partials.iter().map(|m| m.to_vec()).collect();
         self.fold(&owned, lr, step)
     }
+
+    /// Aggregate a **partial quorum**: `uplinks` holds only the frames
+    /// that arrived by the round deadline (1 ≤ Q ≤ nworkers of them).
+    /// Only meaningful when the owning strategy reports
+    /// [`QuorumSupport::Exact`] or [`QuorumSupport::Rescaled`]; at
+    /// Q = nworkers the downlink must be byte-identical to
+    /// [`ServerLogic::aggregate`] (the elastic engine's full-quorum
+    /// rounds stay bit-exact with the lockstep engine). The default
+    /// panics — the round engine gates on [`Strategy::quorum`] before
+    /// routing a partial round here.
+    fn aggregate_quorum(&mut self, uplinks: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        let _ = uplinks;
+        panic!("strategy has no partial-quorum aggregation (QuorumSupport::Unsupported)");
+    }
+
+    /// Quorum counterpart of [`ServerLogic::partial`]: fold the group's
+    /// *arrived* uplinks (1 ≤ Q ≤ group size) into one partial frame
+    /// whose on-wire count is Q, so the root's fold rescales exactly.
+    fn partial_quorum(&mut self, uplinks: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        let _ = uplinks;
+        panic!("strategy has no partial-quorum partials (QuorumSupport::Unsupported)");
+    }
+
+    /// Quorum counterpart of [`ServerLogic::fold`]: sum group partials
+    /// whose counts may cover fewer than nworkers voters (groups with
+    /// no arrivals ship nothing) and finish over the achieved total.
+    fn fold_quorum(&mut self, partials: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        let _ = partials;
+        panic!("strategy has no partial-quorum fold (QuorumSupport::Unsupported)");
+    }
 }
 
 /// A distributed training strategy: a factory for worker/server logic
@@ -649,6 +702,14 @@ pub trait Strategy: Send + Sync {
     /// verbatim; strategies with a mergeable partial override it.
     fn partial_bits_per_param(&self, group_size: usize) -> f64 {
         group_size as f64 * self.uplink_bits_per_param(group_size)
+    }
+
+    /// Partial-quorum semantics of this strategy's aggregation (see
+    /// [`QuorumSupport`]). The elastic round engine refuses to close a
+    /// round early unless this returns something other than
+    /// [`QuorumSupport::Unsupported`].
+    fn quorum(&self) -> QuorumSupport {
+        QuorumSupport::Unsupported
     }
 }
 
@@ -1078,18 +1139,22 @@ impl SignVoteServer {
         Some(msg)
     }
 
-    /// Encode the accumulated votes as a tag-3 intavg partial frame.
-    fn votes_partial(&self) -> Vec<u8> {
-        let payload = intavg::pack(&self.votes, self.nworkers);
+    /// Encode the accumulated votes as a tag-3 intavg partial frame
+    /// covering `voters` ballots (the full `nworkers` in lockstep
+    /// rounds; the arrived quorum in elastic rounds).
+    fn votes_partial(&self, voters: usize) -> Vec<u8> {
+        let payload = intavg::pack(&self.votes, voters);
         let mut msg = Vec::with_capacity(3 + payload.len());
         msg.push(TAG_INTAVG);
-        msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
+        msg.extend_from_slice(&(voters as u16).to_le_bytes());
         msg.extend_from_slice(&payload);
         msg
     }
 
-    /// Sum intavg vote partials into the vote buffer, then finish.
-    fn fold_partials<'a>(&mut self, partials: impl Iterator<Item = &'a [u8]>) -> Vec<u8> {
+    /// Sum intavg vote partials into the vote buffer; returns the total
+    /// voter count covered (each partial self-describes its count, so
+    /// partial quorums sum exactly).
+    fn sum_partials<'a>(&mut self, partials: impl Iterator<Item = &'a [u8]>) -> usize {
         let d = self.votes.len();
         self.votes.iter_mut().for_each(|v| *v = 0);
         self.scratch.resize(d, 0);
@@ -1103,38 +1168,76 @@ impl SignVoteServer {
             }
             total += group_n;
         }
+        total
+    }
+
+    /// Sum intavg vote partials into the vote buffer, then finish
+    /// (lockstep: partials must cover every worker).
+    fn fold_partials<'a>(&mut self, partials: impl Iterator<Item = &'a [u8]>) -> Vec<u8> {
+        let total = self.sum_partials(partials);
         assert_eq!(total, self.nworkers, "group partials must cover all workers");
-        self.finish()
+        self.finish(total)
     }
 
     /// Encode the accumulated votes as the downlink frame (the shared
-    /// tail of `aggregate` and `fold`).
-    fn finish(&mut self) -> Vec<u8> {
+    /// tail of `aggregate` and `fold`), over `voters` ballots. A
+    /// missing voter abstains *exactly*: the vote sum over the quorum
+    /// IS the aggregate over the quorum, so the odd/even wire-format
+    /// branch follows the achieved count, not the cluster size.
+    fn finish(&mut self, voters: usize) -> Vec<u8> {
         match self.agg {
             Aggregation::MajorityVote => {
-                if self.nworkers % 2 == 1 {
-                    // Odd N: the vote sum is never zero, the downlink is
-                    // strictly binary — 1 bit/param (Table 1's d·d row).
+                if voters % 2 == 1 {
+                    // Odd count: the vote sum is never zero, the downlink
+                    // is strictly binary — 1 bit/param (Table 1's d·d row).
                     let signs: Vec<i8> =
                         self.votes.iter().map(|&v| if v > 0 { 1 } else { -1 }).collect();
                     frame(TAG_SIGN, &sign::pack(&signs))
                 } else {
-                    // Even N: ties produce genuine zeros; pay the 1.6-bit
-                    // ternary frame.
+                    // Even count: ties produce genuine zeros; pay the
+                    // 1.6-bit ternary frame.
                     let trits: Vec<i8> =
                         self.votes.iter().map(|&v| crate::util::math::isign(v)).collect();
                     frame(TAG_TERN, &tern::pack(&trits))
                 }
             }
             Aggregation::Average => {
-                let payload = intavg::pack(&self.votes, self.nworkers);
+                let payload = intavg::pack(&self.votes, voters);
                 let mut msg = Vec::with_capacity(3 + payload.len());
                 msg.push(TAG_INTAVG);
-                msg.extend_from_slice(&(self.nworkers as u16).to_le_bytes());
+                msg.extend_from_slice(&(voters as u16).to_le_bytes());
                 msg.extend_from_slice(&payload);
                 msg
             }
         }
+    }
+
+    /// Quorum aggregate shared by the whole-model and chunk paths:
+    /// `q = uplinks.len()` ballots arrived, the rest abstain. Odd-q
+    /// pure majority votes ride the SWAR planes with the threshold
+    /// lowered to ⌈q/2⌉ (the planes are sized for `nworkers`, which
+    /// bounds any quorum count); everything else takes the i32 path
+    /// with the achieved count. At q == nworkers this is byte-identical
+    /// to the lockstep aggregate.
+    fn aggregate_quorum_frames(&mut self, uplinks: &[&[u8]]) -> Vec<u8> {
+        let q = uplinks.len();
+        assert!(q >= 1 && q <= self.nworkers, "quorum {q} out of range 1..={}", self.nworkers);
+        if self.agg == Aggregation::MajorityVote && q % 2 == 1 {
+            if let Some(planes) = self.planes.as_mut() {
+                planes.reset();
+                for up in uplinks {
+                    assert_eq!(up[0], TAG_SIGN, "sign-vote server expects 1-bit uplinks");
+                    planes.add(&up[1..]);
+                }
+                debug_assert_eq!(planes.added(), q);
+                let mut msg = vec![0u8; 1 + sign::packed_len(planes.dim())];
+                msg[0] = TAG_SIGN;
+                planes.threshold_into(q.div_ceil(2), &mut msg[1..]);
+                return msg;
+            }
+        }
+        self.accumulate_uplinks(uplinks.iter().copied());
+        self.finish(q)
     }
 }
 
@@ -1145,7 +1248,7 @@ impl ServerLogic for SignVoteServer {
             return msg;
         }
         self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
-        self.finish()
+        self.finish(self.nworkers)
     }
 
     /// Group hop: ship the group's exact vote sums, log₂(g+1)-bit
@@ -1154,7 +1257,7 @@ impl ServerLogic for SignVoteServer {
     fn partial(&mut self, uplinks: &[Vec<u8>], _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
         self.accumulate_uplinks(uplinks.iter().map(|u| u.as_slice()));
-        self.votes_partial()
+        self.votes_partial(self.nworkers)
     }
 
     /// Root hop: sum the group vote sums — integer addition regroups
@@ -1172,17 +1275,44 @@ impl ServerLogic for SignVoteServer {
             return msg;
         }
         self.accumulate_uplinks(uplinks.iter().copied());
-        self.finish()
+        self.finish(self.nworkers)
     }
 
     fn partial_chunk(&mut self, uplinks: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
         assert_eq!(uplinks.len(), self.nworkers, "group uplink count mismatch");
         self.accumulate_uplinks(uplinks.iter().copied());
-        self.votes_partial()
+        self.votes_partial(self.nworkers)
     }
 
     fn fold_chunk(&mut self, partials: &[&[u8]], _chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
         self.fold_partials(partials.iter().copied())
+    }
+
+    /// Elastic rounds: missing voters abstain exactly — the aggregate
+    /// over the arrived ballots is the ground truth over the quorum.
+    fn aggregate_quorum(&mut self, uplinks: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        self.aggregate_quorum_frames(uplinks)
+    }
+
+    /// Elastic group hop: the partial's on-wire count is the group's
+    /// *arrived* count, so the root's fold sums achieved quorums.
+    fn partial_quorum(&mut self, uplinks: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        let q = uplinks.len();
+        assert!(q >= 1 && q <= self.nworkers, "quorum {q} out of range 1..={}", self.nworkers);
+        self.accumulate_uplinks(uplinks.iter().copied());
+        self.votes_partial(q)
+    }
+
+    /// Elastic root hop: finish over however many voters the partials
+    /// cover (groups with no arrivals shipped nothing).
+    fn fold_quorum(&mut self, partials: &[&[u8]], _lr: f32, _step: usize) -> Vec<u8> {
+        let total = self.sum_partials(partials.iter().copied());
+        assert!(
+            total >= 1 && total <= self.nworkers,
+            "folded quorum {total} out of range 1..={}",
+            self.nworkers
+        );
+        self.finish(total)
     }
 }
 

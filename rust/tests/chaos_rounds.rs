@@ -1,0 +1,228 @@
+//! Elastic quorum rounds under seeded fault injection: the kill /
+//! delay / corrupt matrix over strategies × topologies × transports.
+//!
+//! What must hold (the chaos contract):
+//! * every planned run **completes** — no hangs, no panics;
+//! * the achieved quorum of every round equals the [`FaultPlan`]'s
+//!   prediction exactly (faults are deterministic: delayed workers skip
+//!   the send, killed workers drop the connection);
+//! * honest full-quorum runs are **bit-exact** with the lockstep
+//!   drivers (`run_sequential` / `run_threaded`) — the elastic engine
+//!   routes full arrivals through the very same aggregation path;
+//! * under-floor rounds and unsupported strategies produce named
+//!   errors, not corrupted training.
+
+use dlion::cluster::chaos::{run_chaos, ChaosTransport, FaultPlan};
+use dlion::cluster::topology::Topology;
+use dlion::cluster::{run_sequential, run_threaded, TrainConfig};
+use dlion::optim::dist::faulty::Fault;
+use dlion::optim::dist::{by_name, StrategyHyper};
+use dlion::tasks::quadratic::Quadratic;
+use dlion::tasks::GradTask;
+use std::sync::Arc;
+
+const STRATEGIES: [&str; 3] = ["d-lion-mavo", "g-lion", "d-lion-ef"];
+const TOPOLOGIES: [Topology; 2] = [Topology::Star, Topology::Hierarchical { group_size: 4 }];
+const TRANSPORTS: [ChaosTransport; 2] = [ChaosTransport::InProc, ChaosTransport::Tcp];
+
+fn task_arc(d: usize, seed: u64) -> Arc<dyn GradTask + Send + Sync> {
+    Arc::new(Quadratic::new(d, 10.0, 0.5, seed))
+}
+
+fn chaos_cfg(steps: usize, topology: Topology) -> TrainConfig {
+    TrainConfig {
+        steps,
+        batch_per_worker: 8,
+        base_lr: 0.01,
+        eval_every: 0,
+        seed: 7,
+        check_replicas: true,
+        topology,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn honest_chaos_is_bit_exact_with_lockstep_drivers() {
+    // The control arm: a no-fault plan must reproduce the pre-elastic
+    // engines bit-for-bit — both run_sequential and run_threaded, on
+    // both topologies, over both transports, for all three families.
+    let (n, d, steps) = (5usize, 48usize, 12usize);
+    let hp = StrategyHyper::default();
+    for name in STRATEGIES {
+        for topology in TOPOLOGIES {
+            let strat = by_name(name, &hp).unwrap();
+            let cfg = chaos_cfg(steps, topology);
+            let task = Quadratic::new(d, 10.0, 0.5, 3);
+            let seq = run_sequential(&task, strat.as_ref(), n, &cfg);
+            let (thr, _) = run_threaded(task_arc(d, 3), strat.as_ref(), n, &cfg);
+            assert_eq!(
+                seq.final_params, thr.final_params,
+                "{name}/{topology}: lockstep drivers disagree"
+            );
+            for transport in TRANSPORTS {
+                let report = run_chaos(
+                    task_arc(d, 3),
+                    strat.as_ref(),
+                    n,
+                    &cfg,
+                    &FaultPlan::honest(),
+                    transport,
+                )
+                .unwrap_or_else(|e| panic!("{name}/{topology}/{transport:?}: {e}"));
+                assert_eq!(
+                    report.result.final_params, seq.final_params,
+                    "{name}/{topology}/{transport:?}: honest chaos diverged from lockstep"
+                );
+                assert!(report.quorums.iter().all(|&q| q == n), "honest rounds must be full");
+                assert_eq!(report.result.min_quorum(), Some(n as u64));
+                assert_eq!(report.result.partial_rounds(), 0);
+                assert_eq!(report.stats.round_count(), steps as u64);
+                assert_eq!(report.stats.partial_round_count(), 0);
+                // full-quorum byte accounting matches the sequential run
+                assert_eq!(report.result.total_uplink(), seq.total_uplink());
+                assert_eq!(report.result.total_downlink(), seq.total_downlink());
+            }
+        }
+    }
+}
+
+#[test]
+fn kill_delay_corrupt_matrix_completes_with_planned_quorums() {
+    // One plan exercising all three fault kinds at once: worker 1 turns
+    // Byzantine at round 2, worker 3 goes silent for rounds 3-4
+    // (EF-folded comeback at round 5), worker 2 dies at round 5.
+    let (n, d, steps) = (6usize, 40usize, 8usize);
+    let hp = StrategyHyper::default();
+    let plan = FaultPlan::new(0xFA11)
+        .corrupt(1, 2, Fault::BitFlip)
+        .delay(3, 3, 2)
+        .kill(2, 5);
+    for name in STRATEGIES {
+        for topology in TOPOLOGIES {
+            for transport in TRANSPORTS {
+                let strat = by_name(name, &hp).unwrap();
+                // A bit-flipped dense f32 payload may decode to NaN —
+                // the unbounded-influence story the 1-bit vote exists to
+                // avoid — and NaN breaks bitwise replica comparison
+                // (NaN != NaN), so the dense family skips those asserts.
+                let sign_family = name != "g-lion";
+                let cfg = TrainConfig {
+                    quorum: 3,
+                    round_deadline_ms: 400,
+                    check_replicas: sign_family,
+                    ..chaos_cfg(steps, topology)
+                };
+                let report =
+                    run_chaos(task_arc(d, 5), strat.as_ref(), n, &cfg, &plan, transport)
+                        .unwrap_or_else(|e| panic!("{name}/{topology}/{transport:?}: {e}"));
+                // achieved quorum per round is exactly the plan's prediction
+                for (round, &q) in report.quorums.iter().enumerate() {
+                    assert_eq!(
+                        q,
+                        plan.expected_quorum(n, round),
+                        "{name}/{topology}/{transport:?}: round {round} quorum"
+                    );
+                }
+                // ...and is mirrored into the per-step history + stats
+                for (rec, &q) in report.result.history.iter().zip(&report.quorums) {
+                    assert_eq!(rec.quorum, q as u64, "step {} record", rec.step);
+                }
+                assert_eq!(report.survivors, vec![0, 1, 3, 4, 5]);
+                let expect_partials =
+                    (0..steps).filter(|&r| plan.expected_quorum(n, r) < n).count();
+                assert_eq!(report.result.partial_rounds(), expect_partials);
+                assert_eq!(report.stats.partial_round_count(), expect_partials as u64);
+                assert_eq!(
+                    report.stats.quorum_total(),
+                    report.quorums.iter().map(|&q| q as u64).sum::<u64>()
+                );
+                // sign-vote families bound the corrupt worker's
+                // influence to ±1 vote per coordinate: params stay finite
+                if sign_family {
+                    let p = report.result.final_params.as_ref().unwrap();
+                    assert!(p.iter().all(|x| x.is_finite()), "{name}: non-finite params");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn acceptance_n8_kill_two_delay_one() {
+    // The issue's acceptance scenario: N=8, two workers killed at round
+    // 3, one delayed by 2 rounds — completes on both drivers with the
+    // per-round quorum recorded in StepRecord.
+    let (n, d, steps) = (8usize, 48usize, 8usize);
+    let plan = FaultPlan::new(0xACCE).kill(5, 3).kill(6, 3).delay(2, 4, 2);
+    let hp = StrategyHyper::default();
+    let strat = by_name("d-lion-mavo", &hp).unwrap();
+    for transport in TRANSPORTS {
+        let cfg = TrainConfig {
+            quorum: 5,
+            round_deadline_ms: 400,
+            ..chaos_cfg(steps, Topology::Star)
+        };
+        let report = run_chaos(task_arc(d, 9), strat.as_ref(), n, &cfg, &plan, transport)
+            .unwrap_or_else(|e| panic!("{transport:?}: {e}"));
+        assert_eq!(report.survivors.len(), 6);
+        for (round, rec) in report.result.history.iter().enumerate() {
+            assert_eq!(
+                rec.quorum,
+                plan.expected_quorum(n, round) as u64,
+                "{transport:?}: round {round}"
+            );
+        }
+        // rounds 0-2 full; rounds 3+ miss the two dead workers; rounds
+        // 4-5 additionally miss the straggler
+        assert_eq!(report.quorums[..3], [8, 8, 8]);
+        assert_eq!(report.quorums[3], 6);
+        assert_eq!(report.quorums[4], 5);
+        assert_eq!(report.quorums[5], 5);
+        assert_eq!(report.quorums[6], 6);
+        assert_eq!(report.result.min_quorum(), Some(5));
+    }
+}
+
+#[test]
+fn quorum_floor_unmet_is_a_named_error() {
+    let (n, d) = (4usize, 24usize);
+    let plan = FaultPlan::new(1).kill(2, 1).kill(3, 1);
+    let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+    for transport in TRANSPORTS {
+        let cfg = TrainConfig { quorum: 3, ..chaos_cfg(4, Topology::Star) };
+        let err = run_chaos(task_arc(d, 2), strat.as_ref(), n, &cfg, &plan, transport)
+            .err()
+            .expect("floor of 3 with 2 survivors must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("quorum not met"), "{transport:?}: unnamed error: {msg}");
+    }
+}
+
+#[test]
+fn unsupported_strategy_rejects_partial_rounds_by_name() {
+    // terngrad has no abstention/rescale semantics — a partial round
+    // must be a named refusal, not silently-wrong math.
+    let (n, d) = (3usize, 24usize);
+    let plan = FaultPlan::new(2).kill(2, 1);
+    let strat = by_name("terngrad", &StrategyHyper::default()).unwrap();
+    let cfg = TrainConfig { quorum: 2, ..chaos_cfg(4, Topology::Star) };
+    let err = run_chaos(task_arc(d, 2), strat.as_ref(), n, &cfg, &plan, ChaosTransport::InProc)
+        .err()
+        .expect("terngrad cannot close partial rounds");
+    assert!(
+        err.to_string().contains("cannot close a partial round"),
+        "unnamed error: {err}"
+    );
+}
+
+#[test]
+fn delay_plan_without_deadline_is_rejected_up_front() {
+    let plan = FaultPlan::new(3).delay(0, 1, 1);
+    let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+    let cfg = TrainConfig { quorum: 1, ..chaos_cfg(4, Topology::Star) };
+    let err = run_chaos(task_arc(16, 1), strat.as_ref(), 2, &cfg, &plan, ChaosTransport::InProc)
+        .err()
+        .expect("delay without a deadline would hang gather");
+    assert!(err.to_string().contains("round_deadline_ms"), "unnamed error: {err}");
+}

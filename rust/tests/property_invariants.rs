@@ -3,7 +3,7 @@
 
 use dlion::comm::{dense, half, intavg, sign, sparse, tern, varint};
 use dlion::optim::dist::dlion::{Aggregation, DLion};
-use dlion::optim::dist::{by_name, Strategy, StrategyHyper};
+use dlion::optim::dist::{by_name, ServerLogic, Strategy, StrategyHyper};
 use dlion::optim::lion::bsign;
 use dlion::optim::{LionParams, Optimizer};
 use dlion::testing::{forall, forall_explain, gen_vec_normal, gen_vec_sign, gen_vec_tern};
@@ -494,6 +494,122 @@ fn invariant11_per_link_mixed_selector_respects_both_hop_budgets() {
             return Err(format!(
                 "budget {budget:.2} d={d}: agg hop spent {agg_spent:.3} bits/param/round"
             ));
+        }
+        Ok(())
+    });
+}
+
+/// Shared body of invariant 12: aggregate a quorum of `votes.len()`
+/// 1-bit ballots on a server sized for `n` workers via the elastic
+/// path, and on a server sized for exactly the quorum via the lockstep
+/// path — the downlinks must be byte-identical.
+fn check_abstention(
+    strat: &dyn Strategy,
+    n: usize,
+    d: usize,
+    votes: &[Vec<i8>],
+) -> Result<(), String> {
+    let q = votes.len();
+    let frames: Vec<Vec<u8>> = votes
+        .iter()
+        .map(|v| {
+            let mut f = vec![1u8]; // TAG_SIGN
+            f.extend_from_slice(&sign::pack(v));
+            f
+        })
+        .collect();
+    let refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+    let mut big = strat.make_server(n, d);
+    let got = big.aggregate_quorum(&refs, 1e-3, 0);
+    let mut small = strat.make_server(q, d);
+    let want = small.aggregate(&frames, 1e-3, 0);
+    if got == want {
+        Ok(())
+    } else {
+        Err(format!(
+            "{}: n={n} d={d} q={q}: quorum aggregate differs from the \
+             vote over the quorum's payloads alone",
+            strat.name()
+        ))
+    }
+}
+
+#[test]
+fn invariant12_quorum_abstention_exactness() {
+    // Elastic-round invariant: a vote over a quorum Q ⊆ N equals the
+    // vote over Q's payloads alone — a missing voter abstains exactly,
+    // it never becomes an implicit zero or a rescaled ghost. Checked
+    // for both aggregations (majority vote and intavg mean). The two
+    // seed blocks pin both server builds: odd-N servers carry the
+    // VotePlanes SWAR accumulator (used whenever the achieved quorum
+    // is an odd pure-majority count, with the threshold lowered to
+    // ⌈q/2⌉), even-N servers only have the scalar i32 vote-sum path.
+    for name in ["d-lion-mavo", "d-lion-avg"] {
+        let strat = by_name(name, &StrategyHyper::default()).unwrap();
+        forall_explain(0xB05, 40, |r| {
+            let n = 3 + 2 * r.below(4); // odd cluster: 3, 5, 7, 9
+            let d = 1 + r.below(700);
+            let q = 1 + r.below(n);
+            let votes: Vec<Vec<i8>> = (0..q).map(|_| gen_vec_sign(r, d, d)).collect();
+            (n, d, votes)
+        }, |(n, d, votes)| check_abstention(strat.as_ref(), *n, *d, votes));
+        forall_explain(0xB06, 30, |r| {
+            let n = 4 + 2 * r.below(3); // even cluster: 4, 6, 8
+            let d = 1 + r.below(700);
+            let q = 1 + r.below(n);
+            let votes: Vec<Vec<i8>> = (0..q).map(|_| gen_vec_sign(r, d, d)).collect();
+            (n, d, votes)
+        }, |(n, d, votes)| check_abstention(strat.as_ref(), *n, *d, votes));
+    }
+}
+
+#[test]
+fn invariant13_straggler_fold_conserves_gradient_mass() {
+    // EF-fold invariant: a straggler's residual carries the exact f32
+    // sum of its missed gradients (same addition order as a sequential
+    // accumulator), and take() drains it completely. With nothing
+    // pending, take() must hand back the caller's own slice — no float
+    // traffic at all — which is what keeps honest chaos runs bit-exact
+    // with the lockstep drivers (even for -0.0 gradient entries).
+    use dlion::cluster::chaos::StragglerFold;
+    forall_explain(0xB07, 50, |r| {
+        let d = 1 + r.below(500);
+        let misses = 1 + r.below(4);
+        let grads: Vec<Vec<f32>> =
+            (0..=misses).map(|_| gen_vec_normal(r, d, d, 1.0)).collect();
+        grads
+    }, |grads| {
+        let d = grads[0].len();
+        let mut fold = StragglerFold::new(d);
+        let first = fold.take(&grads[0]);
+        if first.as_ptr() != grads[0].as_ptr() {
+            return Err("take() with no pending residual must return the input slice".into());
+        }
+        let (last, missed) = grads.split_last().unwrap();
+        for g in missed {
+            fold.miss(g);
+        }
+        if !fold.pending() {
+            return Err(format!("{} misses left nothing pending", missed.len()));
+        }
+        let mut acc = vec![0.0f32; d];
+        for g in missed {
+            for (a, &x) in acc.iter_mut().zip(g) {
+                *a += x;
+            }
+        }
+        let want: Vec<f32> = acc.iter().zip(last).map(|(&a, &x)| a + x).collect();
+        if fold.take(last) != want.as_slice() {
+            return Err(format!(
+                "d={d}, {} misses: folded gradient is not the exact f32 sum",
+                missed.len()
+            ));
+        }
+        if fold.pending() {
+            return Err("take() must clear the pending flag".into());
+        }
+        if fold.residual_mass() >= 1e-12 {
+            return Err(format!("residual mass {} not drained by take()", fold.residual_mass()));
         }
         Ok(())
     });

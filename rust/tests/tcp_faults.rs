@@ -1,0 +1,279 @@
+//! TCP fault-path tests: mid-frame drops, read deadlines, the
+//! reconnect/replay handshake, and hostile-peer hardening.
+//!
+//! The contract under test (see `comm::tcp`):
+//! * a worker that dies mid-frame is a **named** error (`worker {i}:
+//!   ...`) on the lockstep path and a dead-mark on the elastic path —
+//!   never a hang in `read_exact`;
+//! * a merely-late worker under a read deadline yields `None` for the
+//!   round and its connection survives;
+//! * a reconnecting worker presents `[id][applied_rounds]` and receives
+//!   exactly the broadcasts it missed, oldest first, round-id checked;
+//!   gaps beyond the replay ring are refused by name;
+//! * truncated / garbage / oversized bytes on either end of the
+//!   reconnect path produce errors, never panics or allocations.
+
+use dlion::comm::tcp::{bind_loopback, TcpServer, TcpWorker};
+use dlion::comm::{CommStats, ServerTransport, WorkerTransport};
+use dlion::util::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+/// Loopback FIN delivery is immediate but not synchronous with `drop`;
+/// a short pause makes EOF-vs-timeout checks deterministic.
+fn settle() {
+    thread::sleep(Duration::from_millis(50));
+}
+
+#[test]
+fn mid_frame_drop_is_a_named_error_not_a_hang() {
+    let (port, listener) = bind_loopback().unwrap();
+    let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    s.write_all(&0u32.to_le_bytes()).unwrap(); // handshake: id 0
+    s.write_all(&0u32.to_le_bytes()).unwrap(); // handshake: 0 applied
+    s.write_all(&64u32.to_le_bytes()).unwrap(); // frame claims 64 bytes...
+    s.write_all(&[0xAB; 10]).unwrap(); // ...delivers 10
+    drop(s);
+    let mut server = TcpServer::accept(&listener, 1, CommStats::new()).unwrap();
+    let err = server.gather().unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    let msg = err.to_string();
+    assert!(msg.contains("worker 0"), "error must name the worker: {msg}");
+}
+
+#[test]
+fn deadline_gather_keeps_stragglers_and_buries_the_dead() {
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let w1 = TcpWorker::connect(port, 1, stats.clone()).unwrap();
+    let mut server = TcpServer::accept(&listener, 2, stats).unwrap();
+
+    // Round 1: worker 1 is merely late — `None` for the round, but the
+    // connection must survive the deadline.
+    w0.send(vec![1u8, 0xAA]).unwrap();
+    let msgs = server.gather_quorum(Some(Duration::from_millis(150))).unwrap();
+    assert_eq!(msgs[0].as_deref(), Some(&[1u8, 0xAA][..]));
+    assert_eq!(msgs[1], None);
+    assert!(server.is_live(1), "a straggler is not dead");
+    assert_eq!(server.live_workers(), 2);
+
+    // Round 2: worker 1 hangs up. EOF inside the deadline window marks
+    // the slot dead instead of timing out round after round.
+    drop(w1);
+    settle();
+    w0.send(vec![1u8, 0xBB]).unwrap();
+    let msgs = server.gather_quorum(Some(Duration::from_millis(150))).unwrap();
+    assert_eq!(msgs[0].as_deref(), Some(&[1u8, 0xBB][..]));
+    assert_eq!(msgs[1], None);
+    assert!(!server.is_live(1), "EOF must mark the worker dead");
+    assert_eq!(server.live_workers(), 1);
+
+    // Dead slots answer immediately — no deadline burned on them.
+    w0.send(vec![1u8, 0xCC]).unwrap();
+    let msgs = server.gather_quorum(Some(Duration::from_millis(150))).unwrap();
+    assert_eq!(msgs[1], None);
+    // ...and the lockstep gather refuses by name rather than hanging.
+    w0.send(vec![1u8, 0xDD]).unwrap();
+    let err = server.gather().unwrap_err();
+    assert!(err.to_string().contains("worker 1"), "unnamed: {err}");
+}
+
+#[test]
+fn reconnect_replays_exactly_the_missed_broadcasts() {
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let mut w1 = TcpWorker::connect(port, 1, stats.clone()).unwrap();
+    let mut server = TcpServer::accept(&listener, 2, stats.clone()).unwrap();
+    let (b1, b2, b3, b4) = ([1u8, 11], [1u8, 22], [1u8, 33], [1u8, 44]);
+
+    // Round 1: full lockstep round; worker 1 applies broadcast b1.
+    w0.send(vec![1u8, 0]).unwrap();
+    w1.send(vec![1u8, 1]).unwrap();
+    server.gather().unwrap();
+    server.broadcast(&b1).unwrap();
+    assert_eq!(&w0.recv().unwrap()[..], &b1[..]);
+    assert_eq!(&w1.recv().unwrap()[..], &b1[..]);
+    let applied = w1.rounds_received();
+    assert_eq!(applied, 1);
+
+    // Rounds 2-3: worker 1 is gone; the survivors keep moving and the
+    // ring accumulates the broadcasts it missed.
+    drop(w1);
+    settle();
+    for b in [&b2, &b3] {
+        w0.send(vec![1u8, 0]).unwrap();
+        let msgs = server.gather_quorum(Some(Duration::from_millis(150))).unwrap();
+        assert!(msgs[0].is_some() && msgs[1].is_none());
+        server.broadcast(b).unwrap();
+        assert_eq!(&w0.recv().unwrap()[..], &b[..]);
+    }
+    assert!(!server.is_live(1));
+    assert_eq!(server.round(), 3);
+
+    // Reconnect: worker 1 presents [id=1][applied=1] and must get b2
+    // then b3 — exactly the gap, oldest first, nothing else.
+    let client = {
+        let stats = stats.clone();
+        thread::spawn(move || TcpWorker::reconnect(port, 1, applied, stats))
+    };
+    let rejoined = server.accept_reconnect(&listener).unwrap();
+    assert_eq!(rejoined, 1);
+    assert!(server.is_live(1));
+    let (mut w1, replayed) = client.join().unwrap().unwrap();
+    assert_eq!(replayed.len(), 2, "missed exactly two broadcasts");
+    assert_eq!(&replayed[0][..], &b2[..]);
+    assert_eq!(&replayed[1][..], &b3[..]);
+    assert_eq!(w1.rounds_received(), 3, "caught up to the cluster round");
+
+    // The rejoined replica participates in a normal lockstep round.
+    server.set_read_deadline(None).unwrap();
+    w0.send(vec![1u8, 0]).unwrap();
+    w1.send(vec![1u8, 1]).unwrap();
+    let msgs = server.gather().unwrap();
+    assert_eq!(msgs.len(), 2);
+    server.broadcast(&b4).unwrap();
+    assert_eq!(&w0.recv().unwrap()[..], &b4[..]);
+    assert_eq!(&w1.recv().unwrap()[..], &b4[..]);
+    assert_eq!(w1.rounds_received(), 4);
+}
+
+#[test]
+fn reconnect_gap_beyond_the_ring_is_refused_by_name() {
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let mut server = TcpServer::accept(&listener, 1, stats.clone()).unwrap();
+    // 10 broadcast rounds > REPLAY_RING(8): a worker claiming 0 applied
+    // rounds can no longer be caught up from the ring.
+    for k in 0..10u8 {
+        w0.send(vec![1u8, k]).unwrap();
+        server.gather().unwrap();
+        server.broadcast(&[1u8, k]).unwrap();
+        w0.recv().unwrap();
+    }
+    server.disconnect(0);
+    let client = {
+        let stats = stats.clone();
+        thread::spawn(move || TcpWorker::reconnect(port, 0, 0, stats))
+    };
+    let err = server.accept_reconnect(&listener).unwrap_err();
+    assert!(err.to_string().contains("replay ring"), "unnamed: {err}");
+    assert!(!server.is_live(0), "a refused rejoin must not fill the slot");
+    // The client sees the hangup as a named reconnect failure, not a
+    // hang or a half-initialized worker.
+    let client_err = client.join().unwrap().err().expect("client must fail too");
+    assert!(
+        client_err.to_string().contains("reconnect replay header"),
+        "unnamed: {client_err}"
+    );
+}
+
+#[test]
+fn reconnect_from_the_future_is_refused_by_name() {
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let mut server = TcpServer::accept(&listener, 1, stats.clone()).unwrap();
+    w0.send(vec![1u8, 0]).unwrap();
+    server.gather().unwrap();
+    server.broadcast(&[1u8, 9]).unwrap();
+    w0.recv().unwrap();
+    server.disconnect(0);
+    let client = thread::spawn(move || TcpWorker::reconnect(port, 0, 99, stats));
+    let err = server.accept_reconnect(&listener).unwrap_err();
+    assert!(err.to_string().contains("applied rounds"), "unnamed: {err}");
+    let _ = client.join().unwrap(); // client errors too (server hung up)
+}
+
+#[test]
+fn garbage_handshakes_on_the_reconnect_path_never_panic() {
+    // Seeded fuzz over the handshake reader: truncated prefixes, random
+    // ids, future round claims. Every case must be an `Err` (both
+    // slots are live, so even a well-formed handshake is refused), the
+    // live connections must be untouched, and nothing may panic.
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let mut w1 = TcpWorker::connect(port, 1, stats.clone()).unwrap();
+    let mut server = TcpServer::accept(&listener, 2, stats).unwrap();
+
+    let mut rng = Rng::new(0xF417);
+    for case in 0..24usize {
+        let len = rng.below(9); // 0..=8 bytes of noise
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        s.write_all(&bytes).unwrap();
+        drop(s); // EOF follows whatever arrived
+        let err = server.accept_reconnect(&listener).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("handshake")
+                || msg.contains("bad worker id")
+                || msg.contains("still live")
+                || msg.contains("applied rounds"),
+            "case {case} ({len} bytes): unnamed error: {msg}"
+        );
+    }
+    // Targeted probes: a live id, a future claim on a live id, an
+    // out-of-range id — all named refusals.
+    for (id, applied, needle) in
+        [(0u32, 0u32, "still live"), (1, 7, "still live"), (5, 0, "bad worker id")]
+    {
+        let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        s.write_all(&id.to_le_bytes()).unwrap();
+        s.write_all(&applied.to_le_bytes()).unwrap();
+        drop(s);
+        let err = server.accept_reconnect(&listener).unwrap_err();
+        assert!(err.to_string().contains(needle), "id {id}: {err}");
+    }
+
+    // The fuzz storm must not have perturbed the real cluster.
+    assert_eq!(server.live_workers(), 2);
+    w0.send(vec![1u8, 0]).unwrap();
+    w1.send(vec![1u8, 1]).unwrap();
+    assert_eq!(server.gather().unwrap().len(), 2);
+    server.broadcast(&[1u8, 5]).unwrap();
+    assert_eq!(&w0.recv().unwrap()[..], &[1u8, 5][..]);
+    assert_eq!(&w1.recv().unwrap()[..], &[1u8, 5][..]);
+}
+
+#[test]
+fn client_rejects_hostile_replay_headers() {
+    let (port, listener) = bind_loopback().unwrap();
+
+    // A server claiming more replay frames than any ring can hold: the
+    // client refuses before allocating or reading a single frame.
+    let client = thread::spawn(move || TcpWorker::reconnect(port, 0, 0, CommStats::new()));
+    let (mut s, _) = listener.accept().unwrap();
+    let mut hs = [0u8; 8];
+    s.read_exact(&mut hs).unwrap();
+    assert_eq!(hs, [0, 0, 0, 0, 0, 0, 0, 0]);
+    s.write_all(&9999u32.to_le_bytes()).unwrap();
+    let err = client.join().unwrap().err().expect("oversized count must fail");
+    assert!(err.to_string().contains("replay frames"), "unnamed: {err}");
+
+    // A replay frame with a 4 GB length prefix: the frame reader's
+    // budget clamp fires on the reconnect path too.
+    let client = thread::spawn(move || TcpWorker::reconnect(port, 0, 3, CommStats::new()));
+    let (mut s, _) = listener.accept().unwrap();
+    s.read_exact(&mut hs).unwrap();
+    assert_eq!(hs, [0, 0, 0, 0, 3, 0, 0, 0], "handshake carries [id][applied]");
+    s.write_all(&1u32.to_le_bytes()).unwrap(); // one replay frame...
+    s.write_all(&u32::MAX.to_le_bytes()).unwrap(); // ...claiming 4 GB
+    let err = client.join().unwrap().err().expect("oversized frame must fail");
+    assert!(err.to_string().contains("MAX_FRAME_BYTES"), "unnamed: {err}");
+
+    // A truncated count header (server dies mid-reply) is a named
+    // error, not a hang.
+    let client = thread::spawn(move || TcpWorker::reconnect(port, 0, 0, CommStats::new()));
+    let (mut s, _) = listener.accept().unwrap();
+    s.read_exact(&mut hs).unwrap();
+    s.write_all(&[1u8, 2]).unwrap(); // half a count, then hang up
+    drop(s);
+    let err = client.join().unwrap().err().expect("truncated count must fail");
+    assert!(err.to_string().contains("reconnect replay header"), "unnamed: {err}");
+}

@@ -5,7 +5,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json bench-diff topology mixed chaos clean
+.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json bench-diff bench-check pgo topology mixed chaos clean
 
 ## tier-1 verify: what CI runs (ROADMAP.md)
 verify:
@@ -39,23 +39,67 @@ bench-quick:
 		cargo bench --bench hotpath -- --quick
 
 ## perf trajectory snapshot: runs the hotpath bench and refreshes
-## BENCH_hotpath.json at the repo root (SWAR kernel micro-rows +
-## monolithic-vs-chunked rounds at d=1M and d=4M) so speedups are
-## comparable across PRs. Run WITHOUT quick mode when committing a new
-## baseline so the numbers are stable.
+## BENCH_hotpath.json at the repo root (SWAR kernel micro-rows, vector
+## codec rows at d=1M, monolithic-vs-chunked rounds at d=1M and d=4M)
+## so speedups are comparable across PRs. Run WITHOUT quick mode when
+## committing a new baseline so the numbers are stable.
 bench-json:
 	cd $(CARGO_DIR) && cargo bench --bench hotpath
 	@echo "--- BENCH_hotpath.json ---" && cat BENCH_hotpath.json
 
 ## perf delta vs the committed baseline: re-measure the hotpath rows
 ## into target/BENCH_fresh.json (quick mode) and print the per-row
-## delta table. Exits nonzero only on structural regressions (a
-## baseline row missing from the fresh run); timing noise is soft.
+## delta table. Structural regressions (a baseline row missing from the
+## fresh run) always exit nonzero; once the committed baseline is
+## measured ("provisional": false), timing regressions past the
+## tolerance gate too. The 0.5 tolerance (vs the CLI's 0.25 default)
+## damps quick-mode noise on shared runners.
 bench-diff:
 	cd $(CARGO_DIR) && DLION_BENCH_QUICK=1 DLION_BENCH_JSON=target/BENCH_fresh.json \
 		cargo bench --bench hotpath -- --quick
 	cd $(CARGO_DIR) && cargo run --release -q -- bench-diff \
-		--baseline ../BENCH_hotpath.json --fresh target/BENCH_fresh.json
+		--baseline ../BENCH_hotpath.json --fresh target/BENCH_fresh.json --tolerance 0.5
+
+## assert the committed perf baseline is measured ("provisional": false,
+## no null timings) — the CI step that keeps a provisional baseline from
+## silently returning
+bench-check:
+	cd $(CARGO_DIR) && cargo run --release -q -- bench-check --baseline ../BENCH_hotpath.json
+
+## profile-guided-optimization lane: (1) measure a warmup reference with
+## the plain release build, (2) replay the hotpath bench on an
+## instrumented build to collect profiles, (3) merge them with
+## llvm-profdata, (4) rebuild with the profile and re-measure, then
+## print the warmup-vs-PGO delta table (the PGO bench JSON also embeds a
+## geomean summary under "pgo"). Everything lands under target/ — the
+## committed BENCH_hotpath.json baseline is never touched.
+PGO_DIR := $(CURDIR)/$(CARGO_DIR)/target/pgo
+pgo:
+	@LLVM_PROFDATA=$$(command -v llvm-profdata || \
+		find "$$(rustc --print sysroot)" -name llvm-profdata -type f 2>/dev/null | head -n1); \
+	if [ -z "$$LLVM_PROFDATA" ]; then \
+		echo "pgo: llvm-profdata not found (install LLVM tools or rustup component add llvm-tools)"; \
+		exit 1; \
+	fi; \
+	set -e; \
+	cd $(CARGO_DIR); \
+	echo "== PGO 1/4: warmup reference (plain release) =="; \
+	DLION_PGO_PHASE=warmup DLION_BENCH_JSON=target/BENCH_pgo_warmup.json \
+		cargo bench --bench hotpath -- --quick; \
+	echo "== PGO 2/4: instrumented profile collection =="; \
+	rm -rf "$(PGO_DIR)" && mkdir -p "$(PGO_DIR)"; \
+	RUSTFLAGS="-Cprofile-generate=$(PGO_DIR)" \
+		DLION_BENCH_JSON=target/BENCH_pgo_instr.json \
+		cargo bench --bench hotpath -- --quick; \
+	echo "== PGO 3/4: merging profiles =="; \
+	"$$LLVM_PROFDATA" merge -o "$(PGO_DIR)/merged.profdata" "$(PGO_DIR)"; \
+	echo "== PGO 4/4: profile-guided rebuild + re-measure =="; \
+	RUSTFLAGS="-Cprofile-use=$(PGO_DIR)/merged.profdata" \
+		DLION_PGO_PHASE=pgo DLION_PGO_WARMUP_JSON=target/BENCH_pgo_warmup.json \
+		DLION_BENCH_JSON=target/BENCH_pgo.json \
+		cargo bench --bench hotpath -- --quick; \
+	cargo run --release -q -- bench-diff \
+		--baseline target/BENCH_pgo_warmup.json --fresh target/BENCH_pgo.json --tolerance 10
 
 ## quick pass over the topology × local-steps extension bench
 topology:

@@ -45,7 +45,7 @@ impl PerfRows {
     }
 
     fn write_json(&self, quick: bool) {
-        use dlion::util::json::{emit, Json};
+        use dlion::util::json::{emit, parse, Json};
         use std::collections::BTreeMap;
         let rows: Vec<Json> = self
             .rows
@@ -68,6 +68,55 @@ impl PerfRows {
         // baseline may carry `"provisional": true` + null timings when
         // it was authored on a machine that could not run the bench.
         top.insert("provisional".to_string(), Json::Bool(false));
+        top.insert("simd".to_string(), Json::Str(dlion::comm::simd::active().name().to_string()));
+        // `make pgo` runs the bench twice: once as the warmup/reference
+        // build (DLION_PGO_PHASE=warmup) and once on the profile-guided
+        // rebuild (DLION_PGO_PHASE=pgo). The PGO run loads the warmup
+        // trajectory and embeds the warmup-vs-PGO delta in its JSON.
+        if let Ok(phase) = std::env::var("DLION_PGO_PHASE") {
+            top.insert("pgo_phase".to_string(), Json::Str(phase.clone()));
+            if phase == "pgo" {
+                let wpath = std::env::var("DLION_PGO_WARMUP_JSON")
+                    .unwrap_or_else(|_| "target/BENCH_pgo_warmup.json".into());
+                match std::fs::read_to_string(&wpath).ok().and_then(|s| parse(&s).ok()) {
+                    Some(w) => {
+                        let mut logsum = 0.0f64;
+                        let mut k = 0usize;
+                        if let Some(arr) = w.get("rows").and_then(|r| r.as_arr()) {
+                            for row in arr {
+                                let name = row.get("name").and_then(|x| x.as_str());
+                                let wopt = row.get("optimized_s").and_then(|x| x.as_f64());
+                                let (Some(name), Some(wopt)) = (name, wopt) else { continue };
+                                let here = self
+                                    .rows
+                                    .iter()
+                                    .find(|(n, _, _)| n.as_str() == name)
+                                    .map(|(_, _, o)| *o);
+                                if let Some(o) = here {
+                                    if o > 0.0 && wopt > 0.0 {
+                                        logsum += (wopt / o).ln();
+                                        k += 1;
+                                    }
+                                }
+                            }
+                        }
+                        let geomean = (k > 0).then(|| (logsum / k as f64).exp());
+                        let mut pgo = BTreeMap::new();
+                        pgo.insert("warmup_json".to_string(), Json::Str(wpath.clone()));
+                        pgo.insert("rows_compared".to_string(), Json::Num(k as f64));
+                        pgo.insert(
+                            "geomean_speedup".to_string(),
+                            geomean.map(Json::Num).unwrap_or(Json::Null),
+                        );
+                        top.insert("pgo".to_string(), Json::Obj(pgo));
+                        if let Some(g) = geomean {
+                            println!("PGO vs warmup: {g:.3}x geomean over {k} shared rows");
+                        }
+                    }
+                    None => eprintln!("hotpath: PGO warmup trajectory {wpath} unreadable, delta skipped"),
+                }
+            }
+        }
         top.insert("rows".to_string(), Json::Arr(rows));
         let path = std::env::var("DLION_BENCH_JSON")
             .unwrap_or_else(|_| "../BENCH_hotpath.json".into());
@@ -192,6 +241,164 @@ fn kernel_micro(d: usize, tgt: f64, rows: &mut PerfRows) {
 
     t.print();
     t.write_csv(common::out_dir().join(format!("hotpath_kernels_d{d}.csv"))).unwrap();
+}
+
+/// §Perf vector-codec rows: the `comm::simd` dispatched kernels vs the
+/// scalar oracles they replaced, at d = 1M — dense f32 pack/accumulate,
+/// the intavg log(N)-bit downlink (8 ranks per u64 register), bf16
+/// round-to-nearest-even, and the base-3 ternary codec. Every pair is
+/// asserted bit-exact before timing, then lands as a trajectory row so
+/// `make bench-diff` gates the kernels once the baseline is measured.
+fn codec_micro(d: usize, tgt: f64, rows: &mut PerfRows) {
+    use dlion::comm::{dense, half, intavg, simd, tern};
+    let mut t = Table::new(
+        &format!("Vector codecs vs scalar oracles (tier: {}), d={d}", simd::active().name()),
+        &["kernel", "scalar", "vector", "speedup"],
+    );
+    let tag = dim_tag(d);
+    let push = |t: &mut Table, rows: &mut PerfRows, label: &str, row: &str, b: f64, o: f64| {
+        t.row(vec![
+            label.to_string(),
+            fmt_secs(b),
+            fmt_secs(o),
+            format!("{:.2}x", b / o),
+        ]);
+        rows.push(row, b, o);
+    };
+    let mut rng = Rng::new(13);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 1.0);
+
+    // 1. dense pack: per-element extend_from_slice -> LE memcpy
+    assert_eq!(dense::pack(&v), dense::pack_scalar(&v));
+    let base = bench_auto(tgt, || {
+        black_box(dense::pack_scalar(black_box(&v)));
+    });
+    let opt = bench_auto(tgt, || {
+        black_box(dense::pack(black_box(&v)));
+    });
+    push(&mut t, rows, "dense::pack (LE memcpy)", &format!("dense/pack/{tag}"), base.median, opt.median);
+
+    // 2. dense accumulate: per-element from_le_bytes add -> 8-lane adds
+    let payload = dense::pack(&v);
+    {
+        let mut a = vec![0.25f32; d];
+        let mut b = vec![0.25f32; d];
+        dense::accumulate(&payload, &mut a);
+        dense::accumulate_scalar(&payload, &mut b);
+        assert_eq!(a, b, "dense accumulate parity");
+    }
+    let mut acc = vec![0.0f32; d];
+    let base = bench_auto(tgt, || {
+        dense::accumulate_scalar(black_box(&payload), black_box(&mut acc));
+    });
+    let opt = bench_auto(tgt, || {
+        dense::accumulate(black_box(&payload), black_box(&mut acc));
+    });
+    push(
+        &mut t,
+        rows,
+        "dense::accumulate (vector adds)",
+        &format!("dense/accumulate/{tag}"),
+        base.median,
+        opt.median,
+    );
+
+    // 3. intavg pack/unpack at n=8 (b=4): one bounds-checked flush per
+    //    element -> 8 ranks per u64 register
+    let n = 8usize;
+    let sums: Vec<i32> = (0..d).map(|_| 2 * rng.below(n + 1) as i32 - n as i32).collect();
+    assert_eq!(intavg::pack(&sums, n), intavg::pack_scalar(&sums, n));
+    let base = bench_auto(tgt, || {
+        black_box(intavg::pack_scalar(black_box(&sums), n));
+    });
+    let opt = bench_auto(tgt, || {
+        black_box(intavg::pack(black_box(&sums), n));
+    });
+    push(&mut t, rows, "intavg::pack n=8 (8/u64)", &format!("intavg/pack/{tag}"), base.median, opt.median);
+
+    let ipacked = intavg::pack(&sums, n);
+    let mut iout = vec![0i32; d];
+    {
+        let mut islow = vec![0i32; d];
+        intavg::unpack_into(&ipacked, n, &mut iout);
+        intavg::unpack_into_scalar(&ipacked, n, &mut islow);
+        assert_eq!(iout, islow, "intavg unpack parity");
+    }
+    let base = bench_auto(tgt, || {
+        intavg::unpack_into_scalar(black_box(&ipacked), n, black_box(&mut iout));
+    });
+    let opt = bench_auto(tgt, || {
+        intavg::unpack_into(black_box(&ipacked), n, black_box(&mut iout));
+    });
+    push(
+        &mut t,
+        rows,
+        "intavg::unpack n=8 (8/u64)",
+        &format!("intavg/unpack/{tag}"),
+        base.median,
+        opt.median,
+    );
+
+    // 4. bf16 pack/unpack: branchy per-element RNE -> branchless lanes
+    assert_eq!(half::pack(&v), half::pack_scalar(&v));
+    let base = bench_auto(tgt, || {
+        black_box(half::pack_scalar(black_box(&v)));
+    });
+    let opt = bench_auto(tgt, || {
+        black_box(half::pack(black_box(&v)));
+    });
+    push(&mut t, rows, "half::pack (branchless RNE)", &format!("half/pack/{tag}"), base.median, opt.median);
+
+    let hpacked = half::pack(&v);
+    let mut hout = vec![0.0f32; d];
+    {
+        let mut hslow = vec![0.0f32; d];
+        half::unpack_into(&hpacked, &mut hout);
+        half::unpack_into_scalar(&hpacked, &mut hslow);
+        assert_eq!(
+            hout.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            hslow.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "bf16 unpack parity"
+        );
+    }
+    let base = bench_auto(tgt, || {
+        half::unpack_into_scalar(black_box(&hpacked), black_box(&mut hout));
+    });
+    let opt = bench_auto(tgt, || {
+        half::unpack_into(black_box(&hpacked), black_box(&mut hout));
+    });
+    push(&mut t, rows, "half::unpack (widen lanes)", &format!("half/unpack/{tag}"), base.median, opt.median);
+
+    // 5. tern pack/unpack: serial Horner %3 chain -> base-3 dot + LUT
+    let trits: Vec<i8> = (0..d).map(|_| rng.below(3) as i8 - 1).collect();
+    assert_eq!(tern::pack(&trits), tern::pack_scalar(&trits));
+    let base = bench_auto(tgt, || {
+        black_box(tern::pack_scalar(black_box(&trits)));
+    });
+    let opt = bench_auto(tgt, || {
+        black_box(tern::pack(black_box(&trits)));
+    });
+    push(&mut t, rows, "tern::pack (base-3 dot)", &format!("tern/pack/{tag}"), base.median, opt.median);
+
+    let tpacked = tern::pack(&trits);
+    let mut tout = vec![0i8; d];
+    {
+        let mut tslow = vec![0i8; d];
+        tern::unpack_into(&tpacked, &mut tout);
+        tern::unpack_into_scalar(&tpacked, &mut tslow);
+        assert_eq!(tout, tslow, "tern unpack parity");
+    }
+    let base = bench_auto(tgt, || {
+        tern::unpack_into_scalar(black_box(&tpacked), black_box(&mut tout));
+    });
+    let opt = bench_auto(tgt, || {
+        tern::unpack_into(black_box(&tpacked), black_box(&mut tout));
+    });
+    push(&mut t, rows, "tern::unpack (256×5 LUT)", &format!("tern/unpack/{tag}"), base.median, opt.median);
+
+    t.print();
+    t.write_csv(common::out_dir().join(format!("hotpath_codecs_d{d}.csv"))).unwrap();
 }
 
 fn strategy_round(d: usize, n: usize) {
@@ -492,6 +699,7 @@ fn main() {
     let tgt = if quick { 0.12 } else { 0.8 };
     let mut rows = PerfRows::new();
     kernel_micro(1_000_000, tgt, &mut rows);
+    codec_micro(1_000_000, tgt, &mut rows); // acceptance point: d = 1M
     strategy_round(d, 4);
     chunked_round(1_000_000, 4, tgt, &mut rows); // acceptance point: d = 1M
     chunked_round(4_000_000, 4, tgt, &mut rows); // second model size

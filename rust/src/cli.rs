@@ -7,7 +7,11 @@
 //! * `strategies` — list registered strategies
 //! * `lm`         — train the AOT transformer (requires `make artifacts`)
 //! * `bench-diff` — compare a fresh BENCH_hotpath.json against the
-//!   committed baseline (structural regressions exit nonzero)
+//!   committed baseline (structural regressions always exit nonzero;
+//!   timing regressions past the tolerance exit nonzero once the
+//!   baseline is measured, i.e. not `"provisional": true`)
+//! * `bench-check` — assert the committed baseline is measured
+//!   (`"provisional": false`, no null timings)
 
 use crate::cluster::{run_sequential, run_threaded, TrainConfig};
 use crate::config::Experiment;
@@ -76,9 +80,13 @@ COMMANDS:
               --strategy d-lion-mavo, --workers 4, --steps 200)
   bench-diff  print the perf delta table: a fresh hotpath trajectory
               (--fresh target/BENCH_fresh.json) vs the committed
-              baseline (--baseline BENCH_hotpath.json). Slowdowns past
-              --tolerance (default 0.25) are reported but soft; a
-              baseline row missing from the fresh run exits nonzero.
+              baseline (--baseline BENCH_hotpath.json). A baseline row
+              missing from the fresh run exits nonzero; slowdowns past
+              --tolerance (default 0.25) also exit nonzero when the
+              baseline is measured (soft while \"provisional\": true).
+  bench-check assert the committed baseline (--baseline
+              BENCH_hotpath.json) is measured: \"provisional\": false
+              and no null timings, else exit nonzero.
   help        this text
 
 Overrides use dotted keys, e.g.: train.steps=500 hyper.weight_decay=0.01
@@ -116,6 +124,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "sweep" => cmd_sweep(&args),
         "lm" => cmd_lm(&args),
         "bench-diff" => cmd_bench_diff(&args),
+        "bench-check" => cmd_bench_check(&args),
         other => Err(DlionError::Config(format!("unknown command '{other}' (try help)"))),
     }
 }
@@ -304,59 +313,85 @@ fn cmd_lm(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// Row name → (optimized_s, speedup); either value may be absent (null
-/// timings in a provisional baseline).
-type BenchRows = std::collections::BTreeMap<String, (Option<f64>, Option<f64>)>;
+/// One trajectory row's timings; any value may be absent (null timings
+/// in a provisional baseline).
+#[derive(Clone, Copy)]
+struct BenchRow {
+    baseline_s: Option<f64>,
+    optimized_s: Option<f64>,
+    speedup: Option<f64>,
+}
 
-fn load_bench_rows(path: &str) -> Result<BenchRows> {
+/// Row name → timings.
+type BenchRows = std::collections::BTreeMap<String, BenchRow>;
+
+/// A parsed trajectory file: the provisional marker decides whether
+/// timing regressions gate (`bench-diff`) and whether the baseline is
+/// acceptable at all (`bench-check`).
+struct BenchFile {
+    provisional: bool,
+    rows: BenchRows,
+}
+
+fn load_bench_file(path: &str) -> Result<BenchFile> {
     let text = std::fs::read_to_string(path)
-        .map_err(|e| DlionError::Config(format!("bench-diff: cannot read {path}: {e}")))?;
+        .map_err(|e| DlionError::Config(format!("bench: cannot read {path}: {e}")))?;
     let doc = crate::util::json::parse(&text)
-        .map_err(|e| DlionError::Config(format!("bench-diff: {path}: {e}")))?;
+        .map_err(|e| DlionError::Config(format!("bench: {path}: {e}")))?;
     let rows = doc
         .get("rows")
         .and_then(|r| r.as_arr())
-        .ok_or_else(|| DlionError::Config(format!("bench-diff: {path}: no \"rows\" array")))?;
+        .ok_or_else(|| DlionError::Config(format!("bench: {path}: no \"rows\" array")))?;
     let mut map = BenchRows::new();
     for row in rows {
         let name = row
             .get("name")
             .and_then(|n| n.as_str())
-            .ok_or_else(|| DlionError::Config(format!("bench-diff: {path}: row without name")))?;
-        let opt = row.get("optimized_s").and_then(|v| v.as_f64());
-        let spd = row.get("speedup").and_then(|v| v.as_f64());
-        map.insert(name.to_string(), (opt, spd));
+            .ok_or_else(|| DlionError::Config(format!("bench: {path}: row without name")))?;
+        map.insert(
+            name.to_string(),
+            BenchRow {
+                baseline_s: row.get("baseline_s").and_then(|v| v.as_f64()),
+                optimized_s: row.get("optimized_s").and_then(|v| v.as_f64()),
+                speedup: row.get("speedup").and_then(|v| v.as_f64()),
+            },
+        );
     }
-    Ok(map)
+    let provisional = doc.get("provisional").and_then(|v| v.as_bool()).unwrap_or(false);
+    Ok(BenchFile { provisional, rows: map })
 }
 
 /// Compare a fresh hotpath trajectory file against the committed
-/// baseline. Always prints the full per-row delta table. The exit code
-/// is nonzero only for STRUCTURAL regressions — a row present in the
-/// baseline but missing from the fresh run (a kernel or round path
-/// dropped out of the bench), or an unreadable/malformed file. Timing
-/// slowdowns are reported but soft: bench noise on shared CI runners
-/// must not gate merges. A baseline row with null timings (a
-/// `"provisional": true` file authored where the bench could not run)
-/// compares as informational until measured numbers land.
+/// baseline. Always prints the full per-row delta table. STRUCTURAL
+/// regressions — a baseline row missing from the fresh run, or an
+/// unreadable/malformed file — exit nonzero unconditionally. Timing
+/// slowdowns past `--tolerance` also exit nonzero once the baseline is
+/// **measured** (`"provisional": false`); against a provisional
+/// baseline (null timings authored where the bench could not run) they
+/// are reported but soft, until measured numbers land.
 fn cmd_bench_diff(args: &Args) -> Result<i32> {
     let base_path = args.flag("baseline").unwrap_or("BENCH_hotpath.json");
     let fresh_path = args.flag("fresh").unwrap_or("target/BENCH_fresh.json");
     let tol: f64 = args.flag("tolerance").and_then(|s| s.parse().ok()).unwrap_or(0.25);
-    let base = load_bench_rows(base_path)?;
-    let fresh = load_bench_rows(fresh_path)?;
+    let base = load_bench_file(base_path)?;
+    let fresh = load_bench_file(fresh_path)?;
+    let gating = !base.provisional;
     let fmt = crate::bench_utils::fmt_secs;
-    println!("perf delta: {fresh_path} vs {base_path} (soft tolerance +{:.0}%)", tol * 100.0);
+    println!(
+        "perf delta: {fresh_path} vs {base_path} ({} tolerance +{:.0}%)",
+        if gating { "gating" } else { "soft/provisional" },
+        tol * 100.0
+    );
     println!("{:<42} {:>10} {:>10} {:>8} {:>8}", "row", "baseline", "fresh", "delta", "speedup");
     let mut missing: Vec<&String> = Vec::new();
     let mut slower = 0usize;
-    for (name, (b_opt, _)) in &base {
-        let Some((f_opt, f_spd)) = fresh.get(name) else {
+    for (name, brow) in &base.rows {
+        let Some(frow) = fresh.rows.get(name) else {
             missing.push(name);
             continue;
         };
-        let spd = f_spd.map_or_else(|| "-".to_string(), |s| format!("{s:.2}x"));
-        match (b_opt, f_opt) {
+        let spd = frow.speedup.map_or_else(|| "-".to_string(), |s| format!("{s:.2}x"));
+        match (&brow.optimized_s, &frow.optimized_s) {
             (Some(b), Some(f)) => {
                 let delta = (f - b) / b;
                 let mark = if delta > tol {
@@ -381,18 +416,15 @@ fn cmd_bench_diff(args: &Args) -> Result<i32> {
                 );
             }
             (_, None) => {
-                let b = b_opt.map_or_else(|| "-".to_string(), fmt);
+                let b = brow.optimized_s.map_or_else(|| "-".to_string(), fmt);
                 println!("{name:<42} {b:>10} {:>10} {:>8} {:>8}  (fresh timing null)", "-", "-", "-");
             }
         }
     }
-    for name in fresh.keys() {
-        if !base.contains_key(name) {
+    for name in fresh.rows.keys() {
+        if !base.rows.contains_key(name) {
             println!("{name:<42} (new row — not in baseline)");
         }
-    }
-    if slower > 0 {
-        println!("note: {slower} row(s) slower than baseline beyond +{:.0}% (soft; not gating)", tol * 100.0);
     }
     if !missing.is_empty() {
         for name in &missing {
@@ -401,7 +433,59 @@ fn cmd_bench_diff(args: &Args) -> Result<i32> {
         println!("bench-diff: structural regression — {} baseline row(s) missing", missing.len());
         return Ok(1);
     }
-    println!("bench-diff: ok ({} rows compared)", base.len());
+    if slower > 0 {
+        if gating {
+            println!(
+                "bench-diff: timing regression — {slower} row(s) slower than the measured baseline beyond +{:.0}%",
+                tol * 100.0
+            );
+            return Ok(1);
+        }
+        println!(
+            "note: {slower} row(s) slower than baseline beyond +{:.0}% (soft: baseline is provisional)",
+            tol * 100.0
+        );
+    }
+    println!("bench-diff: ok ({} rows compared)", base.rows.len());
+    Ok(0)
+}
+
+/// Assert the committed baseline is actually measured: `"provisional"`
+/// must be false and every row must carry non-null timings. CI runs
+/// this against `BENCH_hotpath.json` so a provisional baseline can
+/// never silently return once measured numbers have landed.
+fn cmd_bench_check(args: &Args) -> Result<i32> {
+    let path = args.flag("baseline").unwrap_or("BENCH_hotpath.json");
+    let file = load_bench_file(path)?;
+    let mut bad = 0usize;
+    if file.provisional {
+        println!("bench-check: {path} is marked \"provisional\": true");
+        bad += 1;
+    }
+    if file.rows.is_empty() {
+        println!("bench-check: {path} has no rows");
+        bad += 1;
+    }
+    for (name, r) in &file.rows {
+        for (field, v) in [
+            ("baseline_s", r.baseline_s),
+            ("optimized_s", r.optimized_s),
+            ("speedup", r.speedup),
+        ] {
+            if v.is_none() {
+                println!("bench-check: {path}: row {name} has null {field}");
+                bad += 1;
+            }
+        }
+    }
+    if bad > 0 {
+        println!(
+            "bench-check: FAIL — {path} is not a measured baseline ({bad} problem(s)); \
+             run `make bench-json` on a machine with the Rust toolchain and commit the result"
+        );
+        return Ok(1);
+    }
+    println!("bench-check: ok — {path} measured, {} rows, all timings present", file.rows.len());
     Ok(0)
 }
 
@@ -546,7 +630,7 @@ mod tests {
         );
     }
 
-    fn write_bench_json(path: &std::path::Path, rows: &[(&str, Option<f64>)]) {
+    fn write_bench_json(path: &std::path::Path, provisional: bool, rows: &[(&str, Option<f64>)]) {
         let rows_json: Vec<String> = rows
             .iter()
             .map(|(name, opt)| {
@@ -563,7 +647,7 @@ mod tests {
             path,
             format!(
                 "{{\"bench\": \"hotpath\", \"threads\": 4, \"quick\": true, \
-                 \"provisional\": false, \"rows\": [{}]}}\n",
+                 \"provisional\": {provisional}, \"rows\": [{}]}}\n",
                 rows_json.join(", ")
             ),
         )
@@ -571,21 +655,47 @@ mod tests {
     }
 
     #[test]
-    fn bench_diff_passes_on_matching_rows_and_null_baselines() {
+    fn bench_diff_is_soft_against_a_provisional_baseline() {
         let dir = std::env::temp_dir().join("dlion_bench_diff_ok");
         std::fs::create_dir_all(&dir).unwrap();
         let base = dir.join("base.json");
         let fresh = dir.join("fresh.json");
-        // one measured row, one provisional (null) row: both soft-pass
-        write_bench_json(&base, &[("kernel/a", Some(0.5)), ("kernel/b", None)]);
-        write_bench_json(&fresh, &[("kernel/a", Some(5.0)), ("kernel/b", Some(1.0))]);
+        // provisional baseline: a 10x slowdown and a null row both
+        // soft-pass — nothing measured to gate against yet
+        write_bench_json(&base, true, &[("kernel/a", Some(0.5)), ("kernel/b", None)]);
+        write_bench_json(&fresh, false, &[("kernel/a", Some(5.0)), ("kernel/b", Some(1.0))]);
         let code = run(&[
             "bench-diff".into(),
             format!("--baseline={}", base.display()),
             format!("--fresh={}", fresh.display()),
         ])
         .unwrap();
-        assert_eq!(code, 0, "slowdowns and null baselines must not gate");
+        assert_eq!(code, 0, "a provisional baseline must not gate on timings");
+    }
+
+    #[test]
+    fn bench_diff_gates_timing_regressions_on_a_measured_baseline() {
+        let dir = std::env::temp_dir().join("dlion_bench_diff_gate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let fresh = dir.join("fresh.json");
+        write_bench_json(&base, false, &[("kernel/a", Some(0.5)), ("kernel/b", Some(1.0))]);
+        // kernel/a regresses 10x past any sane tolerance
+        write_bench_json(&fresh, false, &[("kernel/a", Some(5.0)), ("kernel/b", Some(1.0))]);
+        let diff = |tol: &str| {
+            run(&[
+                "bench-diff".into(),
+                format!("--baseline={}", base.display()),
+                format!("--fresh={}", fresh.display()),
+                format!("--tolerance={tol}"),
+            ])
+            .unwrap()
+        };
+        assert_eq!(diff("0.25"), 1, "measured baseline + slowdown must exit nonzero");
+        assert_eq!(diff("20.0"), 0, "within tolerance passes");
+        // matching timings pass at the default tolerance
+        write_bench_json(&fresh, false, &[("kernel/a", Some(0.5)), ("kernel/b", Some(1.0))]);
+        assert_eq!(diff("0.25"), 0);
     }
 
     #[test]
@@ -594,8 +704,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let base = dir.join("base.json");
         let fresh = dir.join("fresh.json");
-        write_bench_json(&base, &[("kernel/a", Some(0.5)), ("kernel/gone", Some(0.5))]);
-        write_bench_json(&fresh, &[("kernel/a", Some(0.5)), ("kernel/new", Some(0.1))]);
+        write_bench_json(&base, false, &[("kernel/a", Some(0.5)), ("kernel/gone", Some(0.5))]);
+        write_bench_json(&fresh, false, &[("kernel/a", Some(0.5)), ("kernel/new", Some(0.1))]);
         let code = run(&[
             "bench-diff".into(),
             format!("--baseline={}", base.display()),
@@ -611,5 +721,27 @@ mod tests {
             format!("--fresh={}", fresh.display()),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn bench_check_accepts_only_a_fully_measured_baseline() {
+        let dir = std::env::temp_dir().join("dlion_bench_check");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let check = |p: &std::path::Path| {
+            run(&["bench-check".into(), format!("--baseline={}", p.display())]).unwrap()
+        };
+        write_bench_json(&base, false, &[("kernel/a", Some(0.5)), ("kernel/b", Some(1.0))]);
+        assert_eq!(check(&base), 0, "measured baseline passes");
+        write_bench_json(&base, true, &[("kernel/a", Some(0.5))]);
+        assert_eq!(check(&base), 1, "provisional marker fails");
+        write_bench_json(&base, false, &[("kernel/a", Some(0.5)), ("kernel/b", None)]);
+        assert_eq!(check(&base), 1, "null timings fail");
+        write_bench_json(&base, false, &[]);
+        assert_eq!(check(&base), 1, "empty rows fail");
+        assert!(
+            run(&["bench-check".into(), "--baseline=/nonexistent/x.json".into()]).is_err(),
+            "unreadable baseline is an error"
+        );
     }
 }

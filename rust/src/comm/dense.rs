@@ -1,4 +1,12 @@
 //! Dense f32 codec — the 32d-bit baseline channel (Global Lion/AdamW).
+//!
+//! The public functions route through the vectorized kernels in
+//! [`super::simd`] (LE memcpy pack/unpack, explicit-width accumulate);
+//! the original per-element loops are kept as `*_scalar` parity oracles
+//! (pinned bit-exact in `tests/simd_kernels.rs` and re-asserted by the
+//! hotpath bench before timing).
+
+use super::simd;
 
 /// Payload bytes for `d` f32 values.
 #[inline]
@@ -8,6 +16,22 @@ pub fn packed_len(d: usize) -> usize {
 
 /// Encode f32 slice as little-endian bytes.
 pub fn pack(values: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(values.len())];
+    simd::dense_pack_into(values, &mut out);
+    out
+}
+
+/// Encode into a preallocated buffer at analytic offsets — the
+/// zero-copy frame-assembly primitive: tag-14/15 envelopes lay dense
+/// frames in place the way sign frames already are
+/// (`chunked::pack_into` + per-range writes, no intermediate `Vec`).
+pub fn pack_into(values: &[f32], out: &mut [u8]) {
+    assert_eq!(out.len(), packed_len(values.len()), "dense output size mismatch");
+    simd::dense_pack_into(values, out);
+}
+
+/// Scalar oracle for [`pack`] (§Perf parity baseline).
+pub fn pack_scalar(values: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(packed_len(values.len()));
     for &v in values {
         out.extend_from_slice(&v.to_le_bytes());
@@ -18,14 +42,19 @@ pub fn pack(values: &[f32]) -> Vec<u8> {
 /// Decode all f32 values.
 pub fn unpack(payload: &[u8]) -> Vec<f32> {
     assert!(payload.len() % 4 == 0, "dense payload not a multiple of 4");
-    payload
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect()
+    let mut out = vec![0.0f32; payload.len() / 4];
+    simd::dense_unpack_into(payload, &mut out);
+    out
 }
 
 /// Decode into a preallocated buffer.
 pub fn unpack_into(payload: &[u8], out: &mut [f32]) {
+    assert_eq!(payload.len(), 4 * out.len(), "dense payload size mismatch");
+    simd::dense_unpack_into(payload, out);
+}
+
+/// Scalar oracle for [`unpack_into`].
+pub fn unpack_into_scalar(payload: &[u8], out: &mut [f32]) {
     assert_eq!(payload.len(), 4 * out.len(), "dense payload size mismatch");
     for (o, c) in out.iter_mut().zip(payload.chunks_exact(4)) {
         *o = f32::from_le_bytes(c.try_into().unwrap());
@@ -33,8 +62,16 @@ pub fn unpack_into(payload: &[u8], out: &mut [f32]) {
 }
 
 /// Accumulate decoded values into `acc` (server-side gradient averaging
-/// hot path — no intermediate allocation).
+/// hot path — no intermediate allocation). Bit-exact with
+/// [`accumulate_scalar`] on every dispatch tier: the vector adds are
+/// independent per-lane IEEE ops, never reassociated.
 pub fn accumulate(payload: &[u8], acc: &mut [f32]) {
+    assert_eq!(payload.len(), 4 * acc.len(), "dense payload size mismatch");
+    simd::dense_accumulate(payload, acc);
+}
+
+/// Scalar oracle for [`accumulate`].
+pub fn accumulate_scalar(payload: &[u8], acc: &mut [f32]) {
     assert_eq!(payload.len(), 4 * acc.len(), "dense payload size mismatch");
     for (a, c) in acc.iter_mut().zip(payload.chunks_exact(4)) {
         *a += f32::from_le_bytes(c.try_into().unwrap());
@@ -72,6 +109,31 @@ mod tests {
         accumulate(&a, &mut acc);
         accumulate(&b, &mut acc);
         assert_eq!(acc, vec![1.5, 1.0]);
+    }
+
+    #[test]
+    fn pack_matches_scalar_oracle() {
+        testing::forall(
+            0x92,
+            64,
+            |r| testing::gen_vec_normal(r, 0, 300, 10.0),
+            |v| pack(v) == pack_scalar(v),
+        );
+    }
+
+    #[test]
+    fn pack_into_matches_pack() {
+        let v: Vec<f32> = (0..37).map(|i| i as f32 * 0.25 - 4.0).collect();
+        let mut out = vec![0u8; packed_len(v.len())];
+        pack_into(&v, &mut out);
+        assert_eq!(out, pack(&v));
+    }
+
+    #[test]
+    #[should_panic(expected = "dense output size mismatch")]
+    fn pack_into_rejects_wrong_size() {
+        let mut out = vec![0u8; 7];
+        pack_into(&[1.0, 2.0], &mut out);
     }
 
     #[test]

@@ -4,7 +4,12 @@
 //! D-Lion against the *de facto* baseline as well as the published ones.
 //!
 //! bf16 = the top 16 bits of IEEE f32 (8-bit exponent preserved), with
-//! round-to-nearest-even on encode.
+//! round-to-nearest-even on encode. The public pack/unpack/accumulate
+//! route through [`super::simd`]'s branchless-rounding kernels (8 lanes
+//! per AVX2 register); the per-element loops here remain as `*_scalar`
+//! parity oracles.
+
+use super::simd;
 
 /// Payload bytes for `d` bf16 values.
 #[inline]
@@ -39,6 +44,19 @@ pub fn from_bf16_bits(h: u16) -> f32 {
 
 /// Encode an f32 slice as bf16 LE bytes (16 bits/param).
 pub fn pack(values: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(values.len())];
+    simd::bf16_pack_into(values, &mut out);
+    out
+}
+
+/// Encode into a preallocated buffer at analytic offsets.
+pub fn pack_into(values: &[f32], out: &mut [u8]) {
+    assert_eq!(out.len(), packed_len(values.len()), "bf16 output size mismatch");
+    simd::bf16_pack_into(values, out);
+}
+
+/// Scalar oracle for [`pack`].
+pub fn pack_scalar(values: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(packed_len(values.len()));
     for &v in values {
         out.extend_from_slice(&to_bf16_bits(v).to_le_bytes());
@@ -49,6 +67,12 @@ pub fn pack(values: &[f32]) -> Vec<u8> {
 /// Decode into a preallocated f32 buffer.
 pub fn unpack_into(payload: &[u8], out: &mut [f32]) {
     assert_eq!(payload.len(), 2 * out.len(), "bf16 payload size mismatch");
+    simd::bf16_unpack_into(payload, out);
+}
+
+/// Scalar oracle for [`unpack_into`].
+pub fn unpack_into_scalar(payload: &[u8], out: &mut [f32]) {
+    assert_eq!(payload.len(), 2 * out.len(), "bf16 payload size mismatch");
     for (o, c) in out.iter_mut().zip(payload.chunks_exact(2)) {
         *o = from_bf16_bits(u16::from_le_bytes(c.try_into().unwrap()));
     }
@@ -56,13 +80,22 @@ pub fn unpack_into(payload: &[u8], out: &mut [f32]) {
 
 /// Decode all values.
 pub fn unpack(payload: &[u8]) -> Vec<f32> {
+    assert!(payload.len() % 2 == 0, "bf16 payload not a multiple of 2");
     let mut out = vec![0.0f32; payload.len() / 2];
     unpack_into(payload, &mut out);
     out
 }
 
 /// Accumulate decoded values into `acc` (server averaging hot path).
+/// Bit-exact with [`accumulate_scalar`] on every dispatch tier: the
+/// vector adds are independent per-lane IEEE ops, never reassociated.
 pub fn accumulate(payload: &[u8], acc: &mut [f32]) {
+    assert_eq!(payload.len(), 2 * acc.len(), "bf16 payload size mismatch");
+    simd::bf16_accumulate(payload, acc);
+}
+
+/// Scalar oracle for [`accumulate`].
+pub fn accumulate_scalar(payload: &[u8], acc: &mut [f32]) {
     assert_eq!(payload.len(), 2 * acc.len(), "bf16 payload size mismatch");
     for (a, c) in acc.iter_mut().zip(payload.chunks_exact(2)) {
         *a += from_bf16_bits(u16::from_le_bytes(c.try_into().unwrap()));
@@ -124,5 +157,29 @@ mod tests {
         let mut acc = vec![0.5f32; 2];
         accumulate(&a, &mut acc);
         assert_eq!(acc, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn pack_matches_scalar_oracle() {
+        testing::forall(
+            0xC02,
+            64,
+            |r| testing::gen_vec_normal(r, 0, 300, 50.0),
+            |v| pack(v) == pack_scalar(v),
+        );
+    }
+
+    #[test]
+    fn pack_into_matches_pack() {
+        let v: Vec<f32> = (0..41).map(|i| i as f32 * 0.3 - 6.0).collect();
+        let mut out = vec![0u8; packed_len(v.len())];
+        pack_into(&v, &mut out);
+        assert_eq!(out, pack(&v));
+    }
+
+    #[test]
+    #[should_panic(expected = "bf16 payload not a multiple of 2")]
+    fn unpack_rejects_odd_payload() {
+        unpack(&[0u8, 1, 2]);
     }
 }

@@ -5,7 +5,15 @@
 //! S ≡ N (mod 2). We encode the rank r = (S+N)/2 ∈ {0..N} using
 //! b = ⌈log2(N+1)⌉ bits per element, bit-packed. This matches Table 1's
 //! "log(n)·d" server→worker bandwidth for Distributed Lion-Avg.
+//!
+//! For b ≤ 8 (N ≤ 255 — every practical cluster) the public functions
+//! route through [`super::simd`]'s 8-ranks-per-u64 kernels: eight b-bit
+//! ranks always span exactly b whole bytes, so each group is one
+//! combined word build + one store instead of a per-element flush loop.
+//! The original shift-register loops are kept as `*_scalar` parity
+//! oracles and as the b > 8 fallback.
 
+use super::simd;
 use crate::util::math::bits_for_count;
 
 /// Bits per element for vote sums over `n` workers.
@@ -21,11 +29,29 @@ pub fn packed_len(d: usize, n: usize) -> usize {
 }
 
 /// Pack vote sums S[k] ∈ {-n..n}, S[k] ≡ n (mod 2).
+pub fn pack(sums: &[i32], n: usize) -> Vec<u8> {
+    let b = bits_per_elem(n);
+    #[cfg(debug_assertions)]
+    for &s in sums {
+        debug_assert!(
+            s.unsigned_abs() as usize <= n && (s + n as i32) % 2 == 0,
+            "vote sum {s} invalid for n={n}"
+        );
+    }
+    if !(1..=8).contains(&b) {
+        return pack_scalar(sums, n);
+    }
+    let mut out = vec![0u8; packed_len(sums.len(), n)];
+    // rank = (s + n) / 2 = (s - lo) >> 1 with lo = -n
+    simd::bitpack8_into(sums, -(n as i32), 1, b, &mut out);
+    out
+}
+
+/// Scalar oracle for [`pack`], and the b > 8 fallback.
 ///
 /// §Perf optimization #2: a 64-bit shift register replaces the per-bit
-/// write loop — one bounds-checked store per *byte* instead of per bit
-/// (b ≤ 7 always fits the register between flushes).
-pub fn pack(sums: &[i32], n: usize) -> Vec<u8> {
+/// write loop — one bounds-checked store per *byte* instead of per bit.
+pub fn pack_scalar(sums: &[i32], n: usize) -> Vec<u8> {
     let b = bits_per_elem(n);
     let mut out = Vec::with_capacity(packed_len(sums.len(), n));
     let mut acc: u64 = 0;
@@ -80,8 +106,21 @@ pub fn unpack(packed: &[u8], d: usize, n: usize) -> Vec<i32> {
     out
 }
 
-/// Unpack into a preallocated buffer (u64 shift-register fast path).
+/// Unpack into a preallocated buffer (8 ranks per u64 register for the
+/// practical b ≤ 8 widths).
 pub fn unpack_into(packed: &[u8], n: usize, out: &mut [i32]) {
+    let b = bits_per_elem(n);
+    if !(1..=8).contains(&b) {
+        unpack_into_scalar(packed, n, out);
+        return;
+    }
+    // s = rank * 2 - n = (rank << 1) + lo with lo = -n
+    simd::bitunpack8_into(packed, -(n as i32), 1, b, out);
+}
+
+/// Scalar oracle for [`unpack_into`] (u64 shift register, one element
+/// decoded per iteration), and the b > 8 fallback.
+pub fn unpack_into_scalar(packed: &[u8], n: usize, out: &mut [i32]) {
     let b = bits_per_elem(n);
     let mask: u64 = (1u64 << b) - 1;
     let mut acc: u64 = 0;
@@ -120,6 +159,21 @@ pub fn packed_len_range(d: usize, lo: i32, hi: i32) -> usize {
 /// Pack integers in [lo, hi] with the minimal fixed bit width.
 pub fn pack_range(vals: &[i32], lo: i32, hi: i32) -> Vec<u8> {
     let b = bits_for_range(lo, hi);
+    #[cfg(debug_assertions)]
+    for &s in vals {
+        debug_assert!((lo..=hi).contains(&s), "value {s} outside [{lo},{hi}]");
+    }
+    if !(1..=8).contains(&b) {
+        return pack_range_scalar(vals, lo, hi);
+    }
+    let mut out = vec![0u8; packed_len_range(vals.len(), lo, hi)];
+    simd::bitpack8_into(vals, lo, 0, b, &mut out);
+    out
+}
+
+/// Scalar per-bit oracle for [`pack_range`], and the b > 8 fallback.
+pub fn pack_range_scalar(vals: &[i32], lo: i32, hi: i32) -> Vec<u8> {
+    let b = bits_for_range(lo, hi);
     let mut out = vec![0u8; packed_len_range(vals.len(), lo, hi)];
     let mut bitpos = 0usize;
     for &s in vals {
@@ -143,6 +197,17 @@ pub fn pack_range(vals: &[i32], lo: i32, hi: i32) -> Vec<u8> {
 pub fn unpack_range(packed: &[u8], d: usize, lo: i32, hi: i32) -> Vec<i32> {
     let b = bits_for_range(lo, hi);
     let mut out = vec![0i32; d];
+    if !(1..=8).contains(&b) {
+        unpack_range_scalar_into(packed, lo, hi, &mut out);
+        return out;
+    }
+    simd::bitunpack8_into(packed, lo, 0, b, &mut out);
+    out
+}
+
+/// Scalar per-bit oracle for [`unpack_range`], and the b > 8 fallback.
+pub fn unpack_range_scalar_into(packed: &[u8], lo: i32, hi: i32, out: &mut [i32]) {
+    let b = bits_for_range(lo, hi);
     let mut bitpos = 0usize;
     for o in out.iter_mut() {
         let mut rank = 0u32;
@@ -158,7 +223,6 @@ pub fn unpack_range(packed: &[u8], d: usize, lo: i32, hi: i32) -> Vec<i32> {
         }
         *o = rank as i32 + lo;
     }
-    out
 }
 
 #[cfg(test)]
@@ -189,6 +253,17 @@ mod tests {
                 |sums| unpack(&pack(sums, n), sums.len(), n) == *sums,
             );
         }
+    }
+
+    #[test]
+    fn roundtrip_beyond_byte_wide_ranks() {
+        // n = 300 → b = 9 > 8: the scalar fallback path must still
+        // roundtrip (vote parity: sums share n's parity).
+        let n = 300usize;
+        let sums: Vec<i32> = (-150..=150).map(|s| s * 2).collect();
+        assert_eq!(bits_per_elem(n), 9);
+        assert_eq!(unpack(&pack(&sums, n), sums.len(), n), sums);
+        assert_eq!(pack(&sums, n), pack_naive(&sums, n));
     }
 
     #[test]
@@ -226,7 +301,7 @@ mod tests {
                     let d = r.below(300);
                     gen_sums(r, d, n)
                 },
-                |sums| pack(sums, n) == pack_naive(sums, n),
+                |sums| pack(sums, n) == pack_naive(sums, n) && pack(sums, n) == pack_scalar(sums, n),
             );
         }
     }
@@ -244,6 +319,23 @@ mod tests {
                         .collect::<Vec<i32>>()
                 },
                 |vals| unpack_range(&pack_range(vals, lo, hi), vals.len(), lo, hi) == *vals,
+            );
+        }
+    }
+
+    #[test]
+    fn range_pack_matches_scalar_oracle() {
+        for (lo, hi) in [(-4i32, 4i32), (-32, 32), (0, 255), (-1000, 1000)] {
+            testing::forall(
+                0x6A + hi as u64,
+                32,
+                |r| {
+                    let d = r.below(120);
+                    (0..d)
+                        .map(|_| lo + r.below((hi - lo + 1) as usize) as i32)
+                        .collect::<Vec<i32>>()
+                },
+                |vals| pack_range(vals, lo, hi) == pack_range_scalar(vals, lo, hi),
             );
         }
     }

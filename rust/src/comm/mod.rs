@@ -17,6 +17,7 @@ pub mod dense;
 pub mod half;
 pub mod intavg;
 pub mod sign;
+pub mod simd;
 pub mod simnet;
 pub mod sparse;
 pub mod swar;

@@ -5,6 +5,14 @@
 //! optimum is log2(3) ≈ 1.585 bits). Also used for the D-Lion MaVo
 //! downlink when N is even (vote ties produce genuine zeros; with odd N
 //! the downlink is strictly binary and the 1-bit sign codec applies).
+//!
+//! The public pack/unpack route through [`super::simd`]: encode as a
+//! direct base-3 dot product (no serial Horner chain between the five
+//! multiplies) and decode via a 256×5 lookup table. The loops here stay
+//! as `*_scalar` parity oracles — including for malformed bytes ≥ 243,
+//! which the LUT reproduces digit-for-digit.
+
+use super::simd;
 
 /// Payload bytes for `d` ternary values.
 #[inline]
@@ -14,6 +22,13 @@ pub fn packed_len(d: usize) -> usize {
 
 /// Pack trits in {-1,0,1} (stored as t+1 in {0,1,2}).
 pub fn pack(trits: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(trits.len())];
+    simd::tern_pack_into(trits, &mut out);
+    out
+}
+
+/// Scalar oracle for [`pack`] (serial Horner per byte).
+pub fn pack_scalar(trits: &[i8]) -> Vec<u8> {
     let mut out = vec![0u8; packed_len(trits.len())];
     for (ci, chunk) in trits.chunks(5).enumerate() {
         let mut byte = 0u16;
@@ -36,6 +51,11 @@ pub fn unpack(packed: &[u8], d: usize) -> Vec<i8> {
 
 /// Unpack into a preallocated buffer.
 pub fn unpack_into(packed: &[u8], out: &mut [i8]) {
+    simd::tern_unpack_into(packed, out);
+}
+
+/// Scalar oracle for [`unpack_into`] (serial %3 chain per byte).
+pub fn unpack_into_scalar(packed: &[u8], out: &mut [i8]) {
     for (ci, chunk) in out.chunks_mut(5).enumerate() {
         let mut v = packed[ci] as u16;
         for o in chunk.iter_mut() {
@@ -80,5 +100,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pack_matches_scalar_oracle() {
+        testing::forall(
+            0x72,
+            128,
+            |r| testing::gen_vec_tern(r, 0, 300, 0.4),
+            |t| pack(t) == pack_scalar(t),
+        );
+    }
+
+    #[test]
+    fn unpack_matches_scalar_oracle_on_all_bytes() {
+        // Every byte value, including malformed ≥ 243, must decode
+        // identically to the scalar %3 chain.
+        let packed: Vec<u8> = (0..=255u8).collect();
+        let mut fast = vec![0i8; 256 * 5];
+        let mut slow = vec![0i8; 256 * 5];
+        unpack_into(&packed, &mut fast);
+        unpack_into_scalar(&packed, &mut slow);
+        assert_eq!(fast, slow);
     }
 }

@@ -8,10 +8,20 @@
 //! [`crate::optim`] implementations unchanged.
 
 use super::{
-    frame, read_u16, Chunk, Chunking, ServerLogic, Strategy, StrategyHyper, WorkerLogic,
+    read_u16, Chunk, ChunkPlan, Chunking, ServerLogic, Strategy, StrategyHyper, WorkerLogic,
     TAG_DENSE, TAG_DENSE_SUM,
 };
-use crate::comm::dense;
+use crate::comm::{chunked, dense};
+
+/// Single-allocation dense frame: `[TAG_DENSE][f32 payload]` laid in
+/// place with the vectorized `dense::pack_into` — no intermediate
+/// payload `Vec` + copy like the generic `frame()` helper.
+fn dense_frame(values: &[f32]) -> Vec<u8> {
+    let mut msg = vec![0u8; 1 + dense::packed_len(values.len())];
+    msg[0] = TAG_DENSE;
+    dense::pack_into(values, &mut msg[1..]);
+    msg
+}
 use crate::optim::adamw::AdamW;
 use crate::optim::lion::Lion;
 use crate::optim::sgd::SgdMomentum;
@@ -69,7 +79,7 @@ struct GlobalWorker {
 
 impl WorkerLogic for GlobalWorker {
     fn encode(&mut self, grads: &[f32], _lr: f32, _step: usize) -> Vec<u8> {
-        frame(TAG_DENSE, &dense::pack(grads))
+        dense_frame(grads)
     }
 
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], lr: f32, _step: usize) {
@@ -79,7 +89,28 @@ impl WorkerLogic for GlobalWorker {
     }
 
     fn encode_chunk(&mut self, grads: &[f32], chunk: Chunk, _lr: f32, _step: usize) -> Vec<u8> {
-        frame(TAG_DENSE, &dense::pack(&grads[chunk.range()]))
+        dense_frame(&grads[chunk.range()])
+    }
+
+    /// Zero-copy chunked assembly: lay every chunk's dense frame
+    /// directly into the tag-15 envelope (`chunked::pack_into` skeleton
+    /// + analytic-offset `dense::pack_into` per range), so chunked and
+    /// mixed `RoundEngine` rounds hit the vector pack kernel with one
+    /// allocation per round instead of one `Vec` per chunk plus an
+    /// envelope copy. Byte-identical to the collect-then-pack default.
+    fn encode_planned(&mut self, grads: &[f32], plan: &ChunkPlan, lr: f32, step: usize) -> Vec<u8> {
+        if plan.is_single() {
+            return self.encode(grads, lr, step);
+        }
+        let lens: Vec<usize> = plan.chunks().map(|c| 1 + dense::packed_len(c.len())).collect();
+        let mut buf = Vec::new();
+        let ranges = chunked::pack_into(&mut buf, &lens);
+        let views = chunked::split_ranges_mut(&mut buf, &ranges);
+        for (view, c) in views.into_iter().zip(plan.chunks()) {
+            view[0] = TAG_DENSE;
+            dense::pack_into(&grads[c.range()], &mut view[1..]);
+        }
+        buf
     }
 
     /// Ranged apply: decode the chunk's dense mean and advance the
@@ -128,16 +159,16 @@ impl DenseAvgServer {
         for a in self.acc.iter_mut() {
             *a *= inv;
         }
-        frame(TAG_DENSE, &dense::pack(&self.acc))
+        dense_frame(&self.acc)
     }
 
-    /// Frame the accumulated sum as a tag-14 partial covering `voters`.
+    /// Frame the accumulated sum as a tag-14 partial covering `voters`
+    /// (single allocation, payload laid in place at offset 3).
     fn sum_partial(&self, voters: usize) -> Vec<u8> {
-        let payload = dense::pack(&self.acc);
-        let mut msg = Vec::with_capacity(3 + payload.len());
-        msg.push(TAG_DENSE_SUM);
-        msg.extend_from_slice(&(voters as u16).to_le_bytes());
-        msg.extend_from_slice(&payload);
+        let mut msg = vec![0u8; 3 + dense::packed_len(self.acc.len())];
+        msg[0] = TAG_DENSE_SUM;
+        msg[1..3].copy_from_slice(&(voters as u16).to_le_bytes());
+        dense::pack_into(&self.acc, &mut msg[3..]);
         msg
     }
 
@@ -280,7 +311,31 @@ impl Strategy for Global {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::chunked;
+    use crate::optim::dist::frame;
     use crate::util::Rng;
+
+    #[test]
+    fn encode_planned_matches_collect_then_pack() {
+        // The zero-copy envelope assembly must be byte-identical to the
+        // default path: encode each chunk, then chunked::pack.
+        let hp = StrategyHyper::default();
+        let strat = Global::new(GlobalOpt::Lion, hp);
+        let d = 103;
+        let mut rng = Rng::new(0x63);
+        let mut g = vec![0.0f32; d];
+        rng.fill_normal(&mut g, 1.0);
+        let plan = ChunkPlan::new(d, 17, 1);
+        assert!(!plan.is_single());
+        let mut w = strat.make_worker(0, 2, d);
+        let fast = w.encode_planned(&g, &plan, 1e-3, 0);
+        let frames: Vec<Vec<u8>> =
+            plan.chunks().map(|c| w.encode_chunk(&g, c, 1e-3, 0)).collect();
+        assert_eq!(fast, chunked::pack(&frames));
+        // single-chunk plans stay a bare tag-1 frame
+        let whole = ChunkPlan::single(d);
+        assert_eq!(w.encode_planned(&g, &whole, 1e-3, 0), w.encode(&g, 1e-3, 0));
+    }
 
     #[test]
     fn one_worker_global_equals_single_node_optimizer() {

@@ -1,0 +1,369 @@
+//! Oracle parity suite for the vectorized codec kernels in
+//! `dlion::comm::simd`: every dispatched path (portable 8-lane blocks,
+//! SSE2, AVX2 — whichever this machine selects) must be bit-exact with
+//! the retained scalar oracles, across awkward lengths, misaligned
+//! sub-ranges, IEEE special values, and every practical intavg bit
+//! width. The explicit per-tier tests at the bottom additionally pin
+//! the portable and x86 paths directly, independent of dispatch.
+
+use dlion::comm::{dense, half, intavg, simd, tern};
+use dlion::util::Rng;
+
+const LENS: [usize; 8] = [0, 1, 7, 8, 63, 64, 65, 1000];
+
+/// Normal noise with IEEE specials injected: ±0.0, ±Inf, NaN, and a
+/// denormal — the payloads that break shortcut implementations.
+fn special_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 100.0);
+    for x in v.iter_mut() {
+        match rng.below(16) {
+            0 => *x = 0.0,
+            1 => *x = -0.0,
+            2 => *x = f32::INFINITY,
+            3 => *x = f32::NEG_INFINITY,
+            4 => *x = f32::NAN,
+            5 => *x = f32::from_bits(0x0000_0001), // smallest denormal
+            _ => {}
+        }
+    }
+    v
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// dense (f32 LE)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dense_pack_matches_scalar_across_shapes() {
+    let mut rng = Rng::new(0xD0);
+    for d in LENS {
+        let v = special_vec(&mut rng, d);
+        assert_eq!(dense::pack(&v), dense::pack_scalar(&v), "d={d}");
+    }
+}
+
+#[test]
+fn dense_pack_matches_scalar_on_misaligned_subranges() {
+    let mut rng = Rng::new(0xD1);
+    let v = special_vec(&mut rng, 130);
+    for sub in [&v[1..], &v[3..128], &v[5..6], &v[7..]] {
+        assert_eq!(dense::pack(sub), dense::pack_scalar(sub));
+    }
+}
+
+#[test]
+fn dense_unpack_matches_scalar_across_shapes() {
+    let mut rng = Rng::new(0xD2);
+    for d in LENS {
+        let payload = dense::pack_scalar(&special_vec(&mut rng, d));
+        let mut fast = vec![0.0f32; d];
+        let mut slow = vec![0.0f32; d];
+        dense::unpack_into(&payload, &mut fast);
+        dense::unpack_into_scalar(&payload, &mut slow);
+        assert_eq!(bits(&fast), bits(&slow), "d={d}");
+        assert_eq!(bits(&dense::unpack(&payload)), bits(&slow), "d={d}");
+    }
+}
+
+#[test]
+fn dense_accumulate_matches_scalar_bit_exact() {
+    // Per-lane IEEE adds are never reassociated: the vector sum must be
+    // bit-identical to the scalar one, specials included.
+    let mut rng = Rng::new(0xD3);
+    for d in LENS {
+        let payload = dense::pack_scalar(&special_vec(&mut rng, d));
+        let base = special_vec(&mut rng, d);
+        let mut fast = base.clone();
+        let mut slow = base;
+        dense::accumulate(&payload, &mut fast);
+        dense::accumulate_scalar(&payload, &mut slow);
+        assert_eq!(bits(&fast), bits(&slow), "d={d}");
+    }
+}
+
+#[test]
+fn dense_accumulate_matches_scalar_on_misaligned_subranges() {
+    let mut rng = Rng::new(0xD4);
+    let v = special_vec(&mut rng, 130);
+    let base = special_vec(&mut rng, 130);
+    for (lo, hi) in [(1usize, 130usize), (3, 128), (5, 70)] {
+        let payload = dense::pack_scalar(&v[lo..hi]);
+        let mut fast = base[lo..hi].to_vec();
+        let mut slow = base[lo..hi].to_vec();
+        dense::accumulate(&payload, &mut fast);
+        dense::accumulate_scalar(&payload, &mut slow);
+        assert_eq!(bits(&fast), bits(&slow), "range {lo}..{hi}");
+    }
+}
+
+#[test]
+fn dense_pack_into_writes_at_analytic_offsets() {
+    let mut rng = Rng::new(0xD5);
+    let v = special_vec(&mut rng, 77);
+    let mut out = vec![0u8; dense::packed_len(v.len())];
+    dense::pack_into(&v, &mut out);
+    assert_eq!(out, dense::pack_scalar(&v));
+}
+
+// ---------------------------------------------------------------------------
+// half (bf16 RNE)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bf16_round_matches_branchy_oracle_on_edge_patterns() {
+    for b in [
+        0u32,
+        0x8000_0000, // -0.0
+        0x3F80_8000, // tie, even mantissa -> stays
+        0x3F81_8000, // tie, odd mantissa -> rounds up
+        0x3F80_8001, // just above tie
+        0x3F80_7FFF, // just below tie
+        0x7F7F_FFFF, // f32::MAX -> overflows to +Inf in bf16
+        0x7F80_0000, // +Inf
+        0xFF80_0000, // -Inf
+        0x7FC0_0000, // quiet NaN
+        0x7F80_0001, // signaling NaN
+        0xFFFF_FFFF,
+        0x0000_0001, // denormal
+        0x3F7F_FFFF,
+    ] {
+        let x = f32::from_bits(b);
+        assert_eq!(simd::bf16_round(b), half::to_bf16_bits(x), "bits={b:#010X}");
+    }
+}
+
+#[test]
+fn half_pack_matches_scalar_across_shapes() {
+    let mut rng = Rng::new(0xE0);
+    for d in LENS {
+        let v = special_vec(&mut rng, d);
+        assert_eq!(half::pack(&v), half::pack_scalar(&v), "d={d}");
+    }
+}
+
+#[test]
+fn half_pack_matches_scalar_on_misaligned_subranges() {
+    let mut rng = Rng::new(0xE1);
+    let v = special_vec(&mut rng, 130);
+    for sub in [&v[1..], &v[3..128], &v[9..10]] {
+        assert_eq!(half::pack(sub), half::pack_scalar(sub));
+    }
+}
+
+#[test]
+fn half_unpack_and_accumulate_match_scalar() {
+    let mut rng = Rng::new(0xE2);
+    for d in LENS {
+        let payload = half::pack_scalar(&special_vec(&mut rng, d));
+        let mut fast = vec![0.0f32; d];
+        let mut slow = vec![0.0f32; d];
+        half::unpack_into(&payload, &mut fast);
+        half::unpack_into_scalar(&payload, &mut slow);
+        assert_eq!(bits(&fast), bits(&slow), "unpack d={d}");
+
+        let base = special_vec(&mut rng, d);
+        let mut afast = base.clone();
+        let mut aslow = base;
+        half::accumulate(&payload, &mut afast);
+        half::accumulate_scalar(&payload, &mut aslow);
+        assert_eq!(bits(&afast), bits(&aslow), "accumulate d={d}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// intavg (8 ranks per u64 register)
+// ---------------------------------------------------------------------------
+
+/// Valid vote sums for n workers: |s| <= n, s ≡ n (mod 2).
+fn vote_sums(rng: &mut Rng, d: usize, n: usize) -> Vec<i32> {
+    (0..d)
+        .map(|_| {
+            let ups = rng.below(n + 1) as i32; // ups in 0..=n
+            2 * ups - n as i32
+        })
+        .collect()
+}
+
+#[test]
+fn intavg_parity_over_all_practical_worker_counts() {
+    // n ∈ 1..=64 covers every bit width b ∈ 1..=7; the kernels must
+    // match both scalar oracles and roundtrip exactly.
+    let mut rng = Rng::new(0x1A0);
+    for n in 1usize..=64 {
+        for d in [0usize, 1, 7, 8, 9, 63, 64, 65, 257] {
+            let sums = vote_sums(&mut rng, d, n);
+            let packed = intavg::pack(&sums, n);
+            assert_eq!(packed, intavg::pack_scalar(&sums, n), "pack n={n} d={d}");
+            assert_eq!(packed, intavg::pack_naive(&sums, n), "naive n={n} d={d}");
+            let mut fast = vec![0i32; d];
+            let mut slow = vec![0i32; d];
+            intavg::unpack_into(&packed, n, &mut fast);
+            intavg::unpack_into_scalar(&packed, n, &mut slow);
+            assert_eq!(fast, slow, "unpack n={n} d={d}");
+            assert_eq!(fast, sums, "roundtrip n={n} d={d}");
+        }
+    }
+}
+
+#[test]
+fn intavg_parity_at_byte_width_and_beyond() {
+    let mut rng = Rng::new(0x1A1);
+    // n = 127/128/255 exercise b = 7/8; n = 300 exercises the b = 9
+    // scalar fallback.
+    for n in [127usize, 128, 255, 300] {
+        for d in [1usize, 8, 65, 200] {
+            let sums = vote_sums(&mut rng, d, n);
+            let packed = intavg::pack(&sums, n);
+            assert_eq!(packed, intavg::pack_naive(&sums, n), "pack n={n} d={d}");
+            assert_eq!(intavg::unpack(&packed, d, n), sums, "roundtrip n={n} d={d}");
+        }
+    }
+}
+
+#[test]
+fn range_codec_parity_with_scalar_oracles() {
+    let mut rng = Rng::new(0x1A2);
+    for (lo, hi) in [(-1i32, 1i32), (-4, 4), (-32, 32), (0, 255), (-128, 127), (-1000, 1000)] {
+        for d in [0usize, 1, 7, 8, 63, 64, 65, 333] {
+            let vals: Vec<i32> =
+                (0..d).map(|_| lo + rng.below((hi - lo + 1) as usize) as i32).collect();
+            let packed = intavg::pack_range(&vals, lo, hi);
+            assert_eq!(
+                packed,
+                intavg::pack_range_scalar(&vals, lo, hi),
+                "pack [{lo},{hi}] d={d}"
+            );
+            let mut slow = vec![0i32; d];
+            intavg::unpack_range_scalar_into(&packed, lo, hi, &mut slow);
+            assert_eq!(intavg::unpack_range(&packed, d, lo, hi), slow, "unpack [{lo},{hi}] d={d}");
+            assert_eq!(slow, vals, "roundtrip [{lo},{hi}] d={d}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tern (5 trits per byte)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tern_parity_with_scalar_oracles() {
+    let mut rng = Rng::new(0x7E0);
+    for d in LENS {
+        let trits: Vec<i8> = (0..d).map(|_| rng.below(3) as i8 - 1).collect();
+        let packed = tern::pack(&trits);
+        assert_eq!(packed, tern::pack_scalar(&trits), "pack d={d}");
+        let mut fast = vec![0i8; d];
+        let mut slow = vec![0i8; d];
+        tern::unpack_into(&packed, &mut fast);
+        tern::unpack_into_scalar(&packed, &mut slow);
+        assert_eq!(fast, slow, "unpack d={d}");
+        assert_eq!(fast, trits, "roundtrip d={d}");
+    }
+}
+
+#[test]
+fn tern_unpack_matches_scalar_on_malformed_bytes() {
+    // Bytes ≥ 243 are outside the 3^5 code space; the LUT must decode
+    // them digit-for-digit like the scalar %3 chain (robustness parity:
+    // a corrupt wire byte produces the same garbage on every tier).
+    let packed: Vec<u8> = (240..=255u8).chain(0..=10).collect();
+    let d = packed.len() * 5;
+    let mut fast = vec![0i8; d];
+    let mut slow = vec![0i8; d];
+    tern::unpack_into(&packed, &mut fast);
+    tern::unpack_into_scalar(&packed, &mut slow);
+    assert_eq!(fast, slow);
+}
+
+// ---------------------------------------------------------------------------
+// explicit per-tier pins (independent of what dispatch selects)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn portable_tier_matches_scalars_directly() {
+    let mut rng = Rng::new(0x9E0);
+    for d in LENS {
+        let v = special_vec(&mut rng, d);
+        let payload = dense::pack_scalar(&v);
+        let base = special_vec(&mut rng, d);
+
+        let mut fast = base.clone();
+        let mut slow = base.clone();
+        simd::dense_accumulate_portable(&payload, &mut fast);
+        dense::accumulate_scalar(&payload, &mut slow);
+        assert_eq!(bits(&fast), bits(&slow), "dense acc d={d}");
+
+        let mut hout = vec![0u8; half::packed_len(d)];
+        simd::bf16_pack_into_portable(&v, &mut hout);
+        assert_eq!(hout, half::pack_scalar(&v), "bf16 pack d={d}");
+
+        let mut hfast = vec![0.0f32; d];
+        let mut hslow = vec![0.0f32; d];
+        simd::bf16_unpack_into_portable(&hout, &mut hfast);
+        half::unpack_into_scalar(&hout, &mut hslow);
+        assert_eq!(bits(&hfast), bits(&hslow), "bf16 unpack d={d}");
+
+        let mut bfast = base.clone();
+        let mut bslow = base.clone();
+        simd::bf16_accumulate_portable(&hout, &mut bfast);
+        half::accumulate_scalar(&hout, &mut bslow);
+        assert_eq!(bits(&bfast), bits(&bslow), "bf16 acc d={d}");
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn x86_tiers_match_scalars_directly() {
+    let mut rng = Rng::new(0x9E1);
+    for d in LENS {
+        let v = special_vec(&mut rng, d);
+        let payload = dense::pack_scalar(&v);
+        let base = special_vec(&mut rng, d);
+
+        // SSE2 is architectural on x86-64.
+        let mut fast = base.clone();
+        let mut slow = base.clone();
+        simd::x86::dense_accumulate_sse2(&payload, &mut fast);
+        dense::accumulate_scalar(&payload, &mut slow);
+        assert_eq!(bits(&fast), bits(&slow), "sse2 dense acc d={d}");
+
+        if std::is_x86_feature_detected!("avx2") {
+            let mut afast = base.clone();
+            // SAFETY: AVX2 support verified by the runtime check above.
+            unsafe { simd::x86::dense_accumulate_avx2(&payload, &mut afast) };
+            assert_eq!(bits(&afast), bits(&slow), "avx2 dense acc d={d}");
+
+            let mut hout = vec![0u8; half::packed_len(d)];
+            // SAFETY: AVX2 support verified above.
+            unsafe { simd::x86::bf16_pack_into_avx2(&v, &mut hout) };
+            assert_eq!(hout, half::pack_scalar(&v), "avx2 bf16 pack d={d}");
+
+            let mut hfast = vec![0.0f32; d];
+            let mut hslow = vec![0.0f32; d];
+            // SAFETY: AVX2 support verified above.
+            unsafe { simd::x86::bf16_unpack_into_avx2(&hout, &mut hfast) };
+            half::unpack_into_scalar(&hout, &mut hslow);
+            assert_eq!(bits(&hfast), bits(&hslow), "avx2 bf16 unpack d={d}");
+
+            let mut bfast = base.clone();
+            let mut bslow = base.clone();
+            // SAFETY: AVX2 support verified above.
+            unsafe { simd::x86::bf16_accumulate_avx2(&hout, &mut bfast) };
+            half::accumulate_scalar(&hout, &mut bslow);
+            assert_eq!(bits(&bfast), bits(&bslow), "avx2 bf16 acc d={d}");
+        }
+    }
+}
+
+#[test]
+fn dispatch_reports_a_named_tier() {
+    let a = simd::active();
+    assert!(!a.name().is_empty());
+    #[cfg(target_arch = "x86_64")]
+    assert!(a >= simd::Lanes::Sse2, "x86-64 must select at least SSE2");
+}

@@ -5,7 +5,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test docs fmt fmt-check clippy bench-quick bench-json bench-diff bench-check pgo topology mixed chaos clean
+.PHONY: verify build test docs fmt fmt-check clippy artifacts-native lm-suite bench-quick bench-json bench-diff bench-check pgo topology mixed chaos clean
 
 ## tier-1 verify: what CI runs (ROADMAP.md)
 verify:
@@ -30,6 +30,22 @@ fmt-check:
 ## lint gate CI runs alongside tier-1 (all targets, warnings are errors)
 clippy:
 	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
+
+## write a native artifact set (manifest.json + checksummed
+## params_init.bin) under artifacts/ — no Python/JAX needed. Re-running
+## is a no-op while the source_hash is unchanged. MODEL=tiny|small|
+## lm10m|lm25m|lm100m, SEED, VOTE_WORKERS override the defaults.
+MODEL ?= tiny
+SEED ?= 0
+VOTE_WORKERS ?= 4
+artifacts-native:
+	cd $(CARGO_DIR) && cargo run --release -q -- gen-artifacts \
+		--model $(MODEL) --out ../artifacts --seed $(SEED) --vote-workers $(VOTE_WORKERS)
+
+## the formerly artifacts-gated LM + runtime integration suites, run
+## live on the native backend (zero skips) — CI runs this explicitly
+lm-suite:
+	cd $(CARGO_DIR) && cargo test -q --test integration_runtime --test native_backend
 
 ## CI-speed smoke pass over the paper-table benches (hotpath's JSON is
 ## routed to target/ so a smoke run never touches the committed baseline)

@@ -1,16 +1,18 @@
-//! End-to-end driver (EXPERIMENTS.md §E2E): train the AOT-compiled
-//! GPT2++-style transformer with Distributed Lion through the full
-//! three-layer stack —
+//! End-to-end driver (EXPERIMENTS.md §E2E): train the GPT2++-style
+//! transformer with Distributed Lion through the full three-layer
+//! stack —
 //!
 //!   L3 rust coordinator (this binary: workers, majority-vote server,
 //!      1-bit codecs, byte accounting)
-//!   L2 JAX transformer fwd/bwd   (artifacts/train_step.hlo.txt via PJRT)
-//!   L1 Pallas fused Lion kernel  (artifacts/lion_update.hlo.txt,
-//!      equivalence-checked against the coordinator's native update)
+//!   L2 transformer fwd/bwd artifact (`train_step`: the pure-Rust
+//!      native backend by default; PJRT when `--artifacts` points at
+//!      an AOT set from `make artifacts`)
+//!   L1 fused Lion kernel artifact (`lion_update`, equivalence-checked
+//!      against the coordinator's native update)
 //!
-//! Requires `make artifacts` (CONFIG=tiny by default; CONFIG=lm100m for
-//! the paper-scale run). Flags: --steps N --workers N --strategy NAME
-//! --corpus-bytes N --out csv_path --save ckpt.bin --resume ckpt.bin
+//! Works on a fresh checkout with no artifacts directory. Flags:
+//! --steps N --workers N --strategy NAME --corpus-bytes N
+//! --out csv_path --save ckpt.bin --resume ckpt.bin
 
 use dlion::cluster::{run_sequential, TrainConfig};
 use dlion::lm::corpus::Grammar;
@@ -36,7 +38,7 @@ fn main() {
         arg("--corpus-bytes").and_then(|s| s.parse().ok()).unwrap_or(400_000);
 
     let mut task = LmTask::new(&artifacts, corpus_bytes, Grammar::default(), 42)
-        .expect("run `make artifacts` first");
+        .expect("LM task (falls back to the native backend when no artifacts exist)");
     if let Some(path) = arg("--resume") {
         let ck = dlion::lm::checkpoint::Checkpoint::load(
             &path,
@@ -49,8 +51,9 @@ fn main() {
     }
     let d = task.dim();
     println!(
-        "model={} d={} batch/worker={} seq={} workers={workers} strategy={strategy_name}",
+        "model={} backend={} d={} batch/worker={} seq={} workers={workers} strategy={strategy_name}",
         task.rt.manifest.model_name,
+        task.rt.backend_name(),
         d,
         task.batch,
         task.seq_plus1 - 1
@@ -73,7 +76,7 @@ fn main() {
         lion.advance_momentum(&g);
         assert!(
             delta.iter().zip(&native).all(|(&k, &n)| k as f32 == n),
-            "Pallas kernel and native update disagree"
+            "lion_update artifact and native update disagree"
         );
         let max_m_err = m_new
             .iter()

@@ -1,8 +1,9 @@
 //! Table 3 analogue: language-model pretraining perplexity for
 //! AdamW vs G-Lion vs D-Lion (MaVo) vs D-Lion (Avg) — the paper's
-//! GPT2++/OpenWebText study, substituted with the AOT transformer on
-//! the synthetic corpus (DESIGN.md substitutions; identical code path,
-//! smaller scale). Requires `make artifacts`.
+//! GPT2++/OpenWebText study, substituted with the transformer on the
+//! synthetic corpus (DESIGN.md substitutions; identical code path,
+//! smaller scale). Runs on the native backend out of the box; point
+//! `DLION_ARTIFACTS` at an AOT set to drive PJRT instead.
 //!
 //! Paper shape to check: all four land within a narrow perplexity band;
 //! the D-Lion variants are not meaningfully worse than the globals.
@@ -22,10 +23,6 @@ const METHODS: &[&str] = &["g-adamw", "g-lion", "d-lion-mavo", "d-lion-avg"];
 
 fn main() {
     let artifacts = std::env::var("DLION_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
-        eprintln!("table3_lm: {artifacts}/manifest.json missing — run `make artifacts`; skipping");
-        return;
-    }
     let quick = dlion::bench_utils::quick_mode();
     let steps = if quick { 40 } else { 200 };
     let workers = 4;

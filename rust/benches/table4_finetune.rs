@@ -1,7 +1,8 @@
 //! Table 4 analogue: pretrain on the base corpus, finetune with each
 //! method on a shifted domain, evaluate on 7 held-out "downstream"
 //! domains (the paper's LLaMA-7B 3-shot instruction-finetuning study,
-//! substituted per DESIGN.md). Requires `make artifacts`.
+//! substituted per DESIGN.md). Runs on the native backend out of the
+//! box; point `DLION_ARTIFACTS` at an AOT set to drive PJRT instead.
 //!
 //! Paper shape to check: G-AdamW, G-Lion and D-Lion (MaVo) land within a
 //! narrow band per domain; finetuning beats the 0-shot (pretrained-only)
@@ -22,10 +23,6 @@ const NUM_DOMAINS: usize = 7;
 
 fn main() {
     let artifacts = std::env::var("DLION_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
-        eprintln!("table4_finetune: {artifacts}/manifest.json missing — run `make artifacts`; skipping");
-        return;
-    }
     let quick = dlion::bench_utils::quick_mode();
     let pretrain_steps = if quick { 30 } else { 150 };
     let finetune_steps = if quick { 15 } else { 60 };

@@ -5,7 +5,11 @@
 //! * `sweep`      — strategies × workers × seeds sweep, CSV out
 //! * `bandwidth`  — print the Table-1 bandwidth matrix
 //! * `strategies` — list registered strategies
-//! * `lm`         — train the AOT transformer (requires `make artifacts`)
+//! * `lm`         — train the transformer LM; runs on the native backend
+//!   out of the box (no artifacts needed), or on PJRT given an AOT
+//!   artifact set from `make artifacts`
+//! * `gen-artifacts` — write a native artifact set (manifest +
+//!   checksummed init params); no-ops when `source_hash` is unchanged
 //! * `bench-diff` — compare a fresh BENCH_hotpath.json against the
 //!   committed baseline (structural regressions always exit nonzero;
 //!   timing regressions past the tolerance exit nonzero once the
@@ -76,8 +80,16 @@ COMMANDS:
               d-lion-ef, d-lion-msync, d-lion-local(<H>),
               bandwidth-aware(<cheap>,<rich>),
               mixed(<arm>[*<weight>], ...) / mixed(<a>@cheap,<b>@rich))
-  lm          train the AOT transformer (--artifacts artifacts/,
-              --strategy d-lion-mavo, --workers 4, --steps 200)
+  lm          train the transformer LM (--artifacts artifacts/,
+              --strategy d-lion-mavo, --workers 4, --steps 200). With
+              no artifacts directory it runs the pure-Rust native
+              backend on the registry model (--model, default tiny) —
+              `dlion lm` works on a fresh checkout.
+  gen-artifacts
+              write a native artifact set: manifest.json + checksummed
+              params_init.bin (--model tiny, --out artifacts/,
+              --seed 0, --vote-workers 4, --force). Unchanged
+              source_hash + intact checksums = cached no-op.
   bench-diff  print the perf delta table: a fresh hotpath trajectory
               (--fresh target/BENCH_fresh.json) vs the committed
               baseline (--baseline BENCH_hotpath.json). A baseline row
@@ -123,6 +135,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "lm" => cmd_lm(&args),
+        "gen-artifacts" => cmd_gen_artifacts(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "bench-check" => cmd_bench_check(&args),
         other => Err(DlionError::Config(format!("unknown command '{other}' (try help)"))),
@@ -263,17 +276,20 @@ fn cmd_lm(args: &Args) -> Result<i32> {
     let wd: f32 = args.flag("wd").and_then(|s| s.parse().ok()).unwrap_or(0.1);
     let corpus_bytes: usize =
         args.flag("corpus-bytes").and_then(|s| s.parse().ok()).unwrap_or(200_000);
+    let model = args.flag("model").unwrap_or("tiny").to_string();
     let hp = StrategyHyper { weight_decay: wd, ..Default::default() };
     let strategy = by_name(&strat_name, &hp)?;
-    let task = crate::lm::LmTask::new(
-        &artifacts,
+    let rt = Arc::new(crate::runtime::Runtime::open_model(&artifacts, &model)?);
+    let task = crate::lm::LmTask::with_runtime(
+        rt,
         corpus_bytes,
         crate::lm::corpus::Grammar::default(),
         42,
     )?;
     println!(
-        "lm: model={} d={} batch={} seq={} strategy={strat_name} workers={workers}",
+        "lm: model={} backend={} d={} batch={} seq={} strategy={strat_name} workers={workers}",
         task.rt.manifest.model_name,
+        task.rt.backend_name(),
         task.dim(),
         task.batch,
         task.seq_plus1 - 1
@@ -287,14 +303,19 @@ fn cmd_lm(args: &Args) -> Result<i32> {
         ..Default::default()
     };
     let result = run_sequential(&task, strategy.as_ref(), workers, &cfg);
+    let (mut up, mut down) = (0u64, 0u64);
     for r in &result.history {
+        up += r.uplink_bytes;
+        down += r.downlink_bytes;
         if let Some(e) = &r.eval {
             println!(
-                "step {:>5} loss {:.4} eval_loss {:.4} ppl {:.2}",
+                "step {:>5} loss {:.4} eval_loss {:.4} ppl {:.2} up {}B down {}B",
                 r.step,
                 r.train_loss,
                 e.loss,
-                e.loss.exp()
+                e.loss.exp(),
+                up,
+                down
             );
         }
     }
@@ -310,6 +331,36 @@ fn cmd_lm(args: &Args) -> Result<i32> {
     if let Some(out) = args.flag("out") {
         result.write_csv(out)?;
     }
+    Ok(0)
+}
+
+/// Write (or revalidate) a native artifact set. The `source_hash`
+/// recompilation cache makes repeated invocations no-ops until the
+/// model config, seed, vote width, or format version changes.
+fn cmd_gen_artifacts(args: &Args) -> Result<i32> {
+    let model = args.flag("model").unwrap_or("tiny").to_string();
+    let out = args.flag("out").unwrap_or("artifacts").to_string();
+    let seed: u64 = args.flag("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let vote_workers: usize = args
+        .flag("vote-workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(crate::runtime::native::DEFAULT_VOTE_WORKERS);
+    let force = args.flag_bool("force");
+    let report = crate::runtime::native::generate(&model, &out, seed, vote_workers, force)?;
+    println!(
+        "gen-artifacts: model={} dir={} source_hash={} — {}",
+        report.manifest.model_name,
+        report.dir.display(),
+        report.source_hash,
+        if report.fresh { "written" } else { "up to date (cached no-op)" }
+    );
+    println!(
+        "  flat_dim={} params={} artifacts={} backend={}",
+        report.manifest.flat_dim,
+        report.manifest.params.len(),
+        report.manifest.artifacts.len(),
+        report.manifest.backend
+    );
     Ok(0)
 }
 
@@ -628,6 +679,45 @@ mod tests {
             err.to_string().contains("d-lion-local(<H>)"),
             "error should explain the expected form: {err}"
         );
+    }
+
+    #[test]
+    fn gen_artifacts_writes_and_then_noops() {
+        let dir = std::env::temp_dir().join("dlion_cli_gen_artifacts");
+        let _ = std::fs::remove_dir_all(&dir);
+        let gen = |extra: &str| {
+            run(&argv(&format!(
+                "gen-artifacts --model tiny --out {} --seed 7 {extra}",
+                dir.display()
+            )))
+            .unwrap()
+        };
+        assert_eq!(gen(""), 0);
+        assert!(dir.join("manifest.json").is_file());
+        assert!(dir.join("params_init.bin").is_file());
+        // second run must be the cached no-op: manifest bytes unchanged
+        let before = std::fs::read(dir.join("manifest.json")).unwrap();
+        assert_eq!(gen(""), 0);
+        assert_eq!(before, std::fs::read(dir.join("manifest.json")).unwrap());
+        // --force rewrites (same content for same inputs)
+        assert_eq!(gen("--force"), 0);
+        assert_eq!(before, std::fs::read(dir.join("manifest.json")).unwrap());
+        assert!(run(&argv("gen-artifacts --model warp-drive")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lm_trains_natively_without_artifacts() {
+        // the acceptance path: `dlion lm` on a checkout with no
+        // artifacts/ directory trains on the native backend
+        let missing = std::env::temp_dir().join("dlion_cli_lm_no_artifacts");
+        let _ = std::fs::remove_dir_all(&missing);
+        let code = run(&argv(&format!(
+            "lm --artifacts {} --workers 2 --steps 3 --corpus-bytes 20000",
+            missing.display()
+        )))
+        .unwrap();
+        assert_eq!(code, 0);
     }
 
     fn write_bench_json(path: &std::path::Path, provisional: bool, rows: &[(&str, Option<f64>)]) {

@@ -214,6 +214,18 @@ impl Experiment {
                 ));
                 Box::new(MlpVision::new(data, self.task_hidden))
             }
+            // "lm" (default tiny) or "lm:<model>" from the native model
+            // registry — trains through the in-memory native backend,
+            // no artifacts directory needed.
+            name if name == "lm" || name.starts_with("lm:") => {
+                let model = name.strip_prefix("lm:").unwrap_or("tiny");
+                Box::new(crate::lm::LmTask::native(
+                    model,
+                    120_000,
+                    crate::lm::corpus::Grammar::default(),
+                    seed,
+                )?)
+            }
             other => return Err(DlionError::Config(format!("unknown task '{other}'"))),
         })
     }
@@ -358,6 +370,17 @@ dim = 128
             assert!(task.dim() > 0);
         }
         exp.task = "bogus".into();
+        assert!(exp.build_task(1).is_err());
+    }
+
+    #[test]
+    fn builds_lm_task_natively() {
+        let mut exp = Experiment::default();
+        exp.task = "lm".into();
+        let task = exp.build_task(1).unwrap();
+        assert_eq!(task.dim(), 143_680); // tiny
+        assert!(exp.build_task(1).is_ok(), "rebuild is deterministic");
+        exp.task = "lm:nonexistent-model".into();
         assert!(exp.build_task(1).is_err());
     }
 }

@@ -1,7 +1,11 @@
-//! Language-model harness: glues the PJRT transformer artifacts into the
+//! Language-model harness: glues the transformer artifacts into the
 //! cluster as a [`GradTask`], so every distributed strategy (D-Lion,
-//! G-AdamW, TernGrad, …) trains the *same* AOT-compiled model through
-//! the *same* coordinator code path. This is the Table 3/4 substrate.
+//! G-AdamW, TernGrad, …) trains the *same* model through the *same*
+//! coordinator code path. This is the Table 3/4 substrate. The
+//! [`crate::runtime::Runtime`] underneath is backend-agnostic: with a
+//! compiled artifact set it runs PJRT, and with none at all it falls
+//! back to the in-memory native backend — so the LM path works on a
+//! fresh checkout with zero Python/JAX in the loop.
 
 pub mod checkpoint;
 pub mod corpus;
@@ -26,8 +30,17 @@ pub struct LmTask {
 
 impl LmTask {
     /// Build from an artifacts dir; generates a deterministic corpus.
+    /// Falls back to the in-memory native backend (model `tiny`, or
+    /// `DLION_MODEL`) when the directory has no manifest.
     pub fn new(artifacts_dir: &str, corpus_bytes: usize, grammar: Grammar, seed: u64) -> Result<Self> {
-        let rt = Arc::new(Runtime::load(artifacts_dir)?);
+        let rt = Arc::new(Runtime::open(artifacts_dir)?);
+        Self::with_runtime(rt, corpus_bytes, grammar, seed)
+    }
+
+    /// A fully in-memory native LM task for a registered model config —
+    /// no artifacts directory required.
+    pub fn native(model: &str, corpus_bytes: usize, grammar: Grammar, seed: u64) -> Result<Self> {
+        let rt = Arc::new(Runtime::native(model, 0)?);
         Self::with_runtime(rt, corpus_bytes, grammar, seed)
     }
 
@@ -41,7 +54,7 @@ impl LmTask {
         let (batch, seq_plus1) = (ts.batch, ts.seq_plus1);
         drop(ts);
         let corpus = Arc::new(Corpus::generate(corpus_bytes, grammar, seed));
-        let init = load_init_params(&rt)?;
+        let init = rt.init_params()?;
         let eval_batches = corpus.eval_batches(batch, seq_plus1, 8);
         Ok(LmTask { rt, corpus, batch, seq_plus1, init, eval_batches })
     }
@@ -75,23 +88,6 @@ impl LmTask {
         }
         Ok(total / self.eval_batches.len().max(1) as f64)
     }
-}
-
-/// Load `params_init.bin` (f32 LE, flat, written by aot.py).
-fn load_init_params(rt: &Runtime) -> Result<Vec<f32>> {
-    let path = rt.manifest.dir.join("params_init.bin");
-    let bytes = std::fs::read(&path)?;
-    if bytes.len() != 4 * rt.manifest.flat_dim {
-        return Err(crate::error::DlionError::Artifact(format!(
-            "params_init.bin has {} bytes, expected {}",
-            bytes.len(),
-            4 * rt.manifest.flat_dim
-        )));
-    }
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
 }
 
 impl GradTask for LmTask {

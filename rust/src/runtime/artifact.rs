@@ -41,6 +41,17 @@ pub struct Manifest {
     pub params: Vec<ParamSpec>,
     pub flat_dim: usize,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Declared execution backend (`"native"`, `"pjrt"`); empty for
+    /// legacy (aot.py v1) manifests — see
+    /// [`crate::runtime::backend::select_backend_name`].
+    pub backend: String,
+    /// Generation-input hash: an unchanged `source_hash` means
+    /// `gen-artifacts` may no-op (the recompilation cache key).
+    pub source_hash: String,
+    /// FNV-1a 64 hex digests of payload files in `dir`, keyed by file
+    /// name; verified by [`Manifest::verify_checksums`] before anything
+    /// executes.
+    pub checksums: BTreeMap<String, String>,
 }
 
 fn parse_tensor(j: &Json, with_offset: bool) -> Result<ParamSpec> {
@@ -143,7 +154,52 @@ impl Manifest {
                 );
             }
         }
-        Ok(Manifest { dir, model_name, config, params, flat_dim, artifacts })
+        let backend = j.get("backend").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        let source_hash =
+            j.get("source_hash").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        let mut checksums = BTreeMap::new();
+        if let Some(cs) = j.get("checksums").and_then(|v| v.as_obj()) {
+            for (file, digest) in cs {
+                let digest = digest.as_str().ok_or_else(|| {
+                    DlionError::Artifact(format!("checksum for '{file}' is not a string"))
+                })?;
+                checksums.insert(file.clone(), digest.to_string());
+            }
+        }
+        Ok(Manifest {
+            dir,
+            model_name,
+            config,
+            params,
+            flat_dim,
+            artifacts,
+            backend,
+            source_hash,
+            checksums,
+        })
+    }
+
+    /// Verify every payload checksum recorded in the manifest against
+    /// the bytes on disk. Errors name the offending file and both
+    /// hashes — a stale or truncated artifact must never execute
+    /// silently.
+    pub fn verify_checksums(&self) -> Result<()> {
+        for (file, want) in &self.checksums {
+            let path = self.dir.join(file);
+            let bytes = std::fs::read(&path).map_err(|e| {
+                DlionError::Artifact(format!(
+                    "artifact payload '{file}' unreadable at {}: {e}",
+                    path.display()
+                ))
+            })?;
+            let got = crate::util::hash::fnv64_hex(&bytes);
+            if &got != want {
+                return Err(DlionError::Artifact(format!(
+                    "checksum mismatch for artifact payload '{file}': expected {want}, actual {got}"
+                )));
+            }
+        }
+        Ok(())
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -156,20 +212,46 @@ impl Manifest {
         Ok(self.dir.join(&self.artifact(name)?.file))
     }
 
-    /// Slice a flat parameter buffer into per-tensor views.
+    /// Slice a flat parameter buffer into per-tensor views. A length
+    /// disagreement names the first parameter whose declared span falls
+    /// outside the buffer (manifests can be constructed directly, so
+    /// this re-checks what `parse` validated).
     pub fn split_flat<'a>(&self, flat: &'a [f32]) -> Result<Vec<&'a [f32]>> {
         if flat.len() != self.flat_dim {
+            let culprit = self
+                .params
+                .iter()
+                .find(|p| p.offset + p.numel() > flat.len())
+                .map(|p| {
+                    format!(
+                        " (param '{}' spans {}..{})",
+                        p.name,
+                        p.offset,
+                        p.offset + p.numel()
+                    )
+                })
+                .unwrap_or_default();
             return Err(DlionError::Artifact(format!(
-                "flat buffer len {} != flat_dim {}",
+                "flat buffer len {} != flat_dim {}{culprit}",
                 flat.len(),
                 self.flat_dim
             )));
         }
-        Ok(self
-            .params
+        self.params
             .iter()
-            .map(|p| &flat[p.offset..p.offset + p.numel()])
-            .collect())
+            .map(|p| {
+                if p.offset + p.numel() > flat.len() {
+                    return Err(DlionError::Artifact(format!(
+                        "param '{}' numel {} at offset {} overruns flat buffer of {}",
+                        p.name,
+                        p.numel(),
+                        p.offset,
+                        flat.len()
+                    )));
+                }
+                Ok(&flat[p.offset..p.offset + p.numel()])
+            })
+            .collect()
     }
 
     pub fn config_usize(&self, key: &str) -> Option<usize> {
@@ -226,5 +308,54 @@ mod tests {
     fn rejects_gap_in_layout() {
         let bad = SAMPLE.replace("\"offset\": 16", "\"offset\": 17");
         assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn split_flat_names_offending_param() {
+        let mut m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        // a manifest whose specs disagree with the buffer: shrink the
+        // buffer so 'head' (offset 16, numel 4) falls outside it
+        let flat: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let err = m.split_flat(&flat).unwrap_err().to_string();
+        assert!(err.contains("head"), "error should name the param: {err}");
+        // direct-construction drift: flat_dim says 18 but specs need 20
+        m.flat_dim = 18;
+        let err = m.split_flat(&flat).unwrap_err().to_string();
+        assert!(err.contains("head"), "error should name the param: {err}");
+    }
+
+    #[test]
+    fn legacy_manifest_has_empty_backend_fields() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.backend.is_empty());
+        assert!(m.source_hash.is_empty());
+        assert!(m.checksums.is_empty());
+        m.verify_checksums().unwrap(); // vacuously true
+    }
+
+    #[test]
+    fn checksum_verification_names_file_and_hashes() {
+        let dir = std::env::temp_dir().join(format!("dlion-cksum-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let payload = dir.join("params_init.bin");
+        std::fs::write(&payload, b"good bytes").unwrap();
+        let good = crate::util::hash::fnv64_hex(b"good bytes");
+
+        let mut m = Manifest::parse(SAMPLE, dir.clone()).unwrap();
+        m.checksums.insert("params_init.bin".into(), good.clone());
+        m.verify_checksums().unwrap();
+
+        // corruption → named mismatch with expected/actual hashes
+        std::fs::write(&payload, b"evil bytes").unwrap();
+        let err = m.verify_checksums().unwrap_err().to_string();
+        assert!(err.contains("params_init.bin"), "{err}");
+        assert!(err.contains(&good), "expected hash in error: {err}");
+        assert!(err.contains(&crate::util::hash::fnv64_hex(b"evil bytes")), "actual hash: {err}");
+
+        // missing payload → named unreadable error
+        std::fs::remove_file(&payload).unwrap();
+        let err = m.verify_checksums().unwrap_err().to_string();
+        assert!(err.contains("params_init.bin") && err.contains("unreadable"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

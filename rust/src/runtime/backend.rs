@@ -1,0 +1,189 @@
+//! The execution-backend seam: every artifact in a [`Manifest`] runs
+//! through `trait Backend`, so the coordinator's hot path is identical
+//! whether the kernels execute as AOT-compiled HLO under PJRT
+//! ([`crate::runtime::client::PjrtBackend`]) or as the pure-Rust
+//! executors in [`crate::runtime::native`].
+//!
+//! Interchange is [`HostTensor`] — a host-side shape + typed buffer,
+//! the lowest common denominator both backends marshal natively (PJRT
+//! literals are the same bytes; the native backend reads the buffers
+//! in place). Backend selection (`select_backend_name`) is:
+//!
+//! 1. `DLION_BACKEND=native|pjrt` environment override, then
+//! 2. the manifest's own `"backend"` field, then
+//! 3. legacy inference: a manifest whose artifacts carry `.hlo` payload
+//!    files is a PJRT artifact set; anything else defaults to native.
+//!
+//! See `docs/BACKENDS.md` for the add-a-backend procedure.
+
+use crate::error::{DlionError, Result};
+use crate::runtime::artifact::Manifest;
+
+/// Element payload of a [`HostTensor`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+}
+
+/// A host-side tensor: row-major data plus shape (scalars use `[]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: HostData,
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        HostTensor { shape: shape.to_vec(), data: HostData::F32(data) }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        HostTensor { shape: shape.to_vec(), data: HostData::I32(data) }
+    }
+
+    pub fn i8(data: Vec<i8>, shape: &[usize]) -> Self {
+        HostTensor { shape: shape.to_vec(), data: HostData::I8(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor { shape: Vec::new(), data: HostData::F32(vec![v]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Validate that the buffer length matches the shape.
+    pub fn check(&self, ctx: &str) -> Result<()> {
+        let len = match &self.data {
+            HostData::F32(v) => v.len(),
+            HostData::I32(v) => v.len(),
+            HostData::I8(v) => v.len(),
+        };
+        if len != self.numel() {
+            return Err(DlionError::Runtime(format!(
+                "{ctx}: tensor shape {:?} needs {} elems, got {len}",
+                self.shape,
+                self.numel()
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            HostData::F32(v) => Ok(v),
+            other => Err(DlionError::Runtime(format!("expected f32 tensor, got {other:?}"))),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            HostData::I32(v) => Ok(v),
+            other => Err(DlionError::Runtime(format!("expected i32 tensor, got {other:?}"))),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            HostData::I8(v) => Ok(v),
+            other => Err(DlionError::Runtime(format!("expected i8 tensor, got {other:?}"))),
+        }
+    }
+
+    /// Scalar f32 read-back (`loss` outputs).
+    pub fn scalar(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first().copied().ok_or_else(|| DlionError::Runtime("empty scalar tensor".into()))
+    }
+}
+
+/// An execution backend for one manifest's artifact set.
+///
+/// Implementations must be deterministic: the same `(artifact, inputs)`
+/// pair returns the same outputs, so the cluster drivers' replicated-
+/// parameter invariant holds across backends.
+pub trait Backend: Send + Sync {
+    /// Registry name (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// One-time validation/warm-up hook, called by `Runtime` after
+    /// construction: backends check the manifest contract they will be
+    /// asked to execute (payload files exist, layout matches) so a bad
+    /// artifact set fails at load, not mid-train.
+    fn load(&self, manifest: &Manifest) -> Result<()>;
+
+    /// Execute the named artifact. Inputs/outputs follow the manifest's
+    /// `ArtifactSpec` order.
+    fn run(&self, manifest: &Manifest, artifact: &str, inputs: &[HostTensor])
+        -> Result<Vec<HostTensor>>;
+}
+
+/// Resolve which backend a manifest should execute on (see module docs
+/// for the precedence). Returns the backend *name*; construction lives
+/// in [`crate::runtime::client::Runtime`] so this stays unit-testable
+/// without a PJRT toolchain.
+pub fn select_backend_name(manifest: &Manifest) -> Result<String> {
+    if let Ok(env) = std::env::var("DLION_BACKEND") {
+        let env = env.trim().to_ascii_lowercase();
+        return match env.as_str() {
+            "native" | "pjrt" => Ok(env),
+            other => Err(DlionError::Runtime(format!(
+                "DLION_BACKEND='{other}' is not a known backend (native, pjrt)"
+            ))),
+        };
+    }
+    if !manifest.backend.is_empty() {
+        return Ok(manifest.backend.clone());
+    }
+    // Legacy manifests (aot.py, pre-`backend` field): PJRT iff the
+    // artifact payloads are HLO files on disk.
+    let has_hlo = manifest.artifacts.values().any(|a| a.file.ends_with(".hlo.txt"));
+    Ok(if has_hlo { "pjrt".into() } else { "native".into() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest(backend: &str, file: &str) -> Manifest {
+        let text = format!(
+            r#"{{
+              "model": "tiny", "backend": "{backend}", "flat_dim": 4,
+              "params": [{{"name": "w", "shape": [4], "dtype": "f32", "offset": 0}}],
+              "artifacts": {{"lion_update": {{"file": "{file}", "inputs": [], "outputs": []}}}}
+            }}"#
+        );
+        Manifest::parse(&text, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        assert_eq!(t.numel(), 2);
+        t.check("test").unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(t.as_i32().is_err());
+        assert!(t.as_i8().is_err());
+        let bad = HostTensor::f32(vec![1.0], &[3]);
+        assert!(bad.check("test").is_err());
+        assert_eq!(HostTensor::scalar_f32(7.5).scalar().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn selection_precedence() {
+        // NB: relies on DLION_BACKEND being unset in the test env; the
+        // explicit-field and legacy-inference arms are env-independent.
+        if std::env::var("DLION_BACKEND").is_ok() {
+            return;
+        }
+        assert_eq!(select_backend_name(&manifest("native", "")).unwrap(), "native");
+        assert_eq!(select_backend_name(&manifest("pjrt", "x.hlo.txt")).unwrap(), "pjrt");
+        // legacy manifest without a backend field: infer from payloads
+        assert_eq!(select_backend_name(&manifest("", "train_step.hlo.txt")).unwrap(), "pjrt");
+        assert_eq!(select_backend_name(&manifest("", "")).unwrap(), "native");
+    }
+}

@@ -1,38 +1,152 @@
-//! PJRT client wrapper: one CPU client, a compile cache of loaded
-//! executables keyed by artifact name, literal marshalling helpers.
+//! The backend-agnostic [`Runtime`]: one manifest plus the [`Backend`]
+//! that executes its artifacts, selected per
+//! [`crate::runtime::backend::select_backend_name`]. Also home of
+//! [`PjrtBackend`], the original PJRT/XLA execution path moved behind
+//! the trait (one CPU client, a compile cache of loaded executables
+//! keyed by artifact name, literal marshalling).
 
 use crate::error::{DlionError, Result};
 use crate::runtime::artifact::Manifest;
+use crate::runtime::backend::{select_backend_name, Backend, HostData, HostTensor};
+use crate::runtime::native::{self, NativeBackend};
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-/// The runtime: a PJRT CPU client plus compiled executables for the
-/// artifacts in one manifest. Thread-safe (`compile` is internally
-/// locked; execution goes through &self).
+/// The runtime: a manifest and its execution backend. `Send + Sync` —
+/// the native backend is stateless and the PJRT compile cache is
+/// internally locked — so LM tasks can ride the threaded cluster
+/// drivers.
 pub struct Runtime {
-    pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    executables: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
-    /// Create from an artifacts directory (must contain manifest.json).
+    /// Load from an artifacts directory (must contain `manifest.json`).
+    /// Payload checksums are verified *before* backend construction: a
+    /// stale or truncated artifact set fails here, by name.
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(&artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, executables: Mutex::new(BTreeMap::new()) })
+        manifest.verify_checksums()?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Build the backend a manifest asks for.
+    pub fn from_manifest(manifest: Manifest) -> Result<Self> {
+        let name = select_backend_name(&manifest)?;
+        let backend: Box<dyn Backend> = match name.as_str() {
+            "native" => Box::new(NativeBackend::from_manifest(&manifest)?),
+            "pjrt" => Box::new(PjrtBackend::new()?),
+            other => {
+                return Err(DlionError::Runtime(format!(
+                    "no backend named '{other}' (native, pjrt)"
+                )))
+            }
+        };
+        backend.load(&manifest)?;
+        Ok(Runtime { manifest, backend })
+    }
+
+    /// A fully in-memory native runtime for a registered model config —
+    /// no artifacts directory, no files. This is the default LM path on
+    /// a fresh checkout: the manifest is synthesized and the initial
+    /// parameters are drawn deterministically from `seed`.
+    pub fn native(model: &str, seed: u64) -> Result<Self> {
+        let cfg = native::ModelCfg::by_name(model)?;
+        let src = native::gen::source_hash(&cfg, seed, native::DEFAULT_VOTE_WORKERS);
+        let text = native::gen::manifest_json(
+            &cfg,
+            seed,
+            native::DEFAULT_VOTE_WORKERS,
+            &src,
+            &BTreeMap::new(),
+        );
+        let manifest = Manifest::parse(&text, PathBuf::new())?;
+        let backend = NativeBackend::from_manifest(&manifest)?;
+        Ok(Runtime { manifest, backend: Box::new(backend) })
+    }
+
+    /// Open `artifacts_dir` if it holds a manifest, else fall back to
+    /// the in-memory native runtime for `fallback_model` (seed 0). This
+    /// is why `cargo test` / `dlion lm` work with no `artifacts/`
+    /// directory present.
+    pub fn open_model(artifacts_dir: impl AsRef<Path>, fallback_model: &str) -> Result<Self> {
+        if artifacts_dir.as_ref().join("manifest.json").exists() {
+            Self::load(artifacts_dir)
+        } else {
+            Self::native(fallback_model, 0)
+        }
+    }
+
+    /// [`Runtime::open_model`] with the default fallback model
+    /// (`DLION_MODEL` env var, else `tiny`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let model = std::env::var("DLION_MODEL").unwrap_or_else(|_| "tiny".into());
+        Self::open_model(artifacts_dir, &model)
+    }
+
+    /// Which backend executes this runtime's artifacts.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Initial flat parameters: `params_init.bin` when the artifact set
+    /// ships one (always true for aot.py sets), else the deterministic
+    /// native init from the manifest's `init_seed`.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.manifest.dir.join("params_init.bin");
+        if path.is_file() {
+            let bytes = std::fs::read(&path)?;
+            if bytes.len() != 4 * self.manifest.flat_dim {
+                return Err(DlionError::Artifact(format!(
+                    "params_init.bin has {} bytes, expected {}",
+                    bytes.len(),
+                    4 * self.manifest.flat_dim
+                )));
+            }
+            return Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect());
+        }
+        let seed = self.manifest.config_usize("init_seed").unwrap_or(0) as u64;
+        let cfg = NativeBackend::model_cfg(&self.manifest)?;
+        Ok(cfg.init_params(seed))
+    }
+
+    /// Execute the named artifact.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.manifest.artifact(name)?; // named error before dispatch
+        self.backend.run(&self.manifest, name, inputs)
+    }
+}
+
+/// The PJRT/XLA execution path: compiles `*.hlo.txt` payloads on first
+/// use and caches the loaded executables.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    executables: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        Ok(PjrtBackend { client: xla::PjRtClient::cpu()?, executables: Mutex::new(BTreeMap::new()) })
     }
 
     /// Compile (or fetch from cache) the named artifact.
-    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+    fn executable(
+        &self,
+        manifest: &Manifest,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         {
             let cache = self.executables.lock().unwrap();
             if let Some(exe) = cache.get(name) {
                 return Ok(exe.clone());
             }
         }
-        let path = self.manifest.artifact_path(name)?;
+        let path = manifest.artifact_path(name)?;
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = std::sync::Arc::new(self.client.compile(&comp)?);
@@ -40,66 +154,156 @@ impl Runtime {
         Ok(exe)
     }
 
-    /// Execute an artifact with literal inputs; returns the flattened
-    /// tuple outputs (aot.py lowers with return_tuple=True).
-    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let result = exe.execute::<xla::Literal>(inputs)?;
+    fn literal(&self, t: &HostTensor) -> Result<xla::Literal> {
+        t.check("pjrt input")?;
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(match &t.data {
+            HostData::F32(v) => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            HostData::I32(v) => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            HostData::I8(v) => {
+                // i8 -> u8 reinterpret is a plain byte view
+                let bytes: &[u8] =
+                    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S8,
+                    &t.shape,
+                    bytes,
+                )?
+            }
+        })
+    }
+
+    fn host_tensor(lit: &xla::Literal, dtype: &str, shape: &[usize]) -> Result<HostTensor> {
+        Ok(match dtype {
+            "i8" => HostTensor::i8(lit.to_vec::<i8>()?, shape),
+            "i32" => HostTensor::i32(lit.to_vec::<i32>()?, shape),
+            _ => HostTensor::f32(lit.to_vec::<f32>()?, shape),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&self, manifest: &Manifest) -> Result<()> {
+        // payloads must exist before we promise to execute them
+        for (name, spec) in &manifest.artifacts {
+            let path = manifest.dir.join(&spec.file);
+            if spec.file.is_empty() || !path.is_file() {
+                return Err(DlionError::Artifact(format!(
+                    "artifact '{name}' payload '{}' missing under {}",
+                    spec.file,
+                    manifest.dir.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn run(
+        &self,
+        manifest: &Manifest,
+        artifact: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let spec = manifest.artifact(artifact)?.clone();
+        let exe = self.executable(manifest, artifact)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| self.literal(t)).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
         let lit = result
             .first()
             .and_then(|d| d.first())
-            .ok_or_else(|| DlionError::Runtime(format!("artifact {name}: empty result")))?
+            .ok_or_else(|| DlionError::Runtime(format!("artifact {artifact}: empty result")))?
             .to_literal_sync()?;
-        Ok(lit.to_tuple()?)
-    }
-
-    /// f32 tensor literal from a slice (row-major).
-    pub fn literal_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-        let numel: usize = shape.iter().product();
-        if numel != data.len() {
+        let tuple = lit.to_tuple()?;
+        if !spec.outputs.is_empty() && tuple.len() != spec.outputs.len() {
             return Err(DlionError::Runtime(format!(
-                "literal shape {shape:?} needs {numel} elems, got {}",
-                data.len()
+                "artifact {artifact} returned {} outputs, manifest declares {}",
+                tuple.len(),
+                spec.outputs.len()
             )));
         }
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+        tuple
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let (dtype, shape) = spec
+                    .outputs
+                    .get(i)
+                    .map(|o| (o.dtype.as_str(), o.shape.as_slice()))
+                    .unwrap_or(("f32", &[]));
+                Self::host_tensor(l, dtype, shape)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::GradTask;
+
+    #[test]
+    fn runtime_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
     }
 
-    /// i32 tensor literal from a slice.
-    pub fn literal_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-        let numel: usize = shape.iter().product();
-        if numel != data.len() {
-            return Err(DlionError::Runtime(format!(
-                "literal shape {shape:?} needs {numel} elems, got {}",
-                data.len()
-            )));
-        }
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    #[test]
+    fn in_memory_native_runtime_runs_artifacts() {
+        let rt = Runtime::native("tiny", 0).unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert_eq!(rt.manifest.flat_dim, 143_680);
+        let init = rt.init_params().unwrap();
+        assert_eq!(init.len(), rt.manifest.flat_dim);
+        // deterministic across constructions
+        let rt2 = Runtime::native("tiny", 0).unwrap();
+        assert_eq!(init, rt2.init_params().unwrap());
+        assert_ne!(init, Runtime::native("tiny", 1).unwrap().init_params().unwrap());
+
+        let d = 9usize;
+        let out = rt
+            .run(
+                "apply_update",
+                &[
+                    HostTensor::f32(vec![1.0; d], &[d]),
+                    HostTensor::f32(vec![-1.0; d], &[d]),
+                    HostTensor::scalar_f32(0.5),
+                    HostTensor::scalar_f32(0.0),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &vec![1.5f32; d][..]);
+        assert!(rt.run("nonexistent", &[]).is_err());
     }
 
-    /// i8 tensor literal (sign vectors) from raw bytes.
-    pub fn literal_i8(&self, data: &[i8], shape: &[usize]) -> Result<xla::Literal> {
-        let numel: usize = shape.iter().product();
-        if numel != data.len() {
-            return Err(DlionError::Runtime(format!(
-                "literal shape {shape:?} needs {numel} elems, got {}",
-                data.len()
-            )));
-        }
-        // i8 -> u8 reinterpret is a plain byte view
-        let bytes: &[u8] =
-            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-        Ok(xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::S8,
-            shape,
-            bytes,
-        )?)
+    #[test]
+    fn open_model_falls_back_to_native() {
+        let missing = std::env::temp_dir().join("dlion-no-such-artifacts-dir");
+        let rt = Runtime::open_model(&missing, "tiny").unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert_eq!(rt.manifest.model_name, "tiny");
     }
 
-    /// Read back an f32 literal into a Vec.
-    pub fn to_vec_f32(&self, lit: &xla::Literal) -> Result<Vec<f32>> {
-        Ok(lit.to_vec::<f32>()?)
+    // keeps this test file honest about the GradTask trait-object story:
+    // Box<dyn GradTask + Send + Sync> must stay constructible
+    #[allow(dead_code)]
+    fn gradtask_object(t: Box<dyn GradTask + Send + Sync>) -> usize {
+        t.dim()
     }
 }

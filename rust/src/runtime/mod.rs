@@ -1,15 +1,29 @@
-//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
-//! (`python/compile/aot.py` → `artifacts/*.hlo.txt` + `manifest.json`)
-//! and executes them from the rust hot path. Python never runs here.
+//! Artifact runtime: loads a manifest (`artifacts/manifest.json`) and
+//! executes its five artifacts (`train_step`, `eval_step`,
+//! `lion_update`, `majority_vote`, `apply_update`) through a pluggable
+//! [`Backend`]:
 //!
-//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! * [`native`] — pure-Rust executors (transformer fwd/bwd + Lion/vote
+//!   kernels), the default; works fully in-memory with no artifacts
+//!   directory at all (`Runtime::native`).
+//! * pjrt ([`client::PjrtBackend`]) — the AOT path: HLO text produced
+//!   by `make artifacts` (`python/compile/aot.py`), compiled and run
+//!   under PJRT. Interchange is HLO *text*: jax ≥ 0.5 serializes protos
+//!   with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//!   text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Selection precedence: `DLION_BACKEND` env var → the manifest's
+//! `backend` field → legacy inference from payload file names. See
+//! `docs/BACKENDS.md`.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
+pub mod native;
 pub mod trainstep;
 
 pub use artifact::{ArtifactSpec, Manifest, ParamSpec};
-pub use client::Runtime;
-pub use trainstep::{LionUpdateExec, TrainStepExec};
+pub use backend::{select_backend_name, Backend, HostData, HostTensor};
+pub use client::{PjrtBackend, Runtime};
+pub use native::{ModelCfg, NativeBackend};
+pub use trainstep::{EvalStepExec, LionUpdateExec, TrainStepExec};

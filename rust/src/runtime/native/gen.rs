@@ -1,0 +1,230 @@
+//! Native artifact generation: `dlion gen-artifacts` writes the same
+//! `manifest.json` + `params_init.bin` contract as `python/compile/aot.py`
+//! — minus the HLO payloads, because the native backend executes the
+//! artifact set in-process. Regeneration is cached on `source_hash`
+//! (model config + init seed + vote width + format version, FNV-1a):
+//! an unchanged hash with intact checksums is a no-op, the
+//! casettek/raster recompilation-cache design.
+
+use crate::error::Result;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::native::model::ModelCfg;
+use crate::util::hash::{fnv64_hex, Fnv64};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Native manifest format version (aot.py writes version 1; version 2
+/// adds `backend`, `source_hash`, `checksums`, and the Lion betas +
+/// init seed in `config`).
+pub const MANIFEST_VERSION: usize = 2;
+
+/// Server-side aggregation width of the `majority_vote` artifact
+/// (mirrors `aot.py::DEFAULT_VOTE_WORKERS`).
+pub const DEFAULT_VOTE_WORKERS: usize = 4;
+
+/// Default Lion betas baked into `lion_update` (ref.py / Algorithm 1).
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.99;
+
+/// What [`generate`] did.
+pub struct GenReport {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    /// false ⇒ the existing artifact set already matched `source_hash`
+    /// (and its checksums verified), so nothing was rewritten.
+    pub fresh: bool,
+    pub source_hash: String,
+}
+
+/// The recompilation-cache key: every input that changes the generated
+/// artifact set must feed this hash.
+pub fn source_hash(cfg: &ModelCfg, seed: u64, vote_workers: usize) -> String {
+    let mut h = Fnv64::new();
+    h.update(format!("native-artifacts-v{MANIFEST_VERSION}").as_bytes());
+    h.update(
+        format!(
+            "|{} v{} d{} l{} h{} t{} b{}|seed={seed}|vote={vote_workers}",
+            cfg.name, cfg.vocab, cfg.dim, cfg.layers, cfg.heads, cfg.seq_len, cfg.batch
+        )
+        .as_bytes(),
+    );
+    h.update(format!("|b1={BETA1}|b2={BETA2}").as_bytes());
+    h.hex()
+}
+
+fn tensor_json(name: &str, shape: &[usize], dtype: &str, offset: Option<usize>) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Json::Str(name.into()));
+    o.insert(
+        "shape".into(),
+        Json::Arr(shape.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    o.insert("dtype".into(), Json::Str(dtype.into()));
+    if let Some(off) = offset {
+        o.insert("offset".into(), Json::Num(off as f64));
+    }
+    Json::Obj(o)
+}
+
+fn artifact_json(file: &str, inputs: Vec<Json>, outputs: Vec<Json>) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("file".into(), Json::Str(file.into()));
+    o.insert("inputs".into(), Json::Arr(inputs));
+    o.insert("outputs".into(), Json::Arr(outputs));
+    Json::Obj(o)
+}
+
+/// Build the native `manifest.json` text for one model config. The
+/// artifact I/O specs are shape-identical to `aot.py`'s (same names,
+/// same order), so `TrainStepExec` & co. cannot tell the backends
+/// apart; artifact `file` entries are empty — native payloads execute
+/// in-process.
+pub fn manifest_json(
+    cfg: &ModelCfg,
+    seed: u64,
+    vote_workers: usize,
+    src_hash: &str,
+    checksums: &BTreeMap<String, String>,
+) -> String {
+    let specs = cfg.param_specs();
+    let flat_dim = cfg.flat_dim();
+
+    let mut params = Vec::with_capacity(specs.len());
+    let mut off = 0usize;
+    for (name, shape) in &specs {
+        params.push(tensor_json(name, shape, "f32", Some(off)));
+        off += shape.iter().product::<usize>();
+    }
+
+    let tok = || tensor_json("tokens", &[cfg.batch, cfg.seq_len + 1], "i32", None);
+    let param_io: Vec<Json> =
+        specs.iter().map(|(n, s)| tensor_json(n, s, "f32", None)).collect();
+    let grad_io: Vec<Json> = specs
+        .iter()
+        .map(|(n, s)| tensor_json(&format!("d_{n}"), s, "f32", None))
+        .collect();
+
+    let mut artifacts = BTreeMap::new();
+    let mut ts_in = vec![tok()];
+    ts_in.extend(param_io.clone());
+    let mut ts_out = vec![tensor_json("loss", &[], "f32", None)];
+    ts_out.extend(grad_io);
+    artifacts.insert("train_step".to_string(), artifact_json("", ts_in, ts_out));
+
+    let mut es_in = vec![tok()];
+    es_in.extend(param_io);
+    artifacts.insert(
+        "eval_step".to_string(),
+        artifact_json("", es_in, vec![tensor_json("loss", &[], "f32", None)]),
+    );
+    artifacts.insert(
+        "lion_update".to_string(),
+        artifact_json(
+            "",
+            vec![
+                tensor_json("m", &[flat_dim], "f32", None),
+                tensor_json("g", &[flat_dim], "f32", None),
+            ],
+            vec![
+                tensor_json("delta", &[flat_dim], "i8", None),
+                tensor_json("m_new", &[flat_dim], "f32", None),
+            ],
+        ),
+    );
+    artifacts.insert(
+        "majority_vote".to_string(),
+        artifact_json(
+            "",
+            vec![tensor_json("deltas", &[vote_workers, flat_dim], "i8", None)],
+            vec![tensor_json("agg", &[flat_dim], "i8", None)],
+        ),
+    );
+    artifacts.insert(
+        "apply_update".to_string(),
+        artifact_json(
+            "",
+            vec![
+                tensor_json("x", &[flat_dim], "f32", None),
+                tensor_json("delta", &[flat_dim], "f32", None),
+                tensor_json("lr", &[], "f32", None),
+                tensor_json("wd", &[], "f32", None),
+            ],
+            vec![tensor_json("x_new", &[flat_dim], "f32", None)],
+        ),
+    );
+
+    let mut config = BTreeMap::new();
+    config.insert("vocab".into(), Json::Num(cfg.vocab as f64));
+    config.insert("dim".into(), Json::Num(cfg.dim as f64));
+    config.insert("layers".into(), Json::Num(cfg.layers as f64));
+    config.insert("heads".into(), Json::Num(cfg.heads as f64));
+    config.insert("seq_len".into(), Json::Num(cfg.seq_len as f64));
+    config.insert("batch".into(), Json::Num(cfg.batch as f64));
+    config.insert("vote_workers".into(), Json::Num(vote_workers as f64));
+    config.insert("beta1".into(), Json::Num(BETA1 as f64));
+    config.insert("beta2".into(), Json::Num(BETA2 as f64));
+    config.insert("init_seed".into(), Json::Num(seed as f64));
+
+    let mut root = BTreeMap::new();
+    root.insert("version".into(), Json::Num(MANIFEST_VERSION as f64));
+    root.insert("model".into(), Json::Str(cfg.name.clone()));
+    root.insert("backend".into(), Json::Str("native".into()));
+    root.insert("source_hash".into(), Json::Str(src_hash.into()));
+    root.insert("config".into(), Json::Obj(config));
+    root.insert("flat_dim".into(), Json::Num(flat_dim as f64));
+    root.insert("params".into(), Json::Arr(params));
+    root.insert(
+        "artifacts".into(),
+        Json::Obj(artifacts.into_iter().collect()),
+    );
+    root.insert(
+        "checksums".into(),
+        Json::Obj(checksums.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect()),
+    );
+    crate::util::json::emit(&Json::Obj(root))
+}
+
+/// Generate (or no-op revalidate) a native artifact set in `out_dir`.
+pub fn generate(
+    model: &str,
+    out_dir: impl AsRef<Path>,
+    seed: u64,
+    vote_workers: usize,
+    force: bool,
+) -> Result<GenReport> {
+    let out_dir = out_dir.as_ref().to_path_buf();
+    let cfg = ModelCfg::by_name(model)?;
+    let src_hash = source_hash(&cfg, seed, vote_workers);
+
+    if !force {
+        if let Ok(existing) = Manifest::load(&out_dir) {
+            if existing.source_hash == src_hash && existing.verify_checksums().is_ok() {
+                return Ok(GenReport {
+                    manifest: existing,
+                    dir: out_dir,
+                    fresh: false,
+                    source_hash: src_hash,
+                });
+            }
+        }
+    }
+
+    std::fs::create_dir_all(&out_dir)?;
+    let init = cfg.init_params(seed);
+    let mut bytes = Vec::with_capacity(init.len() * 4);
+    for v in &init {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(out_dir.join("params_init.bin"), &bytes)?;
+
+    let mut checksums = BTreeMap::new();
+    checksums.insert("params_init.bin".to_string(), fnv64_hex(&bytes));
+
+    let text = manifest_json(&cfg, seed, vote_workers, &src_hash, &checksums);
+    std::fs::write(out_dir.join("manifest.json"), &text)?;
+
+    let manifest = Manifest::parse(&text, out_dir.clone())?;
+    manifest.verify_checksums()?;
+    Ok(GenReport { manifest, dir: out_dir, fresh: true, source_hash: src_hash })
+}

@@ -1,0 +1,169 @@
+//! Native executors for the three Lion/vote artifacts. These are the
+//! `ref.py` contracts (`lion_update_ref`, `majority_vote_ref`,
+//! `apply_update_ref`) expressed through the repo's own oracles —
+//! [`crate::optim::lion::bsign`] and [`crate::optim::lion::Lion`] — so
+//! the native backend is pinned to exactly the arithmetic the 1-bit
+//! codec and `SignVoteServer` already use (the tests below check
+//! bit-exactness, including the ±0.0 / NaN corners where a naive
+//! `x >= 0` branch would diverge from the IEEE sign-bit convention).
+
+use crate::optim::lion::{bsign, Lion};
+
+/// Fused Lion worker update (paper eq. 4):
+/// `delta = bsign(β1·m + (1−β1)·g)` in {−1,+1} as i8,
+/// `m_new = β2·m + (1−β2)·g`.
+pub fn lion_update(m: &[f32], g: &[f32], beta1: f32, beta2: f32) -> (Vec<i8>, Vec<f32>) {
+    debug_assert_eq!(m.len(), g.len());
+    let mut delta = Vec::with_capacity(m.len());
+    let mut m_new = Vec::with_capacity(m.len());
+    for (&mv, &gv) in m.iter().zip(g) {
+        delta.push(bsign(beta1 * mv + (1.0 - beta1) * gv) as i8);
+        m_new.push(beta2 * mv + (1.0 - beta2) * gv);
+    }
+    (delta, m_new)
+}
+
+/// Server majority vote (paper eq. 5): `sign(Σᵢ deltas[i])` in
+/// {−1, 0, +1} (zero only on even-N ties). `deltas` is row-major
+/// `[n, d]`.
+pub fn majority_vote(deltas: &[i8], n: usize, d: usize) -> Vec<i8> {
+    debug_assert_eq!(deltas.len(), n * d);
+    let mut votes = vec![0i32; d];
+    for row in deltas.chunks_exact(d) {
+        for (v, &s) in votes.iter_mut().zip(row) {
+            *v += s as i32;
+        }
+    }
+    votes.into_iter().map(crate::util::math::isign).collect()
+}
+
+/// Worker-side apply (paper eq. 6): `x − lr·(Δ + wd·x)`, delegating to
+/// the coordinator's own [`Lion::apply_aggregated`] arithmetic.
+pub fn apply_update(x: &[f32], delta: &[f32], lr: f32, wd: f32) -> Vec<f32> {
+    debug_assert_eq!(x.len(), delta.len());
+    let mut out = x.to_vec();
+    Lion::apply_aggregated(&mut out, delta, lr, wd);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{sign, tern};
+    use crate::optim::dist::{Aggregation, ServerLogic, SignVoteServer, TAG_SIGN, TAG_TERN};
+    use crate::optim::LionParams;
+    use crate::testing::gen_vec_normal;
+    use crate::util::Rng;
+
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.99;
+
+    /// Native `lion_update` is bit-exact with the fused SWAR encode path
+    /// (`Lion::encode_fused`: sign bits + momentum advance in one pass).
+    #[test]
+    fn lion_update_matches_fused_encoder_bit_exact() {
+        let mut rng = Rng::new(0x11_07);
+        for _ in 0..crate::testing::default_cases() / 4 {
+            let m0 = gen_vec_normal(&mut rng, 1, 300, 1.0);
+            let g = gen_vec_normal(&mut rng, m0.len(), m0.len(), 1.0);
+            let (delta, m_new) = lion_update(&m0, &g, B1, B2);
+
+            let mut lion =
+                Lion::new(m0.len(), LionParams { beta1: B1, beta2: B2, ..LionParams::default() });
+            lion.momentum.copy_from_slice(&m0);
+            let packed = lion.encode_fused(&g);
+            let fused_delta = sign::unpack(&packed, m0.len());
+
+            assert_eq!(delta, fused_delta, "delta vs fused 1-bit encode");
+            // momentum advance must match the fused path bit-for-bit
+            assert!(m_new.iter().zip(&lion.momentum).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    /// ±0.0 resolves through the IEEE sign bit (the `optim::lion::bsign`
+    /// convention the codec pins): +0.0 → +1, −0.0 → −1. A NaN momentum
+    /// blend keeps its sign bit rather than poisoning the sign wire.
+    #[test]
+    fn lion_update_signed_zero_and_nan_edges() {
+        // β1·m + (1−β1)·g: crafted so the blend is exactly ±0.0 / NaN
+        let m = [0.0f32, -0.0, f32::NAN, -1.0, 1.0];
+        let g = [0.0f32, -0.0, 0.0, f32::NAN, f32::NAN];
+        let (delta, m_new) = lion_update(&m, &g, B1, B2);
+        assert_eq!(delta[0], 1, "+0.0 blend votes +1");
+        assert_eq!(delta[1], -1, "-0.0 blend votes -1");
+        // blends 2..5 are NaN; bsign reads the (unspecified but
+        // deterministic) sign bit — only require a valid binary vote,
+        // same as the fused encoder would emit
+        for (i, &d) in delta.iter().enumerate() {
+            assert!(d == 1 || d == -1, "delta[{i}] = {d} must stay binary");
+        }
+        // and exactly what the fused packer emits for the same inputs
+        let mut lion =
+            Lion::new(m.len(), LionParams { beta1: B1, beta2: B2, ..LionParams::default() });
+        lion.momentum.copy_from_slice(&m);
+        assert_eq!(delta, sign::unpack(&lion.encode_fused(&g), m.len()));
+        // momentum propagates NaN (no silent masking)
+        assert!(m_new[2].is_nan() && m_new[3].is_nan() && m_new[4].is_nan());
+    }
+
+    /// Native `majority_vote` is bit-exact with `SignVoteServer` for odd
+    /// worker counts (strictly binary downlink) and even counts (ternary
+    /// downlink with genuine tie zeros).
+    #[test]
+    fn majority_vote_matches_sign_vote_server_bit_exact() {
+        let mut rng = Rng::new(0x707E);
+        for &n in &[1usize, 2, 3, 4, 5, 8] {
+            for _ in 0..20 {
+                let d = 1 + rng.below(200);
+                let deltas: Vec<i8> =
+                    (0..n * d).map(|_| if rng.uniform() < 0.5 { 1 } else { -1 }).collect();
+                let native = majority_vote(&deltas, n, d);
+
+                let uplinks: Vec<Vec<u8>> = deltas
+                    .chunks_exact(d)
+                    .map(|row| {
+                        let mut msg = vec![TAG_SIGN];
+                        msg.extend_from_slice(&sign::pack(row));
+                        msg
+                    })
+                    .collect();
+                let mut server = SignVoteServer::new(n, d, Aggregation::MajorityVote);
+                let downlink = server.aggregate(&uplinks, 0.1, 0);
+                let server_agg = match downlink[0] {
+                    TAG_SIGN => sign::unpack(&downlink[1..], d),
+                    TAG_TERN => tern::unpack(&downlink[1..], d),
+                    tag => panic!("unexpected downlink tag {tag}"),
+                };
+                assert_eq!(native, server_agg, "n={n} d={d}");
+                if n % 2 == 1 {
+                    assert!(native.iter().all(|&s| s != 0), "odd-N vote must be binary");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn majority_vote_even_tie_is_zero() {
+        // two workers, opposite votes → exact tie → 0
+        let deltas = [1i8, -1, -1, 1];
+        assert_eq!(majority_vote(&deltas, 2, 2), vec![0, 0]);
+    }
+
+    /// `apply_update` is literally `Lion::apply_aggregated` — same
+    /// float op order, so bit-exact by construction; pin it anyway.
+    #[test]
+    fn apply_update_matches_lion_apply_bit_exact() {
+        let mut rng = Rng::new(0xA991);
+        let x = gen_vec_normal(&mut rng, 50, 200, 1.0);
+        let delta: Vec<f32> = (0..x.len()).map(|_| if rng.uniform() < 0.5 { 1.0 } else { -1.0 }).collect();
+        let out = apply_update(&x, &delta, 3e-3, 0.1);
+        let mut oracle = x.clone();
+        Lion::apply_aggregated(&mut oracle, &delta, 3e-3, 0.1);
+        assert!(out.iter().zip(&oracle).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // ref.py identity: x − lr·(Δ + wd·x)
+        for i in 0..x.len() {
+            let want = x[i] - 3e-3 * (delta[i] + 0.1 * x[i]);
+            assert_eq!(out[i], want);
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! The native execution backend: a pure-Rust executor for the five-artifact
+//! set (`train_step`, `eval_step`, `lion_update`, `majority_vote`,
+//! `apply_update`) that makes the LM path run with zero Python/JAX/PJRT
+//! in the loop. The transformer math lives in [`model`] (a port of
+//! `python/compile/model.py` with hand-written backward passes), the
+//! Lion/vote kernels in [`kernels`] (pinned bit-exact to
+//! `optim::lion::bsign` and `SignVoteServer`), and artifact generation
+//! in [`gen`].
+
+pub mod gen;
+pub mod kernels;
+pub mod model;
+pub mod tensor;
+
+pub use gen::{generate, GenReport, DEFAULT_VOTE_WORKERS};
+pub use model::ModelCfg;
+
+use crate::error::{DlionError, Result};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::backend::{Backend, HostTensor};
+
+/// Pure-Rust backend for one model config. Stateless across calls —
+/// every `run` is a function of its inputs, which is what lets
+/// `Runtime` be `Send + Sync` and the LM task join the threaded
+/// cluster drivers.
+pub struct NativeBackend {
+    cfg: ModelCfg,
+    beta1: f32,
+    beta2: f32,
+}
+
+impl NativeBackend {
+    /// Extract the [`ModelCfg`] a manifest describes; errors name the
+    /// missing config key.
+    pub fn model_cfg(m: &Manifest) -> Result<ModelCfg> {
+        let need = |k: &str| {
+            m.config_usize(k).ok_or_else(|| {
+                DlionError::Artifact(format!(
+                    "manifest config missing '{k}' (required by the native backend)"
+                ))
+            })
+        };
+        Ok(ModelCfg {
+            name: m.model_name.clone(),
+            vocab: need("vocab")?,
+            dim: need("dim")?,
+            layers: need("layers")?,
+            heads: need("heads")?,
+            seq_len: need("seq_len")?,
+            batch: need("batch")?,
+        })
+    }
+
+    /// Build from a manifest, validating that the manifest's parameter
+    /// layout is exactly this model's spec order (the flat-buffer
+    /// contract) — a layout mismatch is named, not silently reinterpreted.
+    pub fn from_manifest(m: &Manifest) -> Result<Self> {
+        let cfg = Self::model_cfg(m)?;
+        let specs = cfg.param_specs();
+        if m.params.len() != specs.len() {
+            return Err(DlionError::Artifact(format!(
+                "manifest lists {} param tensors, model {} defines {}",
+                m.params.len(),
+                cfg.name,
+                specs.len()
+            )));
+        }
+        for (got, (name, shape)) in m.params.iter().zip(&specs) {
+            if &got.name != name || &got.shape != shape {
+                return Err(DlionError::Artifact(format!(
+                    "manifest param '{}' {:?} disagrees with model spec '{name}' {shape:?}",
+                    got.name, got.shape
+                )));
+            }
+        }
+        if m.flat_dim != cfg.flat_dim() {
+            return Err(DlionError::Artifact(format!(
+                "manifest flat_dim {} != model {} flat_dim {}",
+                m.flat_dim,
+                cfg.name,
+                cfg.flat_dim()
+            )));
+        }
+        let beta1 = m.config.get("beta1").map(|&x| x as f32).unwrap_or(gen::BETA1);
+        let beta2 = m.config.get("beta2").map(|&x| x as f32).unwrap_or(gen::BETA2);
+        Ok(NativeBackend { cfg, beta1, beta2 })
+    }
+
+    /// Concatenate per-tensor param inputs back into the flat buffer
+    /// (manifest order), naming any tensor whose size disagrees.
+    fn flatten_params(&self, m: &Manifest, inputs: &[HostTensor]) -> Result<Vec<f32>> {
+        if inputs.len() != m.params.len() {
+            return Err(DlionError::Runtime(format!(
+                "expected {} param tensors, got {}",
+                m.params.len(),
+                inputs.len()
+            )));
+        }
+        let mut flat = vec![0.0f32; m.flat_dim];
+        for (inp, spec) in inputs.iter().zip(&m.params) {
+            let v = inp.as_f32()?;
+            if v.len() != spec.numel() {
+                return Err(DlionError::Runtime(format!(
+                    "param '{}' input has {} elems, spec {:?} needs {}",
+                    spec.name,
+                    v.len(),
+                    spec.shape,
+                    spec.numel()
+                )));
+            }
+            flat[spec.offset..spec.offset + spec.numel()].copy_from_slice(v);
+        }
+        Ok(flat)
+    }
+
+    /// Split a flat gradient buffer into per-tensor outputs (manifest
+    /// order), matching `train_step`'s tuple contract.
+    fn split_grads(&self, m: &Manifest, flat: &[f32]) -> Vec<HostTensor> {
+        m.params
+            .iter()
+            .map(|spec| {
+                HostTensor::f32(flat[spec.offset..spec.offset + spec.numel()].to_vec(), &spec.shape)
+            })
+            .collect()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load(&self, manifest: &Manifest) -> Result<()> {
+        // no payloads to compile; re-validate the layout contract so a
+        // hand-edited manifest fails at load, not mid-train
+        Self::from_manifest(manifest).map(|_| ())
+    }
+
+    fn run(
+        &self,
+        manifest: &Manifest,
+        artifact: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        for (i, t) in inputs.iter().enumerate() {
+            t.check(&format!("native {artifact} input {i}"))?;
+        }
+        match artifact {
+            "train_step" | "eval_step" => {
+                let tokens = inputs
+                    .first()
+                    .ok_or_else(|| DlionError::Runtime(format!("{artifact}: no token input")))?
+                    .as_i32()?;
+                let flat = self.flatten_params(manifest, &inputs[1..])?;
+                if artifact == "eval_step" {
+                    let loss = model::eval_step(&self.cfg, &flat, tokens)?;
+                    Ok(vec![HostTensor::scalar_f32(loss)])
+                } else {
+                    let (loss, grads) = model::train_step(&self.cfg, &flat, tokens)?;
+                    let mut out = Vec::with_capacity(1 + manifest.params.len());
+                    out.push(HostTensor::scalar_f32(loss));
+                    out.extend(self.split_grads(manifest, &grads));
+                    Ok(out)
+                }
+            }
+            "lion_update" => {
+                let (m, g) = match inputs {
+                    [m, g] => (m.as_f32()?, g.as_f32()?),
+                    _ => {
+                        return Err(DlionError::Runtime(format!(
+                            "lion_update takes (m, g), got {} inputs",
+                            inputs.len()
+                        )))
+                    }
+                };
+                if m.len() != g.len() {
+                    return Err(DlionError::Runtime(format!(
+                        "lion_update: m has {} elems, g has {}",
+                        m.len(),
+                        g.len()
+                    )));
+                }
+                let (delta, m_new) = kernels::lion_update(m, g, self.beta1, self.beta2);
+                let d = m.len();
+                Ok(vec![HostTensor::i8(delta, &[d]), HostTensor::f32(m_new, &[d])])
+            }
+            "majority_vote" => {
+                let t = inputs.first().ok_or_else(|| {
+                    DlionError::Runtime("majority_vote: no deltas input".into())
+                })?;
+                if t.shape.len() != 2 {
+                    return Err(DlionError::Runtime(format!(
+                        "majority_vote deltas must be [N, d], got shape {:?}",
+                        t.shape
+                    )));
+                }
+                let (n, d) = (t.shape[0], t.shape[1]);
+                let agg = kernels::majority_vote(t.as_i8()?, n, d);
+                Ok(vec![HostTensor::i8(agg, &[d])])
+            }
+            "apply_update" => {
+                let (x, delta, lr, wd) = match inputs {
+                    [x, delta, lr, wd] => (x.as_f32()?, delta.as_f32()?, lr.scalar()?, wd.scalar()?),
+                    _ => {
+                        return Err(DlionError::Runtime(format!(
+                            "apply_update takes (x, delta, lr, wd), got {} inputs",
+                            inputs.len()
+                        )))
+                    }
+                };
+                if x.len() != delta.len() {
+                    return Err(DlionError::Runtime(format!(
+                        "apply_update: x has {} elems, delta has {}",
+                        x.len(),
+                        delta.len()
+                    )));
+                }
+                let d = x.len();
+                Ok(vec![HostTensor::f32(kernels::apply_update(x, delta, lr, wd), &[d])])
+            }
+            other => Err(DlionError::Runtime(format!(
+                "native backend has no executor for artifact '{other}'"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn micro_manifest() -> Manifest {
+        // tiny is the smallest registered config; synthesize in-memory
+        let cfg = ModelCfg::by_name("tiny").unwrap();
+        let sh = gen::source_hash(&cfg, 0, 3);
+        let text = gen::manifest_json(&cfg, 0, 3, &sh, &BTreeMap::new());
+        Manifest::parse(&text, PathBuf::new()).unwrap()
+    }
+
+    #[test]
+    fn synthesized_manifest_round_trips() {
+        let m = micro_manifest();
+        assert_eq!(m.model_name, "tiny");
+        assert_eq!(m.backend, "native");
+        assert_eq!(m.flat_dim, 143_680);
+        assert!(!m.source_hash.is_empty());
+        assert_eq!(m.params.len(), 2 + 2 * 9 + 2);
+        for name in ["train_step", "eval_step", "lion_update", "majority_vote", "apply_update"] {
+            assert!(m.artifact(name).is_ok(), "missing artifact {name}");
+        }
+        assert_eq!(m.artifact("majority_vote").unwrap().inputs[0].shape, vec![3, 143_680]);
+        assert_eq!(m.config_usize("init_seed"), Some(0));
+        NativeBackend::from_manifest(&m).unwrap();
+    }
+
+    #[test]
+    fn layout_mismatch_is_named() {
+        let mut m = micro_manifest();
+        m.params[3].name = "layer0.wq_typo".into();
+        let err = NativeBackend::from_manifest(&m).unwrap_err().to_string();
+        assert!(err.contains("wq_typo"), "{err}");
+    }
+
+    #[test]
+    fn kernels_run_through_backend_dispatch() {
+        let m = micro_manifest();
+        let be = NativeBackend::from_manifest(&m).unwrap();
+        let d = 11usize;
+        let mv = HostTensor::f32(vec![0.5; d], &[d]);
+        let gv = HostTensor::f32(vec![-1.0; d], &[d]);
+        let out = be.run(&m, "lion_update", &[mv, gv]).unwrap();
+        assert_eq!(out[0].as_i8().unwrap(), &vec![1i8; d][..]); // 0.9·0.5 − 0.1 > 0
+        let deltas = HostTensor::i8(vec![1, 1, -1, -1, -1, 1], &[3, 2]);
+        let out = be.run(&m, "majority_vote", &[deltas]).unwrap();
+        assert_eq!(out[0].as_i8().unwrap(), &[-1, 1]);
+        let x = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        let delta = HostTensor::f32(vec![1.0, -1.0], &[2]);
+        let out = be
+            .run(&m, "apply_update", &[x, delta, HostTensor::scalar_f32(0.1), HostTensor::scalar_f32(0.0)])
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[0.9, 2.1]);
+        let err = be.run(&m, "warp_drive", &[]).unwrap_err().to_string();
+        assert!(err.contains("warp_drive"), "{err}");
+    }
+}

@@ -1,0 +1,697 @@
+//! Pure-Rust GPT2++ (paper §5.2): the GPT-2 block with RMSNorm and a
+//! SwiGLU MLP, causal attention, learned positional embeddings, byte
+//! vocab. This is a line-for-line port of `python/compile/model.py` —
+//! same config registry, same ordered parameter layout, same fused
+//! `train_step = (tokens, params…) → (loss, grads…)` contract — executed
+//! host-side with hand-written backward passes instead of JAX autodiff.
+//!
+//! The flat layout is the manifest contract: `param_specs` must list
+//! tensors in exactly the order `model.py::param_specs` does, or PJRT
+//! and native artifacts would disagree about what the coordinator's
+//! flat buffer means.
+
+use crate::error::{DlionError, Result};
+use crate::runtime::native::tensor::{log_sum_exp, matmul, matmul_at_acc, matmul_bt_acc, sigmoid};
+use crate::util::Rng;
+
+/// RMSNorm epsilon (`model.py::rms_norm`).
+const RMS_EPS: f32 = 1e-5;
+
+/// Model hyperparameters; mirrors `model.py::ModelConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+impl ModelCfg {
+    /// The registered model sizes (`model.py::CONFIGS`).
+    pub fn by_name(name: &str) -> Result<ModelCfg> {
+        let (dim, layers, heads, seq_len, batch) = match name {
+            "tiny" => (64, 2, 2, 64, 4),
+            "small" => (256, 4, 4, 128, 8),
+            "lm10m" => (320, 8, 8, 256, 8),
+            "lm25m" => (512, 8, 8, 256, 8),
+            "lm100m" => (768, 14, 12, 256, 8),
+            other => {
+                return Err(DlionError::Config(format!(
+                    "unknown model config '{other}' (tiny, small, lm10m, lm25m, lm100m)"
+                )))
+            }
+        };
+        Ok(ModelCfg { name: name.to_string(), vocab: 256, dim, layers, heads, seq_len, batch })
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["tiny", "small", "lm10m", "lm25m", "lm100m"]
+    }
+
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.dim % self.heads, 0);
+        self.dim / self.heads
+    }
+
+    /// SwiGLU hidden width: `dim · 8/3` rounded up to a multiple of 32
+    /// (`dim·8` is exact, so integer division matches Python's `int()`).
+    pub fn mlp_hidden(&self) -> usize {
+        (self.dim * 8 / 3).div_ceil(32) * 32
+    }
+
+    /// Ordered `(name, shape)` list — the flat-layout contract
+    /// (`model.py::param_specs`).
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let d = self.dim;
+        let f = self.mlp_hidden();
+        let mut specs = vec![
+            ("embed".to_string(), vec![self.vocab, d]),
+            ("pos".to_string(), vec![self.seq_len, d]),
+        ];
+        for i in 0..self.layers {
+            let p = format!("layer{i}.");
+            specs.push((format!("{p}ln1"), vec![d]));
+            specs.push((format!("{p}wq"), vec![d, d]));
+            specs.push((format!("{p}wk"), vec![d, d]));
+            specs.push((format!("{p}wv"), vec![d, d]));
+            specs.push((format!("{p}wo"), vec![d, d]));
+            specs.push((format!("{p}ln2"), vec![d]));
+            specs.push((format!("{p}w_gate"), vec![d, f]));
+            specs.push((format!("{p}w_up"), vec![d, f]));
+            specs.push((format!("{p}w_down"), vec![f, d]));
+        }
+        specs.push(("ln_f".to_string(), vec![d]));
+        specs.push(("head".to_string(), vec![d, self.vocab]));
+        specs
+    }
+
+    pub fn flat_dim(&self) -> usize {
+        self.param_specs().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Deterministic initialization from `seed` (GPT-2-style scaled
+    /// normal, norms at 1, `model.py::init_params` scales). The RNG is
+    /// this repo's xoshiro stream, so native init is reproducible
+    /// without JAX; PJRT artifact sets ship their own `params_init.bin`.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.flat_dim()];
+        let mut rng = Rng::new(seed ^ 0xD110_4A11_CE_u64);
+        let mut off = 0usize;
+        let res_scale = 1.0 / (2.0 * self.layers as f32).sqrt();
+        for (name, shape) in self.param_specs() {
+            let n: usize = shape.iter().product();
+            let dst = &mut out[off..off + n];
+            off += n;
+            if name.ends_with("ln1") || name.ends_with("ln2") || name.ends_with("ln_f") {
+                dst.fill(1.0);
+            } else if name == "pos" {
+                rng.fill_normal(dst, 0.01);
+            } else if name == "embed" {
+                rng.fill_normal(dst, 0.02);
+            } else {
+                let mut scale = 1.0 / (shape[0] as f32).sqrt();
+                if name.ends_with("wo") || name.ends_with("w_down") {
+                    scale *= res_scale;
+                }
+                rng.fill_normal(dst, scale);
+            }
+        }
+        out
+    }
+}
+
+/// Immutable per-tensor views over one flat buffer, in spec order.
+fn split<'a>(cfg: &ModelCfg, flat: &'a [f32]) -> Result<Vec<&'a [f32]>> {
+    let specs = cfg.param_specs();
+    let want: usize = specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    if flat.len() != want {
+        return Err(DlionError::Runtime(format!(
+            "model {}: flat buffer has {} params, config needs {want}",
+            cfg.name,
+            flat.len()
+        )));
+    }
+    let mut views = Vec::with_capacity(specs.len());
+    let mut rest = flat;
+    for (_, shape) in &specs {
+        let (head, tail) = rest.split_at(shape.iter().product());
+        views.push(head);
+        rest = tail;
+    }
+    Ok(views)
+}
+
+/// Mutable per-tensor views (gradient output buffer), in spec order.
+fn split_mut<'a>(cfg: &ModelCfg, flat: &'a mut [f32]) -> Vec<&'a mut [f32]> {
+    let specs = cfg.param_specs();
+    let mut views = Vec::with_capacity(specs.len());
+    let mut rest = flat;
+    for (_, shape) in &specs {
+        let (head, tail) = rest.split_at_mut(shape.iter().product());
+        views.push(head);
+        rest = tail;
+    }
+    views
+}
+
+// Positions of named tensors in the spec-order view list.
+const IDX_EMBED: usize = 0;
+const IDX_POS: usize = 1;
+const PER_LAYER: usize = 9;
+#[derive(Clone, Copy)]
+enum L {
+    Ln1 = 0,
+    Wq = 1,
+    Wk = 2,
+    Wv = 3,
+    Wo = 4,
+    Ln2 = 5,
+    WGate = 6,
+    WUp = 7,
+    WDown = 8,
+}
+fn li(layer: usize, which: L) -> usize {
+    2 + layer * PER_LAYER + which as usize
+}
+fn idx_lnf(cfg: &ModelCfg) -> usize {
+    2 + cfg.layers * PER_LAYER
+}
+fn idx_head(cfg: &ModelCfg) -> usize {
+    3 + cfg.layers * PER_LAYER
+}
+
+/// Per-layer forward activations retained for the backward pass.
+struct LayerCache {
+    xa: Vec<f32>,    // residual input to the attention block [BT,D]
+    h1: Vec<f32>,    // rms_norm(xa, ln1)
+    r1: Vec<f32>,    // rsqrt(mean(xa²)+eps) per row [BT]
+    q: Vec<f32>,     // h1 @ wq [BT,D]
+    k: Vec<f32>,
+    v: Vec<f32>,
+    probs: Vec<f32>, // softmax scores [B,H,T,T]
+    ctx: Vec<f32>,   // attention context before wo [BT,D]
+    xb: Vec<f32>,    // residual input to the MLP block [BT,D]
+    h2: Vec<f32>,    // rms_norm(xb, ln2)
+    r2: Vec<f32>,
+    gate: Vec<f32>,  // h2 @ w_gate [BT,F]
+    up: Vec<f32>,    // h2 @ w_up [BT,F]
+    su: Vec<f32>,    // silu(gate) * up [BT,F]
+}
+
+struct FwdCache {
+    layers: Vec<LayerCache>,
+    xf: Vec<f32>, // final residual stream [BT,D]
+    rf: Vec<f32>, // final-norm rsqrt [BT]
+    hf: Vec<f32>, // rms_norm(xf, ln_f)
+}
+
+/// `y = rms_norm(x, scale)` row-wise; records the rsqrt factor per row.
+fn rms_norm_fwd(x: &[f32], scale: &[f32], d: usize, y: &mut [f32], r: &mut [f32]) {
+    for (row, (yrow, rr)) in
+        x.chunks_exact(d).zip(y.chunks_exact_mut(d).zip(r.iter_mut()))
+    {
+        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let rs = 1.0 / (ms + RMS_EPS).sqrt();
+        *rr = rs;
+        for ((yo, &xv), &sc) in yrow.iter_mut().zip(row).zip(scale) {
+            *yo = xv * rs * sc;
+        }
+    }
+}
+
+/// Backward of `rms_norm`: accumulates `+=` into `dx` (residual chain)
+/// and `dscale`.
+fn rms_norm_bwd(
+    x: &[f32],
+    scale: &[f32],
+    r: &[f32],
+    dy: &[f32],
+    d: usize,
+    dx: &mut [f32],
+    dscale: &mut [f32],
+) {
+    let inv_d = 1.0 / d as f32;
+    for (((row, dyrow), dxrow), &rs) in x
+        .chunks_exact(d)
+        .zip(dy.chunks_exact(d))
+        .zip(dx.chunks_exact_mut(d))
+        .zip(r.iter())
+    {
+        // g = dy ⊙ scale; dx += r·g − x·r³·(g·x)/D; dscale += dy ⊙ x·r
+        let mut dot = 0.0f32;
+        for ((&dyv, &sc), &xv) in dyrow.iter().zip(scale).zip(row) {
+            dot += dyv * sc * xv;
+        }
+        let coef = rs * rs * rs * dot * inv_d;
+        for (((dxo, &dyv), &sc), &xv) in dxrow.iter_mut().zip(dyrow).zip(scale).zip(row) {
+            *dxo += rs * dyv * sc - xv * coef;
+        }
+        for ((ds, &dyv), &xv) in dscale.iter_mut().zip(dyrow).zip(row) {
+            *ds += dyv * xv * rs;
+        }
+    }
+}
+
+fn validate_tokens(cfg: &ModelCfg, tokens: &[i32]) -> Result<()> {
+    let want = cfg.batch * (cfg.seq_len + 1);
+    if tokens.len() != want {
+        return Err(DlionError::Runtime(format!(
+            "model {}: tokens len {} != batch·(seq_len+1) = {want}",
+            cfg.name,
+            tokens.len()
+        )));
+    }
+    if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab) {
+        return Err(DlionError::Runtime(format!(
+            "model {}: token {bad} outside vocab 0..{}",
+            cfg.name, cfg.vocab
+        )));
+    }
+    Ok(())
+}
+
+/// Forward pass over `inputs` (i32[B,T], already the `tokens[:, :-1]`
+/// slice). Returns the activation cache and the logits [BT,V].
+fn forward(cfg: &ModelCfg, p: &[&[f32]], inputs: &[i32]) -> (FwdCache, Vec<f32>) {
+    let (b, t, d) = (cfg.batch, cfg.seq_len, cfg.dim);
+    let (h, hd, f, v) = (cfg.heads, cfg.head_dim(), cfg.mlp_hidden(), cfg.vocab);
+    let bt = b * t;
+    let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+
+    // x = embed[tokens] + pos
+    let mut x = vec![0.0f32; bt * d];
+    let (embed, pos) = (p[IDX_EMBED], p[IDX_POS]);
+    for (i, row) in x.chunks_exact_mut(d).enumerate() {
+        let tok = inputs[i] as usize;
+        let ti = i % t;
+        for ((o, &e), &pp) in row.iter_mut().zip(&embed[tok * d..(tok + 1) * d]).zip(&pos[ti * d..(ti + 1) * d]) {
+            *o = e + pp;
+        }
+    }
+
+    let mut layers = Vec::with_capacity(cfg.layers);
+    for l in 0..cfg.layers {
+        let xa = x.clone();
+        let mut h1 = vec![0.0f32; bt * d];
+        let mut r1 = vec![0.0f32; bt];
+        rms_norm_fwd(&xa, p[li(l, L::Ln1)], d, &mut h1, &mut r1);
+
+        let mut q = vec![0.0f32; bt * d];
+        let mut k = vec![0.0f32; bt * d];
+        let mut vv = vec![0.0f32; bt * d];
+        matmul(&mut q, &h1, p[li(l, L::Wq)], bt, d, d);
+        matmul(&mut k, &h1, p[li(l, L::Wk)], bt, d, d);
+        matmul(&mut vv, &h1, p[li(l, L::Wv)], bt, d, d);
+
+        // causal attention per (batch, head)
+        let mut probs = vec![0.0f32; b * h * t * t];
+        let mut ctx = vec![0.0f32; bt * d];
+        let mut scores = vec![0.0f32; t];
+        for bi in 0..b {
+            for hi in 0..h {
+                let hoff = hi * hd;
+                let prow = &mut probs[(bi * h + hi) * t * t..(bi * h + hi + 1) * t * t];
+                for ti in 0..t {
+                    let qrow = &q[(bi * t + ti) * d + hoff..(bi * t + ti) * d + hoff + hd];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (si, sc) in scores[..=ti].iter_mut().enumerate() {
+                        let krow = &k[(bi * t + si) * d + hoff..(bi * t + si) * d + hoff + hd];
+                        let mut acc = 0.0f32;
+                        for (&qv, &kv) in qrow.iter().zip(krow) {
+                            acc += qv * kv;
+                        }
+                        *sc = acc * inv_sqrt_hd;
+                        mx = mx.max(*sc);
+                    }
+                    let mut denom = 0.0f32;
+                    for sc in scores[..=ti].iter_mut() {
+                        *sc = (*sc - mx).exp();
+                        denom += *sc;
+                    }
+                    let inv = 1.0 / denom;
+                    let crow =
+                        &mut ctx[(bi * t + ti) * d + hoff..(bi * t + ti) * d + hoff + hd];
+                    for (si, &e) in scores[..=ti].iter().enumerate() {
+                        let pr = e * inv;
+                        prow[ti * t + si] = pr;
+                        let vrow = &vv[(bi * t + si) * d + hoff..(bi * t + si) * d + hoff + hd];
+                        for (c, &vval) in crow.iter_mut().zip(vrow) {
+                            *c += pr * vval;
+                        }
+                    }
+                }
+            }
+        }
+
+        // x ← xa + ctx @ wo
+        let mut att_out = vec![0.0f32; bt * d];
+        matmul(&mut att_out, &ctx, p[li(l, L::Wo)], bt, d, d);
+        for ((xo, &a), &ao) in x.iter_mut().zip(&xa).zip(&att_out) {
+            *xo = a + ao;
+        }
+        let xb = x.clone();
+
+        let mut h2 = vec![0.0f32; bt * d];
+        let mut r2 = vec![0.0f32; bt];
+        rms_norm_fwd(&xb, p[li(l, L::Ln2)], d, &mut h2, &mut r2);
+        let mut gate = vec![0.0f32; bt * f];
+        let mut up = vec![0.0f32; bt * f];
+        matmul(&mut gate, &h2, p[li(l, L::WGate)], bt, d, f);
+        matmul(&mut up, &h2, p[li(l, L::WUp)], bt, d, f);
+        let mut su = vec![0.0f32; bt * f];
+        for ((s, &g), &u) in su.iter_mut().zip(&gate).zip(&up) {
+            *s = g * sigmoid(g) * u;
+        }
+        // x ← xb + su @ w_down
+        let mut mlp_out = vec![0.0f32; bt * d];
+        matmul(&mut mlp_out, &su, p[li(l, L::WDown)], bt, f, d);
+        for ((xo, &a), &mo) in x.iter_mut().zip(&xb).zip(&mlp_out) {
+            *xo = a + mo;
+        }
+
+        layers.push(LayerCache { xa, h1, r1, q, k, v: vv, probs, ctx, xb, h2, r2, gate, up, su });
+    }
+
+    let xf = x;
+    let mut hf = vec![0.0f32; bt * d];
+    let mut rf = vec![0.0f32; bt];
+    rms_norm_fwd(&xf, p[idx_lnf(cfg)], d, &mut hf, &mut rf);
+    let mut logits = vec![0.0f32; bt * v];
+    matmul(&mut logits, &hf, p[idx_head(cfg)], bt, d, v);
+    (FwdCache { layers, xf, rf, hf }, logits)
+}
+
+/// Mean next-byte cross-entropy; optionally writes `(softmax − onehot)/BT`
+/// into `dlogits`.
+fn loss_from_logits(
+    logits: &[f32],
+    targets: &[i32],
+    v: usize,
+    mut dlogits: Option<&mut [f32]>,
+) -> f32 {
+    let bt = targets.len();
+    let inv_bt = 1.0 / bt as f32;
+    let mut loss = 0.0f32;
+    for (i, row) in logits.chunks_exact(v).enumerate() {
+        let tgt = targets[i] as usize;
+        let lse = log_sum_exp(row);
+        loss += lse - row[tgt];
+        if let Some(dl) = dlogits.as_deref_mut() {
+            let drow = &mut dl[i * v..(i + 1) * v];
+            for (o, &lv) in drow.iter_mut().zip(row) {
+                *o = (lv - lse).exp() * inv_bt;
+            }
+            drow[tgt] -= inv_bt;
+        }
+    }
+    loss * inv_bt
+}
+
+/// Loss-only evaluation (`eval_step` artifact). `tokens` is i32[B,T+1].
+pub fn eval_step(cfg: &ModelCfg, flat_params: &[f32], tokens: &[i32]) -> Result<f32> {
+    validate_tokens(cfg, tokens)?;
+    let p = split(cfg, flat_params)?;
+    let (inputs, targets) = split_tokens(cfg, tokens);
+    let (_, logits) = forward(cfg, &p, &inputs);
+    Ok(loss_from_logits(&logits, &targets, cfg.vocab, None))
+}
+
+/// Split `tokens[B,T+1]` into next-byte (inputs, targets), each [B,T].
+fn split_tokens(cfg: &ModelCfg, tokens: &[i32]) -> (Vec<i32>, Vec<i32>) {
+    let (b, t) = (cfg.batch, cfg.seq_len);
+    let mut inputs = Vec::with_capacity(b * t);
+    let mut targets = Vec::with_capacity(b * t);
+    for row in tokens.chunks_exact(t + 1) {
+        inputs.extend_from_slice(&row[..t]);
+        targets.extend_from_slice(&row[1..]);
+    }
+    (inputs, targets)
+}
+
+/// Fused forward + backward (`train_step` artifact): returns the scalar
+/// loss and the flat gradient buffer in manifest param order.
+pub fn train_step(cfg: &ModelCfg, flat_params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+    validate_tokens(cfg, tokens)?;
+    let p = split(cfg, flat_params)?;
+    let (inputs, targets) = split_tokens(cfg, tokens);
+    let (b, t, d) = (cfg.batch, cfg.seq_len, cfg.dim);
+    let (h, hd, f, v) = (cfg.heads, cfg.head_dim(), cfg.mlp_hidden(), cfg.vocab);
+    let bt = b * t;
+    let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+
+    let (cache, logits) = forward(cfg, &p, &inputs);
+
+    let mut flat_grads = vec![0.0f32; flat_params.len()];
+    let mut g = split_mut(cfg, &mut flat_grads);
+
+    let mut dlogits = vec![0.0f32; bt * v];
+    let loss = loss_from_logits(&logits, &targets, v, Some(&mut dlogits));
+
+    // head + final norm
+    matmul_at_acc(&mut *g[idx_head(cfg)], &cache.hf, &dlogits, bt, d, v);
+    let mut dhf = vec![0.0f32; bt * d];
+    matmul_bt_acc(&mut dhf, &dlogits, p[idx_head(cfg)], bt, v, d);
+    let mut dx = vec![0.0f32; bt * d];
+    rms_norm_bwd(&cache.xf, p[idx_lnf(cfg)], &cache.rf, &dhf, d, &mut dx, &mut *g[idx_lnf(cfg)]);
+
+    for l in (0..cfg.layers).rev() {
+        let lc = &cache.layers[l];
+
+        // ---- MLP block: x_out = xb + (silu(h2@w_gate) ⊙ (h2@w_up)) @ w_down
+        // dx currently holds ∂loss/∂x_out, which is also ∂/∂(mlp_out).
+        let mut d_su = vec![0.0f32; bt * f];
+        matmul_bt_acc(&mut d_su, &dx, p[li(l, L::WDown)], bt, d, f);
+        matmul_at_acc(&mut *g[li(l, L::WDown)], &lc.su, &dx, bt, f, d);
+        let mut d_gate = vec![0.0f32; bt * f];
+        let mut d_up = vec![0.0f32; bt * f];
+        for i in 0..bt * f {
+            let (ds, ga, u) = (d_su[i], lc.gate[i], lc.up[i]);
+            let sg = sigmoid(ga);
+            d_up[i] = ds * ga * sg; // silu(gate)
+            // silu'(a) = σ(a)·(1 + a·(1 − σ(a)))
+            d_gate[i] = ds * u * sg * (1.0 + ga * (1.0 - sg));
+        }
+        matmul_at_acc(&mut *g[li(l, L::WGate)], &lc.h2, &d_gate, bt, d, f);
+        matmul_at_acc(&mut *g[li(l, L::WUp)], &lc.h2, &d_up, bt, d, f);
+        let mut dh2 = vec![0.0f32; bt * d];
+        matmul_bt_acc(&mut dh2, &d_gate, p[li(l, L::WGate)], bt, f, d);
+        matmul_bt_acc(&mut dh2, &d_up, p[li(l, L::WUp)], bt, f, d);
+        // residual: dx becomes ∂/∂xb = ∂/∂x_out + norm-chain term
+        rms_norm_bwd(&lc.xb, p[li(l, L::Ln2)], &lc.r2, &dh2, d, &mut dx, &mut *g[li(l, L::Ln2)]);
+
+        // ---- attention block: xb = xa + (attn(h1)) @ wo
+        matmul_at_acc(&mut *g[li(l, L::Wo)], &lc.ctx, &dx, bt, d, d);
+        let mut d_ctx = vec![0.0f32; bt * d];
+        matmul_bt_acc(&mut d_ctx, &dx, p[li(l, L::Wo)], bt, d, d);
+
+        let mut dq = vec![0.0f32; bt * d];
+        let mut dk = vec![0.0f32; bt * d];
+        let mut dv = vec![0.0f32; bt * d];
+        let mut dp = vec![0.0f32; t];
+        for bi in 0..b {
+            for hi in 0..h {
+                let hoff = hi * hd;
+                let prow = &lc.probs[(bi * h + hi) * t * t..(bi * h + hi + 1) * t * t];
+                for ti in 0..t {
+                    let row = bi * t + ti;
+                    let dctx_row = &d_ctx[row * d + hoff..row * d + hoff + hd];
+                    // d_probs[ti,si] = dctx · v[si]; softmax-row dot
+                    let mut pdot = 0.0f32;
+                    for (si, dpv) in dp[..=ti].iter_mut().enumerate() {
+                        let vrow = &lc.v[(bi * t + si) * d + hoff..(bi * t + si) * d + hoff + hd];
+                        let mut acc = 0.0f32;
+                        for (&dc, &vv) in dctx_row.iter().zip(vrow) {
+                            acc += dc * vv;
+                        }
+                        *dpv = acc;
+                        pdot += prow[ti * t + si] * acc;
+                    }
+                    let qrow = lc.q[row * d + hoff..row * d + hoff + hd].to_vec();
+                    for si in 0..=ti {
+                        let pr = prow[ti * t + si];
+                        // dv[si] += p·dctx ; dscores = p·(dp − Σp·dp)·scale
+                        let dsc = pr * (dp[si] - pdot) * inv_sqrt_hd;
+                        let src = bi * t + si;
+                        let krow = &lc.k[src * d + hoff..src * d + hoff + hd];
+                        let dqrow = &mut dq[row * d + hoff..row * d + hoff + hd];
+                        for (o, &kv) in dqrow.iter_mut().zip(krow) {
+                            *o += dsc * kv;
+                        }
+                        let dkrow = &mut dk[src * d + hoff..src * d + hoff + hd];
+                        for (o, &qv) in dkrow.iter_mut().zip(&qrow) {
+                            *o += dsc * qv;
+                        }
+                        let dvrow = &mut dv[src * d + hoff..src * d + hoff + hd];
+                        for (o, &dc) in dvrow.iter_mut().zip(dctx_row) {
+                            *o += pr * dc;
+                        }
+                    }
+                }
+            }
+        }
+
+        matmul_at_acc(&mut *g[li(l, L::Wq)], &lc.h1, &dq, bt, d, d);
+        matmul_at_acc(&mut *g[li(l, L::Wk)], &lc.h1, &dk, bt, d, d);
+        matmul_at_acc(&mut *g[li(l, L::Wv)], &lc.h1, &dv, bt, d, d);
+        let mut dh1 = vec![0.0f32; bt * d];
+        matmul_bt_acc(&mut dh1, &dq, p[li(l, L::Wq)], bt, d, d);
+        matmul_bt_acc(&mut dh1, &dk, p[li(l, L::Wk)], bt, d, d);
+        matmul_bt_acc(&mut dh1, &dv, p[li(l, L::Wv)], bt, d, d);
+        // residual: dx becomes ∂/∂xa
+        rms_norm_bwd(&lc.xa, p[li(l, L::Ln1)], &lc.r1, &dh1, d, &mut dx, &mut *g[li(l, L::Ln1)]);
+    }
+
+    // embedding + positional (scatter-add over token / position rows)
+    let (g_head, g_tail) = g.split_at_mut(IDX_POS);
+    let g_embed = &mut *g_head[IDX_EMBED];
+    let g_pos = &mut *g_tail[0];
+    for (i, row) in dx.chunks_exact(d).enumerate() {
+        let tok = inputs[i] as usize;
+        let ti = i % t;
+        for ((e, pg), &dxv) in g_embed[tok * d..(tok + 1) * d]
+            .iter_mut()
+            .zip(&mut g_pos[ti * d..(ti + 1) * d])
+            .zip(row)
+        {
+            *e += dxv;
+            *pg += dxv;
+        }
+    }
+
+    Ok((loss, flat_grads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn micro() -> ModelCfg {
+        ModelCfg {
+            name: "micro".into(),
+            vocab: 13,
+            dim: 8,
+            layers: 1,
+            heads: 2,
+            seq_len: 6,
+            batch: 2,
+        }
+    }
+
+    fn micro_tokens(cfg: &ModelCfg, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..cfg.batch * (cfg.seq_len + 1)).map(|_| rng.below(cfg.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn registry_matches_python_configs() {
+        let tiny = ModelCfg::by_name("tiny").unwrap();
+        assert_eq!((tiny.dim, tiny.layers, tiny.heads, tiny.seq_len, tiny.batch), (64, 2, 2, 64, 4));
+        assert_eq!(tiny.mlp_hidden(), 192);
+        assert_eq!(tiny.flat_dim(), 143_680);
+        assert_eq!(ModelCfg::by_name("lm100m").unwrap().mlp_hidden(), 2048);
+        assert!(ModelCfg::by_name("gpt5").is_err());
+        // spec order is the manifest contract
+        let names: Vec<String> = tiny.param_specs().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "pos");
+        assert_eq!(names[2], "layer0.ln1");
+        assert_eq!(names[10], "layer0.w_down");
+        assert_eq!(names[names.len() - 2], "ln_f");
+        assert_eq!(names[names.len() - 1], "head");
+    }
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let cfg = ModelCfg::by_name("tiny").unwrap();
+        let a = cfg.init_params(7);
+        let b = cfg.init_params(7);
+        assert_eq!(a, b);
+        let c = cfg.init_params(8);
+        assert_ne!(a, c);
+        // ln params sit at exactly 1.0
+        let specs = cfg.param_specs();
+        let mut off = 0;
+        for (name, shape) in &specs {
+            let n: usize = shape.iter().product();
+            if name.ends_with("ln1") || name.ends_with("ln_f") {
+                assert!(a[off..off + n].iter().all(|&x| x == 1.0), "{name}");
+            }
+            off += n;
+        }
+    }
+
+    #[test]
+    fn loss_at_init_is_near_uniform() {
+        let cfg = micro();
+        let params = cfg.init_params(3);
+        let tokens = micro_tokens(&cfg, 11);
+        let loss = eval_step(&cfg, &params, &tokens).unwrap();
+        let uniform = (cfg.vocab as f32).ln();
+        assert!(
+            (loss - uniform).abs() < 1.0,
+            "init loss {loss} should be near ln(V) = {uniform}"
+        );
+    }
+
+    #[test]
+    fn train_and_eval_agree_on_loss() {
+        let cfg = micro();
+        let params = cfg.init_params(3);
+        let tokens = micro_tokens(&cfg, 11);
+        let (loss, grads) = train_step(&cfg, &params, &tokens).unwrap();
+        let eval = eval_step(&cfg, &params, &tokens).unwrap();
+        assert_eq!(loss, eval);
+        assert_eq!(grads.len(), cfg.flat_dim());
+        assert!(grads.iter().all(|g| g.is_finite()));
+        assert!(grads.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        let cfg = micro();
+        let params = cfg.init_params(3);
+        let mut tokens = micro_tokens(&cfg, 11);
+        assert!(eval_step(&cfg, &params, &tokens[1..]).is_err());
+        tokens[0] = cfg.vocab as i32;
+        let err = eval_step(&cfg, &params, &tokens).unwrap_err().to_string();
+        assert!(err.contains("vocab"), "{err}");
+    }
+
+    /// Central-difference gradient check of the full fused backward: the
+    /// native `train_step` against numeric ∂loss/∂θ on sampled coords of
+    /// every parameter tensor.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let cfg = micro();
+        let params = cfg.init_params(5);
+        let tokens = micro_tokens(&cfg, 17);
+        let (_, grads) = train_step(&cfg, &params, &tokens).unwrap();
+
+        let specs = cfg.param_specs();
+        let mut probe_rng = Rng::new(99);
+        let eps = 2e-3f32;
+        let mut off = 0usize;
+        for (name, shape) in &specs {
+            let n: usize = shape.iter().product();
+            for _ in 0..4 {
+                let idx = off + probe_rng.below(n);
+                let mut pp = params.clone();
+                pp[idx] += eps;
+                let lp = eval_step(&cfg, &pp, &tokens).unwrap();
+                pp[idx] = params[idx] - eps;
+                let lm = eval_step(&cfg, &pp, &tokens).unwrap();
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[idx];
+                assert!(
+                    (fd - an).abs() <= 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "grad check failed for {name}[{}]: analytic={an} fd={fd}",
+                    idx - off
+                );
+            }
+            off += n;
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Dense tensor primitives for the native backend: row-major f32
+//! matmuls in the four orientations the transformer forward/backward
+//! needs, with deterministic row-parallelism.
+//!
+//! Parallel splits are over *output rows* (disjoint `&mut` blocks), so
+//! every product is bit-identical to the sequential loop regardless of
+//! thread count — the same determinism contract as
+//! [`crate::util::parallel`]. The inner loops are written in `(i, k, j)`
+//! order (broadcast `a[i,k]`, stream `b` rows) so the compiler
+//! auto-vectorizes the j-loop.
+
+use crate::util::parallel::auto_threads;
+
+/// Run `f(row_index, row)` over the rows of `out`, splitting across
+/// threads when `total_flops` is large enough to amortize spawn/join.
+/// `f` must be pure per row.
+fn par_rows<F>(out: &mut [f32], row_len: usize, total_flops: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len() % row_len.max(1), 0);
+    let rows = if row_len == 0 { 0 } else { out.len() / row_len };
+    let nthreads = auto_threads(total_flops).min(rows.max(1));
+    if nthreads <= 1 {
+        for (i, row) in out.chunks_mut(row_len).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let block = rows.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for (bi, chunk) in out.chunks_mut(block * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, row) in chunk.chunks_mut(row_len).enumerate() {
+                    f(bi * block + j, row);
+                }
+            });
+        }
+    });
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (overwrite).
+pub fn matmul(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    par_rows(out, n, m * k * n, |i, row| {
+        row.fill(0.0);
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &aik) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in row.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    });
+}
+
+/// `out[m,k] += a[m,n] @ b[k,n]ᵀ` — the `dy @ Wᵀ` backward orientation.
+/// Each output element is a row·row dot, so both operands stream.
+pub fn matmul_bt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    par_rows(out, k, m * k * n, |i, row| {
+        let arow = &a[i * n..(i + 1) * n];
+        for (j, o) in row.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o += acc;
+        }
+    });
+}
+
+/// `out[m,n] += a[r,m]ᵀ @ b[r,n]` — the `xᵀ @ dy` weight-gradient
+/// orientation. Output row `i` accumulates `a[r,i] * b[r,·]` over all
+/// shared rows `r`.
+pub fn matmul_at_acc(out: &mut [f32], a: &[f32], b: &[f32], r: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    debug_assert_eq!(out.len(), m * n);
+    par_rows(out, n, r * m * n, |i, row| {
+        for rr in 0..r {
+            let aik = a[rr * m + i];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[rr * n..(rr + 1) * n];
+            for (o, &bv) in row.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    });
+}
+
+/// Numerically-stable log-sum-exp of one logit row.
+pub fn log_sum_exp(row: &[f32]) -> f32 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let s: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// `sigmoid(x)`.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn orientations_agree_with_naive() {
+        let mut rng = Rng::new(0xBEEF);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (8, 16, 4), (17, 9, 33)] {
+            let mut a = vec![0.0f32; m * k];
+            let mut b = vec![0.0f32; k * n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let want = naive_matmul(&a, &b, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            matmul(&mut got, &a, &b, m, k, n);
+            assert_eq!(got, want, "matmul {m}x{k}x{n}");
+
+            // a@b == (a) @ (bᵀ)ᵀ: check bt against a naive transpose
+            let mut bt = vec![0.0f32; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b[kk * n + j];
+                }
+            }
+            let mut got_bt = vec![0.0f32; m * n];
+            matmul_bt_acc(&mut got_bt, &a, &bt, m, k, n);
+            crate::testing::assert_allclose(&got_bt, &want, 1e-5, 1e-5, "matmul_bt_acc");
+
+            // aᵀ@b via at_acc on a pre-transposed a
+            let mut at = vec![0.0f32; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a[i * k + kk];
+                }
+            }
+            let mut got_at = vec![0.0f32; m * n];
+            matmul_at_acc(&mut got_at, &at, &b, k, m, n);
+            crate::testing::assert_allclose(&got_at, &want, 1e-5, 1e-5, "matmul_at_acc");
+        }
+    }
+
+    #[test]
+    fn acc_variants_accumulate() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        // 1x2 @ (1x2)ᵀ = [[11]]
+        let mut out = vec![100.0f32];
+        matmul_bt_acc(&mut out, &a, &b, 1, 2, 1);
+        assert_eq!(out, vec![111.0]);
+    }
+
+    #[test]
+    fn log_sum_exp_stable() {
+        let row = [1000.0f32, 1000.0];
+        let lse = log_sum_exp(&row);
+        assert!((lse - (1000.0 + 2.0f32.ln())).abs() < 1e-3);
+        assert!(log_sum_exp(&[0.0, 0.0, 0.0, 0.0]).abs() - 4.0f32.ln().abs() < 1e-6);
+    }
+}

@@ -1,14 +1,49 @@
-//! Typed wrappers over the AOT artifacts:
+//! Typed wrappers over the artifact set, marshalled through
+//! [`HostTensor`] so they are backend-agnostic:
 //!
 //! * [`TrainStepExec`] — the L2 transformer `train_step`:
 //!   (tokens i32[B,T+1], params…) → (loss f32[], grads…), one fused
 //!   executable for forward + backward.
-//! * [`LionUpdateExec`] — the L1 Pallas fused Lion kernel:
+//! * [`LionUpdateExec`] — the L1 fused Lion kernel:
 //!   (m f32[d], g f32[d]) → (delta i8[d] ∈ {−1,+1}, m_new f32[d]).
 //! * [`EvalStepExec`] — loss-only evaluation.
 
 use crate::error::{DlionError, Result};
+use crate::runtime::backend::HostTensor;
 use crate::runtime::Runtime;
+
+fn token_shape(rt: &Runtime, artifact: &str) -> Result<(usize, usize)> {
+    let spec = rt.manifest.artifact(artifact)?;
+    let tok = spec
+        .inputs
+        .first()
+        .ok_or_else(|| DlionError::Artifact(format!("{artifact} has no inputs")))?;
+    if tok.shape.len() != 2 {
+        return Err(DlionError::Artifact(format!(
+            "{artifact} token input must be [B, T+1], got {:?}",
+            tok.shape
+        )));
+    }
+    Ok((tok.shape[0], tok.shape[1]))
+}
+
+/// tokens + per-tensor param views, in manifest order.
+fn step_inputs(
+    rt: &Runtime,
+    flat_params: &[f32],
+    tokens: &[i32],
+    batch: usize,
+    seq_plus1: usize,
+) -> Result<Vec<HostTensor>> {
+    let m = &rt.manifest;
+    let views = m.split_flat(flat_params)?;
+    let mut inputs = Vec::with_capacity(1 + views.len());
+    inputs.push(HostTensor::i32(tokens.to_vec(), &[batch, seq_plus1]));
+    for (view, spec) in views.iter().zip(&m.params) {
+        inputs.push(HostTensor::f32(view.to_vec(), &spec.shape));
+    }
+    Ok(inputs)
+}
 
 /// Fused forward+backward over the transformer.
 pub struct TrainStepExec<'rt> {
@@ -19,20 +54,8 @@ pub struct TrainStepExec<'rt> {
 
 impl<'rt> TrainStepExec<'rt> {
     pub fn new(rt: &'rt Runtime) -> Result<Self> {
-        let spec = rt.manifest.artifact("train_step")?;
-        let tok = spec
-            .inputs
-            .first()
-            .ok_or_else(|| DlionError::Artifact("train_step has no inputs".into()))?;
-        if tok.shape.len() != 2 {
-            return Err(DlionError::Artifact(format!(
-                "train_step token input must be [B, T+1], got {:?}",
-                tok.shape
-            )));
-        }
-        // warm the compile cache
-        rt.executable("train_step")?;
-        Ok(TrainStepExec { rt, batch: tok.shape[0], seq_plus1: tok.shape[1] })
+        let (batch, seq_plus1) = token_shape(rt, "train_step")?;
+        Ok(TrainStepExec { rt, batch, seq_plus1 })
     }
 
     /// Run fwd+bwd: `flat_params` is the coordinator's flat buffer,
@@ -43,12 +66,7 @@ impl<'rt> TrainStepExec<'rt> {
         if grad_out.len() != m.flat_dim {
             return Err(DlionError::Runtime("grad_out size mismatch".into()));
         }
-        let views = m.split_flat(flat_params)?;
-        let mut inputs = Vec::with_capacity(1 + views.len());
-        inputs.push(self.rt.literal_i32(tokens, &[self.batch, self.seq_plus1])?);
-        for (view, spec) in views.iter().zip(&m.params) {
-            inputs.push(self.rt.literal_f32(view, &spec.shape)?);
-        }
+        let inputs = step_inputs(self.rt, flat_params, tokens, self.batch, self.seq_plus1)?;
         let outputs = self.rt.run("train_step", &inputs)?;
         if outputs.len() != 1 + m.params.len() {
             return Err(DlionError::Runtime(format!(
@@ -57,10 +75,18 @@ impl<'rt> TrainStepExec<'rt> {
                 1 + m.params.len()
             )));
         }
-        let loss = outputs[0].to_vec::<f32>()?[0];
+        let loss = outputs[0].scalar()?;
         for (out, spec) in outputs[1..].iter().zip(&m.params) {
-            let dst = &mut grad_out[spec.offset..spec.offset + spec.numel()];
-            out.copy_raw_to(dst)?;
+            let src = out.as_f32()?;
+            if src.len() != spec.numel() {
+                return Err(DlionError::Runtime(format!(
+                    "train_step grad '{}' has {} elems, expected {}",
+                    spec.name,
+                    src.len(),
+                    spec.numel()
+                )));
+            }
+            grad_out[spec.offset..spec.offset + spec.numel()].copy_from_slice(src);
         }
         Ok(loss)
     }
@@ -75,30 +101,22 @@ pub struct EvalStepExec<'rt> {
 
 impl<'rt> EvalStepExec<'rt> {
     pub fn new(rt: &'rt Runtime) -> Result<Self> {
-        let spec = rt.manifest.artifact("eval_step")?;
-        let tok = spec
-            .inputs
-            .first()
-            .ok_or_else(|| DlionError::Artifact("eval_step has no inputs".into()))?;
-        rt.executable("eval_step")?;
-        Ok(EvalStepExec { rt, batch: tok.shape[0], seq_plus1: tok.shape[1] })
+        let (batch, seq_plus1) = token_shape(rt, "eval_step")?;
+        Ok(EvalStepExec { rt, batch, seq_plus1 })
     }
 
     pub fn run(&self, flat_params: &[f32], tokens: &[i32]) -> Result<f32> {
-        let m = &self.rt.manifest;
-        let views = m.split_flat(flat_params)?;
-        let mut inputs = Vec::with_capacity(1 + views.len());
-        inputs.push(self.rt.literal_i32(tokens, &[self.batch, self.seq_plus1])?);
-        for (view, spec) in views.iter().zip(&m.params) {
-            inputs.push(self.rt.literal_f32(view, &spec.shape)?);
-        }
+        let inputs = step_inputs(self.rt, flat_params, tokens, self.batch, self.seq_plus1)?;
         let outputs = self.rt.run("eval_step", &inputs)?;
-        Ok(outputs[0].to_vec::<f32>()?[0])
+        outputs
+            .first()
+            .ok_or_else(|| DlionError::Runtime("eval_step returned no outputs".into()))?
+            .scalar()
     }
 }
 
-/// The fused Pallas Lion kernel (L1): one pass producing the binary
-/// update and the new momentum.
+/// The fused Lion kernel (L1): one pass producing the binary update and
+/// the new momentum.
 pub struct LionUpdateExec<'rt> {
     rt: &'rt Runtime,
     pub dim: usize,
@@ -112,7 +130,6 @@ impl<'rt> LionUpdateExec<'rt> {
             .first()
             .map(|t| t.numel())
             .ok_or_else(|| DlionError::Artifact("lion_update has no inputs".into()))?;
-        rt.executable("lion_update")?;
         Ok(LionUpdateExec { rt, dim })
     }
 
@@ -127,12 +144,16 @@ impl<'rt> LionUpdateExec<'rt> {
             )));
         }
         let inputs = [
-            self.rt.literal_f32(m, &[self.dim])?,
-            self.rt.literal_f32(g, &[self.dim])?,
+            HostTensor::f32(m.to_vec(), &[self.dim]),
+            HostTensor::f32(g.to_vec(), &[self.dim]),
         ];
         let outputs = self.rt.run("lion_update", &inputs)?;
-        let delta = outputs[0].to_vec::<i8>()?;
-        let m_new = outputs[1].to_vec::<f32>()?;
-        Ok((delta, m_new))
+        if outputs.len() != 2 {
+            return Err(DlionError::Runtime(format!(
+                "lion_update returned {} outputs, expected 2",
+                outputs.len()
+            )));
+        }
+        Ok((outputs[0].as_i8()?.to_vec(), outputs[1].as_f32()?.to_vec()))
     }
 }

@@ -24,9 +24,11 @@ pub struct Eval {
 
 /// A stochastic-gradient task: the paper's `f(x; ξ)` oracle.
 ///
-/// Deliberately NOT `Send + Sync`: the PJRT-backed [`crate::lm::LmTask`]
-/// wraps non-Send xla handles and runs through [`crate::cluster::run_sequential`];
-/// the threaded runner takes `dyn GradTask + Send + Sync` explicitly.
+/// The trait itself carries no `Send + Sync` bound so exotic backends
+/// can stay single-threaded, but every in-repo task — including
+/// [`crate::lm::LmTask`], now that the runtime's backends are
+/// `Send + Sync` — satisfies both; the threaded runner takes
+/// `dyn GradTask + Send + Sync` explicitly.
 pub trait GradTask {
     fn name(&self) -> String;
 

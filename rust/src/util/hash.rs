@@ -1,0 +1,101 @@
+//! Content hashing for the artifact pipeline (no `sha2`/`blake3` in the
+//! offline vendored crate set — see DESIGN.md "Environment-forced
+//! substitutions").
+//!
+//! [`fnv64`] is FNV-1a over bytes, used two ways by `runtime`:
+//! * **payload checksums** — `manifest.json` records the hash of every
+//!   artifact file so `Runtime::load` can refuse stale or truncated
+//!   payloads by name instead of executing them;
+//! * **`source_hash`** — `dlion gen-artifacts` hashes the generation
+//!   inputs (model config + seed + format version) so an unchanged
+//!   source is a no-op rebuild (the casettek/raster recompilation-cache
+//!   design).
+//!
+//! FNV-1a is not cryptographic; it guards against corruption and stale
+//! caches, not adversaries — the same trust model as a build cache.
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64 { state: FNV_OFFSET }
+    }
+
+    /// Absorb bytes.
+    pub fn update(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Current digest.
+    pub fn digest(&self) -> u64 {
+        self.state
+    }
+
+    /// Current digest as the fixed-width hex string stored in manifests.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.state)
+    }
+}
+
+/// One-shot FNV-1a 64 over a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.digest()
+}
+
+/// One-shot hex digest (the manifest checksum format).
+pub fn fnv64_hex(bytes: &[u8]) -> String {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.hex()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a reference vectors (Noll's test suite).
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_matches_oneshot() {
+        let data = b"the lion signs the momentum";
+        let mut h = Fnv64::new();
+        h.update(&data[..7]).update(&data[7..]);
+        assert_eq!(h.digest(), fnv64(data));
+        assert_eq!(h.hex(), fnv64_hex(data));
+        assert_eq!(h.hex().len(), 16);
+    }
+
+    #[test]
+    fn sensitive_to_every_byte() {
+        let a = fnv64(b"params_init.bin v1");
+        let b = fnv64(b"params_init.bin v2");
+        assert_ne!(a, b);
+    }
+}

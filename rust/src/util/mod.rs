@@ -6,6 +6,7 @@
 //! "Environment-forced substitutions").
 
 pub mod csv;
+pub mod hash;
 pub mod json;
 pub mod math;
 pub mod parallel;

@@ -1,0 +1,120 @@
+//! Native backend integration: the `gen-artifacts` pipeline round-trip
+//! (source-hash caching, checksum verification) and the headline
+//! acceptance test — the tiny GPT2++ LM trains end-to-end on the
+//! pure-Rust backend under both a sign-voting and a dense-global
+//! strategy, over star and hierarchical topologies, with zero skips.
+
+use dlion::cluster::topology::Topology;
+use dlion::cluster::{run_sequential, TrainConfig};
+use dlion::lm::corpus::Grammar;
+use dlion::lm::LmTask;
+use dlion::optim::dist::{by_name, StrategyHyper};
+use dlion::runtime::{native, Runtime};
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dlion_native_backend_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn gen_artifacts_round_trip_and_cache() {
+    let dir = temp_dir("gen");
+    // fresh write
+    let r1 = native::generate("tiny", &dir, 3, 4, false).unwrap();
+    assert!(r1.fresh);
+    assert_eq!(r1.manifest.backend, "native");
+    assert!(dir.join("manifest.json").is_file());
+    assert!(dir.join("params_init.bin").is_file());
+
+    // unchanged inputs → cached no-op with the same source_hash
+    let r2 = native::generate("tiny", &dir, 3, 4, false).unwrap();
+    assert!(!r2.fresh, "unchanged source_hash must be a no-op");
+    assert_eq!(r1.source_hash, r2.source_hash);
+
+    // a changed seed changes the source_hash and regenerates
+    let r3 = native::generate("tiny", &dir, 4, 4, false).unwrap();
+    assert!(r3.fresh, "seed change must regenerate");
+    assert_ne!(r1.source_hash, r3.source_hash);
+
+    // --force regenerates even when cached
+    let r4 = native::generate("tiny", &dir, 4, 4, true).unwrap();
+    assert!(r4.fresh);
+
+    // the generated set loads and trains through the Runtime
+    let rt = Runtime::load(&dir).unwrap();
+    assert_eq!(rt.backend_name(), "native");
+    let init = rt.init_params().unwrap();
+    assert_eq!(init.len(), rt.manifest.flat_dim);
+    // params_init.bin must agree with the in-memory init for the seed
+    assert_eq!(init, native::ModelCfg::by_name("tiny").unwrap().init_params(4));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_payload_fails_by_name() {
+    let dir = temp_dir("corrupt");
+    native::generate("tiny", &dir, 0, 4, false).unwrap();
+    // truncate the payload: load must fail naming file + hashes
+    std::fs::write(dir.join("params_init.bin"), b"truncated").unwrap();
+    let err = Runtime::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("params_init.bin"), "error should name the payload: {err}");
+    assert!(err.contains("checksum mismatch"), "{err}");
+    // regeneration heals it (hash mismatch on disk → not a cache hit)
+    let r = native::generate("tiny", &dir, 0, 4, false).unwrap();
+    assert!(r.fresh, "corrupt checksums must force a rewrite");
+    Runtime::load(&dir).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Train the tiny GPT2++ for `steps` rounds and return (first, final)
+/// losses, asserting every recorded loss is finite.
+fn train_lm(strategy: &str, workers: usize, steps: usize, topology: Topology) -> (f64, f64) {
+    let task = LmTask::native("tiny", 60_000, Grammar::default(), 7).unwrap();
+    let hp = StrategyHyper { weight_decay: 0.1, ..Default::default() };
+    let strat = by_name(strategy, &hp).unwrap();
+    let cfg = TrainConfig {
+        steps,
+        base_lr: 1e-3,
+        eval_every: 0,
+        seed: 7,
+        topology,
+        ..Default::default()
+    };
+    let res = run_sequential(&task, strat.as_ref(), workers, &cfg);
+    assert!(
+        res.history.iter().all(|r| r.train_loss.is_finite()),
+        "{strategy}: non-finite train loss"
+    );
+    let first = res.history.first().unwrap().train_loss;
+    let fin = res.final_eval.unwrap().loss;
+    assert!(fin.is_finite(), "{strategy}: non-finite eval loss");
+    if let Some(p) = &res.final_params {
+        assert!(p.iter().all(|x| x.is_finite()), "{strategy}: non-finite params");
+    }
+    (first, fin)
+}
+
+#[test]
+fn lm_native_trains_dlion_star() {
+    let (first, fin) = train_lm("d-lion-mavo", 2, 50, Topology::Star);
+    assert!(fin < first - 0.2, "d-lion-mavo star: loss should drop: {first} -> {fin}");
+}
+
+#[test]
+fn lm_native_trains_gadamw_star() {
+    let (first, fin) = train_lm("g-adamw", 2, 50, Topology::Star);
+    assert!(fin < first - 0.2, "g-adamw star: loss should drop: {first} -> {fin}");
+}
+
+#[test]
+fn lm_native_trains_dlion_hierarchical() {
+    let (first, fin) = train_lm("d-lion-mavo", 4, 30, Topology::parse("hier:4").unwrap());
+    assert!(fin < first - 0.15, "d-lion-mavo hier:4: loss should drop: {first} -> {fin}");
+}
+
+#[test]
+fn lm_native_trains_gadamw_hierarchical() {
+    let (first, fin) = train_lm("g-adamw", 4, 30, Topology::parse("hier:4").unwrap());
+    assert!(fin < first - 0.15, "g-adamw hier:4: loss should drop: {first} -> {fin}");
+}

@@ -21,6 +21,17 @@
 //! * **Corrupt** — the worker's uplink payloads are corrupted from
 //!   round `r` on via [`FaultyWorker`] (tag and length preserved), the
 //!   same Byzantine model as the `ext_byzantine` bench.
+//! * **Rejoin** — the worker dies before round `r` like a kill, but
+//!   comes back before round `r'`: the driver reconnects it through
+//!   [`TcpServer::accept_reconnect`], catches its replica up — from the
+//!   server's broadcast replay ring when the gap fits
+//!   ([`CatchUpPath::Ring`]), from a periodic server-side
+//!   [`Checkpoint`] plus the ring tail when it doesn't
+//!   ([`CatchUpPath::Checkpoint`]) — and the worker votes again from
+//!   round `r'` on. Because `apply` is replica-pure and the learning
+//!   rate is a pure function of the step, the caught-up replica is
+//!   bit-identical to one that never died, which the end-of-run
+//!   replica check pins.
 //!
 //! Because delayed workers deterministically *skip the send* (rather
 //! than send late), frame↔round alignment is exact and the achieved
@@ -30,23 +41,43 @@
 //! through the lockstep `aggregate` path — bit-exact with
 //! [`crate::cluster::run_sequential`].
 //!
+//! Local-steps strategies (`d-lion-local(H)`) run the same harness on
+//! the wire-round cadence: workers take `H` local steps per sync round,
+//! and a worker inside a delay window at a sync step *abstains* the
+//! whole window via [`WorkerLogic::abstain_sync`] — its `H` steps of
+//! sign votes carry into the next uplink it does ship (the vote-level
+//! analogue of [`StragglerFold`]), so abstention stays exact for the
+//! sign-vote family. [`FaultPlan::silent_window`] and
+//! [`FaultPlan::expected_quorum_windowed`] are the plan queries on that
+//! cadence.
+//!
 //! [`RoundEngine::aggregate_quorum`]: super::topology::RoundEngine::aggregate_quorum
 //! [`FaultyWorker`]: crate::optim::dist::faulty::FaultyWorker
+//! [`TcpServer::accept_reconnect`]: crate::comm::tcp::TcpServer::accept_reconnect
+//! [`WorkerLogic::abstain_sync`]: crate::optim::dist::WorkerLogic::abstain_sync
+//! [`Checkpoint`]: crate::lm::checkpoint::Checkpoint
 
 use super::metrics::{RunResult, StepRecord};
 use super::topology::{HopBytes, RoundEngine};
 use super::TrainConfig;
 use crate::comm::tcp::{bind_loopback, TcpServer, TcpWorker};
-use crate::comm::transport::{inproc_fabric, CommStats, ServerTransport, WorkerTransport};
+use crate::comm::transport::{
+    inproc_fabric, CommStats, InProcServer, Message, ServerTransport, WorkerTransport,
+};
 use crate::error::{DlionError, Result};
+use crate::lm::checkpoint::Checkpoint;
 use crate::optim::dist::faulty::{Fault, FaultyWorker};
 use crate::optim::dist::{ChunkPlan, Strategy, WorkerLogic};
 use crate::tasks::GradTask;
 use crate::util::math::cosine_lr;
 use crate::util::Rng;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// What happens to one worker at one round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,6 +94,15 @@ pub enum FaultKind {
     /// The worker turns Byzantine from this round on: every uplink
     /// payload is corrupted per the [`Fault`] model.
     Corrupt(Fault),
+    /// The worker dies before this round (like [`FaultKind::Kill`]) but
+    /// reconnects and catches up before round `rejoin_round`, voting
+    /// again from there on. TCP transport only — the catch-up rides the
+    /// reconnect handshake.
+    Rejoin {
+        /// First round the worker participates in again (> the kill
+        /// round).
+        rejoin_round: usize,
+    },
 }
 
 /// One planned fault: `worker` suffers `kind` starting at `round`.
@@ -74,8 +114,9 @@ pub struct FaultEvent {
 }
 
 /// A seeded, fully deterministic fault schedule. The seed feeds the
-/// corrupt workers' payload rngs; kills and delays need no randomness
-/// at all, so two runs of the same plan see byte-identical faults.
+/// corrupt workers' payload rngs; kills, delays and rejoins need no
+/// randomness at all, so two runs of the same plan see byte-identical
+/// faults.
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     pub seed: u64,
@@ -110,10 +151,23 @@ impl FaultPlan {
         self
     }
 
-    /// Is `worker` dead at (or before) `round`?
+    /// Kill `worker` right before round `round` and bring it back right
+    /// before round `rejoin_round` via TCP reconnect + catch-up.
+    pub fn rejoin(mut self, worker: usize, round: usize, rejoin_round: usize) -> Self {
+        self.events.push(FaultEvent { worker, round, kind: FaultKind::Rejoin { rejoin_round } });
+        self
+    }
+
+    /// Is `worker` dead at `round`? (A rejoining worker is dead only
+    /// inside its `[kill, rejoin)` window.)
     pub fn dead_at(&self, worker: usize, round: usize) -> bool {
         self.events.iter().any(|e| {
-            e.worker == worker && e.round <= round && matches!(e.kind, FaultKind::Kill)
+            e.worker == worker
+                && match e.kind {
+                    FaultKind::Kill => e.round <= round,
+                    FaultKind::Rejoin { rejoin_round } => e.round <= round && round < rejoin_round,
+                    _ => false,
+                }
         })
     }
 
@@ -141,12 +195,15 @@ impl FaultPlan {
         })
     }
 
-    /// Is `worker` ever killed by this plan?
+    /// Is `worker` ever killed for good by this plan? (Rejoins don't
+    /// count: the worker ends the run alive.)
     pub fn killed(&self, worker: usize) -> bool {
         self.events.iter().any(|e| e.worker == worker && matches!(e.kind, FaultKind::Kill))
     }
 
-    /// Workers that survive the whole run (never killed).
+    /// Workers alive at the end of the run (never permanently killed —
+    /// rejoined workers are survivors, and their final replicas must be
+    /// bit-identical to everyone else's).
     pub fn survivors(&self, nworkers: usize) -> Vec<usize> {
         (0..nworkers).filter(|&w| !self.killed(w)).collect()
     }
@@ -157,11 +214,56 @@ impl FaultPlan {
         self.events.iter().any(|e| matches!(e.kind, FaultKind::Delay { .. }))
     }
 
+    /// The worker's rejoin window, if any: `(kill_round, rejoin_round)`.
+    pub fn rejoin_of(&self, worker: usize) -> Option<(usize, usize)> {
+        self.events.iter().find_map(|e| match e.kind {
+            FaultKind::Rejoin { rejoin_round } if e.worker == worker => {
+                Some((e.round, rejoin_round))
+            }
+            _ => None,
+        })
+    }
+
+    /// Every rejoin in the plan as `(worker, kill_round, rejoin_round)`,
+    /// sorted by rejoin round — the order the driver performs them in.
+    pub fn rejoins(&self) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<(usize, usize, usize)> = self
+            .events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::Rejoin { rejoin_round } => Some((e.worker, e.round, rejoin_round)),
+                _ => None,
+            })
+            .collect();
+        v.sort_by_key(|&(_, _, at)| at);
+        v
+    }
+
     /// The quorum round `round` must close with under this plan: the
     /// count of workers whose uplink arrives. This is what the chaos
     /// tests check the recorded [`StepRecord::quorum`] against.
     pub fn expected_quorum(&self, nworkers: usize, round: usize) -> usize {
         (0..nworkers).filter(|&w| self.arrives(w, round)).count()
+    }
+
+    /// Window analogue of [`FaultPlan::delayed_at`] for local-steps
+    /// strategies: is `worker` delayed anywhere inside the `h`-step
+    /// window ending at sync step `sync_step`? A hit silences the whole
+    /// window — the worker abstains the sync and carries its votes.
+    /// With `h == 1` this is exactly `delayed_at`.
+    pub fn silent_window(&self, worker: usize, sync_step: usize, h: usize) -> bool {
+        let start = (sync_step + 1).saturating_sub(h);
+        (start..=sync_step).any(|s| self.delayed_at(worker, s))
+    }
+
+    /// The quorum the sync round at `sync_step` must close with on the
+    /// local-steps cadence: workers neither dead at the sync step nor
+    /// silenced anywhere in its `h`-step window. Reduces to
+    /// [`FaultPlan::expected_quorum`] at `h == 1`.
+    pub fn expected_quorum_windowed(&self, nworkers: usize, sync_step: usize, h: usize) -> usize {
+        (0..nworkers)
+            .filter(|&w| !self.dead_at(w, sync_step) && !self.silent_window(w, sync_step, h))
+            .count()
     }
 
     fn validate(&self, nworkers: usize) -> Result<()> {
@@ -172,12 +274,34 @@ impl FaultPlan {
                     e.worker
                 )));
             }
-            if let FaultKind::Delay { rounds } = e.kind {
-                if rounds == 0 {
-                    return Err(DlionError::Config(
-                        "delay fault needs rounds >= 1".into(),
-                    ));
+            match e.kind {
+                FaultKind::Delay { rounds } if rounds == 0 => {
+                    return Err(DlionError::Config("delay fault needs rounds >= 1".into()));
                 }
+                FaultKind::Rejoin { rejoin_round } if rejoin_round <= e.round => {
+                    return Err(DlionError::Config(format!(
+                        "worker {} rejoin round {rejoin_round} must come after its kill \
+                         at round {}",
+                        e.worker, e.round
+                    )));
+                }
+                _ => {}
+            }
+        }
+        for w in 0..nworkers {
+            let deaths = self
+                .events
+                .iter()
+                .filter(|e| {
+                    e.worker == w
+                        && matches!(e.kind, FaultKind::Kill | FaultKind::Rejoin { .. })
+                })
+                .count();
+            if deaths > 1 {
+                return Err(DlionError::Config(format!(
+                    "worker {w} has {deaths} kill/rejoin events — at most one death per \
+                     worker per run"
+                )));
             }
         }
         if self.survivors(nworkers).is_empty() {
@@ -252,21 +376,142 @@ pub enum ChaosTransport {
     Tcp,
 }
 
+/// How a rejoined worker caught its replica up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CatchUpPath {
+    /// Every missed broadcast still sat in the server's replay ring:
+    /// the reconnect handshake replayed them all.
+    Ring,
+    /// The gap exceeded the ring: the replica restored from the
+    /// periodic server-side checkpoint at `from` applied rounds, then
+    /// replayed the ring tail.
+    Checkpoint {
+        /// Applied-round count of the checkpoint the replica restarted
+        /// from (a multiple of the replay ring depth).
+        from: usize,
+    },
+}
+
+/// One mid-run rejoin the driver performed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RejoinRecord {
+    pub worker: usize,
+    /// The round the worker rejoined before: it votes again from here.
+    pub round: usize,
+    /// Broadcast rounds replayed over the wire during catch-up.
+    pub replayed: usize,
+    pub path: CatchUpPath,
+}
+
 /// What a chaos run reports beyond the ordinary [`RunResult`].
 pub struct ChaosReport {
     pub result: RunResult,
-    /// Achieved quorum per round (index = step).
+    /// Achieved quorum per round (index = step; 0 on the local phases
+    /// of a local-steps run, matching [`StepRecord::quorum`]).
     pub quorums: Vec<usize>,
-    /// Workers that were never killed (their final replicas are the
-    /// bit-identical ones; `result.final_params` comes from the first).
+    /// Workers alive at the end (rejoined workers included; their final
+    /// replicas are the bit-identical ones — `result.final_params`
+    /// comes from the first).
     pub survivors: Vec<usize>,
+    /// Every mid-run rejoin, in the order performed.
+    pub rejoins: Vec<RejoinRecord>,
     /// Transport byte counters for the run.
     pub stats: Arc<CommStats>,
+}
+
+/// A chaos worker thread: yields how it left the loop, or the
+/// transport error that took it down.
+type WorkerHandle = JoinHandle<std::io::Result<WorkerExit>>;
+
+/// How a worker thread left the round loop.
+enum WorkerExit {
+    /// Ran through the final round.
+    Finished(Vec<f32>),
+    /// The plan killed it mid-run: hand back the replica *and* the
+    /// optimizer state so a rejoin models a dropped connection, not a
+    /// wiped machine (momentum survives the outage).
+    Dead { params: Vec<f32>, logic: Box<dyn WorkerLogic>, rng: Rng },
+}
+
+/// The per-worker round loop, shared by fresh workers (from step 0) and
+/// rejoined workers (from their rejoin round, after catch-up). Returns
+/// `Ok(true)` if it ran through the final round, `Ok(false)` if the
+/// plan killed the worker.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<T: WorkerTransport>(
+    wt: &mut T,
+    start_step: usize,
+    h: usize,
+    nworkers: usize,
+    task: &(dyn GradTask + Send + Sync),
+    logic: &mut Box<dyn WorkerLogic>,
+    rng: &mut Rng,
+    params: &mut Vec<f32>,
+    cfg: &TrainConfig,
+    chunk_plan: &ChunkPlan,
+    fplan: &FaultPlan,
+    loss_tx: &mpsc::Sender<(usize, f64)>,
+) -> std::io::Result<bool> {
+    let d = params.len();
+    let wid = wt.worker_id();
+    let mut grad = vec![0.0f32; d];
+    let mut fold = StragglerFold::new(d);
+    for step in start_step..cfg.steps {
+        if fplan.dead_at(wid, step) {
+            // the process "dies": transport drops on return, the
+            // server reads EOF / a closed channel
+            return Ok(false);
+        }
+        let lr =
+            cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
+        let loss = task.minibatch_grad_worker(
+            params,
+            rng,
+            cfg.batch_per_worker,
+            &mut grad,
+            wid,
+            nworkers,
+        );
+        let _ = loss_tx.send((step, loss as f64));
+        if h > 1 && (step + 1) % h != 0 {
+            // local phase: every alive worker — delayed or not — keeps
+            // exploring locally, so the window's Λ = Σ lr stays
+            // identical across replicas and the reconciling apply
+            // cannot fork them
+            logic.local_step(params, &grad, lr, step);
+            continue;
+        }
+        if h > 1 {
+            // sync step of a local-steps window
+            if fplan.silent_window(wid, step, h) {
+                // abstain the whole window: its votes carry into the
+                // next shipped uplink (vote-level straggler fold)
+                logic.abstain_sync(&grad, lr, step);
+            } else {
+                let uplink = logic.encode_planned(&grad, chunk_plan, lr, step);
+                wt.send(uplink)?;
+            }
+        } else if fplan.delayed_at(wid, step) {
+            // straggler: skip the send (deterministic abstention),
+            // EF-fold the gradient for the comeback round
+            fold.miss(&grad);
+        } else {
+            let g = fold.take(&grad);
+            let uplink = logic.encode_planned(g, chunk_plan, lr, step);
+            wt.send(uplink)?;
+        }
+        // everyone alive — including stragglers — applies the
+        // broadcast, so replicas never fork
+        let downlink = wt.recv()?;
+        logic.apply_planned(params, &downlink, chunk_plan, lr, step);
+    }
+    Ok(true)
 }
 
 #[allow(clippy::too_many_arguments)]
 fn spawn_worker<T: WorkerTransport + Send + 'static>(
     mut wt: T,
+    h: usize,
     nworkers: usize,
     task: Arc<dyn GradTask + Send + Sync>,
     mut logic: Box<dyn WorkerLogic>,
@@ -276,47 +521,119 @@ fn spawn_worker<T: WorkerTransport + Send + 'static>(
     chunk_plan: ChunkPlan,
     fplan: FaultPlan,
     loss_tx: mpsc::Sender<(usize, f64)>,
-) -> JoinHandle<std::io::Result<Vec<f32>>> {
-    std::thread::spawn(move || -> std::io::Result<Vec<f32>> {
-        let d = params0.len();
-        let wid = wt.worker_id();
+) -> WorkerHandle {
+    std::thread::spawn(move || -> std::io::Result<WorkerExit> {
         let mut params = params0;
-        let mut grad = vec![0.0f32; d];
-        let mut fold = StragglerFold::new(d);
-        for step in 0..cfg.steps {
-            if fplan.dead_at(wid, step) {
-                // the process "dies": transport drops on return, the
-                // server reads EOF / a closed channel
-                return Ok(params);
-            }
-            let lr =
-                cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
-            let loss = task.minibatch_grad_worker(
-                &params,
-                &mut rng,
-                cfg.batch_per_worker,
-                &mut grad,
-                wid,
-                nworkers,
-            );
-            let _ = loss_tx.send((step, loss as f64));
-            if fplan.delayed_at(wid, step) {
-                // straggler: skip the send (deterministic abstention),
-                // EF-fold the gradient for the comeback round
-                fold.miss(&grad);
-            } else {
-                let g = fold.take(&grad);
-                let uplink = logic.encode_planned(g, &chunk_plan, lr, step);
-                wt.send(uplink)?;
-            }
-            // everyone alive — including stragglers — applies the
-            // broadcast, so replicas never fork
-            let downlink = wt.recv()?;
-            logic.apply_planned(&mut params, &downlink, &chunk_plan, lr, step);
-        }
-        Ok(params)
+        let finished = worker_loop(
+            &mut wt,
+            0,
+            h,
+            nworkers,
+            task.as_ref(),
+            &mut logic,
+            &mut rng,
+            &mut params,
+            &cfg,
+            &chunk_plan,
+            &fplan,
+            &loss_tx,
+        )?;
+        drop(wt);
+        Ok(if finished {
+            WorkerExit::Finished(params)
+        } else {
+            WorkerExit::Dead { params, logic, rng }
+        })
     })
 }
+
+/// Reconnect a previously-dead worker, replay the missed broadcasts
+/// onto its replica (`applied` = rounds it has already applied), and
+/// run the shared round loop from `rejoin_round`. Catch-up is bit-exact
+/// because `apply` is replica-pure and `cosine_lr` is a pure function
+/// of the step.
+#[allow(clippy::too_many_arguments)]
+fn spawn_rejoined_worker(
+    port: u16,
+    worker: usize,
+    applied: usize,
+    rejoin_round: usize,
+    nworkers: usize,
+    task: Arc<dyn GradTask + Send + Sync>,
+    mut logic: Box<dyn WorkerLogic>,
+    mut rng: Rng,
+    params0: Vec<f32>,
+    cfg: TrainConfig,
+    chunk_plan: ChunkPlan,
+    fplan: FaultPlan,
+    loss_tx: mpsc::Sender<(usize, f64)>,
+    stats: Arc<CommStats>,
+) -> WorkerHandle {
+    std::thread::spawn(move || -> std::io::Result<WorkerExit> {
+        let (mut wt, replayed) =
+            TcpWorker::reconnect(port, worker, applied as u32, stats, cfg.replay_ring)?;
+        let mut params = params0;
+        for (k, frame) in replayed.iter().enumerate() {
+            let round = applied + k;
+            let lr =
+                cosine_lr(round, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
+            logic.apply_planned(&mut params, frame, &chunk_plan, lr, round);
+        }
+        debug_assert_eq!(
+            applied + replayed.len(),
+            rejoin_round,
+            "catch-up must land exactly on the rejoin round"
+        );
+        let finished = worker_loop(
+            &mut wt,
+            rejoin_round,
+            1,
+            nworkers,
+            task.as_ref(),
+            &mut logic,
+            &mut rng,
+            &mut params,
+            &cfg,
+            &chunk_plan,
+            &fplan,
+            &loss_tx,
+        )?;
+        debug_assert!(finished, "a rejoined worker has no second death (plan validated)");
+        drop(wt);
+        Ok(WorkerExit::Finished(params))
+    })
+}
+
+/// The chaos server: a concrete enum instead of `Box<dyn
+/// ServerTransport>` because the rejoin path needs the TCP-only
+/// [`TcpServer::accept_reconnect`] and the listener it accepts on.
+enum ChaosServer {
+    InProc(InProcServer),
+    Tcp { server: TcpServer, listener: TcpListener, port: u16 },
+}
+
+impl ChaosServer {
+    fn gather_quorum(
+        &mut self,
+        deadline: Option<Duration>,
+    ) -> std::io::Result<Vec<Option<Message>>> {
+        match self {
+            ChaosServer::InProc(s) => s.gather_quorum(deadline),
+            ChaosServer::Tcp { server, .. } => server.gather_quorum(deadline),
+        }
+    }
+
+    fn broadcast(&mut self, msg: &[u8]) -> std::io::Result<()> {
+        match self {
+            ChaosServer::InProc(s) => s.broadcast(msg),
+            ChaosServer::Tcp { server, .. } => server.broadcast(msg),
+        }
+    }
+}
+
+/// Sequence number for per-run checkpoint directories, so parallel
+/// tests in one process never collide.
+static CK_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Run the elastic round loop under a [`FaultPlan`]. The config's
 /// quorum policy ([`TrainConfig::quorum_policy`]) governs when rounds
@@ -325,12 +642,26 @@ fn spawn_worker<T: WorkerTransport + Send + 'static>(
 /// records the achieved quorum in [`StepRecord::quorum`] and on the
 /// transport's [`CommStats`].
 ///
-/// Restrictions (all named [`DlionError::Config`] errors, no panics):
-/// the strategy must sync every step (`local_steps == 1` — elastic
-/// rounds and local-step schedules don't compose yet), a plan with
-/// delay events needs `cfg.round_deadline_ms > 0`, and at least one
-/// worker must survive. Periodic eval is skipped (`eval_every` is
-/// ignored); the final eval runs on the first survivor's replica.
+/// Local-steps strategies run on the wire-round cadence: the server
+/// gathers only every `local_steps()`-th step, and a worker delayed
+/// anywhere inside a window abstains the whole window (vote carry, see
+/// the module docs).
+///
+/// Rejoin plans additionally drive [`TcpServer::accept_reconnect`]
+/// mid-run: at each rejoin round the driver reconnects the dead worker
+/// and catches it up from the broadcast replay ring
+/// (`cfg.replay_ring` rounds deep) or, when the gap is larger, from a
+/// server-side [`Checkpoint`] it saves every `replay_ring` rounds
+/// against a shadow replica. Each rejoin is reported in
+/// [`ChaosReport::rejoins`].
+///
+/// Restrictions (all named [`DlionError::Config`] errors, no panics): a
+/// plan with delay events needs `cfg.round_deadline_ms > 0`; at least
+/// one worker must survive; rejoin plans need the TCP transport, a
+/// per-step strategy (`local_steps == 1`), a nonzero `cfg.replay_ring`,
+/// and rejoin rounds inside the run. Periodic eval is skipped
+/// (`eval_every` is ignored); the final eval runs on the first
+/// survivor's replica.
 pub fn run_chaos(
     task: Arc<dyn GradTask + Send + Sync>,
     strategy: &dyn Strategy,
@@ -339,13 +670,7 @@ pub fn run_chaos(
     fplan: &FaultPlan,
     transport: ChaosTransport,
 ) -> Result<ChaosReport> {
-    if strategy.local_steps().max(1) != 1 {
-        return Err(DlionError::Config(format!(
-            "chaos driver requires a per-step strategy (local_steps == 1), {} has {}",
-            strategy.name(),
-            strategy.local_steps()
-        )));
-    }
+    let h = strategy.local_steps().max(1);
     fplan.validate(nworkers)?;
     let policy = cfg.quorum_policy();
     if fplan.has_delays() && policy.deadline().is_none() {
@@ -355,6 +680,39 @@ pub fn run_chaos(
                 .into(),
         ));
     }
+    let rejoins = fplan.rejoins();
+    if !rejoins.is_empty() {
+        if transport != ChaosTransport::Tcp {
+            return Err(DlionError::Config(
+                "rejoin plans need the TCP transport: mid-run catch-up rides the \
+                 reconnect handshake (comm::tcp), which the in-proc fabric does not have"
+                    .into(),
+            ));
+        }
+        if h != 1 {
+            return Err(DlionError::Config(format!(
+                "rejoin plans need a per-step strategy (local_steps == 1): catch-up \
+                 replays whole wire rounds, but {} takes {h} local steps per round",
+                strategy.name()
+            )));
+        }
+        if cfg.replay_ring == 0 {
+            return Err(DlionError::Config(
+                "rejoin plans need hyper.replay_ring >= 1 — with an empty ring there \
+                 is nothing to catch up from"
+                    .into(),
+            ));
+        }
+        for &(w, kill, at) in &rejoins {
+            if at >= cfg.steps {
+                return Err(DlionError::Config(format!(
+                    "worker {w} rejoins at round {at} but the run is only {} rounds \
+                     (killed at {kill})",
+                    cfg.steps
+                )));
+            }
+        }
+    }
 
     let d = task.dim();
     let chunk_plan = strategy.plan(d, cfg.chunk_size);
@@ -362,6 +720,27 @@ pub fn run_chaos(
     let mut root = Rng::new(cfg.seed);
     let params0 = task.init_params(&mut root);
     let (loss_tx, loss_rx) = mpsc::channel::<(usize, f64)>();
+
+    // Shadow replica + checkpoint dir, only when some rejoin gap can
+    // outrun the replay ring. The shadow applies every broadcast to a
+    // fresh replica — valid as a checkpoint source because apply is
+    // replica-pure — and saves every `replay_ring` rounds, so a
+    // beyond-ring rejoin restores from the newest multiple-of-ring
+    // checkpoint and replays only the ring tail.
+    let needs_ck = rejoins.iter().any(|&(_, kill, at)| at - kill > cfg.replay_ring);
+    let ck_dir: Option<PathBuf> = if needs_ck {
+        let dir = std::env::temp_dir().join(format!(
+            "dlion-chaos-ck-{}-{}",
+            std::process::id(),
+            CK_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        Some(dir)
+    } else {
+        None
+    };
+    let mut shadow_logic = if needs_ck { Some(strategy.make_worker(0, nworkers, d)) } else { None };
+    let mut shadow_params = if needs_ck { Some(params0.clone()) } else { None };
 
     // Per-worker logic, wrapped Byzantine where the plan says so. Same
     // rng forks as the lockstep drivers — honest plans replay their
@@ -376,13 +755,14 @@ pub fn run_chaos(
         logics.push(logic);
     }
 
-    let mut handles: Vec<JoinHandle<std::io::Result<Vec<f32>>>> = Vec::with_capacity(nworkers);
-    let mut server: Box<dyn ServerTransport> = match transport {
+    let mut handles: Vec<Option<WorkerHandle>> = Vec::with_capacity(nworkers);
+    let mut server = match transport {
         ChaosTransport::InProc => {
             let (st, wts) = inproc_fabric(nworkers, stats.clone());
             for (wt, (w, logic)) in wts.into_iter().zip(logics.into_iter().enumerate()) {
-                handles.push(spawn_worker(
+                handles.push(Some(spawn_worker(
                     wt,
+                    h,
                     nworkers,
                     task.clone(),
                     logic,
@@ -392,16 +772,17 @@ pub fn run_chaos(
                     chunk_plan,
                     fplan.clone(),
                     loss_tx.clone(),
-                ));
+                )));
             }
-            Box::new(st)
+            ChaosServer::InProc(st)
         }
         ChaosTransport::Tcp => {
             let (port, listener) = bind_loopback()?;
             for (w, logic) in logics.into_iter().enumerate() {
                 let wt = TcpWorker::connect(port, w, stats.clone())?;
-                handles.push(spawn_worker(
+                handles.push(Some(spawn_worker(
                     wt,
+                    h,
                     nworkers,
                     task.clone(),
                     logic,
@@ -411,12 +792,14 @@ pub fn run_chaos(
                     chunk_plan,
                     fplan.clone(),
                     loss_tx.clone(),
-                ));
+                )));
             }
-            Box::new(TcpServer::accept(&listener, nworkers, stats.clone())?)
+            let server = TcpServer::accept(&listener, nworkers, stats.clone(), cfg.replay_ring)?;
+            ChaosServer::Tcp { server, listener, port }
         }
     };
-    drop(loss_tx);
+    // NOTE: loss_tx stays alive until after the server loop — rejoined
+    // workers spawned mid-loop need clones of it.
 
     // Server loop: deadline gather, quorum-checked aggregate, broadcast.
     // Byte deltas around the round are race-free for the same reason as
@@ -426,9 +809,85 @@ pub fn run_chaos(
     let required = policy.required(nworkers).max(1);
     let mut quorums: Vec<usize> = Vec::with_capacity(cfg.steps);
     let mut step_bytes: Vec<(u64, u64, HopBytes)> = Vec::with_capacity(cfg.steps);
+    let mut rejoin_records: Vec<RejoinRecord> = Vec::new();
+    let mut rejoin_idx = 0usize;
     let (mut prev_up, mut prev_down) = (0u64, 0u64);
     let t0 = std::time::Instant::now();
     for step in 0..cfg.steps {
+        // Rejoins scheduled before this round: join the dead thread,
+        // pick the catch-up source, spawn the reconnecting worker and
+        // accept it — all before this round's gather, so the worker
+        // votes in round `step` itself.
+        while rejoin_idx < rejoins.len() && rejoins[rejoin_idx].2 == step {
+            let (w, kill_round, at) = rejoins[rejoin_idx];
+            rejoin_idx += 1;
+            let exit = handles[w]
+                .take()
+                .expect("rejoining worker already has no handle")
+                .join()
+                .expect("chaos worker panicked")?;
+            let WorkerExit::Dead { params, logic, rng } = exit else {
+                unreachable!("worker {w} was planned dead at {kill_round} but finished");
+            };
+            let gap = at - kill_round;
+            let (applied, start_params, path) = if gap <= cfg.replay_ring {
+                // every missed broadcast is still in the ring: resume
+                // from the replica exactly as it died
+                (kill_round, params, CatchUpPath::Ring)
+            } else {
+                // ring too short: restore from the newest checkpoint at
+                // a multiple of the ring depth (strictly after the kill,
+                // at most `replay_ring - 1` rounds behind `at`)
+                let from = (at / cfg.replay_ring) * cfg.replay_ring;
+                let dir = ck_dir.as_ref().expect("beyond-ring rejoin without checkpoint dir");
+                let ck =
+                    Checkpoint::load(dir.join(format!("round_{from}.ck")), &task.name(), d)?;
+                (from, ck.params, CatchUpPath::Checkpoint { from })
+            };
+            let port = match &server {
+                ChaosServer::Tcp { port, .. } => *port,
+                ChaosServer::InProc(_) => unreachable!("rejoin validated TCP-only"),
+            };
+            handles[w] = Some(spawn_rejoined_worker(
+                port,
+                w,
+                applied,
+                at,
+                nworkers,
+                task.clone(),
+                logic,
+                rng,
+                start_params,
+                cfg.clone(),
+                chunk_plan,
+                fplan.clone(),
+                loss_tx.clone(),
+                stats.clone(),
+            ));
+            let ChaosServer::Tcp { server: tcp, listener, .. } = &mut server else {
+                unreachable!("rejoin validated TCP-only");
+            };
+            let got = tcp.accept_reconnect(listener)?;
+            if got != w {
+                return Err(DlionError::Cluster(format!(
+                    "round {step}: expected worker {w} on the reconnect path, got {got}"
+                )));
+            }
+            rejoin_records.push(RejoinRecord {
+                worker: w,
+                round: at,
+                replayed: at - applied,
+                path,
+            });
+        }
+
+        if h > 1 && (step + 1) % h != 0 {
+            // local phase: no wire round (matches run_threaded's record
+            // convention — zero bytes, zero quorum)
+            quorums.push(0);
+            step_bytes.push((0, 0, HopBytes::default()));
+            continue;
+        }
         let lr = cosine_lr(step, cfg.steps, cfg.warmup_steps, cfg.base_lr, cfg.min_lr_frac) as f32;
         let uplinks = server.gather_quorum(policy.deadline())?;
         let up_now = stats.uplink();
@@ -444,12 +903,21 @@ pub fn run_chaos(
         stats.record_agg_uplink(hops.agg_uplink, hops.agg_uplink_msgs);
         stats.record_agg_downlink(hops.agg_downlink, hops.agg_downlink_msgs);
         server.broadcast(&downlink)?;
+        if let (Some(sl), Some(sp)) = (shadow_logic.as_mut(), shadow_params.as_mut()) {
+            sl.apply_planned(sp, &downlink, &chunk_plan, lr, step);
+            if (step + 1) % cfg.replay_ring == 0 {
+                let dir = ck_dir.as_ref().expect("shadow replica without checkpoint dir");
+                Checkpoint::new((step + 1) as u64, task.name(), sp.clone())
+                    .save(dir.join(format!("round_{}.ck", step + 1)))?;
+            }
+        }
         let down_now = stats.downlink();
         quorums.push(quorum);
         step_bytes.push((up_now - prev_up, down_now - prev_down, hops));
         prev_up = up_now;
         prev_down = down_now;
     }
+    drop(loss_tx);
 
     let mut result = RunResult::new(task.name(), strategy.name(), nworkers);
     let mut per_step = vec![(0.0f64, 0usize); cfg.steps];
@@ -476,11 +944,22 @@ pub fn run_chaos(
     }
 
     let mut final_params: Vec<Vec<f32>> = Vec::with_capacity(nworkers);
-    for h in handles {
-        final_params.push(h.join().expect("chaos worker panicked")?);
+    for handle in handles {
+        let exit = handle
+            .expect("worker handle missing at join")
+            .join()
+            .expect("chaos worker panicked")?;
+        final_params.push(match exit {
+            WorkerExit::Finished(p) | WorkerExit::Dead { params: p, .. } => p,
+        });
+    }
+    if let Some(dir) = &ck_dir {
+        let _ = std::fs::remove_dir_all(dir);
     }
     let survivors = fplan.survivors(nworkers);
-    if cfg.check_replicas {
+    // A local-steps run that ends mid-window has un-reconciled local
+    // state; replicas only provably agree on sync boundaries.
+    if cfg.check_replicas && cfg.steps % h == 0 {
         let first = survivors[0];
         for &w in &survivors[1..] {
             assert_eq!(
@@ -492,7 +971,7 @@ pub fn run_chaos(
     result.final_eval = Some(task.evaluate(&final_params[survivors[0]]));
     result.wall_secs = t0.elapsed().as_secs_f64();
     result.final_params = Some(final_params.swap_remove(survivors[0]));
-    Ok(ChaosReport { result, quorums, survivors, stats })
+    Ok(ChaosReport { result, quorums, survivors, rejoins: rejoin_records, stats })
 }
 
 #[cfg(test)]
@@ -526,12 +1005,73 @@ mod tests {
     }
 
     #[test]
+    fn rejoin_plan_queries_bound_the_dead_window() {
+        let plan = FaultPlan::new(1).rejoin(1, 2, 5);
+        assert!(!plan.dead_at(1, 1));
+        assert!(plan.dead_at(1, 2));
+        assert!(plan.dead_at(1, 4));
+        assert!(!plan.dead_at(1, 5), "alive again at the rejoin round");
+        assert!(!plan.dead_at(1, 99));
+        assert_eq!(plan.rejoin_of(1), Some((2, 5)));
+        assert_eq!(plan.rejoin_of(0), None);
+        assert_eq!(plan.rejoins(), vec![(1, 2, 5)]);
+        assert!(!plan.killed(1), "a rejoined worker is not killed");
+        assert_eq!(plan.survivors(3), vec![0, 1, 2]);
+        // quorum dips only inside the dead window
+        assert_eq!(plan.expected_quorum(3, 1), 3);
+        assert_eq!(plan.expected_quorum(3, 3), 2);
+        assert_eq!(plan.expected_quorum(3, 5), 3);
+        // rejoins() sorts by rejoin round
+        let two = FaultPlan::new(2).rejoin(0, 4, 9).rejoin(2, 1, 3);
+        assert_eq!(two.rejoins(), vec![(2, 1, 3), (0, 4, 9)]);
+    }
+
+    #[test]
+    fn windowed_plan_queries_cover_the_whole_sync_window() {
+        // delay worker 1 at steps [4, 6): with h = 3, the window ending
+        // at sync step 5 contains steps 3..=5, so it is silenced; the
+        // window ending at 8 (steps 6..=8) is clean again.
+        let plan = FaultPlan::new(3).delay(1, 4, 2);
+        assert!(plan.silent_window(1, 5, 3));
+        assert!(!plan.silent_window(1, 2, 3));
+        assert!(!plan.silent_window(1, 8, 3));
+        assert!(!plan.silent_window(0, 5, 3));
+        assert_eq!(plan.expected_quorum_windowed(4, 5, 3), 3);
+        assert_eq!(plan.expected_quorum_windowed(4, 8, 3), 4);
+        // h == 1 reduces to the per-step queries
+        for step in 0..10 {
+            assert_eq!(
+                plan.expected_quorum_windowed(4, step, 1),
+                plan.expected_quorum(4, step),
+                "step {step}"
+            );
+            assert_eq!(plan.silent_window(1, step, 1), plan.delayed_at(1, step), "step {step}");
+        }
+        // dead workers are excluded on the windowed cadence too
+        let dead = FaultPlan::new(4).kill(0, 2);
+        assert_eq!(dead.expected_quorum_windowed(4, 5, 3), 3);
+    }
+
+    #[test]
     fn fault_plan_validation_rejects_bad_plans() {
         assert!(FaultPlan::new(1).kill(5, 0).validate(4).is_err(), "worker oob");
         assert!(FaultPlan::new(1).delay(0, 0, 0).validate(4).is_err(), "zero delay");
         let all_dead = FaultPlan::new(1).kill(0, 0).kill(1, 0);
         assert!(all_dead.validate(2).is_err(), "no survivors");
         assert!(all_dead.validate(3).is_ok());
+        // rejoin must come strictly after the kill
+        assert!(FaultPlan::new(1).rejoin(0, 3, 3).validate(2).is_err(), "empty window");
+        assert!(FaultPlan::new(1).rejoin(0, 3, 2).validate(2).is_err(), "backwards window");
+        assert!(FaultPlan::new(1).rejoin(0, 3, 4).validate(2).is_ok());
+        // one death per worker per run
+        assert!(
+            FaultPlan::new(1).rejoin(0, 1, 3).kill(0, 5).validate(2).is_err(),
+            "rejoin then kill"
+        );
+        assert!(
+            FaultPlan::new(1).rejoin(0, 1, 3).rejoin(0, 5, 7).validate(2).is_err(),
+            "double rejoin"
+        );
     }
 
     #[test]

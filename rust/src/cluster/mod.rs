@@ -66,6 +66,15 @@ pub struct TrainConfig {
     /// Elastic-round gather deadline in milliseconds (TOML
     /// `hyper.round_deadline_ms`; 0 = block forever).
     pub round_deadline_ms: u64,
+    /// Broadcast rounds the TCP server retains for reconnect replay
+    /// (TOML `hyper.replay_ring`). The single source of truth for both
+    /// ends of the reconnect handshake: the server's ring length and
+    /// the worker's hostile-count clamp are handed this same value. A
+    /// rejoin gap beyond the ring must restore from a checkpoint first
+    /// ([`chaos::CatchUpPath::Checkpoint`]), and the chaos driver saves
+    /// server-side checkpoints every `replay_ring` rounds when a plan
+    /// needs them.
+    pub replay_ring: usize,
 }
 
 impl TrainConfig {
@@ -90,6 +99,7 @@ impl Default for TrainConfig {
             chunk_size: 0,
             quorum: 0,
             round_deadline_ms: 0,
+            replay_ring: crate::comm::tcp::DEFAULT_REPLAY_RING,
         }
     }
 }

@@ -475,6 +475,16 @@ impl RoundEngine {
     /// count; anything else is a named [`DlionError::Cluster`], as is a
     /// round with zero arrivals. Under a hierarchical topology, groups
     /// with no arrivals ship no partial at all.
+    ///
+    /// On the local-steps cadence (`local_steps() == H > 1`) a round is
+    /// one sync step and each frame is already the sign over an
+    /// `H`-step vote window, so a missing slot abstains the *whole
+    /// window* — the worker carries those votes into its next shipped
+    /// frame ([`WorkerLogic::abstain_sync`]) and the ballot here stays
+    /// exact: every arrived frame is a complete window, every missing
+    /// one is deferred, never split.
+    ///
+    /// [`WorkerLogic::abstain_sync`]: crate::optim::dist::WorkerLogic::abstain_sync
     pub fn aggregate_quorum(
         &mut self,
         uplinks: Vec<Option<Vec<u8>>>,

@@ -17,7 +17,16 @@
 //!   `[id: u32 LE][applied_rounds: u32 LE]`, and the server replays the
 //!   broadcasts the worker missed from a small ring buffer
 //!   ([`TcpServer::accept_reconnect`]), round-id checked, so the
-//!   rejoining replica catches up to the cluster state exactly.
+//!   rejoining replica catches up to the cluster state exactly. The
+//!   ring length is a config knob (`hyper.replay_ring`, threaded
+//!   through [`TcpServer::accept`] / [`TcpWorker::reconnect`] from one
+//!   source of truth) — a gap beyond it must catch up from a
+//!   checkpoint first;
+//! * both directions are backpressure-bounded: a worker caps its
+//!   in-flight uplink frames ([`TcpWorker::set_max_in_flight`]) and the
+//!   server can put broadcasts under a write deadline
+//!   ([`TcpServer::set_write_deadline`]) so one stalled receiver with a
+//!   full socket buffer cannot wedge the round loop.
 
 use super::chunked;
 use super::transport::{CommStats, Message, ServerTransport, SharedMessage, WorkerTransport};
@@ -32,8 +41,18 @@ use std::time::Duration;
 /// corrupt 4-byte prefix can claim (4 GB).
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
-/// Broadcast rounds the server keeps for reconnect replay.
-const REPLAY_RING: usize = 8;
+/// Default broadcast rounds the server keeps for reconnect replay.
+/// The live value is the `hyper.replay_ring` config knob
+/// ([`crate::cluster::TrainConfig::replay_ring`]) — both ends of the
+/// reconnect handshake are handed the same number, so the server's
+/// ring length and the worker's hostile-count clamp cannot disagree.
+pub const DEFAULT_REPLAY_RING: usize = 8;
+
+/// Default cap on a worker's in-flight uplink frames (sent but not yet
+/// answered by a downlink). The round protocol alternates send/recv so
+/// a healthy worker never holds more than one; the cap turns an
+/// unbounded queue-up against a wedged server into a named error.
+pub const DEFAULT_MAX_IN_FLIGHT: usize = 32;
 
 fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
     stream.write_all(&(payload.len() as u32).to_le_bytes())?;
@@ -65,8 +84,17 @@ pub struct TcpServer {
     stats: Arc<CommStats>,
     /// Broadcast rounds completed (the round id of the *next* broadcast).
     round: u32,
-    /// Last `REPLAY_RING` broadcasts, as `(round_id, frame)`.
+    /// Last `ring_cap` broadcasts, as `(round_id, frame)`.
     ring: VecDeque<(u32, Vec<u8>)>,
+    /// Replay-ring capacity (the `hyper.replay_ring` knob).
+    ring_cap: usize,
+    /// Active read deadline, remembered so a connection installed later
+    /// by [`TcpServer::accept_reconnect`] gets it too — without this a
+    /// rejoined-then-stalling worker hangs the next blocking gather.
+    read_deadline: Option<Duration>,
+    /// Active write deadline (broadcast backpressure bound), applied to
+    /// reconnect-installed connections the same way.
+    write_deadline: Option<Duration>,
 }
 
 pub struct TcpWorker {
@@ -76,6 +104,10 @@ pub struct TcpWorker {
     /// Downlink broadcasts received+applied (the `applied_rounds` this
     /// worker would present in a reconnect handshake).
     rounds: u32,
+    /// Uplink frames sent but not yet answered by a downlink.
+    in_flight: usize,
+    /// Backpressure cap on `in_flight` (see [`DEFAULT_MAX_IN_FLIGHT`]).
+    max_in_flight: usize,
 }
 
 /// Bind an ephemeral loopback port and return (server-builder-port, listener).
@@ -107,8 +139,15 @@ impl TcpServer {
     /// Accept exactly `n` worker connections. Workers identify
     /// themselves with the `[id][applied_rounds]` handshake (fresh
     /// connects present `applied_rounds = 0`) so gather order is
-    /// index-aligned.
-    pub fn accept(listener: &TcpListener, n: usize, stats: Arc<CommStats>) -> std::io::Result<Self> {
+    /// index-aligned. `replay_ring` is the number of broadcasts kept
+    /// for reconnect replay (the `hyper.replay_ring` knob — pass the
+    /// same value to [`TcpWorker::reconnect`]).
+    pub fn accept(
+        listener: &TcpListener,
+        n: usize,
+        stats: Arc<CommStats>,
+        replay_ring: usize,
+    ) -> std::io::Result<Self> {
         let mut conns: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
             let (mut stream, _) = listener.accept()?;
@@ -122,7 +161,15 @@ impl TcpServer {
             }
             conns[id] = Some(stream);
         }
-        Ok(TcpServer { conns, stats, round: 0, ring: VecDeque::new() })
+        Ok(TcpServer {
+            conns,
+            stats,
+            round: 0,
+            ring: VecDeque::new(),
+            ring_cap: replay_ring,
+            read_deadline: None,
+            write_deadline: None,
+        })
     }
 
     /// Number of currently connected (live) workers.
@@ -191,18 +238,43 @@ impl TcpServer {
         for (k, (round_id, frame)) in self.ring.iter().skip(replay_from).enumerate() {
             debug_assert_eq!(*round_id, applied + k as u32, "ring round ids");
             write_frame(&mut stream, frame)?;
-            self.stats.record_downlink(chunked::payload_len(frame));
+            // Replay is real wire traffic but not a second logical
+            // broadcast: those bytes were charged to `downlink` when the
+            // round originally closed, so recovery traffic gets its own
+            // counter and byte accounting stays per-hop-exact.
+            self.stats.record_replay(chunked::payload_len(frame));
         }
         stream.flush()?;
+        // The rejoined connection must honor the same deadlines as the
+        // ones live when `set_read_deadline`/`set_write_deadline` ran,
+        // or a stalling rejoiner hangs the next blocking gather.
+        stream.set_read_timeout(self.read_deadline)?;
+        stream.set_write_timeout(self.write_deadline)?;
         self.conns[id] = Some(stream);
         Ok(id)
     }
 
     /// Apply one read deadline to every live connection (`None` clears
-    /// it — reads block forever again).
+    /// it — reads block forever again). The deadline is remembered and
+    /// re-applied to connections [`TcpServer::accept_reconnect`]
+    /// installs later.
     pub fn set_read_deadline(&mut self, deadline: Option<Duration>) -> std::io::Result<()> {
+        self.read_deadline = deadline;
         for conn in self.conns.iter_mut().flatten() {
             conn.set_read_timeout(deadline)?;
+        }
+        Ok(())
+    }
+
+    /// Bound every broadcast write by `deadline` (backpressure: a
+    /// receiver that stopped draining its socket eventually fills the
+    /// kernel buffers, the blocked write times out, and the worker is
+    /// marked dead instead of wedging the round loop). Remembered and
+    /// re-applied on reconnect installs, like the read deadline.
+    pub fn set_write_deadline(&mut self, deadline: Option<Duration>) -> std::io::Result<()> {
+        self.write_deadline = deadline;
+        for conn in self.conns.iter_mut().flatten() {
+            conn.set_write_timeout(deadline)?;
         }
         Ok(())
     }
@@ -214,20 +286,29 @@ impl TcpWorker {
         conn.set_nodelay(true)?;
         conn.write_all(&(id as u32).to_le_bytes())?;
         conn.write_all(&0u32.to_le_bytes())?; // fresh: 0 applied rounds
-        Ok(TcpWorker { id, conn, stats, rounds: 0 })
+        Ok(TcpWorker {
+            id,
+            conn,
+            stats,
+            rounds: 0,
+            in_flight: 0,
+            max_in_flight: DEFAULT_MAX_IN_FLIGHT,
+        })
     }
 
     /// Reconnect after a drop: present `[id][applied_rounds]`, then
     /// receive the broadcasts this worker missed (round-id checked
     /// server-side). Returns the worker plus the replayed downlinks,
     /// oldest first — the caller applies them in order before rejoining
-    /// the round loop. A replay count beyond the server's ring capacity
+    /// the round loop. `replay_ring` is the same `hyper.replay_ring`
+    /// knob the server was built with: a hostile replay count beyond it
     /// is rejected without allocating.
     pub fn reconnect(
         port: u16,
         id: usize,
         applied_rounds: u32,
         stats: Arc<CommStats>,
+        replay_ring: usize,
     ) -> std::io::Result<(Self, Vec<SharedMessage>)> {
         let mut conn = TcpStream::connect(("127.0.0.1", port))?;
         conn.set_nodelay(true)?;
@@ -238,10 +319,10 @@ impl TcpWorker {
             std::io::Error::new(e.kind(), format!("reconnect replay header: {e}"))
         })?;
         let count = u32::from_le_bytes(count_buf) as usize;
-        if count > REPLAY_RING {
+        if count > replay_ring {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
-                format!("server claims {count} replay frames (ring capacity {REPLAY_RING})"),
+                format!("server claims {count} replay frames (ring capacity {replay_ring})"),
             ));
         }
         let mut replayed = Vec::with_capacity(count);
@@ -249,13 +330,29 @@ impl TcpWorker {
             replayed.push(SharedMessage::from(read_frame(&mut conn)?));
         }
         let rounds = applied_rounds + count as u32;
-        Ok((TcpWorker { id, conn, stats, rounds }, replayed))
+        Ok((
+            TcpWorker {
+                id,
+                conn,
+                stats,
+                rounds,
+                in_flight: 0,
+                max_in_flight: DEFAULT_MAX_IN_FLIGHT,
+            },
+            replayed,
+        ))
     }
 
     /// Downlink broadcasts received so far (the reconnect handshake's
     /// `applied_rounds`).
     pub fn rounds_received(&self) -> u32 {
         self.rounds
+    }
+
+    /// Override the in-flight uplink cap (backpressure bound enforced
+    /// by [`WorkerTransport::send`]).
+    pub fn set_max_in_flight(&mut self, cap: usize) {
+        self.max_in_flight = cap;
     }
 }
 
@@ -297,7 +394,7 @@ impl ServerTransport for TcpServer {
             }
         }
         self.ring.push_back((self.round, msg.to_vec()));
-        if self.ring.len() > REPLAY_RING {
+        if self.ring.len() > self.ring_cap {
             self.ring.pop_front();
         }
         self.round += 1;
@@ -352,13 +449,26 @@ impl WorkerTransport for TcpWorker {
     }
 
     fn send(&mut self, msg: Message) -> std::io::Result<()> {
+        if self.in_flight >= self.max_in_flight {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WouldBlock,
+                format!(
+                    "worker {}: backpressure — {} uplink frames in flight (cap {}); \
+                     apply a downlink before sending more",
+                    self.id, self.in_flight, self.max_in_flight
+                ),
+            ));
+        }
         self.stats.record_uplink(chunked::payload_len(&msg));
-        write_frame(&mut self.conn, &msg)
+        write_frame(&mut self.conn, &msg)?;
+        self.in_flight += 1;
+        Ok(())
     }
 
     fn recv(&mut self) -> std::io::Result<SharedMessage> {
         let frame = read_frame(&mut self.conn)?;
         self.rounds += 1;
+        self.in_flight = self.in_flight.saturating_sub(1);
         Ok(Arc::from(frame))
     }
 }
@@ -385,7 +495,8 @@ mod tests {
                 })
             })
             .collect();
-        let mut server = TcpServer::accept(&listener, n, stats.clone()).unwrap();
+        let mut server =
+            TcpServer::accept(&listener, n, stats.clone(), DEFAULT_REPLAY_RING).unwrap();
         let msgs = server.gather().unwrap();
         for (i, m) in msgs.iter().enumerate() {
             assert_eq!(m, &vec![i as u8; 5]);
@@ -421,7 +532,8 @@ mod tests {
                 assert_eq!(frames.len(), 2, "self-describing chunk count");
             })
         };
-        let mut server = TcpServer::accept(&listener, 1, stats.clone()).unwrap();
+        let mut server =
+            TcpServer::accept(&listener, 1, stats.clone(), DEFAULT_REPLAY_RING).unwrap();
         let msgs = server.gather().unwrap();
         assert_eq!(msgs[0], up_msg, "uplink envelope mangled");
         let frames = chunked::unpack(&msgs[0]).unwrap();
@@ -448,7 +560,7 @@ mod tests {
             s.write_all(&u32::MAX.to_le_bytes()).unwrap(); // "4 GB frame"
             s
         });
-        let mut server = TcpServer::accept(&listener, 1, stats).unwrap();
+        let mut server = TcpServer::accept(&listener, 1, stats, DEFAULT_REPLAY_RING).unwrap();
         let err = server.gather().unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         let msg = err.to_string();

@@ -51,6 +51,14 @@ pub struct CommStats {
     pub partial_rounds: AtomicU64,
     /// sum of achieved quorums over all closed rounds
     pub quorum_sum: AtomicU64,
+    /// bytes re-sent from the broadcast replay ring to rejoining
+    /// workers — real wire traffic, but *not* a second logical
+    /// broadcast: the same payload was already charged to
+    /// `downlink_bytes` when its round closed, so recovery traffic is
+    /// kept out of the round-accounting columns
+    pub replay_bytes: AtomicU64,
+    /// number of replayed frames (reconnect catch-up)
+    pub replay_msgs: AtomicU64,
 }
 
 impl CommStats {
@@ -74,6 +82,13 @@ impl CommStats {
     pub fn record_agg_downlink(&self, bytes: usize, msgs: usize) {
         self.agg_downlink_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.agg_downlink_msgs.fetch_add(msgs as u64, Ordering::Relaxed);
+    }
+    /// Record one frame replayed to a rejoining worker (reconnect
+    /// catch-up traffic — charged separately from `downlink`, which
+    /// already counted these payload bytes at the original broadcast).
+    pub fn record_replay(&self, bytes: usize) {
+        self.replay_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.replay_msgs.fetch_add(1, Ordering::Relaxed);
     }
     /// Record one elastic round closing with `arrived` of `nworkers`
     /// uplinks (the achieved quorum).
@@ -117,6 +132,14 @@ impl CommStats {
     pub fn quorum_total(&self) -> u64 {
         self.quorum_sum.load(Ordering::Relaxed)
     }
+    /// Bytes replayed to rejoining workers (recovery traffic).
+    pub fn replay(&self) -> u64 {
+        self.replay_bytes.load(Ordering::Relaxed)
+    }
+    /// Frames replayed to rejoining workers.
+    pub fn replay_msg_count(&self) -> u64 {
+        self.replay_msgs.load(Ordering::Relaxed)
+    }
     /// All bytes that crossed any link (worker edge + aggregator hops).
     pub fn total(&self) -> u64 {
         self.uplink() + self.downlink() + self.agg_uplink() + self.agg_downlink()
@@ -133,6 +156,8 @@ impl CommStats {
         self.rounds.store(0, Ordering::Relaxed);
         self.partial_rounds.store(0, Ordering::Relaxed);
         self.quorum_sum.store(0, Ordering::Relaxed);
+        self.replay_bytes.store(0, Ordering::Relaxed);
+        self.replay_msgs.store(0, Ordering::Relaxed);
     }
 }
 
@@ -335,9 +360,15 @@ mod tests {
         assert_eq!(stats.agg_uplink_msg_count(), 2);
         assert_eq!(stats.agg_downlink_msg_count(), 2);
         assert_eq!(stats.total(), 200, "total covers every hop");
+        stats.record_replay(16);
+        assert_eq!(stats.replay(), 16);
+        assert_eq!(stats.replay_msg_count(), 1);
+        assert_eq!(stats.total(), 200, "replay traffic stays out of round accounting");
         stats.reset();
         assert_eq!(stats.total(), 0);
         assert_eq!(stats.agg_uplink_msg_count(), 0);
+        assert_eq!(stats.replay(), 0);
+        assert_eq!(stats.replay_msg_count(), 0);
     }
 
     #[test]

@@ -95,6 +95,7 @@ impl Experiment {
         exp.train.quorum = h.usize_or("quorum", exp.train.quorum);
         exp.train.round_deadline_ms =
             h.usize_or("round_deadline_ms", exp.train.round_deadline_ms as usize) as u64;
+        exp.train.replay_ring = h.usize_or("replay_ring", exp.train.replay_ring);
         exp.hyper.beta1 = h.f64_or("beta1", exp.hyper.beta1 as f64) as f32;
         exp.hyper.beta2 = h.f64_or("beta2", exp.hyper.beta2 as f64) as f32;
         exp.hyper.weight_decay = h.f64_or("weight_decay", exp.hyper.weight_decay as f64) as f32;
@@ -155,6 +156,9 @@ impl Experiment {
             "hyper.quorum" | "train.quorum" => self.train.quorum = parse_usize(val)?,
             "hyper.round_deadline_ms" | "train.round_deadline_ms" => {
                 self.train.round_deadline_ms = parse_usize(val)? as u64
+            }
+            "hyper.replay_ring" | "train.replay_ring" => {
+                self.train.replay_ring = parse_usize(val)?
             }
             "train.steps" => self.train.steps = parse_usize(val)?,
             "train.batch_per_worker" => self.train.batch_per_worker = parse_usize(val)?,
@@ -258,6 +262,7 @@ local_steps = 8
 chunk_size = 4096
 quorum = 3
 round_deadline_ms = 250
+replay_ring = 16
 
 [task]
 dim = 128
@@ -290,6 +295,10 @@ dim = 128
         assert_eq!(exp.train.quorum, 5);
         exp.apply_override("hyper.round_deadline_ms=1000").unwrap();
         assert_eq!(exp.train.round_deadline_ms, 1000);
+        assert_eq!(exp.train.replay_ring, 16, "hyper.replay_ring from the file");
+        exp.apply_override("hyper.replay_ring=4").unwrap();
+        assert_eq!(exp.train.replay_ring, 4);
+        assert!(exp.apply_override("hyper.replay_ring=x").is_err());
         assert!(exp.apply_override("hyper.quorum=x").is_err());
         exp.apply_override("train.chunk_size=0").unwrap();
         assert_eq!(exp.train.chunk_size, 0);

@@ -223,4 +223,59 @@ mod tests {
             assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
         }
     }
+
+    /// Rebuild the trailing crc over an edited body, so parsing gets
+    /// past the integrity check and exercises the structural errors.
+    fn with_fresh_crc(mut bytes: Vec<u8>) -> Vec<u8> {
+        let n = bytes.len() - 4;
+        let crc = crc32(&bytes[..n]);
+        bytes[n..].copy_from_slice(&crc.to_le_bytes());
+        bytes
+    }
+
+    /// Every corruption mode fails by *name* — the chaos rejoin path
+    /// surfaces these verbatim, so a mid-run catch-up from a damaged
+    /// checkpoint is a diagnosable error, not a hang or a garbage
+    /// replica.
+    #[test]
+    fn corruption_errors_are_named() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+
+        // header shorter than the fixed fields
+        let err = Checkpoint::from_bytes(&bytes[..10]).unwrap_err().to_string();
+        assert!(err.contains("truncated header"), "{err}");
+
+        // one flipped body byte: the crc catches it before any parsing
+        let mut corrupt = bytes.clone();
+        corrupt[100] ^= 0xFF;
+        let err = Checkpoint::from_bytes(&corrupt).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+
+        // wrong magic behind a valid crc
+        let mut magic = bytes.clone();
+        magic[..4].copy_from_slice(b"NOPE");
+        let err = Checkpoint::from_bytes(&with_fresh_crc(magic)).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        // future version behind a valid crc
+        let mut vers = bytes.clone();
+        vers[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = Checkpoint::from_bytes(&with_fresh_crc(vers)).unwrap_err().to_string();
+        assert!(err.contains("unsupported version 99"), "{err}");
+
+        // interior truncation behind a valid crc: the field reader fires
+        let cut = bytes.len() - 40;
+        let err = Checkpoint::from_bytes(&with_fresh_crc(bytes[..cut].to_vec()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // a truncated *file* fails by name through the load path too
+        let path = std::env::temp_dir().join(format!("dlion_ck3_{}.bin", std::process::id()));
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = Checkpoint::load(&path, "tiny", 1000).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch") || err.contains("truncated"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
 }

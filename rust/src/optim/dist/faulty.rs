@@ -108,6 +108,14 @@ impl WorkerLogic for FaultyWorker {
     fn momentum(&self) -> Option<&[f32]> {
         self.inner.momentum()
     }
+
+    // An abstained sync window ships nothing — there is no frame to
+    // corrupt. Delegate so the inner strategy keeps its abstention
+    // semantics (e.g. the local-steps vote carry) instead of the
+    // default encode-and-drop, which would discard carried votes.
+    fn abstain_sync(&mut self, grads: &[f32], lr: f32, step: usize) {
+        self.inner.abstain_sync(grads, lr, step);
+    }
 }
 
 #[cfg(test)]

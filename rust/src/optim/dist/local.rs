@@ -71,6 +71,11 @@ struct LocalWorker {
     local_taken: usize,
     /// scratch for the packed sign(acc) frame
     signs: Vec<i8>,
+    /// the window that just closed was *abstained* (its uplink never
+    /// reached the wire): keep `acc` across the reconciling `apply` so
+    /// the votes fold, whole, into the next shipped frame — the exact
+    /// vote-level analogue of the chaos driver's `StragglerFold`
+    carried: bool,
     decoder: UpdateDecoder,
 }
 
@@ -120,7 +125,27 @@ impl WorkerLogic for LocalWorker {
             *s = if *a >= 0 { 1 } else { -1 };
             *m = b2 * *m + (1.0 - b2) * g;
         }
+        self.carried = false;
         frame(TAG_SIGN, &sign::pack(&self.signs))
+    }
+
+    fn abstain_sync(&mut self, grads: &[f32], lr: f32, _step: usize) {
+        // Exactly `encode`'s state bookkeeping — the sync step's vote,
+        // momentum advance, and Λ contribution — minus the frame. The
+        // window's votes stay in `acc` (carried) so the next shipped
+        // uplink is sign(votes of every window since the last send):
+        // the window folds whole instead of being dropped.
+        self.lr_sum += lr;
+        let b1 = self.lion.hp.beta1;
+        let b2 = self.lion.hp.beta2;
+        for ((m, &g), a) in
+            self.lion.momentum.iter_mut().zip(grads).zip(self.acc.iter_mut())
+        {
+            let u = bsign(b1 * *m + (1.0 - b1) * g);
+            *a += u as i32;
+            *m = b2 * *m + (1.0 - b2) * g;
+        }
+        self.carried = true;
     }
 
     fn apply(&mut self, params: &mut [f32], downlink: &[u8], _lr: f32, _step: usize) {
@@ -136,6 +161,13 @@ impl WorkerLogic for LocalWorker {
         Lion::apply_aggregated(params, update, self.lr_sum, self.weight_decay);
         self.local_taken = 0;
         self.lr_sum = 0.0;
+        if self.carried {
+            // abstained window: the votes survive into the next shipped
+            // uplink; only the window Λ and local-step count reset (all
+            // replicas applied the same aggregate with the same Λ, so
+            // the replica invariant is untouched).
+            return;
+        }
         self.acc.iter_mut().for_each(|a| *a = 0);
     }
 
@@ -158,6 +190,7 @@ impl Strategy for DLionLocal {
             lr_sum: 0.0,
             local_taken: 0,
             signs: vec![0; dim],
+            carried: false,
             decoder: UpdateDecoder::new(dim),
         })
     }
@@ -293,6 +326,84 @@ mod tests {
             let expect = b - lam * (v as f32 + hp.weight_decay * b);
             assert_eq!(p, expect);
         }
+    }
+
+    #[test]
+    fn abstained_window_votes_carry_into_the_next_shipped_frame() {
+        // Two workers, H = 2, four steps (two windows). Worker 1
+        // abstains on the first sync step (its frame never ships; the
+        // round closes over worker 0 alone) — its next shipped frame
+        // must be sign(votes of BOTH windows), checked against an i32
+        // oracle replaying the vote/momentum recursion, and the
+        // replicas must still agree at every sync point.
+        let hp = LionParams { beta1: 0.9, beta2: 0.99, weight_decay: 0.01 };
+        let (d, n, h) = (41, 2, 2);
+        let strat = DLionLocal::new(hp, h);
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(i, n, d)).collect();
+        let mut server = strat.make_server(n, d);
+        let mut params: Vec<Vec<f32>> = vec![vec![0.15f32; d]; n];
+        let mut rng = Rng::new(0x10F);
+        let grads: Vec<Vec<Vec<f32>>> = (0..4).map(|_| rand_grads(&mut rng, n, d)).collect();
+
+        // oracle for worker 1: replay momentum + vote accumulation
+        let mut m_ref = vec![0.0f32; d];
+        let mut acc_ref = vec![0i32; d];
+        let mut vote = |g: &[f32]| {
+            for ((m, &gi), a) in m_ref.iter_mut().zip(g).zip(acc_ref.iter_mut()) {
+                let u = bsign(hp.beta1 * *m + (1.0 - hp.beta1) * gi);
+                *a += u as i32;
+                *m = hp.beta2 * *m + (1.0 - hp.beta2) * gi;
+            }
+        };
+
+        // window 1: local step, then worker 1 abstains at the sync step
+        for (i, (w, p)) in workers.iter_mut().zip(params.iter_mut()).enumerate() {
+            w.local_step(p, &grads[0][i], 0.01, 0);
+        }
+        vote(&grads[0][1]);
+        vote(&grads[1][1]);
+        let up0 = workers[0].encode(&grads[1][0], 0.01, 1);
+        workers[1].abstain_sync(&grads[1][1], 0.01, 1);
+        let down = server.aggregate_quorum(&[up0.as_slice()], 0.01, 1);
+        for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+            w.apply(p, &down, 0.01, 1);
+        }
+        assert_eq!(params[0], params[1], "abstaining replica must still reconcile");
+
+        // window 2: both ship; worker 1's frame covers both windows
+        for (i, (w, p)) in workers.iter_mut().zip(params.iter_mut()).enumerate() {
+            w.local_step(p, &grads[2][i], 0.01, 2);
+        }
+        vote(&grads[2][1]);
+        vote(&grads[3][1]);
+        let _up0 = workers[0].encode(&grads[3][0], 0.01, 3);
+        let up1 = workers[1].encode(&grads[3][1], 0.01, 3);
+        let shipped = sign::unpack(&up1[1..], d);
+        for (i, (&s, &a)) in shipped.iter().zip(&acc_ref).enumerate() {
+            let expect = if a >= 0 { 1i8 } else { -1 };
+            assert_eq!(s, expect, "lane {i}: carried vote sum {a} must drive the sign");
+        }
+        // and the carry is consumed: votes from before the ship are gone
+        let down2 = server.aggregate_quorum(&[up1.as_slice()], 0.01, 3);
+        for (w, p) in workers.iter_mut().zip(params.iter_mut()) {
+            w.apply(p, &down2, 0.01, 3);
+        }
+        let up1_fresh = workers[1].encode(&grads[0][1], 0.01, 5);
+        let mut m_solo = m_ref.clone();
+        let fresh: Vec<i8> = grads[0][1]
+            .iter()
+            .zip(m_solo.iter_mut())
+            .map(|(&gi, m)| {
+                let u = bsign(hp.beta1 * *m + (1.0 - hp.beta1) * gi);
+                *m = hp.beta2 * *m + (1.0 - hp.beta2) * gi;
+                u
+            })
+            .collect();
+        assert_eq!(
+            sign::unpack(&up1_fresh[1..], d),
+            fresh,
+            "after a shipped window the accumulator must restart from zero"
+        );
     }
 
     #[test]

@@ -460,6 +460,28 @@ pub trait WorkerLogic: Send {
         );
     }
 
+    /// Observe a sync step whose uplink never leaves the worker — the
+    /// elastic driver's abstention hook for the local-steps cadence.
+    /// The worker must perform exactly the *state* bookkeeping of
+    /// [`WorkerLogic::encode`] (vote accumulation, momentum advance,
+    /// window learning-rate sums) without a frame reaching the wire, so
+    /// that the abstained window folds, whole, into the next uplink the
+    /// worker does ship (the vote-level analogue of the chaos driver's
+    /// gradient-level `StragglerFold`). The following
+    /// [`WorkerLogic::apply`] still runs: the downlink aggregated from
+    /// the *other* workers' votes reconciles this replica too.
+    ///
+    /// The default encodes and drops the frame — correct for any
+    /// strategy whose `encode` is its only sync-step state mutation.
+    /// Strategies that must distinguish a shipped window from an
+    /// abstained one (e.g. `d-lion-local(H)` carrying its vote window)
+    /// override this. Per-step strategies (`local_steps() == 1`) never
+    /// receive this call — their abstention path is the gradient-level
+    /// fold.
+    fn abstain_sync(&mut self, grads: &[f32], lr: f32, step: usize) {
+        let _ = self.encode(grads, lr, step);
+    }
+
     /// Introspection hook: the worker's optimizer momentum, when it has
     /// one. Benches use this to measure momentum drift across workers
     /// under non-iid shards; never used on the training path.

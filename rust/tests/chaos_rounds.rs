@@ -12,7 +12,7 @@
 //! * under-floor rounds and unsupported strategies produce named
 //!   errors, not corrupted training.
 
-use dlion::cluster::chaos::{run_chaos, ChaosTransport, FaultPlan};
+use dlion::cluster::chaos::{run_chaos, CatchUpPath, ChaosTransport, FaultPlan, RejoinRecord};
 use dlion::cluster::topology::Topology;
 use dlion::cluster::{run_sequential, run_threaded, TrainConfig};
 use dlion::optim::dist::faulty::Fault;
@@ -225,4 +225,155 @@ fn delay_plan_without_deadline_is_rejected_up_front() {
         .err()
         .expect("delay without a deadline would hang gather");
     assert!(err.to_string().contains("round_deadline_ms"), "unnamed error: {err}");
+}
+
+#[test]
+fn rejoin_via_ring_catches_up_and_votes_from_the_rejoin_round() {
+    // Worker 1 dies before round 2 and rejoins before round 5: the gap
+    // (3 rounds) fits the default replay ring, so catch-up is a pure
+    // ring replay — and the rejoined replica must end the run
+    // bit-identical to the never-killed ones (check_replicas covers
+    // all four workers, because a rejoined worker is a survivor).
+    let (n, d, steps) = (4usize, 40usize, 8usize);
+    let plan = FaultPlan::new(0x12E1).rejoin(1, 2, 5);
+    let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+    let cfg = TrainConfig { quorum: 3, ..chaos_cfg(steps, Topology::Star) };
+    let report = run_chaos(task_arc(d, 11), strat.as_ref(), n, &cfg, &plan, ChaosTransport::Tcp)
+        .unwrap_or_else(|e| panic!("rejoin-via-ring: {e}"));
+    // quorum dips exactly over the dead window [2, 5): the worker votes
+    // again in its rejoin round itself
+    for (round, &q) in report.quorums.iter().enumerate() {
+        assert_eq!(q, plan.expected_quorum(n, round), "round {round} quorum");
+    }
+    assert_eq!(report.quorums, vec![4, 4, 3, 3, 3, 4, 4, 4]);
+    assert_eq!(
+        report.rejoins,
+        vec![RejoinRecord { worker: 1, round: 5, replayed: 3, path: CatchUpPath::Ring }]
+    );
+    assert_eq!(report.survivors, vec![0, 1, 2, 3], "a rejoined worker survives");
+    assert!(report.stats.replay() > 0, "ring replay is real wire traffic");
+}
+
+#[test]
+fn rejoin_beyond_the_ring_restores_from_checkpoint_then_replays_the_tail() {
+    // A 9-round gap over a 4-deep ring: the driver must restore the
+    // replica from the periodic server-side checkpoint at round 8 (the
+    // newest multiple of the ring depth) and replay only the 2-round
+    // ring tail. Replica equality still holds bit-exactly.
+    let (n, d, steps) = (4usize, 40usize, 12usize);
+    let plan = FaultPlan::new(0x12E2).rejoin(2, 1, 10);
+    let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+    let cfg = TrainConfig {
+        quorum: 3,
+        replay_ring: 4,
+        ..chaos_cfg(steps, Topology::Star)
+    };
+    let report = run_chaos(task_arc(d, 13), strat.as_ref(), n, &cfg, &plan, ChaosTransport::Tcp)
+        .unwrap_or_else(|e| panic!("rejoin-beyond-ring: {e}"));
+    for (round, &q) in report.quorums.iter().enumerate() {
+        assert_eq!(q, plan.expected_quorum(n, round), "round {round} quorum");
+    }
+    assert_eq!(
+        report.rejoins,
+        vec![RejoinRecord {
+            worker: 2,
+            round: 10,
+            replayed: 2,
+            path: CatchUpPath::Checkpoint { from: 8 },
+        }]
+    );
+    assert_eq!(report.survivors, vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn rejoin_restrictions_are_named_errors() {
+    let strat = by_name("d-lion-mavo", &StrategyHyper::default()).unwrap();
+    let plan = FaultPlan::new(4).rejoin(0, 1, 3);
+    let cfg = TrainConfig { quorum: 1, ..chaos_cfg(6, Topology::Star) };
+
+    // the reconnect handshake lives in comm::tcp — in-proc can't rejoin
+    let err = run_chaos(task_arc(16, 1), strat.as_ref(), 2, &cfg, &plan, ChaosTransport::InProc)
+        .err()
+        .expect("rejoin over in-proc must be refused");
+    assert!(err.to_string().contains("TCP transport"), "unnamed error: {err}");
+
+    // catch-up replays whole wire rounds — local-steps schedules can't
+    let local = by_name("d-lion-local(3)", &StrategyHyper::default()).unwrap();
+    let err = run_chaos(task_arc(16, 1), local.as_ref(), 2, &cfg, &plan, ChaosTransport::Tcp)
+        .err()
+        .expect("rejoin with local steps must be refused");
+    assert!(err.to_string().contains("local_steps == 1"), "unnamed error: {err}");
+
+    // an empty replay ring leaves nothing to catch up from
+    let no_ring = TrainConfig { replay_ring: 0, ..cfg.clone() };
+    let err = run_chaos(task_arc(16, 1), strat.as_ref(), 2, &no_ring, &plan, ChaosTransport::Tcp)
+        .err()
+        .expect("rejoin with replay_ring 0 must be refused");
+    assert!(err.to_string().contains("replay_ring"), "unnamed error: {err}");
+
+    // a rejoin past the end of the run can never happen
+    let late = FaultPlan::new(4).rejoin(0, 1, 99);
+    let err = run_chaos(task_arc(16, 1), strat.as_ref(), 2, &cfg, &late, ChaosTransport::Tcp)
+        .err()
+        .expect("rejoin beyond the run must be refused");
+    assert!(err.to_string().contains("rejoins at round 99"), "unnamed error: {err}");
+}
+
+#[test]
+fn local_steps_chaos_closes_windowed_quorums_exactly() {
+    // d-lion-local(3): one wire round per 3-step window. Worker 2 is
+    // delayed at step 4 — inside the window ending at sync step 5 — so
+    // it abstains that whole window (vote carry) and is back for the
+    // window ending at 8. The wire-round quorums must match the
+    // windowed plan queries, and all replicas (including the abstainer)
+    // must agree bit-exactly at the end.
+    let (n, d, steps, h) = (4usize, 40usize, 9usize, 3usize);
+    let plan = FaultPlan::new(0x10CA).delay(2, 4, 1);
+    let strat = by_name("d-lion-local(3)", &StrategyHyper::default()).unwrap();
+    for topology in TOPOLOGIES {
+        for transport in TRANSPORTS {
+            let cfg = TrainConfig {
+                quorum: 2,
+                round_deadline_ms: 400,
+                ..chaos_cfg(steps, topology)
+            };
+            let report = run_chaos(task_arc(d, 17), strat.as_ref(), n, &cfg, &plan, transport)
+                .unwrap_or_else(|e| panic!("{topology}/{transport:?}: {e}"));
+            for (step, &q) in report.quorums.iter().enumerate() {
+                let expect = if (step + 1) % h == 0 {
+                    plan.expected_quorum_windowed(n, step, h)
+                } else {
+                    0 // local phase: no wire round
+                };
+                assert_eq!(q, expect, "{topology}/{transport:?}: step {step} quorum");
+            }
+            assert_eq!(
+                report.quorums,
+                vec![0, 0, 4, 0, 0, 3, 0, 0, 4],
+                "{topology}/{transport:?}: windowed quorum trace"
+            );
+            let p = report.result.final_params.as_ref().unwrap();
+            assert!(p.iter().all(|x| x.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn honest_local_steps_chaos_is_bit_exact_with_run_threaded() {
+    // The local-steps control arm: a no-fault elastic run must
+    // reproduce the lockstep local-steps driver bit-for-bit.
+    let (n, d, steps) = (4usize, 48usize, 9usize);
+    let strat = by_name("d-lion-local(3)", &StrategyHyper::default()).unwrap();
+    let cfg = chaos_cfg(steps, Topology::Star);
+    let (thr, _) = run_threaded(task_arc(d, 19), strat.as_ref(), n, &cfg);
+    for transport in TRANSPORTS {
+        let report =
+            run_chaos(task_arc(d, 19), strat.as_ref(), n, &cfg, &FaultPlan::honest(), transport)
+                .unwrap_or_else(|e| panic!("{transport:?}: {e}"));
+        assert_eq!(
+            report.result.final_params, thr.final_params,
+            "{transport:?}: honest local-steps chaos diverged from run_threaded"
+        );
+        assert_eq!(report.quorums, vec![0, 0, 4, 0, 0, 4, 0, 0, 4]);
+    }
 }

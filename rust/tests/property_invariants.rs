@@ -3,7 +3,7 @@
 
 use dlion::comm::{dense, half, intavg, sign, sparse, tern, varint};
 use dlion::optim::dist::dlion::{Aggregation, DLion};
-use dlion::optim::dist::{by_name, ServerLogic, Strategy, StrategyHyper};
+use dlion::optim::dist::{by_name, ServerLogic, Strategy, StrategyHyper, WorkerLogic};
 use dlion::optim::lion::bsign;
 use dlion::optim::{LionParams, Optimizer};
 use dlion::testing::{forall, forall_explain, gen_vec_normal, gen_vec_sign, gen_vec_tern};
@@ -610,6 +610,76 @@ fn invariant13_straggler_fold_conserves_gradient_mass() {
         }
         if fold.residual_mass() >= 1e-12 {
             return Err(format!("residual mass {} not drained by take()", fold.residual_mass()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn invariant14_abstained_windows_fold_exactly_into_the_next_frame() {
+    // Local-steps vote carry: a worker that abstains k consecutive sync
+    // windows ships, at its next sync, byte-for-byte the frame a worker
+    // with one (k+1)·H-step window would ship over the same gradient
+    // stream — abstention re-times the window's votes, it never
+    // rewrites them. The frame is a pure function of the vote/momentum
+    // recursion, so the reconciling applies the abstainer still runs in
+    // between (rewinding params to each window base) must not leak into
+    // it; and the replicas must stay bit-equal at every closed round.
+    forall_explain(0xB08, 30, |r| {
+        let h = 1 + r.below(4);
+        let k = 1 + r.below(3);
+        let d = 1 + r.below(300);
+        let grads: Vec<Vec<Vec<f32>>> = (0..h * (k + 1))
+            .map(|_| (0..2).map(|_| gen_vec_normal(r, d, d, 1.0)).collect())
+            .collect();
+        (h, k, grads)
+    }, |(h, k, grads)| {
+        let (h, k) = (*h, *k);
+        let d = grads[0][0].len();
+        let steps = h * (k + 1);
+        let hp = StrategyHyper::default();
+        let strat = by_name(&format!("d-lion-local({h})"), &hp).unwrap();
+        let wide = by_name(&format!("d-lion-local({})", h * (k + 1)), &hp).unwrap();
+        let mut w0 = strat.make_worker(0, 2, d); // always ships
+        let mut w1 = strat.make_worker(1, 2, d); // abstains k windows
+        let mut oracle = wide.make_worker(1, 2, d); // one wide window
+        let mut server = strat.make_server(2, d);
+        let mut p0 = vec![0.1f32; d];
+        let mut p1 = vec![0.1f32; d];
+        let mut po = vec![0.1f32; d];
+        let lr = 0.01f32;
+        for step in 0..steps {
+            let (g0, g1) = (&grads[step][0], &grads[step][1]);
+            let last = step + 1 == steps;
+            if (step + 1) % h != 0 {
+                w0.local_step(&mut p0, g0, lr, step);
+                w1.local_step(&mut p1, g1, lr, step);
+                oracle.local_step(&mut po, g1, lr, step);
+                continue;
+            }
+            if last {
+                let _ = w0.encode(g0, lr, step);
+                let carried = w1.encode(g1, lr, step);
+                let want = oracle.encode(g1, lr, step);
+                if carried != want {
+                    return Err(format!(
+                        "h={h} k={k} d={d}: frame after {k} abstained windows \
+                         differs from the single wide-window frame"
+                    ));
+                }
+            } else {
+                let up0 = w0.encode(g0, lr, step);
+                w1.abstain_sync(g1, lr, step);
+                oracle.local_step(&mut po, g1, lr, step);
+                let down = server.aggregate_quorum(&[up0.as_slice()], lr, step);
+                w0.apply(&mut p0, &down, lr, step);
+                w1.apply(&mut p1, &down, lr, step);
+                if p0 != p1 {
+                    return Err(format!(
+                        "h={h} k={k} d={d}: replicas diverged at abstained sync {step}"
+                    ));
+                }
+            }
         }
         Ok(())
     });

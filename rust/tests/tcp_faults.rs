@@ -11,9 +11,16 @@
 //!   exactly the broadcasts it missed, oldest first, round-id checked;
 //!   gaps beyond the replay ring are refused by name;
 //! * truncated / garbage / oversized bytes on either end of the
-//!   reconnect path produce errors, never panics or allocations.
+//!   reconnect path produce errors, never panics or allocations;
+//! * replayed frames are accounted under their own `CommStats` counter,
+//!   never as a second broadcast;
+//! * a reconnect-installed socket inherits the server's stored read
+//!   deadline (a silent rejoiner can time out, not hang the gather);
+//! * the replay ring depth is a knob (`hyper.replay_ring`), the
+//!   worker's uplink in-flight cap and the server's write deadline
+//!   bound both directions of a stalled pipe.
 
-use dlion::comm::tcp::{bind_loopback, TcpServer, TcpWorker};
+use dlion::comm::tcp::{bind_loopback, TcpServer, TcpWorker, DEFAULT_REPLAY_RING};
 use dlion::comm::{CommStats, ServerTransport, WorkerTransport};
 use dlion::util::Rng;
 use std::io::{Read, Write};
@@ -36,7 +43,8 @@ fn mid_frame_drop_is_a_named_error_not_a_hang() {
     s.write_all(&64u32.to_le_bytes()).unwrap(); // frame claims 64 bytes...
     s.write_all(&[0xAB; 10]).unwrap(); // ...delivers 10
     drop(s);
-    let mut server = TcpServer::accept(&listener, 1, CommStats::new()).unwrap();
+    let mut server =
+        TcpServer::accept(&listener, 1, CommStats::new(), DEFAULT_REPLAY_RING).unwrap();
     let err = server.gather().unwrap_err();
     assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
     let msg = err.to_string();
@@ -49,7 +57,7 @@ fn deadline_gather_keeps_stragglers_and_buries_the_dead() {
     let (port, listener) = bind_loopback().unwrap();
     let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
     let w1 = TcpWorker::connect(port, 1, stats.clone()).unwrap();
-    let mut server = TcpServer::accept(&listener, 2, stats).unwrap();
+    let mut server = TcpServer::accept(&listener, 2, stats, DEFAULT_REPLAY_RING).unwrap();
 
     // Round 1: worker 1 is merely late — `None` for the round, but the
     // connection must survive the deadline.
@@ -87,7 +95,8 @@ fn reconnect_replays_exactly_the_missed_broadcasts() {
     let (port, listener) = bind_loopback().unwrap();
     let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
     let mut w1 = TcpWorker::connect(port, 1, stats.clone()).unwrap();
-    let mut server = TcpServer::accept(&listener, 2, stats.clone()).unwrap();
+    let mut server =
+        TcpServer::accept(&listener, 2, stats.clone(), DEFAULT_REPLAY_RING).unwrap();
     let (b1, b2, b3, b4) = ([1u8, 11], [1u8, 22], [1u8, 33], [1u8, 44]);
 
     // Round 1: full lockstep round; worker 1 applies broadcast b1.
@@ -118,7 +127,7 @@ fn reconnect_replays_exactly_the_missed_broadcasts() {
     // then b3 — exactly the gap, oldest first, nothing else.
     let client = {
         let stats = stats.clone();
-        thread::spawn(move || TcpWorker::reconnect(port, 1, applied, stats))
+        thread::spawn(move || TcpWorker::reconnect(port, 1, applied, stats, DEFAULT_REPLAY_RING))
     };
     let rejoined = server.accept_reconnect(&listener).unwrap();
     assert_eq!(rejoined, 1);
@@ -146,8 +155,9 @@ fn reconnect_gap_beyond_the_ring_is_refused_by_name() {
     let stats = CommStats::new();
     let (port, listener) = bind_loopback().unwrap();
     let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
-    let mut server = TcpServer::accept(&listener, 1, stats.clone()).unwrap();
-    // 10 broadcast rounds > REPLAY_RING(8): a worker claiming 0 applied
+    let mut server =
+        TcpServer::accept(&listener, 1, stats.clone(), DEFAULT_REPLAY_RING).unwrap();
+    // 10 broadcast rounds > DEFAULT_REPLAY_RING (8): a worker claiming 0 applied
     // rounds can no longer be caught up from the ring.
     for k in 0..10u8 {
         w0.send(vec![1u8, k]).unwrap();
@@ -158,7 +168,7 @@ fn reconnect_gap_beyond_the_ring_is_refused_by_name() {
     server.disconnect(0);
     let client = {
         let stats = stats.clone();
-        thread::spawn(move || TcpWorker::reconnect(port, 0, 0, stats))
+        thread::spawn(move || TcpWorker::reconnect(port, 0, 0, stats, DEFAULT_REPLAY_RING))
     };
     let err = server.accept_reconnect(&listener).unwrap_err();
     assert!(err.to_string().contains("replay ring"), "unnamed: {err}");
@@ -177,13 +187,15 @@ fn reconnect_from_the_future_is_refused_by_name() {
     let stats = CommStats::new();
     let (port, listener) = bind_loopback().unwrap();
     let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
-    let mut server = TcpServer::accept(&listener, 1, stats.clone()).unwrap();
+    let mut server =
+        TcpServer::accept(&listener, 1, stats.clone(), DEFAULT_REPLAY_RING).unwrap();
     w0.send(vec![1u8, 0]).unwrap();
     server.gather().unwrap();
     server.broadcast(&[1u8, 9]).unwrap();
     w0.recv().unwrap();
     server.disconnect(0);
-    let client = thread::spawn(move || TcpWorker::reconnect(port, 0, 99, stats));
+    let client =
+        thread::spawn(move || TcpWorker::reconnect(port, 0, 99, stats, DEFAULT_REPLAY_RING));
     let err = server.accept_reconnect(&listener).unwrap_err();
     assert!(err.to_string().contains("applied rounds"), "unnamed: {err}");
     let _ = client.join().unwrap(); // client errors too (server hung up)
@@ -199,7 +211,7 @@ fn garbage_handshakes_on_the_reconnect_path_never_panic() {
     let (port, listener) = bind_loopback().unwrap();
     let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
     let mut w1 = TcpWorker::connect(port, 1, stats.clone()).unwrap();
-    let mut server = TcpServer::accept(&listener, 2, stats).unwrap();
+    let mut server = TcpServer::accept(&listener, 2, stats, DEFAULT_REPLAY_RING).unwrap();
 
     let mut rng = Rng::new(0xF417);
     for case in 0..24usize {
@@ -247,7 +259,9 @@ fn client_rejects_hostile_replay_headers() {
 
     // A server claiming more replay frames than any ring can hold: the
     // client refuses before allocating or reading a single frame.
-    let client = thread::spawn(move || TcpWorker::reconnect(port, 0, 0, CommStats::new()));
+    let client = thread::spawn(move || {
+        TcpWorker::reconnect(port, 0, 0, CommStats::new(), DEFAULT_REPLAY_RING)
+    });
     let (mut s, _) = listener.accept().unwrap();
     let mut hs = [0u8; 8];
     s.read_exact(&mut hs).unwrap();
@@ -258,7 +272,9 @@ fn client_rejects_hostile_replay_headers() {
 
     // A replay frame with a 4 GB length prefix: the frame reader's
     // budget clamp fires on the reconnect path too.
-    let client = thread::spawn(move || TcpWorker::reconnect(port, 0, 3, CommStats::new()));
+    let client = thread::spawn(move || {
+        TcpWorker::reconnect(port, 0, 3, CommStats::new(), DEFAULT_REPLAY_RING)
+    });
     let (mut s, _) = listener.accept().unwrap();
     s.read_exact(&mut hs).unwrap();
     assert_eq!(hs, [0, 0, 0, 0, 3, 0, 0, 0], "handshake carries [id][applied]");
@@ -269,11 +285,195 @@ fn client_rejects_hostile_replay_headers() {
 
     // A truncated count header (server dies mid-reply) is a named
     // error, not a hang.
-    let client = thread::spawn(move || TcpWorker::reconnect(port, 0, 0, CommStats::new()));
+    let client = thread::spawn(move || {
+        TcpWorker::reconnect(port, 0, 0, CommStats::new(), DEFAULT_REPLAY_RING)
+    });
     let (mut s, _) = listener.accept().unwrap();
     s.read_exact(&mut hs).unwrap();
     s.write_all(&[1u8, 2]).unwrap(); // half a count, then hang up
     drop(s);
     let err = client.join().unwrap().err().expect("truncated count must fail");
     assert!(err.to_string().contains("reconnect replay header"), "unnamed: {err}");
+}
+
+#[test]
+fn reconnect_install_inherits_the_read_deadline() {
+    // Regression: the server stores its read deadline and must apply it
+    // to sockets installed by `accept_reconnect`. Before the fix, a
+    // rejoined worker that went silent would hang a lockstep gather
+    // forever — its fresh socket never got the timeout.
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let mut w1 = TcpWorker::connect(port, 1, stats.clone()).unwrap();
+    let mut server =
+        TcpServer::accept(&listener, 2, stats.clone(), DEFAULT_REPLAY_RING).unwrap();
+    server.set_read_deadline(Some(Duration::from_millis(150))).unwrap();
+
+    // One full round so the rejoiner has an applied count.
+    w0.send(vec![1u8, 0]).unwrap();
+    w1.send(vec![1u8, 1]).unwrap();
+    server.gather().unwrap();
+    server.broadcast(&[1u8, 7]).unwrap();
+    w0.recv().unwrap();
+    let applied = {
+        w1.recv().unwrap();
+        w1.rounds_received()
+    };
+    drop(w1);
+    settle();
+
+    // Rejoin with nothing missed: zero frames replayed, socket installed.
+    let client = {
+        let stats = stats.clone();
+        thread::spawn(move || TcpWorker::reconnect(port, 1, applied, stats, DEFAULT_REPLAY_RING))
+    };
+    assert_eq!(server.accept_reconnect(&listener).unwrap(), 1);
+    let (_w1, replayed) = client.join().unwrap().unwrap();
+    assert!(replayed.is_empty());
+
+    // The rejoined worker stays silent; the lockstep gather must time
+    // out by name through the installed deadline instead of hanging.
+    w0.send(vec![1u8, 2]).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    thread::spawn(move || {
+        let _ = tx.send(server.gather().map(|_| ()).map_err(|e| e.to_string()));
+    });
+    let res = rx
+        .recv_timeout(Duration::from_secs(2))
+        .expect("gather must hit the installed deadline, not hang");
+    let msg = res.err().expect("a silent rejoined worker must be a timeout error");
+    assert!(msg.contains("worker 1"), "unnamed: {msg}");
+}
+
+#[test]
+fn replay_traffic_is_counted_separately_from_broadcasts() {
+    // Replayed frames are real wire traffic, but not a second logical
+    // broadcast: they land on `CommStats::replay`, and the downlink
+    // round accounting must not move during a reconnect.
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let mut w1 = TcpWorker::connect(port, 1, stats.clone()).unwrap();
+    let mut server =
+        TcpServer::accept(&listener, 2, stats.clone(), DEFAULT_REPLAY_RING).unwrap();
+
+    // Round 1 in lockstep, then worker 1 misses rounds 2-3.
+    w0.send(vec![1u8, 0]).unwrap();
+    w1.send(vec![1u8, 1]).unwrap();
+    server.gather().unwrap();
+    server.broadcast(&[1u8, 11]).unwrap();
+    w0.recv().unwrap();
+    w1.recv().unwrap();
+    drop(w1);
+    settle();
+    for b in [[1u8, 22], [1u8, 33]] {
+        w0.send(vec![1u8, 0]).unwrap();
+        server.gather_quorum(Some(Duration::from_millis(150))).unwrap();
+        server.broadcast(&b).unwrap();
+        w0.recv().unwrap();
+    }
+    assert_eq!(stats.replay(), 0, "no replay traffic before any reconnect");
+    assert_eq!(stats.replay_msg_count(), 0);
+    let down_before = stats.downlink();
+
+    // Reconnect replays the two missed 2-byte broadcasts.
+    let client = {
+        let stats = stats.clone();
+        thread::spawn(move || TcpWorker::reconnect(port, 1, 1, stats, DEFAULT_REPLAY_RING))
+    };
+    assert_eq!(server.accept_reconnect(&listener).unwrap(), 1);
+    let (_w1, replayed) = client.join().unwrap().unwrap();
+    assert_eq!(replayed.len(), 2);
+    assert_eq!(stats.replay(), 4, "two 2-byte frames replayed");
+    assert_eq!(stats.replay_msg_count(), 2);
+    assert_eq!(stats.downlink(), down_before, "replay is not a second broadcast");
+}
+
+#[test]
+fn replay_ring_depth_is_a_knob_on_both_ends() {
+    // Server side: a ring of 2 refuses a 3-round gap and serves a
+    // 2-round one.
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w0 = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let mut server = TcpServer::accept(&listener, 1, stats.clone(), 2).unwrap();
+    for k in 0..3u8 {
+        w0.send(vec![1u8, k]).unwrap();
+        server.gather().unwrap();
+        server.broadcast(&[1u8, k]).unwrap();
+        w0.recv().unwrap();
+    }
+    server.disconnect(0);
+    let client = {
+        let stats = stats.clone();
+        thread::spawn(move || TcpWorker::reconnect(port, 0, 0, stats, 2))
+    };
+    let err = server.accept_reconnect(&listener).unwrap_err();
+    assert!(err.to_string().contains("replay ring"), "unnamed: {err}");
+    let _ = client.join().unwrap(); // client fails too (server hung up)
+
+    let client = {
+        let stats = stats.clone();
+        thread::spawn(move || TcpWorker::reconnect(port, 0, 1, stats, 2))
+    };
+    assert_eq!(server.accept_reconnect(&listener).unwrap(), 0);
+    let (_w0, replayed) = client.join().unwrap().unwrap();
+    assert_eq!(replayed.len(), 2, "a gap of exactly the ring depth replays");
+    assert_eq!(&replayed[0][..], &[1u8, 1][..]);
+    assert_eq!(&replayed[1][..], &[1u8, 2][..]);
+
+    // Client side: the hostile-count clamp scales with the ring the
+    // client was configured for.
+    let (port2, listener2) = bind_loopback().unwrap();
+    let client =
+        thread::spawn(move || TcpWorker::reconnect(port2, 0, 0, CommStats::new(), 2));
+    let (mut s, _) = listener2.accept().unwrap();
+    let mut hs = [0u8; 8];
+    s.read_exact(&mut hs).unwrap();
+    s.write_all(&3u32.to_le_bytes()).unwrap(); // claims 3 > ring 2
+    let err = client.join().unwrap().err().expect("count beyond the ring must fail");
+    assert!(err.to_string().contains("ring capacity 2"), "unnamed: {err}");
+}
+
+#[test]
+fn uplink_backpressure_caps_frames_in_flight() {
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let mut w = TcpWorker::connect(port, 0, stats.clone()).unwrap();
+    let mut server = TcpServer::accept(&listener, 1, stats, DEFAULT_REPLAY_RING).unwrap();
+    w.set_max_in_flight(2);
+    w.send(vec![1u8, 1]).unwrap();
+    w.send(vec![1u8, 2]).unwrap();
+    let err = w.send(vec![1u8, 3]).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+    let msg = err.to_string();
+    assert!(msg.contains("backpressure") && msg.contains("worker 0"), "unnamed: {msg}");
+
+    // Applying a downlink frees a slot and the send goes through.
+    let msgs = server.gather().unwrap();
+    assert_eq!(&msgs[0][..], &[1u8, 1][..]);
+    server.broadcast(&[1u8, 9]).unwrap();
+    w.recv().unwrap();
+    w.send(vec![1u8, 3]).unwrap();
+}
+
+#[test]
+fn write_deadline_buries_a_stalled_receiver() {
+    // A worker that stops draining its downlink fills the socket
+    // buffers; with a write deadline the broadcast dead-marks it
+    // instead of blocking the whole cluster behind one slow pipe.
+    let stats = CommStats::new();
+    let (port, listener) = bind_loopback().unwrap();
+    let _w = TcpWorker::connect(port, 0, stats.clone()).unwrap(); // never reads
+    let mut server = TcpServer::accept(&listener, 1, stats, DEFAULT_REPLAY_RING).unwrap();
+    server.set_write_deadline(Some(Duration::from_millis(50))).unwrap();
+    let big = vec![1u8; 8 << 20];
+    for _ in 0..4 {
+        server.broadcast(&big).unwrap();
+        if !server.is_live(0) {
+            break;
+        }
+    }
+    assert!(!server.is_live(0), "a stalled receiver must be dead-marked, not block");
 }
